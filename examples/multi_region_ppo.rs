@@ -1,0 +1,53 @@
+//! Scenario sweep: PPO-Sync for Qwen-4B scheduled by HetRL, verl and
+//! StreamRL across the four network scenarios (paper §5.1), with the
+//! simulator as ground truth. Prints the Figure-3-style rows for one
+//! model size.
+//!
+//! Run: `cargo run --release --example multi_region_ppo`
+
+use hetrl::balance::{self, BalanceConfig};
+use hetrl::scheduler::{
+    Budget, Scheduler, ShaEaScheduler, StreamRlScheduler, VerlScheduler,
+};
+use hetrl::simulator::{simulate_plan, SimConfig};
+use hetrl::topology::{build_testbed, Scenario, TestbedSpec};
+use hetrl::util::table::Table;
+use hetrl::workflow::{Algo, JobConfig, Mode, ModelSpec, RlWorkflow};
+
+fn main() {
+    hetrl::util::logging::init();
+    let job = JobConfig::default();
+    let model = ModelSpec::qwen_4b();
+    let mut table = Table::new(
+        "PPO-Sync · Qwen-4B · 64 GPUs: simulated throughput (samples/s)",
+        &["scenario", "HetRL", "verl", "StreamRL", "HetRL/verl"],
+    );
+    for scenario in Scenario::ALL {
+        let topo = build_testbed(scenario, &TestbedSpec::default());
+        let wf = RlWorkflow::new(Algo::Ppo, Mode::Sync, model.clone());
+        let sim_cfg = SimConfig { iters: 2, ..SimConfig::default() };
+
+        let mut throughput = |mut s: Box<dyn Scheduler>, budget: usize| -> f64 {
+            let out = s.schedule(&topo, &wf, &job, Budget::timed(budget, 90.0));
+            match out.plan {
+                Some(plan) => {
+                    let plan = balance::apply(&plan, &wf, &topo, BalanceConfig::default());
+                    simulate_plan(&topo, &wf, &job, &plan, &sim_cfg).throughput
+                }
+                None => 0.0,
+            }
+        };
+        let hetrl = throughput(Box::new(ShaEaScheduler::new(1)), 600);
+        let verl = throughput(Box::new(VerlScheduler::new(1)), 150);
+        let streamrl = throughput(Box::new(StreamRlScheduler::new(1)), 200);
+        table.row(vec![
+            scenario.name().to_string(),
+            format!("{hetrl:.1}"),
+            format!("{verl:.1}"),
+            format!("{streamrl:.1}"),
+            format!("{:.2}x", hetrl / verl.max(1e-9)),
+        ]);
+        eprintln!("{} done", scenario.name());
+    }
+    table.print();
+}

@@ -1,0 +1,75 @@
+//! Quickstart: schedule a GRPO job for Qwen-8B on the 64-GPU
+//! Multi-Country testbed with the hybrid SHA-EA scheduler, apply load
+//! balancing, compare against the verl baseline, and check the plan on
+//! the discrete-event simulator.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use hetrl::balance::{self, BalanceConfig};
+use hetrl::costmodel::CostModel;
+use hetrl::scheduler::{Budget, Scheduler, ShaEaScheduler, VerlScheduler};
+use hetrl::simulator::{simulate_plan, SimConfig};
+use hetrl::topology::{build_testbed, Scenario, TestbedSpec};
+use hetrl::util::units::fmt_secs;
+use hetrl::workflow::{Algo, JobConfig, Mode, ModelSpec, RlWorkflow};
+
+fn main() {
+    hetrl::util::logging::init();
+    let topo = build_testbed(Scenario::MultiCountry, &TestbedSpec::default());
+    let wf = RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_8b());
+    let job = JobConfig::default();
+    println!(
+        "== HetRL quickstart: {} · {} · {} GPUs across {} regions ==\n",
+        wf.name(),
+        wf.tasks[0].model.name,
+        topo.n(),
+        topo.region_names.len()
+    );
+
+    // 1. HetRL (SHA-EA) search.
+    let mut hetrl = ShaEaScheduler::new(42);
+    let out = hetrl.schedule(&topo, &wf, &job, Budget::timed(800, 120.0));
+    let plan = out.plan.expect("SHA-EA found no plan");
+    println!(
+        "HetRL(SHA-EA): {} cost-model evals in {} → predicted iter {}",
+        out.evals,
+        fmt_secs(out.wall),
+        fmt_secs(out.cost)
+    );
+    print!("{}", plan.describe(&wf, &topo));
+
+    // 2. Load balancing on top.
+    let balanced = balance::apply(&plan, &wf, &topo, BalanceConfig::default());
+    let cm = CostModel::new(&topo, &wf, &job);
+    let before = cm.plan_cost(&plan).iter_time;
+    let after = cm.plan_cost(&balanced).iter_time;
+    println!(
+        "\nload balancing: {} → {} ({:+.1}%)",
+        fmt_secs(before),
+        fmt_secs(after),
+        (after / before - 1.0) * 100.0
+    );
+
+    // 3. verl baseline on the same fleet.
+    let mut verl = VerlScheduler::new(42);
+    let vout = verl.schedule(&topo, &wf, &job, Budget::timed(200, 60.0));
+    println!(
+        "verl baseline: predicted iter {} → HetRL speedup {:.2}x",
+        fmt_secs(vout.cost),
+        vout.cost / after
+    );
+
+    // 4. Discrete-event simulation of the balanced plan.
+    let sim = simulate_plan(&topo, &wf, &job, &balanced, &SimConfig::default());
+    println!(
+        "\nsimulated: iter {} ± {} | {:.1} samples/s | device util {:.0}%",
+        fmt_secs(sim.iter_time),
+        fmt_secs(sim.iter_std),
+        sim.throughput,
+        sim.utilization * 100.0
+    );
+    println!(
+        "cost-model prediction error vs simulator: {:.1}%",
+        hetrl::util::stats::rel_err(after, sim.iter_time) * 100.0
+    );
+}

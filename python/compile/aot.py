@@ -1,0 +1,200 @@
+"""AOT compiler: lowers the Layer-2 entry points to HLO **text** plus a
+JSON manifest the rust runtime consumes.
+
+HLO text — not serialized protos — is the interchange format: jax ≥ 0.5
+emits 64-bit instruction ids that the crate's xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Entry points (all shapes fixed at lowering time):
+    init        (seed[2] u32)                      → params…
+    forward     (params…, tokens[B,L])             → logits[B,L,V]
+    logprobs    (params…, tokens[B,L])             → logp[B,L-1]
+    reward      (params…, tokens[B,L])             → score[B]
+    value       (params…, tokens[B,L])             → values[B,L]
+    grpo_train  (params…, m…, v…, step, tokens,
+                 logp_old, logp_ref, adv, mask)    → params…, m…, v…, loss, kl
+    critic_train(params…, m…, v…, step, tokens,
+                 returns, mask)                    → params…, m…, v…, loss
+
+Run once via `make artifacts`; python never runs on the request path.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import ModelCfg, init_params, param_names, param_shapes
+from . import model as M
+from . import train as T
+
+F32 = jnp.float32
+I32 = jnp.int32
+U32 = jnp.uint32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def dtype_name(d):
+    return {"float32": "f32", "int32": "i32", "uint32": "u32"}[jnp.dtype(d).name]
+
+
+def lower_entry(fn, example_args):
+    # keep_unused: entry points take the FULL parameter list even when a
+    # head is unused (forward ignores value_head etc.) so the rust side
+    # can thread one state tuple through every executable.
+    lowered = jax.jit(fn, keep_unused=True).lower(*example_args)
+    text = to_hlo_text(lowered)
+    inputs = []
+
+    def collect(x):
+        inputs.append({"shape": list(x.shape), "dtype": dtype_name(x.dtype)})
+
+    jax.tree_util.tree_map(collect, example_args)
+    out = jax.eval_shape(fn, *example_args)
+    outputs = []
+    jax.tree_util.tree_map(
+        lambda x: outputs.append(
+            {"shape": list(x.shape), "dtype": dtype_name(x.dtype)}),
+        out,
+    )
+    return text, inputs, outputs
+
+
+def build(cfg: ModelCfg, batch: int, out_dir: str, lr: float,
+          clip_eps: float, kl_beta: float) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    shapes = param_shapes(cfg)
+    p_specs = [spec(s) for s in shapes]
+    tok = spec((batch, cfg.max_len), I32)
+    seq1 = spec((batch, cfg.max_len - 1))
+    advs = spec((batch,))
+    step_s = spec(())
+
+    entries = {}
+
+    def emit(name, fn, args):
+        text, inputs, outputs = lower_entry(fn, args)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entries[name] = {"file": fname, "inputs": inputs, "outputs": outputs}
+        print(f"  {name}: {len(text)} chars, {len(inputs)} in, "
+              f"{len(outputs)} out")
+
+    print(f"lowering entry points (d={cfg.d_model}, layers={cfg.n_layers}, "
+          f"vocab={cfg.vocab}, maxlen={cfg.max_len}, batch={batch})")
+
+    emit("init",
+         lambda seed: tuple(init_params(
+             cfg, jax.random.wrap_key_data(seed, impl="threefry2x32"))),
+         (spec((2,), U32),))
+
+    emit("forward",
+         lambda *a: (M.forward_logits(cfg, list(a[:-1]), a[-1]),),
+         (*p_specs, tok))
+
+    emit("logprobs",
+         lambda *a: (M.token_logprobs(cfg, list(a[:-1]), a[-1]),),
+         (*p_specs, tok))
+
+    emit("reward",
+         lambda *a: (T.reward_score(cfg, list(a[:-1]), a[-1]),),
+         (*p_specs, tok))
+
+    emit("value",
+         lambda *a: (M.forward_value(cfg, list(a[:-1]), a[-1]),),
+         (*p_specs, tok))
+
+    n_p = len(shapes)
+
+    def grpo_step(*a):
+        params = list(a[:n_p])
+        m = list(a[n_p:2 * n_p])
+        v = list(a[2 * n_p:3 * n_p])
+        step, tokens, logp_old, logp_ref, adv, mask = a[3 * n_p:]
+        new_p, new_m, new_v, loss, kl = T.grpo_train_step(
+            cfg, params, m, v, step, tokens, logp_old, logp_ref, adv, mask,
+            lr=lr, clip_eps=clip_eps, kl_beta=kl_beta)
+        return (*new_p, *new_m, *new_v, loss, kl)
+
+    emit("grpo_train", grpo_step,
+         (*p_specs, *p_specs, *p_specs, step_s, tok, seq1, seq1, advs, seq1))
+
+    def critic_step(*a):
+        params = list(a[:n_p])
+        m = list(a[n_p:2 * n_p])
+        v = list(a[2 * n_p:3 * n_p])
+        step, tokens, returns, mask = a[3 * n_p:]
+        new_p, new_m, new_v, loss = T.ppo_critic_train_step(
+            cfg, params, m, v, step, tokens, returns, mask, lr=lr)
+        return (*new_p, *new_m, *new_v, loss)
+
+    emit("critic_train", critic_step,
+         (*p_specs, *p_specs, *p_specs, step_s, tok, seq1, seq1))
+
+    manifest = {
+        "model": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "n_layers": cfg.n_layers,
+            "max_len": cfg.max_len,
+        },
+        "batch": batch,
+        "hyper": {"lr": lr, "clip_eps": clip_eps, "kl_beta": kl_beta},
+        "n_params": n_p,
+        "param_names": param_names(cfg),
+        "param_shapes": [list(s) for s in shapes],
+        "entrypoints": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+PRESETS = {
+    # ~1.1M params — the CPU-interpret substrate budget (DESIGN.md §2).
+    "tiny": ModelCfg(vocab=64, d_model=128, n_heads=4, d_ff=512,
+                     n_layers=4, max_len=96),
+    # ~5M params — slower, for longer runs.
+    "small": ModelCfg(vocab=64, d_model=256, n_heads=8, d_ff=1024,
+                      n_layers=6, max_len=128),
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--preset", default="tiny", choices=sorted(PRESETS))
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--clip-eps", type=float, default=0.2)
+    ap.add_argument("--kl-beta", type=float, default=0.04)
+    args = ap.parse_args(argv)
+    cfg = PRESETS[args.preset]
+    manifest = build(cfg, args.batch, args.out_dir, args.lr, args.clip_eps,
+                     args.kl_beta)
+    total = sum(
+        int(jnp.prod(jnp.array(s))) for s in manifest["param_shapes"])
+    print(f"wrote {len(manifest['entrypoints'])} entry points to "
+          f"{args.out_dir} ({total/1e6:.2f}M params)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

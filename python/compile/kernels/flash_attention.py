@@ -1,0 +1,287 @@
+"""Flash-attention in Pallas: tiled causal attention with online softmax,
+forward + custom-VJP backward kernels.
+
+Hardware adaptation (paper → TPU, DESIGN.md §3): the paper's fleet is
+CUDA GPUs where flash attention tiles into SM shared memory; here the
+HBM→VMEM staging is expressed with `BlockSpec` blocks and the reduction
+axis is the minor grid dimension so output blocks accumulate in place.
+Block sizes default to MXU-friendly multiples (the last dim stays the
+head dim; Q/K tiles are 128-row tiles on real TPUs, shrunk automatically
+for the small models used on the CPU-interpret substrate).
+
+All `pallas_call`s use ``interpret=True``: the CPU PJRT client cannot
+execute Mosaic custom-calls, and interpret mode lowers the kernel to
+plain HLO that the rust runtime loads (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _pick_block(n, preferred=128):
+    """Largest divisor of n that is ≤ preferred (≥ 1)."""
+    b = min(n, preferred)
+    while n % b != 0:
+        b -= 1
+    return max(b, 1)
+
+
+# ----------------------------------------------------------------------
+# forward
+# ----------------------------------------------------------------------
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
+                sm_scale, block_q, block_k, n_kv):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]                      # [BQ, D]
+    k = k_ref[0]                      # [BK, D]
+    v = v_ref[0]                      # [BK, D]
+    s = jnp.dot(q, k.T) * sm_scale    # [BQ, BK]
+
+    q_idx = qi * block_q + jnp.arange(block_q)
+    k_idx = ki * block_k + jnp.arange(block_k)
+    causal = q_idx[:, None] >= k_idx[None, :]
+    s = jnp.where(causal, s, NEG_INF)
+
+    m_prev = m_ref[0]                 # [BQ]
+    l_prev = l_ref[0]
+    o_prev = o_ref[0]
+
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])   # [BQ, BK]
+    l_new = alpha * l_prev + p.sum(axis=-1)
+    o_new = o_prev * alpha[:, None] + jnp.dot(p, v)
+
+    m_ref[0] = m_new
+    l_ref[0] = l_new
+
+    @pl.when(ki == n_kv - 1)
+    def _final():
+        o_ref[0] = o_new / l_new[:, None]
+
+    @pl.when(ki != n_kv - 1)
+    def _carry():
+        o_ref[0] = o_new
+
+
+def _fwd(q, k, v, sm_scale, block_q, block_k):
+    bh, seq, d = q.shape
+    n_q = seq // block_q
+    n_kv = seq // block_k
+    grid = (bh, n_q, n_kv)
+    kernel = functools.partial(
+        _fwd_kernel, sm_scale=sm_scale, block_q=block_q, block_k=block_k,
+        n_kv=n_kv)
+    out_shapes = [
+        jax.ShapeDtypeStruct((bh, seq, d), q.dtype),   # o
+        jax.ShapeDtypeStruct((bh, seq), q.dtype),      # m (running max)
+        jax.ShapeDtypeStruct((bh, seq), q.dtype),      # l (running denom)
+    ]
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_q), lambda b, qi, ki: (b, qi)),
+            pl.BlockSpec((1, block_q), lambda b, qi, ki: (b, qi)),
+        ],
+        out_shape=out_shapes,
+        interpret=True,
+    )(q, k, v)
+    lse = m + jnp.log(l)
+    return o, lse
+
+
+# ----------------------------------------------------------------------
+# backward
+# ----------------------------------------------------------------------
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref, *,
+               sm_scale, block_q, block_k):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        dq_ref[...] = jnp.zeros_like(dq_ref)
+
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    do = do_ref[0]
+    lse = lse_ref[0]                  # [BQ]
+    delta = delta_ref[0]              # [BQ]
+
+    s = jnp.dot(q, k.T) * sm_scale
+    q_idx = qi * block_q + jnp.arange(block_q)
+    k_idx = ki * block_k + jnp.arange(block_k)
+    causal = q_idx[:, None] >= k_idx[None, :]
+    s = jnp.where(causal, s, NEG_INF)
+    p = jnp.exp(s - lse[:, None])     # true softmax probs
+    dp = jnp.dot(do, v.T)             # [BQ, BK]
+    ds = p * (dp - delta[:, None]) * sm_scale
+    dq_ref[0] += jnp.dot(ds, k)
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                dk_ref, dv_ref, *, sm_scale, block_q, block_k):
+    ki = pl.program_id(1)
+    qi = pl.program_id(2)
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_ref[...] = jnp.zeros_like(dk_ref)
+        dv_ref[...] = jnp.zeros_like(dv_ref)
+
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    do = do_ref[0]
+    lse = lse_ref[0]
+    delta = delta_ref[0]
+
+    s = jnp.dot(q, k.T) * sm_scale    # [BQ, BK]
+    q_idx = qi * block_q + jnp.arange(block_q)
+    k_idx = ki * block_k + jnp.arange(block_k)
+    causal = q_idx[:, None] >= k_idx[None, :]
+    s = jnp.where(causal, s, NEG_INF)
+    p = jnp.exp(s - lse[:, None])
+    dv_ref[0] += jnp.dot(p.T, do)
+    dp = jnp.dot(do, v.T)
+    ds = p * (dp - delta[:, None]) * sm_scale
+    dk_ref[0] += jnp.dot(ds.T, q)
+
+
+def _bwd_impl(q, k, v, o, lse, do, sm_scale, block_q, block_k):
+    bh, seq, d = q.shape
+    n_q = seq // block_q
+    n_kv = seq // block_k
+    delta = jnp.sum(do * o, axis=-1)  # [BH, L]
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, sm_scale=sm_scale,
+                          block_q=block_q, block_k=block_k),
+        grid=(bh, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, block_q, d), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_q), lambda b, qi, ki: (b, qi)),
+            pl.BlockSpec((1, block_q), lambda b, qi, ki: (b, qi)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, seq, d), q.dtype),
+        interpret=True,
+    )(q, k, v, do, lse, delta)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, sm_scale=sm_scale,
+                          block_q=block_q, block_k=block_k),
+        grid=(bh, n_kv, n_q),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, ki, qi: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, ki, qi: (b, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, ki, qi: (b, ki, 0)),
+            pl.BlockSpec((1, block_q, d), lambda b, ki, qi: (b, qi, 0)),
+            pl.BlockSpec((1, block_q), lambda b, ki, qi: (b, qi)),
+            pl.BlockSpec((1, block_q), lambda b, ki, qi: (b, qi)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_k, d), lambda b, ki, qi: (b, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, ki, qi: (b, ki, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, seq, d), q.dtype),
+            jax.ShapeDtypeStruct((bh, seq, d), q.dtype),
+        ],
+        interpret=True,
+    )(q, k, v, do, lse, delta)
+    return dq, dk, dv
+
+
+# ----------------------------------------------------------------------
+# public API with custom VJP
+# ----------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash_bhld(q, k, v, sm_scale, block_q, block_k):
+    o, _ = _fwd(q, k, v, sm_scale, block_q, block_k)
+    return o
+
+
+def _flash_fwd_rule(q, k, v, sm_scale, block_q, block_k):
+    o, lse = _fwd(q, k, v, sm_scale, block_q, block_k)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd_rule(sm_scale, block_q, block_k, res, do):
+    q, k, v, o, lse = res
+    dq, dk, dv = _bwd_impl(q, k, v, o, lse, do, sm_scale, block_q, block_k)
+    return dq, dk, dv
+
+
+_flash_bhld.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+def flash_attention(q, k, v, sm_scale=None, block_q=None, block_k=None):
+    """Causal flash attention.
+
+    Args:
+        q, k, v: ``[B, H, L, D]``.
+        sm_scale: softmax scale (default ``1/sqrt(D)``).
+        block_q/block_k: tile sizes; default the largest divisor of L
+            that is ≤ 128 (MXU tile) — shrinks automatically for the
+            small interpret-mode models.
+
+    Returns:
+        ``[B, H, L, D]`` output; differentiable via the Pallas backward
+        kernels.
+    """
+    b, h, seq, d = q.shape
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    if block_q is None:
+        block_q = _pick_block(seq)
+    if block_k is None:
+        block_k = _pick_block(seq)
+    qf = q.reshape(b * h, seq, d)
+    kf = k.reshape(b * h, seq, d)
+    vf = v.reshape(b * h, seq, d)
+    o = _flash_bhld(qf, kf, vf, float(sm_scale), int(block_q), int(block_k))
+    return o.reshape(b, h, seq, d)
+
+
+def vmem_report(seq, d, block_q, block_k, dtype_bytes=2):
+    """Estimated VMEM working set of the forward kernel (bytes) and MXU
+    tile utilization — the structural L1 'profile' recorded in
+    EXPERIMENTS.md §Perf (interpret-mode wallclock is meaningless)."""
+    tiles = (block_q * d + 2 * block_k * d    # q + k + v blocks
+             + block_q * block_k              # scores
+             + block_q * d + 2 * block_q)     # o + m + l
+    mxu_util = min(block_q, 128) * min(block_k, 128) / (128.0 * 128.0)
+    return {
+        "vmem_bytes": tiles * dtype_bytes,
+        "mxu_tile_utilization": mxu_util,
+        "hbm_reads_per_block": (block_q + 2 * block_k) * d * dtype_bytes,
+        "seq": seq,
+    }

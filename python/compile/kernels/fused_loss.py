@@ -1,0 +1,86 @@
+"""Fused GRPO/PPO token-loss Pallas kernel.
+
+Computes the clipped policy-gradient + k3-KL token loss *and* its
+analytic gradient w.r.t. the new log-probs in one pass (the gradient is
+the kernel's second output, wired into a custom VJP), so the training
+step never materializes the intermediate ratio/clip tensors in HBM.
+
+Matches `ref.grpo_token_loss_ref` / `ref.grpo_token_grad_ref` exactly.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _loss_kernel(lpn_ref, lpo_ref, lpr_ref, adv_ref, mask_ref,
+                 loss_ref, grad_ref, *, clip_eps, kl_beta):
+    lpn = lpn_ref[...]
+    lpo = lpo_ref[...]
+    lpr = lpr_ref[...]
+    adv = adv_ref[...]
+    mask = mask_ref[...]
+
+    ratio = jnp.exp(lpn - lpo)
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps) * adv
+    pg = -jnp.minimum(unclipped, clipped)
+    delta = lpr - lpn
+    kl = jnp.exp(delta) - delta - 1.0
+    loss_ref[...] = (pg + kl_beta * kl) * mask
+
+    use_unclipped = unclipped <= clipped
+    inside = (ratio >= 1.0 - clip_eps) & (ratio <= 1.0 + clip_eps)
+    dpg = -adv * ratio * jnp.where(use_unclipped, 1.0,
+                                   inside.astype(ratio.dtype))
+    dkl = -jnp.exp(delta) + 1.0
+    grad_ref[...] = (dpg + kl_beta * dkl) * mask
+
+
+def _run_kernel(lpn, lpo, lpr, adv, mask, clip_eps, kl_beta):
+    b, seq = lpn.shape
+    kernel = functools.partial(_loss_kernel, clip_eps=clip_eps,
+                               kl_beta=kl_beta)
+    # Row blocks: one batch row per grid step keeps the block well under
+    # VMEM for any realistic sequence length.
+    spec = pl.BlockSpec((1, seq), lambda i: (i, 0))
+    loss, grad = pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[spec] * 5,
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, seq), lpn.dtype),
+            jax.ShapeDtypeStruct((b, seq), lpn.dtype),
+        ],
+        interpret=True,
+    )(lpn, lpo, lpr, adv, mask)
+    return loss, grad
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def grpo_token_loss(logp_new, logp_old, logp_ref, adv, mask,
+                    clip_eps=0.2, kl_beta=0.04):
+    """Per-token GRPO loss ``[B, L]``; differentiable in `logp_new`
+    (the other inputs are treated as constants, as in PPO/GRPO)."""
+    loss, _ = _run_kernel(logp_new, logp_old, logp_ref, adv, mask,
+                          clip_eps, kl_beta)
+    return loss
+
+
+def _loss_fwd(logp_new, logp_old, logp_ref, adv, mask, clip_eps, kl_beta):
+    loss, grad = _run_kernel(logp_new, logp_old, logp_ref, adv, mask,
+                             clip_eps, kl_beta)
+    return loss, grad
+
+
+def _loss_bwd(clip_eps, kl_beta, grad, g):
+    # d(loss)/d(logp_new) = grad ⊙ cotangent; other inputs get zeros.
+    dlpn = grad * g
+    zeros = jnp.zeros_like(grad)
+    return dlpn, zeros, zeros, zeros, zeros
+
+
+grpo_token_loss.defvjp(_loss_fwd, _loss_bwd)

@@ -1,0 +1,130 @@
+"""Layer 2: the JAX transformer used by the real execution engine.
+
+Decoder-only LM (RMSNorm, SwiGLU MLP, causal flash attention from the
+Layer-1 Pallas kernel), with a value head for PPO critics. Parameters
+are a flat, deterministically-ordered list of arrays so the rust runtime
+can thread them through PJRT executables without a pytree library.
+"""
+
+import dataclasses
+import math
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.flash_attention import flash_attention
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCfg:
+    vocab: int = 64
+    d_model: int = 128
+    n_heads: int = 4
+    d_ff: int = 512
+    n_layers: int = 4
+    max_len: int = 96
+
+    @property
+    def head_dim(self):
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# Parameter layout: names in flattened order (the manifest contract).
+def param_names(cfg: ModelCfg) -> List[str]:
+    names = ["embed"]
+    for i in range(cfg.n_layers):
+        names += [
+            f"l{i}.ln1", f"l{i}.wq", f"l{i}.wk", f"l{i}.wv", f"l{i}.wo",
+            f"l{i}.ln2", f"l{i}.w_gate", f"l{i}.w_up", f"l{i}.w_down",
+        ]
+    names += ["ln_f", "unembed", "value_head"]
+    return names
+
+
+def param_shapes(cfg: ModelCfg) -> List[tuple]:
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    shapes = [(v, d)]
+    for _ in range(cfg.n_layers):
+        shapes += [(d,), (d, d), (d, d), (d, d), (d, d),
+                   (d,), (d, f), (d, f), (f, d)]
+    shapes += [(d,), (d, v), (d, 1)]
+    return shapes
+
+
+def init_params(cfg: ModelCfg, key) -> List[jnp.ndarray]:
+    shapes = param_shapes(cfg)
+    params = []
+    keys = jax.random.split(key, len(shapes))
+    for k, shape in zip(keys, shapes):
+        if len(shape) == 1:
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[0]
+            params.append(
+                jax.random.normal(k, shape, jnp.float32) / math.sqrt(fan_in))
+    return params
+
+
+def _rms_norm(x, g):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-6) * g
+
+
+def _unpack(cfg: ModelCfg, params):
+    it = iter(params)
+    embed = next(it)
+    layers = []
+    for _ in range(cfg.n_layers):
+        layers.append({
+            "ln1": next(it), "wq": next(it), "wk": next(it),
+            "wv": next(it), "wo": next(it), "ln2": next(it),
+            "w_gate": next(it), "w_up": next(it), "w_down": next(it),
+        })
+    ln_f = next(it)
+    unembed = next(it)
+    value_head = next(it)
+    return embed, layers, ln_f, unembed, value_head
+
+
+def trunk(cfg: ModelCfg, params, tokens):
+    """Shared transformer trunk: tokens ``[B, L]`` → hidden ``[B, L, D]``."""
+    embed, layers, ln_f, _, _ = _unpack(cfg, params)
+    x = embed[tokens]  # [B, L, D]
+    b, seq, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    for lyr in layers:
+        y = _rms_norm(x, lyr["ln1"])
+        q = (y @ lyr["wq"]).reshape(b, seq, h, hd).transpose(0, 2, 1, 3)
+        k = (y @ lyr["wk"]).reshape(b, seq, h, hd).transpose(0, 2, 1, 3)
+        v = (y @ lyr["wv"]).reshape(b, seq, h, hd).transpose(0, 2, 1, 3)
+        att = flash_attention(q, k, v)
+        att = att.transpose(0, 2, 1, 3).reshape(b, seq, d)
+        x = x + att @ lyr["wo"]
+        y = _rms_norm(x, lyr["ln2"])
+        gate = jax.nn.silu(y @ lyr["w_gate"])
+        up = y @ lyr["w_up"]
+        x = x + (gate * up) @ lyr["w_down"]
+    return _rms_norm(x, ln_f)
+
+
+def forward_logits(cfg: ModelCfg, params, tokens):
+    """tokens ``[B, L]`` → logits ``[B, L, V]``."""
+    _, _, _, unembed, _ = _unpack(cfg, params)
+    return trunk(cfg, params, tokens) @ unembed
+
+
+def forward_value(cfg: ModelCfg, params, tokens):
+    """tokens ``[B, L]`` → per-token value ``[B, L]`` (PPO critic)."""
+    _, _, _, _, value_head = _unpack(cfg, params)
+    return (trunk(cfg, params, tokens) @ value_head)[..., 0]
+
+
+def token_logprobs(cfg: ModelCfg, params, tokens):
+    """Log-prob of each *next* token: ``[B, L-1]`` where entry ``t`` is
+    ``log p(tokens[t+1] | tokens[:t+1])``."""
+    logits = forward_logits(cfg, params, tokens)          # [B, L, V]
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)    # [B, L-1, V]
+    nxt = tokens[:, 1:]
+    return jnp.take_along_axis(logp, nxt[..., None], axis=-1)[..., 0]

@@ -1,0 +1,101 @@
+"""GRPO / PPO training step: loss (via the fused Pallas token-loss
+kernel), jax.grad, and an Adam update — one pure function per algorithm,
+AOT-lowered by aot.py and executed from rust.
+
+State layout (flat lists, mirroring `model.param_names`):
+    params, adam_m, adam_v  — one array per parameter.
+"""
+
+import functools
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fused_loss import grpo_token_loss
+from .model import ModelCfg, forward_logits, forward_value, token_logprobs
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _noop(cfg):  # pragma: no cover - placeholder to keep jit imported
+    return None
+
+
+def grpo_loss(cfg: ModelCfg, params: List[jnp.ndarray], tokens, logp_old,
+              logp_ref, adv, mask, clip_eps=0.2, kl_beta=0.04):
+    """Masked-mean GRPO loss over response tokens.
+
+    Args:
+        tokens:   ``[B, L]`` int32 prompt+response.
+        logp_old: ``[B, L-1]`` behaviour-policy log-probs.
+        logp_ref: ``[B, L-1]`` reference-policy log-probs.
+        adv:      ``[B]`` group-normalized advantages.
+        mask:     ``[B, L-1]`` float, 1 on response positions.
+    """
+    logp_new = token_logprobs(cfg, params, tokens)        # [B, L-1]
+    adv2d = jnp.broadcast_to(adv[:, None], logp_new.shape)
+    tok = grpo_token_loss(logp_new, logp_old, logp_ref, adv2d, mask,
+                          clip_eps, kl_beta)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = tok.sum() / denom
+    # Diagnostics: mean KL over response tokens.
+    delta = logp_ref - logp_new
+    kl = ((jnp.exp(delta) - delta - 1.0) * mask).sum() / denom
+    return loss, kl
+
+
+def adam_update(params, grads, m, v, step, lr=3e-4, b1=0.9, b2=0.999,
+                eps=1e-8):
+    """One Adam step over flat lists. `step` is the 1-based step count."""
+    new_p, new_m, new_v = [], [], []
+    t = step.astype(jnp.float32)
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = b1 * mi + (1 - b1) * g
+        vi = b2 * vi + (1 - b2) * g * g
+        m_hat = mi / (1 - b1 ** t)
+        v_hat = vi / (1 - b2 ** t)
+        new_p.append(p - lr * m_hat / (jnp.sqrt(v_hat) + eps))
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v
+
+
+def grpo_train_step(cfg: ModelCfg, params, m, v, step, tokens, logp_old,
+                    logp_ref, adv, mask, lr=3e-4, clip_eps=0.2,
+                    kl_beta=0.04):
+    """Full GRPO update; returns (new_params, new_m, new_v, loss, kl)."""
+    (loss, kl), grads = jax.value_and_grad(
+        lambda p: grpo_loss(cfg, p, tokens, logp_old, logp_ref, adv, mask,
+                            clip_eps, kl_beta), has_aux=True)(params)
+    new_p, new_m, new_v = adam_update(params, grads, m, v, step, lr=lr)
+    return new_p, new_m, new_v, loss, kl
+
+
+def ppo_critic_loss(cfg: ModelCfg, params, tokens, returns, mask):
+    """MSE value loss over response tokens (PPO critic)."""
+    values = forward_value(cfg, params, tokens)[:, :-1]   # align with mask
+    err = (values - returns) * mask
+    return (err * err).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def ppo_critic_train_step(cfg: ModelCfg, params, m, v, step, tokens,
+                          returns, mask, lr=3e-4):
+    """Critic update; returns (new_params, new_m, new_v, loss)."""
+    loss, grads = jax.value_and_grad(
+        lambda p: ppo_critic_loss(cfg, p, tokens, returns, mask))(params)
+    new_p, new_m, new_v = adam_update(params, grads, m, v, step, lr=lr)
+    return new_p, new_m, new_v, loss
+
+
+def reward_score(cfg: ModelCfg, params, tokens):
+    """Scalar score per sequence from the value head at the last position
+    (a learned reward model; the arithmetic tasks also have a rule-based
+    verifier on the rust side)."""
+    return forward_value(cfg, params, tokens)[:, -1]
+
+
+__all__ = [
+    "ModelCfg", "grpo_loss", "grpo_train_step", "adam_update",
+    "ppo_critic_loss", "ppo_critic_train_step", "reward_score",
+    "forward_logits",
+]

@@ -1,0 +1,83 @@
+"""Layer-2 model invariants: shapes, causality, logprob semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (ModelCfg, forward_logits, forward_value,
+                           init_params, param_names, param_shapes,
+                           token_logprobs)
+
+CFG = ModelCfg(vocab=32, d_model=64, n_heads=4, d_ff=128, n_layers=2,
+               max_len=32)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG, jax.random.PRNGKey(0))
+
+
+def toks(key, b=2, seq=None):
+    seq = seq or CFG.max_len
+    return jax.random.randint(key, (b, seq), 0, CFG.vocab)
+
+
+class TestModel:
+    def test_param_layout_consistent(self):
+        names = param_names(CFG)
+        shapes = param_shapes(CFG)
+        assert len(names) == len(shapes)
+        assert names[0] == "embed"
+        assert names[-1] == "value_head"
+        assert shapes[0] == (CFG.vocab, CFG.d_model)
+        # 9 tensors per layer + embed + ln_f + unembed + value head
+        assert len(names) == 9 * CFG.n_layers + 4
+
+    def test_init_matches_shapes(self, params):
+        for p, s in zip(params, param_shapes(CFG)):
+            assert p.shape == s
+
+    def test_logits_shape(self, params):
+        t = toks(jax.random.PRNGKey(1))
+        logits = forward_logits(CFG, params, t)
+        assert logits.shape == (2, CFG.max_len, CFG.vocab)
+        assert bool(jnp.isfinite(logits).all())
+
+    def test_causality(self, params):
+        # Perturbing token t must not change logits before t.
+        t = toks(jax.random.PRNGKey(2), b=1)
+        l1 = forward_logits(CFG, params, t)
+        t2 = t.at[0, -1].set((t[0, -1] + 1) % CFG.vocab)
+        l2 = forward_logits(CFG, params, t2)
+        np.testing.assert_allclose(l1[:, :-1], l2[:, :-1], rtol=1e-5,
+                                   atol=1e-5)
+
+    def test_token_logprobs_are_logprobs(self, params):
+        t = toks(jax.random.PRNGKey(3))
+        lp = token_logprobs(CFG, params, t)
+        assert lp.shape == (2, CFG.max_len - 1)
+        assert bool((lp <= 1e-6).all())
+
+    def test_token_logprobs_match_manual(self, params):
+        t = toks(jax.random.PRNGKey(4), b=1)
+        lp = token_logprobs(CFG, params, t)
+        logits = forward_logits(CFG, params, t)
+        full = jax.nn.log_softmax(logits, axis=-1)
+        manual = full[0, jnp.arange(CFG.max_len - 1), t[0, 1:]]
+        np.testing.assert_allclose(lp[0], manual, rtol=1e-6, atol=1e-6)
+
+    def test_value_head_shape(self, params):
+        t = toks(jax.random.PRNGKey(5))
+        v = forward_value(CFG, params, t)
+        assert v.shape == (2, CFG.max_len)
+        assert bool(jnp.isfinite(v).all())
+
+    def test_different_tokens_different_logits(self, params):
+        a = forward_logits(CFG, params, toks(jax.random.PRNGKey(6)))
+        b = forward_logits(CFG, params, toks(jax.random.PRNGKey(7)))
+        assert float(jnp.abs(a - b).max()) > 1e-3
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,98 @@
+//! Shared helpers for the figure/table benches. Every bench prints the
+//! same rows/series the paper reports and persists a `RunRecord` under
+//! `results/`. Budgets scale down by default; set `HETRL_BENCH_FULL=1`
+//! for the full sweeps.
+
+#![allow(dead_code)]
+
+use hetrl::balance::{self, BalanceConfig};
+use hetrl::scheduler::{
+    Budget, PureEaScheduler, Scheduler, ShaEaScheduler, StreamRlScheduler, VerlScheduler,
+};
+use hetrl::simulator::{simulate_plan, NoiseModel, SimConfig, SimResult};
+use hetrl::topology::DeviceTopology;
+use hetrl::workflow::{Algo, JobConfig, Mode, ModelSpec, RlWorkflow};
+
+pub fn full() -> bool {
+    std::env::var("HETRL_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Model sizes for the sweeps (paper: 4B, 8B, 14B).
+pub fn model_sizes() -> Vec<ModelSpec> {
+    if full() {
+        vec![ModelSpec::qwen_4b(), ModelSpec::qwen_8b(), ModelSpec::qwen_14b()]
+    } else {
+        vec![ModelSpec::qwen_4b(), ModelSpec::qwen_8b()]
+    }
+}
+
+pub fn sha_budget() -> usize {
+    if full() {
+        1500
+    } else {
+        400
+    }
+}
+
+pub fn sim_cfg() -> SimConfig {
+    SimConfig {
+        iters: if full() { 3 } else { 2 },
+        seed: 0xBE,
+        noise: NoiseModel::default(),
+    }
+}
+
+/// System under test for the end-to-end comparisons.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum System {
+    HetRl,
+    Verl,
+    StreamRl,
+}
+
+impl System {
+    pub fn name(self) -> &'static str {
+        match self {
+            System::HetRl => "HetRL",
+            System::Verl => "verl",
+            System::StreamRl => "StreamRL",
+        }
+    }
+}
+
+/// Schedule with the given system, apply HetRL's load balancing for
+/// HetRL only, and run the simulator. Returns simulated throughput in
+/// samples/s (0 when no feasible plan is found).
+pub fn run_system(
+    system: System,
+    topo: &DeviceTopology,
+    wf: &RlWorkflow,
+    job: &JobConfig,
+    seed: u64,
+) -> Option<SimResult> {
+    let mut sched: Box<dyn Scheduler> = match system {
+        System::HetRl => Box::new(ShaEaScheduler::new(seed)),
+        System::Verl => Box::new(VerlScheduler::new(seed)),
+        System::StreamRl => Box::new(StreamRlScheduler::new(seed)),
+    };
+    let budget = match system {
+        System::HetRl => sha_budget(),
+        _ => 200,
+    };
+    let out = sched.schedule(topo, wf, job, Budget::timed(budget, 120.0));
+    let mut plan = out.plan?;
+    if system == System::HetRl {
+        plan = balance::apply(&plan, wf, topo, BalanceConfig::default());
+    }
+    Some(simulate_plan(topo, wf, job, &plan, &sim_cfg()))
+}
+
+/// The pure-EA (DEAP-like) baseline, for the search-efficiency plots.
+pub fn deap(seed: u64) -> PureEaScheduler {
+    PureEaScheduler::new(seed)
+}
+
+/// Workflow shorthand.
+pub fn workflow(algo: Algo, mode: Mode, model: &ModelSpec) -> RlWorkflow {
+    RlWorkflow::new(algo, mode, model.clone())
+}

@@ -1,0 +1,81 @@
+//! Figure 10 — throughput of HetRL vs verl for Qwen-8B under varying
+//! combinations of heterogeneous GPUs (Single-Region), across
+//! PPO/GRPO × Sync/Async.
+//!
+//! Expected shape: HetRL > verl on every combo; ALL-GPUs beats the
+//! 24×A100 homogeneous subset by using the extra heterogeneous capacity.
+
+mod common;
+
+use common::{run_system, workflow, System};
+use hetrl::metrics::RunRecord;
+use hetrl::topology::{build_testbed, subset_by_model, GpuModel, Scenario, TestbedSpec};
+use hetrl::util::json::Json;
+use hetrl::util::table::Table;
+use hetrl::workflow::{Algo, JobConfig, Mode, ModelSpec};
+
+fn main() {
+    hetrl::util::logging::init();
+    let job = JobConfig::default();
+    let model = ModelSpec::qwen_8b();
+    let full_topo = build_testbed(Scenario::SingleRegion, &TestbedSpec::default());
+
+    let combos: Vec<(&str, Vec<(GpuModel, usize)>)> = vec![
+        ("24xA100", vec![(GpuModel::A100, 24)]),
+        ("24xL40S", vec![(GpuModel::L40S, 24)]),
+        ("24xA100+24xL40S", vec![(GpuModel::A100, 24), (GpuModel::L40S, 24)]),
+        (
+            "24xA100+16xL4",
+            vec![(GpuModel::A100, 24), (GpuModel::L4, 16)],
+        ),
+        (
+            "ALL (64 GPUs)",
+            vec![(GpuModel::A100, 24), (GpuModel::L40S, 24), (GpuModel::L4, 16)],
+        ),
+    ];
+
+    let mut record = RunRecord::new(
+        "fig10_gpu_combos",
+        &["combo", "algo", "mode", "hetrl", "verl", "speedup"],
+    );
+    for algo in [Algo::Ppo, Algo::Grpo] {
+        for mode in [Mode::Sync, Mode::Async] {
+            let mut table = Table::new(
+                &format!(
+                    "Figure 10: {}-{} Qwen-8B throughput by GPU combo (samples/s)",
+                    algo.name(),
+                    mode.name()
+                ),
+                &["combo", "HetRL", "verl", "HetRL/verl"],
+            );
+            for (name, keep) in &combos {
+                let topo = subset_by_model(&full_topo, keep);
+                let wf = workflow(algo, mode, &model);
+                let hetrl = run_system(System::HetRl, &topo, &wf, &job, 6)
+                    .map(|r| r.throughput)
+                    .unwrap_or(0.0);
+                let verl = run_system(System::Verl, &topo, &wf, &job, 6)
+                    .map(|r| r.throughput)
+                    .unwrap_or(0.0);
+                table.row(vec![
+                    name.to_string(),
+                    format!("{hetrl:.1}"),
+                    format!("{verl:.1}"),
+                    format!("{:.2}x", hetrl / verl.max(1e-9)),
+                ]);
+                record.push(vec![
+                    Json::str(name),
+                    Json::str(algo.name()),
+                    Json::str(mode.name()),
+                    Json::num(hetrl),
+                    Json::num(verl),
+                    Json::num(hetrl / verl.max(1e-9)),
+                ]);
+            }
+            table.print();
+        }
+    }
+    if let Ok(p) = record.save(&hetrl::metrics::results_dir()) {
+        println!("rows saved to {}", p.display());
+    }
+}

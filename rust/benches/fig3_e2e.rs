@@ -1,0 +1,107 @@
+//! Figure 3 — end-to-end comparison of HetRL vs verl vs StreamRL across
+//! the four network scenarios: (a,b) the scenario delay/bandwidth
+//! envelopes, (c-e) simulated training throughput per model size for
+//! PPO and GRPO, sync and async.
+//!
+//! Expected shape (paper §5.2): HetRL ≥ baselines everywhere; gaps grow
+//! with network heterogeneity; verl-Async sometimes < verl-Sync;
+//! StreamRL between verl and HetRL outside Single-Region.
+
+mod common;
+
+use common::{model_sizes, run_system, workflow, System};
+use hetrl::metrics::RunRecord;
+use hetrl::topology::{build_testbed, Scenario, TestbedSpec};
+use hetrl::util::json::Json;
+use hetrl::util::table::Table;
+use hetrl::workflow::{Algo, JobConfig, Mode};
+
+fn main() {
+    hetrl::util::logging::init();
+    let job = JobConfig::default();
+
+    // (a, b) scenario link envelopes
+    let mut env = Table::new(
+        "Figure 3(a,b): scenario link envelopes",
+        &["scenario", "max delay (ms)", "min WAN bw (Gbps)"],
+    );
+    for s in Scenario::ALL {
+        let t = build_testbed(s, &TestbedSpec::default());
+        let mut dmax: f64 = 0.0;
+        let mut bmin = f64::INFINITY;
+        for i in 0..t.n() {
+            for j in 0..t.n() {
+                if i != j {
+                    dmax = dmax.max(t.lat(i, j));
+                    if t.devices[i].region != t.devices[j].region
+                        || t.bw(i, j) < 5e9
+                    {
+                        bmin = bmin.min(t.bw(i, j));
+                    }
+                }
+            }
+        }
+        env.row(vec![
+            s.name().to_string(),
+            format!("{:.1}", dmax * 1e3),
+            if bmin.is_finite() {
+                format!("{:.2}", bmin * 8.0 / 1e9)
+            } else {
+                "-".to_string()
+            },
+        ]);
+    }
+    env.print();
+
+    // (c-e) throughput per scenario × algo × size × mode × system
+    let mut record = RunRecord::new(
+        "fig3_e2e",
+        &["scenario", "algo", "mode", "model", "system", "throughput"],
+    );
+    for algo in [Algo::Ppo, Algo::Grpo] {
+        for mode in [Mode::Sync, Mode::Async] {
+            let mut table = Table::new(
+                &format!("Figure 3: {}-{} simulated throughput (samples/s)", algo.name(), mode.name()),
+                &["scenario", "model", "HetRL", "verl", "StreamRL", "HetRL/verl"],
+            );
+            for scenario in Scenario::ALL {
+                let topo = build_testbed(scenario, &TestbedSpec::default());
+                for model in model_sizes() {
+                    let wf = workflow(algo, mode, &model);
+                    let mut row = vec![scenario.name().to_string(), model.name.clone()];
+                    let mut tps = Vec::new();
+                    for system in [System::HetRl, System::Verl, System::StreamRl] {
+                        // StreamRL is an async system; skip in sync mode.
+                        let tp = if system == System::StreamRl && mode == Mode::Sync {
+                            f64::NAN
+                        } else {
+                            run_system(system, &topo, &wf, &job, 1)
+                                .map(|r| r.throughput)
+                                .unwrap_or(0.0)
+                        };
+                        record.push(vec![
+                            Json::str(scenario.name()),
+                            Json::str(algo.name()),
+                            Json::str(mode.name()),
+                            Json::str(&model.name),
+                            Json::str(system.name()),
+                            Json::num(if tp.is_nan() { -1.0 } else { tp }),
+                        ]);
+                        row.push(if tp.is_nan() {
+                            "-".into()
+                        } else {
+                            format!("{tp:.1}")
+                        });
+                        tps.push(tp);
+                    }
+                    row.push(format!("{:.2}x", tps[0] / tps[1].max(1e-9)));
+                    table.row(row);
+                }
+            }
+            table.print();
+        }
+    }
+    if let Ok(p) = record.save(&hetrl::metrics::results_dir()) {
+        println!("rows saved to {}", p.display());
+    }
+}

@@ -1,0 +1,66 @@
+//! Figure 4 — load-balancing ablation on synchronous RL training:
+//! throughput with and without HetRL's data-level + layer-level
+//! balancing, across model sizes, Single- and Multi-Region scenarios.
+//!
+//! Expected shape: up to ~12% gain in Single-Region, up to ~18% in
+//! Multi-Region (paper §5.3).
+
+mod common;
+
+use common::{model_sizes, sha_budget, sim_cfg, workflow};
+use hetrl::balance::{self, BalanceConfig};
+use hetrl::metrics::RunRecord;
+use hetrl::scheduler::{Budget, Scheduler, ShaEaScheduler};
+use hetrl::simulator::simulate_plan;
+use hetrl::topology::{build_testbed, Scenario, TestbedSpec};
+use hetrl::util::json::Json;
+use hetrl::util::table::Table;
+use hetrl::workflow::{Algo, JobConfig, Mode};
+
+fn main() {
+    hetrl::util::logging::init();
+    let job = JobConfig::default();
+    let mut record = RunRecord::new(
+        "fig4_loadbalance",
+        &["scenario", "algo", "model", "lb_off", "lb_on", "gain_pct"],
+    );
+    let mut table = Table::new(
+        "Figure 4: load balancing ablation (sync, simulated samples/s)",
+        &["scenario", "algo", "model", "LB off", "LB on", "gain"],
+    );
+    for scenario in [Scenario::SingleRegion, Scenario::MultiRegionHybrid] {
+        let topo = build_testbed(scenario, &TestbedSpec::default());
+        for algo in [Algo::Ppo, Algo::Grpo] {
+            for model in model_sizes() {
+                let wf = workflow(algo, Mode::Sync, &model);
+                let mut sched = ShaEaScheduler::new(4);
+                let out = sched.schedule(&topo, &wf, &job, Budget::timed(sha_budget(), 90.0));
+                let Some(plan) = out.plan else { continue };
+                let off = simulate_plan(&topo, &wf, &job, &plan, &sim_cfg()).throughput;
+                let balanced = balance::apply(&plan, &wf, &topo, BalanceConfig::default());
+                let on = simulate_plan(&topo, &wf, &job, &balanced, &sim_cfg()).throughput;
+                let gain = (on / off - 1.0) * 100.0;
+                table.row(vec![
+                    scenario.name().to_string(),
+                    algo.name().to_string(),
+                    model.name.clone(),
+                    format!("{off:.1}"),
+                    format!("{on:.1}"),
+                    format!("{gain:+.1}%"),
+                ]);
+                record.push(vec![
+                    Json::str(scenario.name()),
+                    Json::str(algo.name()),
+                    Json::str(&model.name),
+                    Json::num(off),
+                    Json::num(on),
+                    Json::num(gain),
+                ]);
+            }
+        }
+    }
+    table.print();
+    if let Ok(p) = record.save(&hetrl::metrics::results_dir()) {
+        println!("rows saved to {}", p.display());
+    }
+}

@@ -1,0 +1,72 @@
+//! Figure 5 — search-efficiency comparison for Qwen-8B synchronous PPO
+//! on the 64-GPU fleet: best plan cost found vs wall-clock search time
+//! for HetRL(SHA-EA), HetRL(ILP), verl's scheduler and a pure EA (DEAP).
+//!
+//! Expected shape: SHA-EA dominates at every budget; ILP is poor at
+//! small budgets but (on small instances; see fig6) optimal eventually;
+//! verl plateaus immediately (its search space ignores heterogeneity);
+//! DEAP trails SHA-EA.
+
+mod common;
+
+use hetrl::metrics::RunRecord;
+use hetrl::scheduler::{
+    Budget, IlpScheduler, PureEaScheduler, Scheduler, ShaEaScheduler, VerlScheduler,
+};
+use hetrl::topology::{build_testbed, Scenario, TestbedSpec};
+use hetrl::util::json::Json;
+use hetrl::util::table::Table;
+use hetrl::workflow::{Algo, JobConfig, Mode, ModelSpec, RlWorkflow};
+
+fn main() {
+    hetrl::util::logging::init();
+    let topo = build_testbed(Scenario::MultiCountry, &TestbedSpec::default());
+    let wf = RlWorkflow::new(Algo::Ppo, Mode::Sync, ModelSpec::qwen_8b());
+    let job = JobConfig::default();
+    let budgets: Vec<usize> = if common::full() {
+        vec![50, 150, 400, 1000, 2500, 6000]
+    } else {
+        vec![50, 150, 400, 1000]
+    };
+    let wall_cap = if common::full() { 120.0 } else { 30.0 };
+
+    let mut record = RunRecord::new(
+        "fig5_search",
+        &["scheduler", "budget_evals", "wall_s", "best_iter_time_s"],
+    );
+    let mut table = Table::new(
+        "Figure 5: search efficiency (Qwen-8B sync PPO, 64 GPUs, Multi-Country)",
+        &["scheduler", "budget", "wall (s)", "best iter (s)"],
+    );
+    for budget in &budgets {
+        let runs: Vec<(String, Box<dyn Scheduler>)> = vec![
+            ("HetRL(SHA-EA)".into(), Box::new(ShaEaScheduler::new(2))),
+            ("HetRL(ILP)".into(), Box::new(IlpScheduler::with_time_limit(wall_cap * 0.8))),
+            ("verl".into(), Box::new(VerlScheduler::new(2))),
+            ("DEAP".into(), Box::new(PureEaScheduler::new(2))),
+        ];
+        for (name, mut sched) in runs {
+            let out = sched.schedule(&topo, &wf, &job, Budget::timed(*budget, wall_cap));
+            table.row(vec![
+                name.clone(),
+                budget.to_string(),
+                format!("{:.2}", out.wall),
+                if out.cost.is_finite() {
+                    format!("{:.1}", out.cost)
+                } else {
+                    "∞".into()
+                },
+            ]);
+            record.push(vec![
+                Json::str(&name),
+                Json::num(*budget as f64),
+                Json::num(out.wall),
+                Json::num(if out.cost.is_finite() { out.cost } else { -1.0 }),
+            ]);
+        }
+    }
+    table.print();
+    if let Ok(p) = record.save(&hetrl::metrics::results_dir()) {
+        println!("rows saved to {}", p.display());
+    }
+}

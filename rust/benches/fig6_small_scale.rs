@@ -1,0 +1,93 @@
+//! Figure 6 — small-scale settings: (a) search efficiency on 24 GPUs;
+//! (b) HetRL(ILP) time-to-solution across fleet sizes.
+//!
+//! Expected shape: ILP reaches (near-)optimal within minutes at ≤ 24
+//! GPUs; SHA-EA lands within ~1% of it; ILP time grows steeply with N.
+
+mod common;
+
+use hetrl::metrics::RunRecord;
+use hetrl::scheduler::{Budget, IlpScheduler, Scheduler, ShaEaScheduler, VerlScheduler};
+use hetrl::topology::{build_testbed, subset_by_model, GpuModel, Scenario, TestbedSpec};
+use hetrl::util::json::Json;
+use hetrl::util::table::Table;
+use hetrl::workflow::{Algo, JobConfig, Mode, ModelSpec, RlWorkflow};
+
+fn small_topo(per_model: usize) -> hetrl::topology::DeviceTopology {
+    let full = build_testbed(Scenario::SingleRegion, &TestbedSpec::default());
+    subset_by_model(
+        &full,
+        &[
+            (GpuModel::A100, per_model),
+            (GpuModel::L40S, per_model),
+            (GpuModel::L4, per_model),
+        ],
+    )
+}
+
+fn main() {
+    hetrl::util::logging::init();
+    let job = JobConfig::default();
+    let wf = RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_4b());
+
+    // (a) 24-GPU search efficiency
+    let topo24 = small_topo(8);
+    let mut ta = Table::new(
+        "Figure 6(a): 24-GPU search efficiency (GRPO-Sync Qwen-4B)",
+        &["scheduler", "wall (s)", "best iter (s)", "gap vs ILP"],
+    );
+    let mut record = RunRecord::new(
+        "fig6_small_scale",
+        &["part", "label", "wall_s", "iter_time_s"],
+    );
+    let mut ilp = IlpScheduler::with_time_limit(if common::full() { 180.0 } else { 45.0 });
+    let iout = ilp.schedule(&topo24, &wf, &job, Budget::timed(1_000_000, 200.0));
+    let mut rows = vec![("HetRL(ILP)".to_string(), iout.wall, iout.cost)];
+    let sout = ShaEaScheduler::new(3).schedule(&topo24, &wf, &job, Budget::timed(1200, 60.0));
+    rows.push(("HetRL(SHA-EA)".into(), sout.wall, sout.cost));
+    let vout = VerlScheduler::new(3).schedule(&topo24, &wf, &job, Budget::timed(200, 30.0));
+    rows.push(("verl".into(), vout.wall, vout.cost));
+    for (name, wall, cost) in &rows {
+        ta.row(vec![
+            name.clone(),
+            format!("{wall:.2}"),
+            format!("{cost:.1}"),
+            format!("{:+.2}%", (cost / iout.cost - 1.0) * 100.0),
+        ]);
+        record.push(vec![
+            Json::str("a"),
+            Json::str(name),
+            Json::num(*wall),
+            Json::num(*cost),
+        ]);
+    }
+    ta.print();
+
+    // (b) ILP time-to-solution vs fleet size
+    let sizes: Vec<usize> = if common::full() { vec![2, 4, 6, 8] } else { vec![2, 4, 8] };
+    let mut tb = Table::new(
+        "Figure 6(b): HetRL(ILP) time to solution vs fleet size",
+        &["GPUs", "wall (s)", "iter (s)", "optimal?"],
+    );
+    for per_model in sizes {
+        let topo = small_topo(per_model);
+        let mut ilp = IlpScheduler::with_time_limit(if common::full() { 180.0 } else { 60.0 });
+        let out = ilp.schedule(&topo, &wf, &job, Budget::timed(1_000_000, 200.0));
+        tb.row(vec![
+            topo.n().to_string(),
+            format!("{:.2}", out.wall),
+            format!("{:.1}", out.cost),
+            if out.cost.is_finite() { "yes".into() } else { "timeout".to_string() },
+        ]);
+        record.push(vec![
+            Json::str("b"),
+            Json::str(&topo.n().to_string()),
+            Json::num(out.wall),
+            Json::num(out.cost),
+        ]);
+    }
+    tb.print();
+    if let Ok(p) = record.save(&hetrl::metrics::results_dir()) {
+        println!("rows saved to {}", p.display());
+    }
+}

@@ -1,0 +1,68 @@
+//! Figure 7 — cost-model validation: predicted vs simulated iteration
+//! time across Qwen model sizes and the four scenarios (mean ± std over
+//! simulator seeds).
+//!
+//! Expected shape: single-digit-to-~30% errors, growing with network
+//! heterogeneity (paper §5.5).
+
+mod common;
+
+use common::{model_sizes, sha_budget, workflow};
+use hetrl::costmodel::CostModel;
+use hetrl::metrics::RunRecord;
+use hetrl::scheduler::{Budget, Scheduler, ShaEaScheduler};
+use hetrl::simulator::{simulate_plan, NoiseModel, SimConfig};
+use hetrl::topology::{build_testbed, Scenario, TestbedSpec};
+use hetrl::util::json::Json;
+use hetrl::util::table::Table;
+use hetrl::workflow::{Algo, JobConfig, Mode};
+
+fn main() {
+    hetrl::util::logging::init();
+    let job = JobConfig::default();
+    let mut table = Table::new(
+        "Figure 7: cost-model prediction accuracy (GRPO-Sync)",
+        &["scenario", "model", "predicted (s)", "simulated (s)", "error"],
+    );
+    let mut record = RunRecord::new(
+        "fig7_costmodel",
+        &["scenario", "model", "predicted_s", "simulated_s", "sim_std", "error_pct"],
+    );
+    let seeds = if common::full() { 5 } else { 3 };
+    for scenario in Scenario::ALL {
+        let topo = build_testbed(scenario, &TestbedSpec::default());
+        for model in model_sizes() {
+            let wf = workflow(Algo::Grpo, Mode::Sync, &model);
+            let out = ShaEaScheduler::new(5)
+                .schedule(&topo, &wf, &job, Budget::timed(sha_budget(), 60.0));
+            let Some(plan) = out.plan else { continue };
+            let pred = CostModel::new(&topo, &wf, &job).plan_cost(&plan).iter_time;
+            let mut meas = Vec::new();
+            for s in 0..seeds {
+                let cfg = SimConfig { iters: 2, seed: 100 + s, noise: NoiseModel::default() };
+                meas.push(simulate_plan(&topo, &wf, &job, &plan, &cfg).iter_time);
+            }
+            let stats = hetrl::util::stats::summarize(&meas);
+            let err = (pred - stats.mean).abs() / stats.mean * 100.0;
+            table.row(vec![
+                scenario.name().to_string(),
+                model.name.clone(),
+                format!("{pred:.1}"),
+                format!("{:.1}±{:.1}", stats.mean, stats.std),
+                format!("{err:.1}%"),
+            ]);
+            record.push(vec![
+                Json::str(scenario.name()),
+                Json::str(&model.name),
+                Json::num(pred),
+                Json::num(stats.mean),
+                Json::num(stats.std),
+                Json::num(err),
+            ]);
+        }
+    }
+    table.print();
+    if let Ok(p) = record.save(&hetrl::metrics::results_dir()) {
+        println!("rows saved to {}", p.display());
+    }
+}

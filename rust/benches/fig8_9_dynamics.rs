@@ -1,0 +1,86 @@
+//! Figures 8/9 — training dynamics with GRPO on GSM8K-like (Fig 8) and
+//! MATH-like (Fig 9) synthetic tasks: heterogeneous vs homogeneous
+//! fleets, compared by training step and by (virtual) wall-clock.
+//!
+//! This is a REAL run: the rust engine drives the AOT-compiled
+//! JAX/Pallas model through PJRT. Expected shape: per-step reward
+//! curves indistinguishable between fleets (heterogeneity does not hurt
+//! quality); the heterogeneous fleet's larger aggregate throughput wins
+//! on wall-clock.
+//!
+//! Requires `make artifacts`. Steps scale with HETRL_BENCH_FULL.
+
+mod common;
+
+use hetrl::engine::{GrpoConfig, GrpoTrainer, TaskDifficulty, WorkerFleet};
+use hetrl::metrics::RunRecord;
+use hetrl::runtime::Runtime;
+use hetrl::util::json::Json;
+use hetrl::util::table::Table;
+
+fn main() {
+    hetrl::util::logging::init();
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("fig8_9_dynamics: artifacts/ missing — run `make artifacts` first; skipping");
+        return;
+    }
+    let rt = Runtime::load("artifacts").expect("runtime");
+    let steps = if common::full() { 120 } else { 30 };
+
+    let mut record = RunRecord::new(
+        "fig8_9_dynamics",
+        &["figure", "fleet", "step", "reward", "kl", "virtual_wall_s"],
+    );
+    for (figure, difficulty) in [
+        ("Fig8(GSM8K-like)", TaskDifficulty::Easy),
+        ("Fig9(MATH-like)", TaskDifficulty::Hard),
+    ] {
+        let mut table = Table::new(
+            &format!("{figure}: GRPO training dynamics ({steps} steps)"),
+            &["fleet", "mean reward (last 25%)", "final kl", "virtual wall (s)"],
+        );
+        for (fleet_name, fleet) in [
+            ("homogeneous(3 ref)", WorkerFleet::homogeneous(3)),
+            ("heterogeneous(8 mixed)", WorkerFleet::heterogeneous_default()),
+        ] {
+            let cfg = GrpoConfig {
+                difficulty,
+                seed: 11, // same seed: identical rollouts modulo fleet
+                ..GrpoConfig::default()
+            };
+            let mut trainer = GrpoTrainer::new(&rt, cfg, fleet).expect("trainer");
+            let mut rewards = Vec::new();
+            let mut final_kl = 0.0;
+            let mut vwall = 0.0;
+            for s in 0..steps {
+                let st = trainer.step().expect("step");
+                record.push(vec![
+                    Json::str(figure),
+                    Json::str(fleet_name),
+                    Json::num(st.step as f64),
+                    Json::num(st.mean_reward),
+                    Json::num(st.kl),
+                    Json::num(st.virtual_wall),
+                ]);
+                rewards.push(st.mean_reward);
+                final_kl = st.kl;
+                vwall = st.virtual_wall;
+                if s % 10 == 0 {
+                    eprintln!("  {figure} {fleet_name} step {s}: reward {:.3}", st.mean_reward);
+                }
+            }
+            let tail = &rewards[rewards.len() * 3 / 4..];
+            let tail_mean = tail.iter().sum::<f64>() / tail.len() as f64;
+            table.row(vec![
+                fleet_name.to_string(),
+                format!("{tail_mean:.3}"),
+                format!("{final_kl:.4}"),
+                format!("{vwall:.1}"),
+            ]);
+        }
+        table.print();
+    }
+    if let Ok(p) = record.save(&hetrl::metrics::results_dir()) {
+        println!("curves saved to {}", p.display());
+    }
+}

@@ -1,0 +1,106 @@
+//! §Perf micro-benchmarks for the L3 hot paths (EXPERIMENTS.md §Perf):
+//! cost-model evaluation (the scheduler's inner loop), ring bottleneck
+//! search, simulator event throughput, EA mutation+local-search, the
+//! simplex pivot loop, JSON parsing, and (when artifacts are present)
+//! the PJRT forward execution.
+
+mod common;
+
+use hetrl::costmodel::{ring_minmax, CostModel};
+use hetrl::plan::{ExecutionPlan, ParallelStrategy, TaskPlan};
+use hetrl::scheduler::{Budget, Scheduler, ShaEaScheduler};
+use hetrl::simulator::{simulate_plan, NoiseModel, SimConfig};
+use hetrl::solver::{solve_milp, BnbConfig, Cmp, Lp};
+use hetrl::topology::{build_testbed, Scenario, TestbedSpec};
+use hetrl::util::benchkit::Runner;
+use hetrl::util::json::Json;
+use hetrl::workflow::{Algo, JobConfig, Mode, ModelSpec, RlWorkflow};
+
+fn make_plan(wf: &RlWorkflow, per_task: usize) -> ExecutionPlan {
+    let mut task_plans = Vec::new();
+    for (t, task) in wf.tasks.iter().enumerate() {
+        let s = ParallelStrategy::new((per_task / 8).max(1), 2, 4);
+        let devs: Vec<usize> = (t * per_task..(t + 1) * per_task).collect();
+        task_plans.push(TaskPlan::uniform(s, task.model.nl, devs));
+    }
+    ExecutionPlan {
+        task_groups: vec![(0..wf.n_tasks()).collect()],
+        gpu_groups: vec![(0..64).collect()],
+        task_plans,
+    }
+}
+
+fn main() {
+    let mut r = Runner::from_args("perf_hotpaths");
+    let topo = build_testbed(Scenario::MultiCountry, &TestbedSpec::default());
+    let wf = RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_8b());
+    let job = JobConfig::default();
+    let plan = make_plan(&wf, 16);
+    let cm = CostModel::new(&topo, &wf, &job);
+
+    r.bench("costmodel/plan_cost", 5, 50, || {
+        std::hint::black_box(cm.plan_cost(&plan));
+    });
+
+    let ring_devs: Vec<usize> = (0..8).map(|i| i * 8).collect();
+    r.bench("costmodel/ring_minmax_8dev", 10, 200, || {
+        std::hint::black_box(ring_minmax(&topo, &ring_devs, 1e8));
+    });
+
+    let sim_cfg = SimConfig { iters: 1, seed: 1, noise: NoiseModel::default() };
+    let tiny_job = JobConfig::tiny();
+    r.bench("simulator/grpo_iteration", 2, 10, || {
+        std::hint::black_box(simulate_plan(&topo, &wf, &tiny_job, &plan, &sim_cfg));
+    });
+
+    r.bench("scheduler/sha_ea_100evals", 1, 5, || {
+        let mut s = ShaEaScheduler::new(1);
+        std::hint::black_box(s.schedule(&topo, &wf, &job, Budget::evals(100)));
+    });
+
+    r.bench("solver/milp_knapsack12", 2, 10, || {
+        let mut lp = Lp::new(12, (0..12).map(|i| (i % 5) as f64 + 0.4).collect(), true);
+        let terms: Vec<(usize, f64)> =
+            (0..12).map(|i| (i, ((i * 7) % 3) as f64 + 1.1)).collect();
+        lp.constrain(terms, Cmp::Le, 9.0);
+        let cfg = BnbConfig { time_limit: 5.0, max_nodes: 5_000, gap: 1e-6 };
+        std::hint::black_box(solve_milp(&lp, &(0..12).collect::<Vec<_>>(), &cfg));
+    });
+
+    let json_src = Json::obj(vec![
+        ("xs", Json::arr((0..500).map(|i| Json::num(i as f64)))),
+        ("name", Json::str("hetrl")),
+    ])
+    .dump();
+    r.bench("util/json_parse_500elems", 10, 200, || {
+        std::hint::black_box(Json::parse(&json_src).unwrap());
+    });
+
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        use hetrl::engine::Policy;
+        use hetrl::runtime::{HostTensor, Runtime};
+        let rt = Runtime::load("artifacts").expect("runtime");
+        let policy = Policy::init(&rt, 1).unwrap();
+        let b = rt.manifest.batch;
+        let l = rt.model().max_len;
+        let tokens = HostTensor::i32(vec![b, l], vec![3; b * l]);
+        let mut inputs = policy.params.clone();
+        inputs.push(tokens);
+        r.bench("runtime/forward_b8_l96", 2, 10, || {
+            std::hint::black_box(rt.execute("forward", &inputs).unwrap());
+        });
+        // §Perf L3-3: parameters converted to literals once (the decode
+        // loop's configuration).
+        let prepared = rt.upload(&policy.params).unwrap();
+        let tokens = HostTensor::i32(vec![b, l], vec![3; b * l]);
+        r.bench("runtime/forward_prepared_params", 2, 10, || {
+            std::hint::black_box(
+                rt.execute_prepared("forward", &prepared, &[tokens.clone()]).unwrap(),
+            );
+        });
+    } else {
+        println!("runtime/forward: skipped (run `make artifacts`)");
+    }
+
+    r.finish();
+}

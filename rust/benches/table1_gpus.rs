@@ -1,0 +1,35 @@
+//! Table 1 — GPU specifications. Regenerates the paper's hardware table
+//! from the catalog plus derived quantities the scheduler actually uses.
+
+use hetrl::topology::GpuModel;
+use hetrl::util::table::Table;
+use hetrl::util::units::{GBPS_BYTES, GIB, TFLOPS};
+
+fn main() {
+    let mut t = Table::new(
+        "Table 1: GPU specifications",
+        &[
+            "Model",
+            "Arch",
+            "Size (GB)",
+            "FP16 (TFLOPS)",
+            "HBM (GB/s)",
+            "Link (GB/s)",
+            "eff TFLOPS",
+        ],
+    );
+    for model in GpuModel::table1() {
+        let s = model.spec();
+        t.row(vec![
+            s.name.to_string(),
+            s.arch.to_string(),
+            format!("{:.0}", s.mem_bytes / GIB),
+            format!("{:.0}", s.fp16_flops / TFLOPS),
+            format!("{:.0}", s.hbm_bps / GBPS_BYTES),
+            format!("{:.0}", s.link_bps / GBPS_BYTES),
+            format!("{:.0}", s.fp16_flops * s.mfu / TFLOPS),
+        ]);
+    }
+    t.print();
+    println!("testbed: 24×A100 + 24×L40S + 16×L4 = 64 GPUs (8-GPU machines)\n");
+}

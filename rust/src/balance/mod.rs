@@ -1,0 +1,215 @@
+//! Load balancing (paper §4.2): post-processing of an execution plan to
+//! better fit heterogeneous devices.
+//!
+//! * **Data-level** — "adjusts the local batch sizes across GPUs within a
+//!   DP group … based on estimates from the cost model": DP shares are
+//!   re-weighted by each replica's aggregate achievable throughput.
+//! * **Layer-level** — "adjusts the layer distribution across pipeline
+//!   stages based on estimates from the cost model": layers are
+//!   redistributed in proportion to each stage's effective compute.
+//!
+//! A third strategy from the paper — sequence-length-aware sample
+//! routing (longer sequences to faster GPUs) — lives in the execution
+//! engine ([`crate::engine`]), since it needs per-sample lengths.
+
+use crate::plan::ExecutionPlan;
+use crate::topology::DeviceTopology;
+use crate::workflow::RlWorkflow;
+
+/// Which strategies to apply (the Figure 4 ablation toggles these).
+#[derive(Debug, Clone, Copy)]
+pub struct BalanceConfig {
+    pub data_level: bool,
+    pub layer_level: bool,
+}
+
+impl Default for BalanceConfig {
+    fn default() -> Self {
+        BalanceConfig { data_level: true, layer_level: true }
+    }
+}
+
+impl BalanceConfig {
+    pub fn off() -> Self {
+        BalanceConfig { data_level: false, layer_level: false }
+    }
+}
+
+/// Apply the configured load-balancing strategies, returning the
+/// (still-valid) adjusted plan.
+pub fn apply(
+    plan: &ExecutionPlan,
+    wf: &RlWorkflow,
+    topo: &DeviceTopology,
+    cfg: BalanceConfig,
+) -> ExecutionPlan {
+    let mut out = plan.clone();
+    for (t, tp) in out.task_plans.iter_mut().enumerate() {
+        let task = &wf.tasks[t];
+        if cfg.layer_level && tp.strategy.pp > 1 {
+            tp.layer_split = balanced_layer_split(
+                task.model.nl,
+                tp.strategy.pp,
+                &stage_speeds(tp, topo),
+            );
+        }
+        if cfg.data_level && tp.strategy.dp > 1 {
+            tp.dp_shares = balanced_dp_shares(tp, topo);
+        }
+        let _ = task.kind(); // kinds currently share the same policy
+    }
+    out
+}
+
+/// Effective compute of each pipeline stage: the slowest TP member's
+/// achievable FLOPs times the TP degree, min-ed across DP replicas.
+fn stage_speeds(tp: &crate::plan::TaskPlan, topo: &DeviceTopology) -> Vec<f64> {
+    let s = tp.strategy;
+    (0..s.pp)
+        .map(|j| {
+            let mut worst_replica = f64::INFINITY;
+            for i in 0..s.dp {
+                let group = tp.tp_group(i, j);
+                let slowest = group
+                    .iter()
+                    .map(|&d| topo.devices[d].effective_flops())
+                    .fold(f64::INFINITY, f64::min);
+                worst_replica = worst_replica.min(slowest * s.tp as f64);
+            }
+            worst_replica
+        })
+        .collect()
+}
+
+/// Distribute `nl` layers over stages proportionally to `speeds`
+/// (largest-remainder rounding, every stage ≥ 1 layer).
+pub fn balanced_layer_split(nl: usize, pp: usize, speeds: &[f64]) -> Vec<usize> {
+    assert_eq!(speeds.len(), pp);
+    assert!(nl >= pp);
+    let total: f64 = speeds.iter().sum();
+    if total <= 0.0 {
+        return crate::plan::parallel::uniform_layer_split(nl, pp);
+    }
+    // Ideal fractional shares with a 1-layer floor.
+    let spare = nl - pp;
+    let ideal: Vec<f64> = speeds.iter().map(|s| spare as f64 * s / total).collect();
+    let mut split: Vec<usize> = ideal.iter().map(|x| 1 + x.floor() as usize).collect();
+    let mut assigned: usize = split.iter().sum();
+    // Largest remainders get the leftovers.
+    let mut rema: Vec<(f64, usize)> = ideal
+        .iter()
+        .enumerate()
+        .map(|(j, x)| (x - x.floor(), j))
+        .collect();
+    rema.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+    let mut k = 0;
+    while assigned < nl {
+        split[rema[k % pp].1] += 1;
+        assigned += 1;
+        k += 1;
+    }
+    debug_assert_eq!(split.iter().sum::<usize>(), nl);
+    split
+}
+
+/// DP shares proportional to each replica's bottleneck-stage speed.
+fn balanced_dp_shares(tp: &crate::plan::TaskPlan, topo: &DeviceTopology) -> Vec<f64> {
+    let s = tp.strategy;
+    let mut speeds = Vec::with_capacity(s.dp);
+    for i in 0..s.dp {
+        let mut bottleneck = f64::INFINITY;
+        for j in 0..s.pp {
+            let group = tp.tp_group(i, j);
+            let slowest = group
+                .iter()
+                .map(|&d| topo.devices[d].effective_flops())
+                .fold(f64::INFINITY, f64::min);
+            bottleneck = bottleneck.min(slowest);
+        }
+        speeds.push(bottleneck.max(1.0));
+    }
+    let total: f64 = speeds.iter().sum();
+    speeds.iter().map(|&x| x / total).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::CostModel;
+    use crate::plan::{ParallelStrategy, TaskPlan};
+    use crate::topology::{build_testbed, Scenario, TestbedSpec};
+    use crate::workflow::{Algo, JobConfig, Mode, ModelSpec, RlWorkflow};
+
+    fn mixed_plan(wf: &RlWorkflow) -> ExecutionPlan {
+        // Each task on a mixed slice: A100 machine + L4 machine
+        // (device ids 0..8 are A100, 16..24 are L4 under interleaved
+        // round-robin machine order).
+        let mut task_plans = Vec::new();
+        for task in &wf.tasks {
+            let s = ParallelStrategy::new(2, 2, 4);
+            let devs: Vec<usize> = (0..8).chain(16..24).collect();
+            task_plans.push(TaskPlan::uniform(s, task.model.nl, devs));
+        }
+        ExecutionPlan {
+            task_groups: vec![(0..wf.n_tasks()).collect()],
+            gpu_groups: vec![(0..8).chain(16..24).collect()],
+            task_plans,
+        }
+    }
+
+    #[test]
+    fn balanced_split_prefers_fast_stages() {
+        let split = balanced_layer_split(36, 2, &[3.0, 1.0]);
+        assert_eq!(split.iter().sum::<usize>(), 36);
+        assert!(split[0] > split[1]);
+        // Uniform speeds → uniform split.
+        assert_eq!(balanced_layer_split(36, 4, &[1.0; 4]), vec![9, 9, 9, 9]);
+        // Every stage keeps ≥ 1 layer even with extreme skew.
+        let skew = balanced_layer_split(8, 4, &[1000.0, 1.0, 1.0, 1.0]);
+        assert!(skew.iter().all(|&l| l >= 1));
+        assert_eq!(skew.iter().sum::<usize>(), 8);
+    }
+
+    #[test]
+    fn balancing_keeps_plan_valid_and_helps() {
+        let topo = build_testbed(Scenario::SingleRegion, &TestbedSpec::default());
+        let wf = RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_1b7());
+        let job = JobConfig::default();
+        let plan = mixed_plan(&wf);
+        plan.validate(&wf, &topo, &job).unwrap();
+        let cm = CostModel::new(&topo, &wf, &job);
+        let before = cm.plan_cost(&plan).iter_time;
+
+        let balanced = apply(&plan, &wf, &topo, BalanceConfig::default());
+        balanced.validate(&wf, &topo, &job).unwrap();
+        let after = cm.plan_cost(&balanced).iter_time;
+        assert!(
+            after <= before * 1.0001,
+            "balancing should not hurt: {after} vs {before}"
+        );
+        // On a mixed A100+L4 slice it should measurably help.
+        assert!(after < before * 0.98, "expected >2% gain: {after} vs {before}");
+    }
+
+    #[test]
+    fn off_config_is_identity() {
+        let topo = build_testbed(Scenario::SingleRegion, &TestbedSpec::default());
+        let wf = RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_1b7());
+        let plan = mixed_plan(&wf);
+        let same = apply(&plan, &wf, &topo, BalanceConfig::off());
+        assert_eq!(same, plan);
+    }
+
+    #[test]
+    fn dp_shares_sum_to_one() {
+        let topo = build_testbed(Scenario::SingleRegion, &TestbedSpec::default());
+        let wf = RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_1b7());
+        let plan = mixed_plan(&wf);
+        let balanced = apply(&plan, &wf, &topo, BalanceConfig::default());
+        for tp in &balanced.task_plans {
+            let sum: f64 = tp.dp_shares.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9);
+            assert!(tp.dp_shares.iter().all(|&s| s > 0.0));
+        }
+    }
+}

@@ -1,0 +1,316 @@
+//! Communication cost primitives (Appendix B.2).
+//!
+//! All collective costs reduce to a *bottleneck ring* term
+//! `min_{r ∈ ring(G_D)} max_{e ∈ r} (α_e + cv/β_e)`: the best ring
+//! ordering of the group's devices, scored by its worst edge. Finding
+//! the optimal ring is bottleneck-TSP (NP-hard); we solve exactly for
+//! groups ≤ `EXACT_RING_LIMIT` devices by enumerating cyclic orders and
+//! use the locality order with a 2-opt improvement pass above that.
+
+use crate::topology::DeviceTopology;
+
+/// Group sizes up to which the optimal ring is found by enumeration.
+/// (n-1)!/2 orders: 5 → 12 orders, 6 → 60.
+const EXACT_RING_LIMIT: usize = 6;
+
+/// Edge score for volume `cv`: `α + cv/β`.
+#[inline]
+fn edge(topo: &DeviceTopology, a: usize, b: usize, cv: f64) -> f64 {
+    if a == b {
+        0.0
+    } else {
+        topo.alpha[a][b] + cv / topo.beta[a][b]
+    }
+}
+
+/// Max edge score of the ring visiting `order` cyclically.
+fn ring_bottleneck(topo: &DeviceTopology, order: &[usize], cv: f64) -> f64 {
+    let n = order.len();
+    let mut worst: f64 = 0.0;
+    for i in 0..n {
+        let a = order[i];
+        let b = order[(i + 1) % n];
+        worst = worst.max(edge(topo, a, b, cv));
+    }
+    worst
+}
+
+/// `min over rings of max over edges (α + cv/β)` for the device group.
+/// Returns 0 for groups of size ≤ 1.
+pub fn ring_minmax(topo: &DeviceTopology, devs: &[usize], cv: f64) -> f64 {
+    match devs.len() {
+        0 | 1 => 0.0,
+        2 => {
+            // The "ring" is the single pair traversed twice.
+            edge(topo, devs[0], devs[1], cv)
+        }
+        n if n <= EXACT_RING_LIMIT => exact_ring(topo, devs, cv),
+        _ => heuristic_ring(topo, devs, cv),
+    }
+}
+
+/// Exact: enumerate cyclic permutations fixing element 0 (and halving by
+/// direction symmetry).
+fn exact_ring(topo: &DeviceTopology, devs: &[usize], cv: f64) -> f64 {
+    let n = devs.len();
+    let mut rest: Vec<usize> = devs[1..].to_vec();
+    let mut best = f64::INFINITY;
+    // Heap's algorithm over `rest`.
+    let mut c = vec![0usize; n - 1];
+    let mut order = Vec::with_capacity(n);
+    let mut eval = |rest: &[usize], best: &mut f64| {
+        // Direction symmetry: require rest[0] < rest[last].
+        if rest[0] > rest[rest.len() - 1] {
+            return;
+        }
+        order.clear();
+        order.push(devs[0]);
+        order.extend_from_slice(rest);
+        let score = ring_bottleneck(topo, &order, cv);
+        if score < *best {
+            *best = score;
+        }
+    };
+    eval(&rest, &mut best);
+    let mut i = 0;
+    while i < n - 1 {
+        if c[i] < i {
+            if i % 2 == 0 {
+                rest.swap(0, i);
+            } else {
+                rest.swap(c[i], i);
+            }
+            eval(&rest, &mut best);
+            c[i] += 1;
+            i = 0;
+        } else {
+            c[i] = 0;
+            i += 1;
+        }
+    }
+    best
+}
+
+/// Heuristic: locality order, then 2-opt passes. Full 2-opt is O(n³)
+/// per pass; beyond `FULL_2OPT_LIMIT` devices only reversals touching
+/// the current bottleneck edge are tried (O(n²) per pass) — the
+/// bottleneck objective cannot improve otherwise (§Perf L3-2).
+const FULL_2OPT_LIMIT: usize = 16;
+
+fn heuristic_ring(topo: &DeviceTopology, devs: &[usize], cv: f64) -> f64 {
+    let mut order = topo.locality_order(devs);
+    let n = order.len();
+    let mut best = ring_bottleneck(topo, &order, cv);
+    let mut improved = true;
+    let mut passes = 0;
+    while improved && passes < 4 {
+        improved = false;
+        passes += 1;
+        if n <= FULL_2OPT_LIMIT {
+            for i in 0..n - 1 {
+                for j in i + 1..n {
+                    order[i..=j].reverse();
+                    let score = ring_bottleneck(topo, &order, cv);
+                    if score + 1e-15 < best {
+                        best = score;
+                        improved = true;
+                    } else {
+                        order[i..=j].reverse(); // undo
+                    }
+                }
+            }
+        } else {
+            // Locate the bottleneck edge (b, b+1); only reversals that
+            // replace one of its endpoints can lower the max.
+            let mut b = 0;
+            let mut worst: f64 = 0.0;
+            for i in 0..n {
+                let e = edge(topo, order[i], order[(i + 1) % n], cv);
+                if e > worst {
+                    worst = e;
+                    b = i;
+                }
+            }
+            for j in 0..n {
+                if j == b {
+                    continue;
+                }
+                let (i, j) = (b.min(j), b.max(j));
+                if i + 1 > j {
+                    continue;
+                }
+                order[i + 1..=j].reverse();
+                let score = ring_bottleneck(topo, &order, cv);
+                if score + 1e-15 < best {
+                    best = score;
+                    improved = true;
+                    break; // bottleneck moved; restart pass
+                } else {
+                    order[i + 1..=j].reverse();
+                }
+            }
+        }
+    }
+    best
+}
+
+/// Minimum point-to-point edge score between two device sets (used for
+/// PP stage-to-stage transfer and cross-task weight sync).
+pub fn min_cross_edge(topo: &DeviceTopology, from: &[usize], to: &[usize], cv: f64) -> f64 {
+    let mut best = f64::INFINITY;
+    for &a in from {
+        for &b in to {
+            if a == b {
+                return 0.0;
+            }
+            let e = edge(topo, a, b, cv);
+            if e < best {
+                best = e;
+            }
+        }
+    }
+    best
+}
+
+// ---------------------------------------------------------------------
+// Communication volumes (Appendix B.2).
+// ---------------------------------------------------------------------
+
+use crate::util::units::B_BF16;
+
+/// TP all-reduce volume per neighbouring pair:
+/// `B_BF16 · mbs · seq · h1 · 2(tp-1)/tp`.
+pub fn cv_tp(mbs: usize, seq: usize, h1: usize, tp: usize) -> f64 {
+    if tp <= 1 {
+        return 0.0;
+    }
+    B_BF16 * mbs as f64 * seq as f64 * h1 as f64 * 2.0 * (tp as f64 - 1.0) / tp as f64
+}
+
+/// PP stage-to-stage activation volume per micro-batch:
+/// `B_BF16 · mbs · seq · h1`.
+pub fn cv_pp(mbs: usize, seq: usize, h1: usize) -> f64 {
+    B_BF16 * mbs as f64 * seq as f64 * h1 as f64
+}
+
+/// Per-layer parameter volume `4·h1² + 3·h1·h2` (QKVO + MLP).
+pub fn layer_params(h1: usize, h2: usize) -> f64 {
+    4.0 * (h1 as f64) * (h1 as f64) + 3.0 * (h1 as f64) * (h2 as f64)
+}
+
+/// DP gradient all-reduce volume per neighbouring pair:
+/// `B_BF16 · nl_j · (4h1²+3h1h2) · 2(dp-1)/(dp·tp)`.
+pub fn cv_dp(nl_j: usize, h1: usize, h2: usize, dp: usize, tp: usize) -> f64 {
+    if dp <= 1 {
+        return 0.0;
+    }
+    B_BF16 * nl_j as f64 * layer_params(h1, h2) * 2.0 * (dp as f64 - 1.0)
+        / (dp as f64 * tp as f64)
+}
+
+/// All-gather volume for resharding / weight sync within a replica group
+/// of `group` members: `B_BF16 · nl · (4h1²+3h1h2) · (group-1)/group`.
+pub fn cv_all_gather(nl: usize, h1: usize, h2: usize, group: usize) -> f64 {
+    if group <= 1 {
+        return 0.0;
+    }
+    B_BF16 * nl as f64 * layer_params(h1, h2) * (group as f64 - 1.0) / group as f64
+}
+
+/// Full-model point-to-point volume: `B_BF16 · nl · (4h1²+3h1h2)`.
+pub fn cv_p2p(nl: usize, h1: usize, h2: usize) -> f64 {
+    B_BF16 * nl as f64 * layer_params(h1, h2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{build_testbed, Scenario, TestbedSpec};
+    use crate::util::units::{GBITPS_BYTES, MS};
+
+    fn topo() -> DeviceTopology {
+        build_testbed(Scenario::MultiContinent, &TestbedSpec::default())
+    }
+
+    #[test]
+    fn ring_trivial_sizes() {
+        let t = topo();
+        assert_eq!(ring_minmax(&t, &[], 1e6), 0.0);
+        assert_eq!(ring_minmax(&t, &[3], 1e6), 0.0);
+        let two = ring_minmax(&t, &[0, 1], 1e6);
+        assert!(two > 0.0);
+    }
+
+    #[test]
+    fn ring_prefers_local_devices() {
+        let t = topo();
+        // Devices 0..4 share a machine; a cross-region set must be slower.
+        let local = ring_minmax(&t, &[0, 1, 2, 3], 1e8);
+        let far: Vec<usize> = vec![0, 8, 16, 24];
+        let remote = ring_minmax(&t, &far, 1e8);
+        assert!(remote > 10.0 * local, "local={local} remote={remote}");
+    }
+
+    #[test]
+    fn exact_ring_beats_or_matches_heuristic() {
+        let t = topo();
+        // On a 5-device mixed set, exact must be ≤ any specific ring.
+        let devs = vec![0, 1, 8, 9, 16];
+        let exact = exact_ring(&t, &devs, 1e8);
+        let heur = heuristic_ring(&t, &devs, 1e8);
+        assert!(exact <= heur + 1e-12);
+        assert!((ring_minmax(&t, &devs, 1e8) - exact).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ring_monotone_in_volume() {
+        let t = topo();
+        let devs: Vec<usize> = (0..8).collect();
+        let a = ring_minmax(&t, &devs, 1e6);
+        let b = ring_minmax(&t, &devs, 1e9);
+        assert!(b > a);
+    }
+
+    #[test]
+    fn min_cross_edge_picks_best_pair() {
+        let t = topo();
+        // from machine 0, to machine 1 (same region 0? machines are
+        // spread round-robin). Just check bound correctness.
+        let from = vec![0, 1];
+        let to = vec![8, 9];
+        let got = min_cross_edge(&t, &from, &to, 1e6);
+        let mut expect = f64::INFINITY;
+        for &a in &from {
+            for &b in &to {
+                expect = expect.min(t.lat(a, b) + 1e6 / t.bw(a, b));
+            }
+        }
+        assert!((got - expect).abs() < 1e-12);
+        assert_eq!(min_cross_edge(&t, &[1, 2], &[2, 5], 1e6), 0.0);
+    }
+
+    #[test]
+    fn volumes_match_formulas() {
+        // tp volume: 2 bytes * 2 * 1024 * 4096 * 2*(4-1)/4
+        let v = cv_tp(2, 2048, 4096, 4);
+        assert!((v - 2.0 * 2.0 * 2048.0 * 4096.0 * 1.5).abs() < 1.0);
+        assert_eq!(cv_tp(2, 2048, 4096, 1), 0.0);
+        assert_eq!(cv_dp(9, 4096, 12288, 1, 4), 0.0);
+        let ag = cv_all_gather(36, 4096, 12288, 4);
+        let p2p = cv_p2p(36, 4096, 12288);
+        assert!((ag / p2p - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn two_device_ring_cost_formula() {
+        let t = topo();
+        // Find a cross-region pair with known α/β.
+        let (a, b) = (0, 32);
+        let cv = 1e9;
+        let want = t.lat(a, b) + cv / t.bw(a, b);
+        assert!((ring_minmax(&t, &[a, b], cv) - want).abs() < 1e-9);
+        // Sanity: cross-region is dominated by bandwidth at this volume.
+        assert!(want > 1.0 * MS);
+        assert!(t.bw(a, b) <= 5.0 * GBITPS_BYTES);
+    }
+}

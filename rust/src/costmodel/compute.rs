@@ -1,0 +1,108 @@
+//! Computation and HBM-decoding cost primitives (Appendix B.2,
+//! "Computation" and "Decoding (HBM-bandwidth bound)").
+
+use super::comm::layer_params;
+
+/// FLOPs of one transformer layer per forward pass per sample
+/// (Appendix B): QKVO projections `2·4·seq·h1²`, attention
+/// `2·2·seq²·h1`, MLP `2·3·seq·h1·h2`.
+pub fn layer_flops(seq: usize, h1: usize, h2: usize) -> f64 {
+    let s = seq as f64;
+    let (h1f, h2f) = (h1 as f64, h2 as f64);
+    2.0 * 4.0 * s * h1f * h1f + 2.0 * 2.0 * s * s * h1f + 2.0 * 3.0 * s * h1f * h2f
+}
+
+/// Computation cost of the forward pass of a tasklet holding `nl_j`
+/// layers on a device with `comp_d` FLOP/s, TP degree `tp`, processing
+/// `nm` micro-batches of `mbs` sequences of length `seq`:
+/// `nm · mbs · nl_j · layer_flops / (comp_d · tp)`.
+pub fn comp_forward(
+    nm: usize,
+    mbs: usize,
+    nl_j: usize,
+    seq: usize,
+    h1: usize,
+    h2: usize,
+    comp_d: f64,
+    tp: usize,
+) -> f64 {
+    nm as f64 * mbs as f64 * nl_j as f64 * layer_flops(seq, h1, h2) / (comp_d * tp as f64)
+}
+
+/// Forward + backward (+recompute) cost: 3× the forward term
+/// (Appendix B uses the canonical 1:2 fwd:bwd ratio).
+pub fn comp_train(
+    nm: usize,
+    mbs: usize,
+    nl_j: usize,
+    seq: usize,
+    h1: usize,
+    h2: usize,
+    comp_d: f64,
+    tp: usize,
+) -> f64 {
+    3.0 * comp_forward(nm, mbs, nl_j, seq, h1, h2, comp_d, tp)
+}
+
+/// HBM-bound decoding cost (Appendix B):
+/// `seq_out · nm · mbs · B_BF16 · nl_j · (4h1²+3h1h2) / (dbs_d · hbm_d · tp)`
+/// — every decode step re-reads the stage's weights from HBM; a decode
+/// batch of `dbs_d` sequences amortizes each read.
+pub fn hbm_decode(
+    seq_out: usize,
+    nm: usize,
+    mbs: usize,
+    nl_j: usize,
+    h1: usize,
+    h2: usize,
+    dbs_d: usize,
+    hbm_d: f64,
+    tp: usize,
+) -> f64 {
+    let weight_bytes = crate::util::units::B_BF16 * nl_j as f64 * layer_params(h1, h2);
+    seq_out as f64 * nm as f64 * mbs as f64 * weight_bytes
+        / (dbs_d as f64 * hbm_d * tp as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::{GBPS_BYTES, TFLOPS};
+
+    #[test]
+    fn layer_flops_formula() {
+        // seq=1, h1=2, h2=3: 8*1*4 + 4*1*2 + 6*1*2*3 = 32 + 8 + 36 = 76
+        assert_eq!(layer_flops(1, 2, 3), 76.0);
+    }
+
+    #[test]
+    fn train_is_3x_forward() {
+        let f = comp_forward(4, 2, 9, 2048, 4096, 12288, 312.0 * TFLOPS, 4);
+        let t = comp_train(4, 2, 9, 2048, 4096, 12288, 312.0 * TFLOPS, 4);
+        assert!((t / f - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compute_scales_inverse_with_tflops_and_tp() {
+        let slow = comp_forward(4, 2, 9, 2048, 4096, 12288, 121.0 * TFLOPS, 1);
+        let fast = comp_forward(4, 2, 9, 2048, 4096, 12288, 312.0 * TFLOPS, 1);
+        assert!((slow / fast - 312.0 / 121.0).abs() < 1e-9);
+        let tp4 = comp_forward(4, 2, 9, 2048, 4096, 12288, 312.0 * TFLOPS, 4);
+        assert!((fast / tp4 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decode_amortized_by_batch() {
+        let d1 = hbm_decode(1024, 8, 2, 9, 4096, 12288, 1, 2039.0 * GBPS_BYTES, 1);
+        let d16 = hbm_decode(1024, 8, 2, 9, 4096, 12288, 16, 2039.0 * GBPS_BYTES, 1);
+        assert!((d1 / d16 - 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn a100_decode_beats_l40s() {
+        // A100's 2039 GB/s vs L40S's 864 GB/s: decoding is ~2.4× faster.
+        let a = hbm_decode(1024, 8, 2, 36, 2560, 9728, 32, 2039.0 * GBPS_BYTES, 1);
+        let l = hbm_decode(1024, 8, 2, 36, 2560, 9728, 32, 864.0 * GBPS_BYTES, 1);
+        assert!((l / a - 2039.0 / 864.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,307 @@
+//! End-to-end cost model (Appendix B.4): Φ aggregation, resharding and
+//! weight-synchronization costs, and the per-algorithm iteration-time
+//! estimates `C_SyncPPO`, `C_AsyncPPO`, `C_SyncGRPO`, `C_AsyncGRPO`.
+
+use super::comm::{cv_all_gather, cv_p2p, min_cross_edge, ring_minmax};
+use super::task_cost::{task_cost, TaskCost};
+use crate::plan::ExecutionPlan;
+use crate::topology::DeviceTopology;
+use crate::workflow::{Algo, JobConfig, Mode, RlTaskId, RlWorkflow};
+
+/// Full cost breakdown of an execution plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanCost {
+    /// Per-task Ψ costs, indexed like the workflow's tasks.
+    pub per_task: Vec<TaskCost>,
+    /// Model resharding cost (sync modes).
+    pub reshard: f64,
+    /// Weight synchronization cost (async modes).
+    pub sync: f64,
+    /// Estimated end-to-end iteration time (seconds).
+    pub iter_time: f64,
+}
+
+impl PlanCost {
+    /// Throughput in samples (prompt-response pairs) per second.
+    pub fn throughput(&self, job: &JobConfig) -> f64 {
+        job.total_samples() as f64 / self.iter_time
+    }
+}
+
+/// The cost model `C(ρ, σ; G, G_D)`.
+pub struct CostModel<'a> {
+    pub topo: &'a DeviceTopology,
+    pub wf: &'a RlWorkflow,
+    pub job: &'a JobConfig,
+}
+
+impl<'a> CostModel<'a> {
+    pub fn new(topo: &'a DeviceTopology, wf: &'a RlWorkflow, job: &'a JobConfig) -> Self {
+        CostModel { topo, wf, job }
+    }
+
+    /// Φ({C^t}) = η·max + (1-η)·Σ — the task-parallelism aggregator.
+    pub fn phi(&self, costs: &[f64]) -> f64 {
+        if costs.is_empty() {
+            return 0.0;
+        }
+        let max = costs.iter().cloned().fold(f64::MIN, f64::max);
+        let sum: f64 = costs.iter().sum();
+        let eta = self.job.eta;
+        eta * max + (1.0 - eta) * sum
+    }
+
+    /// Evaluate the full plan. Returns `None` if required tasks are
+    /// missing from the workflow (never happens for well-formed ones).
+    pub fn plan_cost(&self, plan: &ExecutionPlan) -> PlanCost {
+        let per_task: Vec<TaskCost> = self
+            .wf
+            .tasks
+            .iter()
+            .zip(&plan.task_plans)
+            .map(|(task, tp)| task_cost(self.topo, task, self.job, tp))
+            .collect();
+
+        let c = |id: RlTaskId| -> f64 {
+            self.wf
+                .task_index(id)
+                .map(|t| per_task[t].total)
+                .unwrap_or(0.0)
+        };
+
+        let reshard = self.reshard_cost(plan);
+        let sync = self.sync_cost(plan);
+
+        let iter_time = match (self.wf.algo, self.wf.mode) {
+            (Algo::Ppo, Mode::Sync) => {
+                c(RlTaskId::ActorGen)
+                    + self.phi(&[
+                        c(RlTaskId::RewardInf),
+                        c(RlTaskId::RefInf),
+                        c(RlTaskId::CriticInf),
+                    ])
+                    + self.phi(&[c(RlTaskId::ActorTrain), c(RlTaskId::CriticTrain)])
+                    + reshard
+            }
+            (Algo::Ppo, Mode::Async) => {
+                let train_side = self.phi(&[
+                    c(RlTaskId::RewardInf),
+                    c(RlTaskId::RefInf),
+                    c(RlTaskId::CriticInf),
+                ]) + self.phi(&[c(RlTaskId::ActorTrain), c(RlTaskId::CriticTrain)]);
+                let gen = c(RlTaskId::ActorGen);
+                let overlap = self.gen_overlap_frac(plan);
+                // Device sharing between generation and the training side
+                // serializes that fraction of the smaller stream (the
+                // paper's async designs disaggregate for this reason).
+                gen.max(train_side) + overlap * gen.min(train_side) + sync
+            }
+            (Algo::Grpo, Mode::Sync) => {
+                c(RlTaskId::ActorGen)
+                    + self.phi(&[c(RlTaskId::RewardInf), c(RlTaskId::RefInf)])
+                    + c(RlTaskId::ActorTrain)
+                    + reshard
+            }
+            (Algo::Grpo, Mode::Async) => {
+                let train_side = self.phi(&[c(RlTaskId::RewardInf), c(RlTaskId::RefInf)])
+                    + c(RlTaskId::ActorTrain);
+                let gen = c(RlTaskId::ActorGen);
+                let overlap = self.gen_overlap_frac(plan);
+                gen.max(train_side) + overlap * gen.min(train_side) + sync
+            }
+        };
+
+        PlanCost { per_task, reshard, sync, iter_time }
+    }
+
+    /// Fraction of the actor-generation devices also used by any other
+    /// task — the degree to which async's gen/train overlap is illusory.
+    fn gen_overlap_frac(&self, plan: &ExecutionPlan) -> f64 {
+        let Some(tg) = self.wf.task_index(RlTaskId::ActorGen) else {
+            return 0.0;
+        };
+        let gen_devices = plan.task_plans[tg].devices();
+        if gen_devices.is_empty() {
+            return 0.0;
+        }
+        let mut shared = 0usize;
+        for &d in &gen_devices {
+            let used_elsewhere = plan
+                .task_plans
+                .iter()
+                .enumerate()
+                .any(|(t, tp)| t != tg && tp.assignment.contains(&d));
+            if used_elsewhere {
+                shared += 1;
+            }
+        }
+        shared as f64 / gen_devices.len() as f64
+    }
+
+    /// `C_reshard = max_i C_all-gather(actor-train, i)`: after training,
+    /// each actor-training replica all-gathers the updated weights so the
+    /// (colocated) generation engine can reload them.
+    pub fn reshard_cost(&self, plan: &ExecutionPlan) -> f64 {
+        let Some(t) = self.wf.task_index(RlTaskId::ActorTrain) else {
+            return 0.0;
+        };
+        let tp = &plan.task_plans[t];
+        let m = &self.wf.tasks[t].model;
+        let group = tp.strategy.pp * tp.strategy.tp;
+        let vol = cv_all_gather(m.nl, m.h1, m.h2, group);
+        let mut worst: f64 = 0.0;
+        for i in 0..tp.strategy.dp {
+            let devs = tp.replica_devices(i);
+            worst = worst.max(ring_minmax(self.topo, &devs, vol));
+        }
+        worst
+    }
+
+    /// `C_sync` (async): all-gather on the fastest training replica +
+    /// broadcast on the slowest generation replica + point-to-point
+    /// transfer between the two groups (Appendix B.2, Synchronization).
+    pub fn sync_cost(&self, plan: &ExecutionPlan) -> f64 {
+        let (Some(tt), Some(tg)) = (
+            self.wf.task_index(RlTaskId::ActorTrain),
+            self.wf.task_index(RlTaskId::ActorGen),
+        ) else {
+            return 0.0;
+        };
+        let (pt, pg) = (&plan.task_plans[tt], &plan.task_plans[tg]);
+        let m = &self.wf.tasks[tt].model;
+
+        // all-gather within a training replica — min over replicas
+        let ag_group = pt.strategy.pp * pt.strategy.tp;
+        let ag_vol = cv_all_gather(m.nl, m.h1, m.h2, ag_group);
+        let mut ag_min = f64::INFINITY;
+        for i in 0..pt.strategy.dp {
+            ag_min = ag_min.min(ring_minmax(self.topo, &pt.replica_devices(i), ag_vol));
+        }
+        if !ag_min.is_finite() {
+            ag_min = 0.0;
+        }
+
+        // broadcast within each generation replica — max over replicas
+        let bc_group = pg.strategy.pp * pg.strategy.tp;
+        let bc_vol = cv_all_gather(m.nl, m.h1, m.h2, bc_group);
+        let mut bc_max: f64 = 0.0;
+        for i in 0..pg.strategy.dp {
+            bc_max = bc_max.max(ring_minmax(self.topo, &pg.replica_devices(i), bc_vol));
+        }
+
+        // point-to-point between the two groups
+        let p2p_vol = cv_p2p(m.nl, m.h1, m.h2);
+        let p2p = min_cross_edge(self.topo, &pt.devices(), &pg.devices(), p2p_vol);
+
+        ag_min + bc_max + p2p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::{ParallelStrategy, TaskPlan};
+    use crate::topology::{build_testbed, Scenario, TestbedSpec};
+    use crate::workflow::ModelSpec;
+
+    fn plan_over(wf: &RlWorkflow, n: usize, per_task: usize) -> ExecutionPlan {
+        let mut task_plans = Vec::new();
+        for (t, task) in wf.tasks.iter().enumerate() {
+            let s = ParallelStrategy::new(per_task / 8, 2, 4);
+            let devs: Vec<usize> = (t * per_task..(t + 1) * per_task).collect();
+            task_plans.push(TaskPlan::uniform(s, task.model.nl, devs));
+        }
+        ExecutionPlan {
+            task_groups: vec![(0..wf.n_tasks()).collect()],
+            gpu_groups: vec![(0..n).collect()],
+            task_plans,
+        }
+    }
+
+    #[test]
+    fn sync_ppo_sums_waves() {
+        let topo = build_testbed(Scenario::SingleRegion, &TestbedSpec::default());
+        let job = JobConfig::default();
+        let wf = RlWorkflow::new(Algo::Ppo, Mode::Sync, ModelSpec::qwen_4b());
+        let cm = CostModel::new(&topo, &wf, &job);
+        let plan = plan_over(&wf, 64, 8);
+        let cost = cm.plan_cost(&plan);
+        // Iteration time ≥ generation + max(inference) + max(training).
+        let gen = cost.per_task[0].total;
+        assert!(cost.iter_time > gen);
+        assert!(cost.reshard > 0.0);
+        assert!(cost.iter_time.is_finite() && cost.iter_time > 0.0);
+    }
+
+    #[test]
+    fn async_overlaps_generation() {
+        let topo = build_testbed(Scenario::SingleRegion, &TestbedSpec::default());
+        let job = JobConfig::default();
+        let model = ModelSpec::qwen_4b();
+        let sync_wf = RlWorkflow::new(Algo::Grpo, Mode::Sync, model.clone());
+        let async_wf = RlWorkflow::new(Algo::Grpo, Mode::Async, model);
+        let plan_s = plan_over(&sync_wf, 64, 16);
+        let plan_a = plan_over(&async_wf, 64, 16);
+        let c_sync = CostModel::new(&topo, &sync_wf, &job).plan_cost(&plan_s);
+        let c_async = CostModel::new(&topo, &async_wf, &job).plan_cost(&plan_a);
+        // Async overlaps gen with train; with identical plans it should
+        // be no slower (sync adds them sequentially).
+        assert!(c_async.iter_time <= c_sync.iter_time + c_async.sync);
+    }
+
+    #[test]
+    fn phi_interpolates_max_and_sum() {
+        let topo = build_testbed(Scenario::SingleRegion, &TestbedSpec::default());
+        let wf = RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_4b());
+        let mut job = JobConfig::default();
+        job.eta = 1.0;
+        let cm = CostModel::new(&topo, &wf, &job);
+        assert_eq!(cm.phi(&[1.0, 2.0, 3.0]), 3.0);
+        job.eta = 0.0;
+        let cm = CostModel::new(&topo, &wf, &job);
+        assert_eq!(cm.phi(&[1.0, 2.0, 3.0]), 6.0);
+        job.eta = 0.5;
+        let cm = CostModel::new(&topo, &wf, &job);
+        assert_eq!(cm.phi(&[1.0, 2.0, 3.0]), 0.5 * 3.0 + 0.5 * 6.0);
+        assert_eq!(cm.phi(&[]), 0.0);
+    }
+
+    #[test]
+    fn grpo_cheaper_than_ppo_same_resources() {
+        // GRPO has no critic tasks; with tasks sharing the same per-task
+        // slice sizes, its iteration is cheaper.
+        let topo = build_testbed(Scenario::SingleRegion, &TestbedSpec::default());
+        let job = JobConfig::default();
+        let model = ModelSpec::qwen_4b();
+        let ppo = RlWorkflow::new(Algo::Ppo, Mode::Sync, model.clone());
+        let grpo = RlWorkflow::new(Algo::Grpo, Mode::Sync, model);
+        let c_ppo = CostModel::new(&topo, &ppo, &job).plan_cost(&plan_over(&ppo, 64, 8));
+        let c_grpo = CostModel::new(&topo, &grpo, &job).plan_cost(&plan_over(&grpo, 64, 8));
+        assert!(c_grpo.iter_time < c_ppo.iter_time);
+    }
+
+    #[test]
+    fn wan_scenario_slower_than_single_region() {
+        let job = JobConfig::default();
+        let model = ModelSpec::qwen_8b();
+        // GRPO: 4 tasks × 16 GPUs — each task spans two machines, which
+        // are in different regions under Multi-Continent.
+        let wf = RlWorkflow::new(Algo::Grpo, Mode::Sync, model);
+        let local = build_testbed(Scenario::SingleRegion, &TestbedSpec::default());
+        let wan = build_testbed(Scenario::MultiContinent, &TestbedSpec::default());
+        let plan = plan_over(&wf, 64, 16);
+        let c_local = CostModel::new(&local, &wf, &job).plan_cost(&plan);
+        let c_wan = CostModel::new(&wan, &wf, &job).plan_cost(&plan);
+        assert!(c_wan.iter_time > c_local.iter_time);
+    }
+
+    #[test]
+    fn throughput_inverse_of_iter_time() {
+        let topo = build_testbed(Scenario::SingleRegion, &TestbedSpec::default());
+        let job = JobConfig::default();
+        let wf = RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_4b());
+        let cost = CostModel::new(&topo, &wf, &job).plan_cost(&plan_over(&wf, 64, 16));
+        let tp = cost.throughput(&job);
+        assert!((tp * cost.iter_time - job.total_samples() as f64).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,17 @@
+//! Analytical cost model — paper §3.3 and Appendix B, implemented
+//! verbatim: component-level computation/communication costs (B.2),
+//! task-level costs Ψ (B.3), end-to-end costs for Sync/Async PPO/GRPO
+//! (B.4), with resharding and weight-synchronization terms.
+//!
+//! The model is the hot path of the schedulers (evaluated for every
+//! candidate plan), so it avoids allocation where possible and uses a
+//! bottleneck-ring heuristic that is exact for small TP/DP groups.
+
+pub mod comm;
+pub mod compute;
+pub mod task_cost;
+pub mod e2e;
+
+pub use comm::ring_minmax;
+pub use e2e::{CostModel, PlanCost};
+pub use task_cost::TaskCost;

@@ -1,0 +1,321 @@
+//! Task-level cost assembly: Ψ^gen, Ψ^inf, Ψ^train (Appendix B.3) built
+//! from the component costs of B.2 over a task's `TaskPlan`.
+
+use super::comm::{cv_dp, cv_pp, cv_tp, min_cross_edge, ring_minmax};
+use super::compute::{comp_forward, comp_train, hbm_decode};
+use crate::plan::memory::decode_batch_size;
+use crate::plan::TaskPlan;
+use crate::topology::DeviceTopology;
+use crate::workflow::{JobConfig, RlTask, TaskKind};
+
+/// Decomposed cost of one task (seconds per iteration).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct TaskCost {
+    pub comp: f64,
+    pub tp: f64,
+    pub pp: f64,
+    pub dp: f64,
+    pub hbm: f64,
+    pub bubble: f64,
+    /// Ψ-aggregated task cost.
+    pub total: f64,
+}
+
+/// Total micro-batches of the job (before DP splitting).
+pub fn total_microbatches(job: &JobConfig) -> usize {
+    job.total_samples().div_ceil(job.mbs).max(1)
+}
+
+/// Compute the task-level cost Ψ for `task` under `plan` on `topo`.
+pub fn task_cost(
+    topo: &DeviceTopology,
+    task: &RlTask,
+    job: &JobConfig,
+    plan: &TaskPlan,
+) -> TaskCost {
+    let s = &plan.strategy;
+    let m = &task.model;
+    let kind = task.kind();
+    let seq = job.seq_total();
+    // Generation: compute covers prefill only (seq_out = 0), the decode
+    // phase is the HBM term.
+    let comp_seq = match kind {
+        TaskKind::Generation => job.seq_in,
+        _ => seq,
+    };
+    let total_m = total_microbatches(job);
+    let local_batch = (job.total_samples() as f64 / s.dp as f64).ceil() as usize;
+
+    let vol_tp = cv_tp(job.mbs, seq, m.h1, s.tp);
+    let vol_pp = cv_pp(job.mbs, seq, m.h1);
+
+    // Multipliers: forward-only vs forward+backward(+recompute).
+    let (tp_mult, pp_mult) = match kind {
+        TaskKind::Training => (if job.recompute { 6.0 } else { 4.0 }, 2.0),
+        _ => (2.0, 1.0),
+    };
+
+    let mut psi: f64 = 0.0; // max over replicas of the stage-path term
+    let mut c_comp_max: f64 = 0.0;
+    let mut c_tp_max: f64 = 0.0;
+    let mut c_pp_max: f64 = 0.0;
+    let mut c_hbm_max: f64 = 0.0;
+    let mut c_bubble_max: f64 = 0.0;
+
+    for i in 0..s.dp {
+        let nm_i = plan.replica_microbatches(total_m, i);
+        // Decode batch size is a *replica-wide* property: the pipeline
+        // streams every decode batch through all stages, so the most
+        // memory-constrained device throttles everyone (matches the
+        // engine/simulator behaviour).
+        let replica_dbs = if kind == TaskKind::Generation {
+            let mut dbs = usize::MAX;
+            for j in 0..s.pp {
+                for &d in &plan.tp_group(i, j) {
+                    dbs = dbs.min(decode_batch_size(
+                        task,
+                        job,
+                        plan.layer_split[j],
+                        s.tp,
+                        local_batch,
+                        topo.devices[d].spec().mem_bytes,
+                    ));
+                }
+            }
+            dbs.max(1)
+        } else {
+            1
+        };
+        let mut stage_max: f64 = 0.0; // max_j (comp + tp + pp [+ hbm])
+        let mut bubble_num: f64 = 0.0; // Σ_{j≠0} per-microbatch stage cost
+        for j in 0..s.pp {
+            let nl_j = plan.layer_split[j];
+            let tp_devs = plan.tp_group(i, j);
+            // C_tp(t,i,j)
+            let c_tp = tp_mult * nm_i as f64 * nl_j as f64 * ring_minmax(topo, &tp_devs, vol_tp);
+            // C_pp(t,i,j): edge to stage j+1
+            let c_pp = if j + 1 < s.pp {
+                let next = plan.tp_group(i, j + 1);
+                pp_mult * nm_i as f64 * min_cross_edge(topo, &tp_devs, &next, vol_pp)
+            } else {
+                0.0
+            };
+            // C_comp(t,i,j) = max_k
+            let mut c_comp: f64 = 0.0;
+            let mut c_hbm: f64 = 0.0;
+            for &d in &tp_devs {
+                let spec = topo.devices[d].spec();
+                // Achievable (profiler-measured) FLOPs, not paper peak:
+                // the HetRL profiler feeds measured TFLOPs to the model.
+                let flops = topo.devices[d].effective_flops();
+                let c = match kind {
+                    TaskKind::Training => comp_train(
+                        nm_i, job.mbs, nl_j, comp_seq, m.h1, m.h2, flops, s.tp,
+                    ),
+                    _ => comp_forward(
+                        nm_i, job.mbs, nl_j, comp_seq, m.h1, m.h2, flops, s.tp,
+                    ),
+                };
+                c_comp = c_comp.max(c);
+                if kind == TaskKind::Generation {
+                    let dbs = replica_dbs;
+                    let mut h = hbm_decode(
+                        job.seq_out, nm_i, job.mbs, nl_j, m.h1, m.h2, dbs, spec.hbm_bps, s.tp,
+                    );
+                    // Decode-phase TP all-reduce *latency*: every token
+                    // pays 2(tp−1)·α per layer — negligible on NVLink,
+                    // catastrophic over WAN (this is why serving systems
+                    // never TP across data centers). The volume term is
+                    // already in C_tp; the latency term matters here
+                    // because decoding is per-token.
+                    if s.tp > 1 {
+                        let mut alpha_max: f64 = 0.0;
+                        for (x, &a) in tp_devs.iter().enumerate() {
+                            for &b in tp_devs.iter().skip(x + 1) {
+                                alpha_max = alpha_max.max(topo.lat(a, b));
+                            }
+                        }
+                        let n_batches = local_batch.div_ceil(dbs.max(1)).max(1) as f64;
+                        h += job.seq_out as f64
+                            * n_batches
+                            * nl_j as f64
+                            * 2.0
+                            * (s.tp as f64 - 1.0)
+                            * alpha_max;
+                    }
+                    c_hbm = c_hbm.max(h);
+                }
+            }
+            let stage = c_comp + c_tp + c_pp + c_hbm;
+            stage_max = stage_max.max(stage);
+            if j != 0 {
+                bubble_num += (c_comp + c_tp + c_pp) / nm_i as f64;
+            }
+            c_comp_max = c_comp_max.max(c_comp);
+            c_tp_max = c_tp_max.max(c_tp);
+            c_pp_max = c_pp_max.max(c_pp);
+            c_hbm_max = c_hbm_max.max(c_hbm);
+        }
+        let replica_total = match kind {
+            TaskKind::Training => stage_max + bubble_num,
+            _ => stage_max,
+        };
+        psi = psi.max(replica_total);
+        c_bubble_max = c_bubble_max.max(bubble_num);
+    }
+
+    // C_dp: gradient all-reduce per (j, k) subgraph, training only.
+    let mut c_dp: f64 = 0.0;
+    if kind == TaskKind::Training && s.dp > 1 {
+        for j in 0..s.pp {
+            let nl_j = plan.layer_split[j];
+            let vol = cv_dp(nl_j, m.h1, m.h2, s.dp, s.tp);
+            for k in 0..s.tp {
+                let devs = plan.dp_group(j, k);
+                c_dp = c_dp.max(ring_minmax(topo, &devs, vol));
+            }
+        }
+        psi += c_dp;
+    }
+
+    TaskCost {
+        comp: c_comp_max,
+        tp: c_tp_max,
+        pp: c_pp_max,
+        dp: c_dp,
+        hbm: c_hbm_max,
+        bubble: c_bubble_max,
+        total: psi,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::ParallelStrategy;
+    use crate::topology::{build_testbed, Scenario, TestbedSpec};
+    use crate::workflow::{ModelSpec, RlTaskId};
+
+    fn setup() -> (DeviceTopology, JobConfig) {
+        (
+            build_testbed(Scenario::SingleRegion, &TestbedSpec::default()),
+            JobConfig::default(),
+        )
+    }
+
+    fn task(id: RlTaskId) -> RlTask {
+        RlTask { id, model: ModelSpec::qwen_4b() }
+    }
+
+    #[test]
+    fn training_costs_more_than_inference() {
+        let (topo, job) = setup();
+        let s = ParallelStrategy::new(2, 2, 4);
+        let devs: Vec<usize> = (0..16).collect();
+        let inf = task_cost(
+            &topo,
+            &task(RlTaskId::RefInf),
+            &job,
+            &TaskPlan::uniform(s, 36, devs.clone()),
+        );
+        let train = task_cost(
+            &topo,
+            &task(RlTaskId::ActorTrain),
+            &job,
+            &TaskPlan::uniform(s, 36, devs),
+        );
+        assert!(train.total > 2.0 * inf.total);
+        assert!(train.dp > 0.0);
+        assert!(inf.dp == 0.0);
+    }
+
+    #[test]
+    fn generation_dominated_by_hbm() {
+        let (topo, job) = setup();
+        let s = ParallelStrategy::new(2, 2, 4);
+        let devs: Vec<usize> = (0..16).collect();
+        let gen = task_cost(
+            &topo,
+            &task(RlTaskId::ActorGen),
+            &job,
+            &TaskPlan::uniform(s, 36, devs),
+        );
+        assert!(gen.hbm > 0.0);
+        assert!(gen.total >= gen.hbm);
+    }
+
+    #[test]
+    fn more_devices_cut_compute() {
+        let (topo, job) = setup();
+        let small = task_cost(
+            &topo,
+            &task(RlTaskId::ActorTrain),
+            &job,
+            &TaskPlan::uniform(ParallelStrategy::new(2, 1, 4), 36, (0..8).collect()),
+        );
+        let large = task_cost(
+            &topo,
+            &task(RlTaskId::ActorTrain),
+            &job,
+            &TaskPlan::uniform(ParallelStrategy::new(4, 1, 4), 36, (0..16).collect()),
+        );
+        assert!(large.comp < small.comp, "large={:?} small={:?}", large, small);
+    }
+
+    #[test]
+    fn a100_slice_faster_than_l4_slice() {
+        let (topo, job) = setup();
+        // machines are interleaved A100, L40S, L4, A100... → devices 0..8
+        // are A100s, 16..24 are L4s.
+        let s = ParallelStrategy::new(1, 1, 8);
+        let a100 = task_cost(
+            &topo,
+            &task(RlTaskId::ActorTrain),
+            &job,
+            &TaskPlan::uniform(s, 36, (0..8).collect()),
+        );
+        let l4 = task_cost(
+            &topo,
+            &task(RlTaskId::ActorTrain),
+            &job,
+            &TaskPlan::uniform(s, 36, (16..24).collect()),
+        );
+        assert_eq!(topo.devices[16].spec().name, "L4");
+        assert!(l4.comp > 2.0 * a100.comp);
+    }
+
+    #[test]
+    fn pipeline_adds_bubble_for_training() {
+        let (topo, job) = setup();
+        let pp1 = task_cost(
+            &topo,
+            &task(RlTaskId::ActorTrain),
+            &job,
+            &TaskPlan::uniform(ParallelStrategy::new(1, 1, 8), 36, (0..8).collect()),
+        );
+        let pp4 = task_cost(
+            &topo,
+            &task(RlTaskId::ActorTrain),
+            &job,
+            &TaskPlan::uniform(ParallelStrategy::new(1, 4, 2), 36, (0..8).collect()),
+        );
+        assert_eq!(pp1.bubble, 0.0);
+        assert!(pp4.bubble > 0.0);
+        assert!(pp4.pp > 0.0);
+    }
+
+    #[test]
+    fn wan_links_inflate_tp_cost() {
+        let job = JobConfig::default();
+        let local = build_testbed(Scenario::SingleRegion, &TestbedSpec::default());
+        let wan = build_testbed(Scenario::MultiContinent, &TestbedSpec::default());
+        let s = ParallelStrategy::new(1, 1, 8);
+        // Spread TP over 8 different machines (device stride 8 = one per
+        // machine) — catastrophic on WAN, fine locally.
+        let devs: Vec<usize> = (0..8).map(|i| i * 8).collect();
+        let t = task(RlTaskId::RefInf);
+        let c_local = task_cost(&local, &t, &job, &TaskPlan::uniform(s, 36, devs.clone()));
+        let c_wan = task_cost(&wan, &t, &job, &TaskPlan::uniform(s, 36, devs));
+        assert!(c_wan.tp > 50.0 * c_local.tp, "wan={} local={}", c_wan.tp, c_local.tp);
+    }
+}

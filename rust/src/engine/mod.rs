@@ -1,0 +1,28 @@
+//! Execution engine: the part of HetRL that actually *runs* RL training
+//! against the AOT-compiled model, entirely from rust (verl-equivalent
+//! role; Megatron/vLLM are replaced by PJRT executables + the in-crate
+//! samplers).
+//!
+//! * [`tokenizer`] — char-level tokenizer for the arithmetic tasks;
+//! * [`dataset`] — synthetic GSM8K-like / MATH-like problem generators
+//!   with rule-based exact-answer rewards;
+//! * [`policy`] — model state (params/optimizer) + sampling on top of
+//!   the [`crate::runtime::Runtime`];
+//! * [`grpo`] — the GRPO training loop (rollout → reward → advantage →
+//!   AOT train step → weight sync);
+//! * [`workers`] — heterogeneity-scaled worker-group accounting used by
+//!   the Figures 8/9 hetero-vs-homo wall-clock comparison, including
+//!   sequence-length-aware sample routing (the engine-level load
+//!   balancing strategy of §4.2).
+
+pub mod tokenizer;
+pub mod dataset;
+pub mod policy;
+pub mod grpo;
+pub mod workers;
+
+pub use dataset::{Problem, TaskDifficulty};
+pub use grpo::{GrpoConfig, GrpoStats, GrpoTrainer};
+pub use policy::Policy;
+pub use tokenizer::Tokenizer;
+pub use workers::WorkerFleet;

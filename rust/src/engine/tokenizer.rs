@@ -1,0 +1,99 @@
+//! Char-level tokenizer over a fixed 64-symbol alphabet — matches the
+//! `vocab=64` the artifacts are compiled with.
+
+/// Special token ids.
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+
+/// Printable alphabet starting at id 3.
+const ALPHABET: &str = "0123456789+-*/=() .,:?abcdefghijklmnopqrstuvwxyzABCDEFGHIJK";
+
+/// Char-level tokenizer.
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    chars: Vec<char>,
+}
+
+impl Default for Tokenizer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tokenizer {
+    pub fn new() -> Tokenizer {
+        let chars: Vec<char> = ALPHABET.chars().collect();
+        assert!(chars.len() + 3 <= 64, "alphabet must fit vocab 64");
+        Tokenizer { chars }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        64
+    }
+
+    pub fn encode_char(&self, c: char) -> Option<i32> {
+        self.chars.iter().position(|&x| x == c).map(|i| i as i32 + 3)
+    }
+
+    /// Encode text (unknown chars are skipped), without BOS/EOS.
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.chars().filter_map(|c| self.encode_char(c)).collect()
+    }
+
+    /// Decode ids, stopping at EOS, skipping PAD/BOS.
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut s = String::new();
+        for &id in ids {
+            if id == EOS {
+                break;
+            }
+            if id == PAD || id == BOS {
+                continue;
+            }
+            let idx = (id - 3) as usize;
+            if idx < self.chars.len() {
+                s.push(self.chars[idx]);
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let t = Tokenizer::new();
+        let text = "12+34=46";
+        let ids = t.encode(text);
+        assert_eq!(t.decode(&ids), text);
+    }
+
+    #[test]
+    fn specials_not_in_alphabet() {
+        let t = Tokenizer::new();
+        for c in "0123456789+-*= ".chars() {
+            let id = t.encode_char(c).unwrap();
+            assert!(id >= 3);
+        }
+    }
+
+    #[test]
+    fn decode_stops_at_eos() {
+        let t = Tokenizer::new();
+        let mut ids = t.encode("42");
+        ids.push(EOS);
+        ids.extend(t.encode("junk"));
+        assert_eq!(t.decode(&ids), "42");
+    }
+
+    #[test]
+    fn vocab_fits() {
+        let t = Tokenizer::new();
+        let max = t.encode(ALPHABET).into_iter().max().unwrap();
+        assert!(max < 64);
+    }
+}

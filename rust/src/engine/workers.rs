@@ -1,0 +1,206 @@
+//! Heterogeneity-scaled worker-group accounting.
+//!
+//! The real engine executes on one CPU PJRT client; heterogeneous
+//! *wall-clock* behaviour (Figures 8/9: same convergence per step,
+//! faster per hour with more aggregate hardware) is modeled by scaling
+//! measured execution time by the fleet's aggregate speed. This module
+//! also hosts the engine-level load-balancing strategy from §4.2:
+//! sequence-length-aware sample routing (longest sequences to the
+//! fastest workers).
+
+/// One homogeneous worker group (e.g. "8×A100").
+#[derive(Debug, Clone)]
+pub struct WorkerGroup {
+    pub name: String,
+    /// Relative per-worker speed (1.0 = reference GPU).
+    pub speed: f64,
+    pub count: usize,
+}
+
+/// A fleet of worker groups with a virtual clock.
+#[derive(Debug, Clone)]
+pub struct WorkerFleet {
+    pub groups: Vec<WorkerGroup>,
+    /// Accumulated virtual wall-clock (seconds).
+    pub virtual_time: f64,
+}
+
+impl WorkerFleet {
+    pub fn new(groups: Vec<WorkerGroup>) -> WorkerFleet {
+        assert!(!groups.is_empty());
+        WorkerFleet { groups, virtual_time: 0.0 }
+    }
+
+    /// `n` identical reference workers.
+    pub fn homogeneous(n: usize) -> WorkerFleet {
+        WorkerFleet::new(vec![WorkerGroup {
+            name: format!("{n}x reference"),
+            speed: 1.0,
+            count: n,
+        }])
+    }
+
+    /// The paper's mixed fleet shape: reference GPUs plus slower and
+    /// faster tiers (relative speeds follow Table 1 effective FLOPs).
+    pub fn heterogeneous_default() -> WorkerFleet {
+        WorkerFleet::new(vec![
+            WorkerGroup { name: "3x A100".into(), speed: 1.0, count: 3 },
+            WorkerGroup { name: "3x L40S".into(), speed: 0.93, count: 3 },
+            WorkerGroup { name: "2x L4".into(), speed: 0.28, count: 2 },
+        ])
+    }
+
+    /// Aggregate throughput in reference-worker units.
+    pub fn throughput(&self) -> f64 {
+        self.groups.iter().map(|g| g.speed * g.count as f64).sum()
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.groups.iter().map(|g| g.count).sum()
+    }
+
+    /// Account a data-parallel phase measured at `real_secs` on the
+    /// reference worker: virtual duration = real / aggregate-throughput.
+    pub fn account_parallel(&mut self, real_secs: f64) -> f64 {
+        let t = real_secs / self.throughput().max(1e-9);
+        self.virtual_time += t;
+        t
+    }
+
+    /// Account a serial phase (e.g. weight sync) that does not scale.
+    pub fn account_serial(&mut self, real_secs: f64) -> f64 {
+        self.virtual_time += real_secs;
+        real_secs
+    }
+
+    /// Sequence-length-aware routing (§4.2 data-level balancing at the
+    /// engine level): assign each sample to a worker group, longest
+    /// samples to the fastest groups, filling proportionally to group
+    /// capacity. Returns group index per sample.
+    pub fn route_by_length(&self, lengths: &[usize]) -> Vec<usize> {
+        let n = lengths.len();
+        // Capacity per group ∝ speed·count.
+        let total: f64 = self.throughput();
+        let mut capacity: Vec<usize> = self
+            .groups
+            .iter()
+            .map(|g| ((g.speed * g.count as f64) / total * n as f64).round() as usize)
+            .collect();
+        // Fix rounding to sum exactly n.
+        let n_groups = capacity.len();
+        let mut diff = n as i64 - capacity.iter().sum::<usize>() as i64;
+        let mut gi = 0;
+        while diff != 0 {
+            let idx = gi % n_groups;
+            if diff > 0 {
+                capacity[idx] += 1;
+                diff -= 1;
+            } else if capacity[idx] > 0 {
+                capacity[idx] -= 1;
+                diff += 1;
+            }
+            gi += 1;
+        }
+        // Sort samples by length desc; groups by speed desc.
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by_key(|&i| std::cmp::Reverse(lengths[i]));
+        let mut group_order: Vec<usize> = (0..self.groups.len()).collect();
+        group_order.sort_by(|&a, &b| {
+            self.groups[b]
+                .speed
+                .partial_cmp(&self.groups[a].speed)
+                .unwrap()
+        });
+        let mut out = vec![0usize; n];
+        let mut g_iter = group_order.into_iter();
+        let mut cur = g_iter.next().unwrap();
+        let mut left = capacity[cur];
+        for &i in &order {
+            while left == 0 {
+                match g_iter.next() {
+                    Some(g) => {
+                        cur = g;
+                        left = capacity[cur];
+                    }
+                    None => break,
+                }
+            }
+            out[i] = cur;
+            left = left.saturating_sub(1);
+        }
+        out
+    }
+
+    /// Imbalance of a routing: max over groups of (assigned work /
+    /// group speed) normalized by the ideal. 1.0 = perfectly balanced.
+    pub fn routing_imbalance(&self, lengths: &[usize], assignment: &[usize]) -> f64 {
+        let mut work = vec![0.0f64; self.groups.len()];
+        for (i, &g) in assignment.iter().enumerate() {
+            work[g] += lengths[i] as f64;
+        }
+        let total_work: f64 = lengths.iter().map(|&l| l as f64).sum();
+        let ideal = total_work / self.throughput();
+        let worst = work
+            .iter()
+            .zip(&self.groups)
+            .map(|(w, g)| w / (g.speed * g.count as f64))
+            .fold(0.0f64, f64::max);
+        worst / ideal.max(1e-12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_sums() {
+        let f = WorkerFleet::heterogeneous_default();
+        assert!((f.throughput() - (3.0 + 2.79 + 0.56)).abs() < 1e-9);
+        assert_eq!(f.n_workers(), 8);
+    }
+
+    #[test]
+    fn bigger_fleet_faster_virtual_clock() {
+        let mut small = WorkerFleet::homogeneous(3);
+        let mut big = WorkerFleet::heterogeneous_default();
+        small.account_parallel(10.0);
+        big.account_parallel(10.0);
+        assert!(big.virtual_time < small.virtual_time);
+    }
+
+    #[test]
+    fn routing_covers_all_samples() {
+        let f = WorkerFleet::heterogeneous_default();
+        let lengths: Vec<usize> = (0..32).map(|i| 16 + (i * 7) % 64).collect();
+        let assignment = f.route_by_length(&lengths);
+        assert_eq!(assignment.len(), lengths.len());
+        assert!(assignment.iter().all(|&g| g < f.groups.len()));
+    }
+
+    #[test]
+    fn routing_sends_long_to_fast() {
+        let f = WorkerFleet::new(vec![
+            WorkerGroup { name: "fast".into(), speed: 1.0, count: 2 },
+            WorkerGroup { name: "slow".into(), speed: 0.25, count: 2 },
+        ]);
+        let lengths = vec![100, 10, 90, 20, 80, 30, 70, 40];
+        let assignment = f.route_by_length(&lengths);
+        // The longest sample goes to the fast group (index 0).
+        assert_eq!(assignment[0], 0);
+        // The shortest goes to the slow group.
+        assert_eq!(assignment[1], 1);
+    }
+
+    #[test]
+    fn length_aware_beats_round_robin() {
+        let f = WorkerFleet::new(vec![
+            WorkerGroup { name: "fast".into(), speed: 1.0, count: 2 },
+            WorkerGroup { name: "slow".into(), speed: 0.3, count: 2 },
+        ]);
+        let lengths: Vec<usize> = (0..64).map(|i| 8 + (i * 13) % 120).collect();
+        let smart = f.route_by_length(&lengths);
+        let rr: Vec<usize> = (0..64).map(|i| i % 2).collect();
+        assert!(f.routing_imbalance(&lengths, &smart) <= f.routing_imbalance(&lengths, &rr));
+    }
+}

@@ -1,0 +1,51 @@
+//! # HetRL — Efficient Reinforcement Learning for LLMs in Heterogeneous Environments
+//!
+//! Reproduction of the MLSys'26 paper. The crate implements, from scratch:
+//!
+//! * the **device/topology substrate** ([`topology`]): GPU catalog (paper
+//!   Table 1), region-to-region latency/bandwidth matrices, the four
+//!   evaluation network scenarios;
+//! * the **RL workflow model** ([`workflow`]): PPO/GRPO task graphs
+//!   (sync + async), Qwen-style model specs with a full memory model;
+//! * the **plan layer** ([`plan`]): DP×PP×TP parallel strategies, tasklet
+//!   graphs `G_L`, execution plans `(ρ, σ)` with constraints C1–C3;
+//! * the **analytical cost model** ([`costmodel`]) — paper Appendix B,
+//!   verbatim: TP/PP/DP communication, compute, HBM-bound decoding,
+//!   pipeline bubbles, resharding, weight synchronization, task-level
+//!   `Ψ^{gen,inf,train}` and end-to-end `C` for Sync/Async PPO/GRPO;
+//! * the **schedulers** ([`scheduler`]): the multi-level search framework
+//!   (Levels 1–5), the hybrid nested-SHA + evolutionary algorithm
+//!   (paper Algorithm 1), the exact ILP formulation, and the baselines
+//!   (verl-like, StreamRL-like, pure EA / DEAP-like, random);
+//! * a standalone **0-1 ILP solver** ([`solver`]): dense simplex LP
+//!   relaxation + branch & bound;
+//! * a **discrete-event cluster simulator** ([`simulator`]) standing in
+//!   for the paper's 64-GPU heterogeneous testbed;
+//! * the **load balancer** ([`balance`]) and **profiler** ([`profiler`]);
+//! * the **PJRT runtime** ([`runtime`]) that loads the AOT-compiled
+//!   JAX/Pallas artifacts (HLO text) and the **execution engine**
+//!   ([`engine`]) that runs real GRPO/PPO training with Python never on
+//!   the request path.
+//!
+//! Offline-registry constraints mean the usual ecosystem crates are not
+//! available; [`util`] and [`testing`] provide the in-crate substrates
+//! (PRNG, JSON, CLI, logging, threadpool, bench harness, property-based
+//! testing).
+
+pub mod util;
+pub mod testing;
+pub mod topology;
+pub mod workflow;
+pub mod plan;
+pub mod costmodel;
+pub mod simulator;
+pub mod solver;
+pub mod scheduler;
+pub mod balance;
+pub mod profiler;
+pub mod metrics;
+pub mod runtime;
+pub mod engine;
+
+/// Crate version string, used by the CLI.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

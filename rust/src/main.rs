@@ -1,0 +1,290 @@
+//! HetRL CLI — the leader entry point.
+//!
+//! Subcommands:
+//!   profile              probe the (simulated) fleet and print hardware info
+//!   schedule             search for an execution plan and print it
+//!   simulate             schedule + run the discrete-event simulator
+//!   validate-cost-model  predicted vs simulated iteration time
+//!   train                real GRPO training over the AOT artifacts
+//!   info                 artifact manifest summary
+
+use hetrl::balance::{self, BalanceConfig};
+use hetrl::costmodel::CostModel;
+use hetrl::engine::{GrpoConfig, GrpoTrainer, TaskDifficulty, WorkerFleet};
+use hetrl::profiler::{profile, ProfilerConfig};
+use hetrl::runtime::Runtime;
+use hetrl::scheduler::{
+    Budget, IlpScheduler, PureEaScheduler, RandomScheduler, Scheduler, ShaEaScheduler,
+    StreamRlScheduler, VerlScheduler,
+};
+use hetrl::simulator::{simulate_plan, SimConfig};
+use hetrl::topology::{build_testbed, Scenario, TestbedSpec};
+use hetrl::util::cli::{usage, Args, OptSpec};
+use hetrl::util::units::fmt_secs;
+use hetrl::workflow::{Algo, JobConfig, Mode, ModelSpec, RlWorkflow};
+
+fn main() {
+    hetrl::util::logging::init();
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.subcommand.as_deref() {
+        Some("profile") => cmd_profile(&args),
+        Some("schedule") => cmd_schedule(&args, false),
+        Some("simulate") => cmd_schedule(&args, true),
+        Some("validate-cost-model") => cmd_validate(&args),
+        Some("train") => cmd_train(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            print!("{}", help());
+            if args.subcommand.is_none() { 0 } else { 2 }
+        }
+    };
+    std::process::exit(code);
+}
+
+fn help() -> String {
+    usage(
+        "hetrl",
+        &[
+            ("profile", "probe the fleet, print hardware summary"),
+            ("schedule", "search for an execution plan"),
+            ("simulate", "schedule + discrete-event simulation"),
+            ("validate-cost-model", "predicted vs simulated iteration time"),
+            ("train", "real GRPO training over artifacts/"),
+            ("info", "artifact manifest summary"),
+        ],
+        &[
+            OptSpec { name: "scenario", help: "single|hybrid|country|continent", default: Some("country") },
+            OptSpec { name: "model", help: "qwen model: 1.7b|4b|8b|14b", default: Some("8b") },
+            OptSpec { name: "algo", help: "ppo|grpo", default: Some("grpo") },
+            OptSpec { name: "mode", help: "sync|async", default: Some("sync") },
+            OptSpec { name: "scheduler", help: "sha-ea|ilp|verl|streamrl|deap|random", default: Some("sha-ea") },
+            OptSpec { name: "budget", help: "search budget (cost-model evals)", default: Some("600") },
+            OptSpec { name: "seed", help: "random seed", default: Some("0") },
+            OptSpec { name: "steps", help: "train: number of GRPO steps", default: Some("100") },
+            OptSpec { name: "artifacts", help: "artifacts directory", default: Some("artifacts") },
+            OptSpec { name: "no-balance", help: "disable load balancing (flag)", default: None },
+            OptSpec { name: "hard", help: "train: MATH-like tasks (flag)", default: None },
+        ],
+    )
+}
+
+fn parse_env(args: &Args) -> Result<(RlWorkflow, hetrl::topology::DeviceTopology, JobConfig), String> {
+    let scenario = Scenario::parse(&args.get_or("scenario", "country"))
+        .ok_or("bad --scenario")?;
+    let model = ModelSpec::by_name(&args.get_or("model", "8b")).ok_or("bad --model")?;
+    let algo = match args.get_or("algo", "grpo").as_str() {
+        "ppo" => Algo::Ppo,
+        "grpo" => Algo::Grpo,
+        _ => return Err("bad --algo".into()),
+    };
+    let mode = match args.get_or("mode", "sync").as_str() {
+        "sync" => Mode::Sync,
+        "async" => Mode::Async,
+        _ => return Err("bad --mode".into()),
+    };
+    let topo = build_testbed(scenario, &TestbedSpec::default());
+    Ok((RlWorkflow::new(algo, mode, model), topo, JobConfig::default()))
+}
+
+fn make_scheduler(name: &str, seed: u64) -> Result<Box<dyn Scheduler>, String> {
+    Ok(match name {
+        "sha-ea" => Box::new(ShaEaScheduler::new(seed)),
+        "ilp" => Box::new(IlpScheduler::new()),
+        "verl" => Box::new(VerlScheduler::new(seed)),
+        "streamrl" => Box::new(StreamRlScheduler::new(seed)),
+        "deap" => Box::new(PureEaScheduler::new(seed)),
+        "random" => Box::new(RandomScheduler::new(seed)),
+        other => return Err(format!("unknown scheduler '{other}'")),
+    })
+}
+
+fn cmd_profile(args: &Args) -> i32 {
+    let Ok((_, topo, _)) = parse_env(args) else { return 2 };
+    let report = profile(&topo, &ProfilerConfig::default());
+    print!("{}", report.summary(&topo));
+    0
+}
+
+fn cmd_schedule(args: &Args, also_simulate: bool) -> i32 {
+    let (wf, topo, job) = match parse_env(args) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let seed = args.get_u64("seed", 0).unwrap_or(0);
+    let budget = args.get_usize("budget", 600).unwrap_or(600);
+    let mut sched = match make_scheduler(&args.get_or("scheduler", "sha-ea"), seed) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    println!(
+        "scheduling {} of {} on {} GPUs ({}) with {} (budget {budget})",
+        wf.name(),
+        wf.tasks[0].model.name,
+        topo.n(),
+        args.get_or("scenario", "country"),
+        sched.name()
+    );
+    let out = sched.schedule(&topo, &wf, &job, Budget::timed(budget, 600.0));
+    let Some(mut plan) = out.plan else {
+        eprintln!("no feasible plan found");
+        return 1;
+    };
+    if !args.flag("no-balance") {
+        plan = balance::apply(&plan, &wf, &topo, BalanceConfig::default());
+    }
+    println!(
+        "search: {} evals in {} -> predicted iteration {}",
+        out.evals,
+        fmt_secs(out.wall),
+        fmt_secs(out.cost)
+    );
+    print!("{}", plan.describe(&wf, &topo));
+    let cm = CostModel::new(&topo, &wf, &job);
+    let cost = cm.plan_cost(&plan);
+    println!(
+        "predicted: iter {} | throughput {:.1} samples/s",
+        fmt_secs(cost.iter_time),
+        cost.throughput(&job)
+    );
+    if also_simulate {
+        let sim = simulate_plan(&topo, &wf, &job, &plan, &SimConfig::default());
+        println!(
+            "simulated: iter {} +- {} | throughput {:.1} samples/s | util {:.0}%",
+            fmt_secs(sim.iter_time),
+            fmt_secs(sim.iter_std),
+            sim.throughput,
+            sim.utilization * 100.0
+        );
+    }
+    0
+}
+
+fn cmd_validate(args: &Args) -> i32 {
+    let (wf, topo, job) = match parse_env(args) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let seed = args.get_u64("seed", 0).unwrap_or(0);
+    let budget = args.get_usize("budget", 400).unwrap_or(400);
+    let mut sched = ShaEaScheduler::new(seed);
+    let out = sched.schedule(&topo, &wf, &job, Budget::timed(budget, 300.0));
+    let Some(plan) = out.plan else {
+        eprintln!("no plan");
+        return 1;
+    };
+    let pred = CostModel::new(&topo, &wf, &job).plan_cost(&plan).iter_time;
+    let sim = simulate_plan(&topo, &wf, &job, &plan, &SimConfig::default());
+    let err = hetrl::util::stats::rel_err(pred, sim.iter_time) * 100.0;
+    println!(
+        "predicted {} vs simulated {} -> error {err:.1}%",
+        fmt_secs(pred),
+        fmt_secs(sim.iter_time)
+    );
+    0
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    let dir = args.get_or("artifacts", "artifacts");
+    let steps = args.get_usize("steps", 100).unwrap_or(100);
+    let rt = match Runtime::load(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("{e:#}");
+            return 1;
+        }
+    };
+    println!(
+        "runtime up on {} | {} entry points | {:.2}M params",
+        rt.platform(),
+        rt.manifest.entrypoints.len(),
+        rt.manifest.total_params() as f64 / 1e6
+    );
+    let cfg = GrpoConfig {
+        difficulty: if args.flag("hard") {
+            TaskDifficulty::Hard
+        } else {
+            TaskDifficulty::Easy
+        },
+        seed: args.get_u64("seed", 0).unwrap_or(0),
+        ..GrpoConfig::default()
+    };
+    let fleet = WorkerFleet::heterogeneous_default();
+    let mut trainer = match GrpoTrainer::new(&rt, cfg, fleet) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("{e:#}");
+            return 1;
+        }
+    };
+    for s in 0..steps {
+        match trainer.step() {
+            Ok(st) => {
+                if s % 10 == 0 || s + 1 == steps {
+                    println!(
+                        "step {:>4} | reward {:.3} | loss {:+.4} | kl {:.4} | wall {}",
+                        st.step,
+                        st.mean_reward,
+                        st.loss,
+                        st.kl,
+                        fmt_secs(st.wall)
+                    );
+                }
+            }
+            Err(e) => {
+                eprintln!("step failed: {e:#}");
+                return 1;
+            }
+        }
+    }
+    match trainer.evaluate(4) {
+        Ok(acc) => println!("final greedy accuracy: {:.1}%", acc * 100.0),
+        Err(e) => eprintln!("eval failed: {e:#}"),
+    }
+    0
+}
+
+fn cmd_info(args: &Args) -> i32 {
+    let dir = args.get_or("artifacts", "artifacts");
+    match hetrl::runtime::Manifest::load(&dir) {
+        Ok(m) => {
+            println!(
+                "model: d={} layers={} heads={} vocab={} maxlen={} ({:.2}M params), batch {}",
+                m.model.d_model,
+                m.model.n_layers,
+                m.model.n_heads,
+                m.model.vocab,
+                m.model.max_len,
+                m.total_params() as f64 / 1e6,
+                m.batch
+            );
+            for (name, ep) in &m.entrypoints {
+                println!(
+                    "  {name:<14} {} in / {} out ({})",
+                    ep.inputs.len(),
+                    ep.outputs.len(),
+                    ep.file.file_name().unwrap().to_string_lossy()
+                );
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("{e:#}");
+            1
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! Run records and result persistence: every bench writes its rows here
+//! (JSON + CSV under `results/`) so EXPERIMENTS.md can cite concrete
+//! files.
+
+use crate::util::json::Json;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// One experiment record: a named table with rows of (label → value).
+#[derive(Debug, Clone)]
+pub struct RunRecord {
+    pub experiment: String,
+    pub fields: Vec<String>,
+    pub rows: Vec<Vec<Json>>,
+}
+
+impl RunRecord {
+    pub fn new(experiment: &str, fields: &[&str]) -> Self {
+        RunRecord {
+            experiment: experiment.to_string(),
+            fields: fields.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: Vec<Json>) {
+        assert_eq!(row.len(), self.fields.len(), "row arity");
+        self.rows.push(row);
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("experiment", Json::str(&self.experiment)),
+            (
+                "fields",
+                Json::arr(self.fields.iter().map(|f| Json::str(f))),
+            ),
+            (
+                "rows",
+                Json::arr(self.rows.iter().map(|r| Json::Arr(r.clone()))),
+            ),
+        ])
+    }
+
+    /// Write `results/<experiment>.json` (creating the directory).
+    pub fn save(&self, dir: &str) -> std::io::Result<PathBuf> {
+        let dir = Path::new(dir);
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.json", self.experiment.replace([' ', '/'], "_")));
+        let mut f = std::fs::File::create(&path)?;
+        f.write_all(self.to_json().pretty().as_bytes())?;
+        Ok(path)
+    }
+}
+
+/// Environment-variable override for the results directory.
+pub fn results_dir() -> String {
+    std::env::var("HETRL_RESULTS").unwrap_or_else(|_| "results".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_roundtrip() {
+        let mut r = RunRecord::new("fig3/test", &["scenario", "throughput"]);
+        r.push(vec![Json::str("single-region"), Json::num(123.4)]);
+        let j = r.to_json();
+        assert_eq!(j.get("experiment").as_str(), Some("fig3/test"));
+        assert_eq!(j.get("rows").at(0).at(1).as_f64(), Some(123.4));
+    }
+
+    #[test]
+    fn save_writes_file() {
+        let dir = std::env::temp_dir().join("hetrl_metrics_test");
+        let mut r = RunRecord::new("smoke", &["a"]);
+        r.push(vec![Json::num(1.0)]);
+        let p = r.save(dir.to_str().unwrap()).unwrap();
+        let content = std::fs::read_to_string(p).unwrap();
+        assert!(content.contains("smoke"));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

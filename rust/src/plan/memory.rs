@@ -1,0 +1,123 @@
+//! Memory model: `M_model(l)` and `M_working(l)` per tasklet, and the
+//! decoding batch size `dbs_d` derived from what fits after weights
+//! (feeds the HBM-bound decoding cost, Appendix B).
+
+use crate::workflow::{JobConfig, RlTask, TaskKind};
+
+/// Memory requirement of one tasklet (stage `j` of a task).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TaskletMemory {
+    /// Persistent bytes: weights (+ optimizer state for training).
+    pub model: f64,
+    /// Peak transient bytes: activations / KV cache.
+    pub working: f64,
+}
+
+/// Memory for one tasklet of `task`, holding `layers_j` layers under TP
+/// degree `tp`, processing a local batch of `local_batch` sequences in
+/// micro-batches of `mbs`.
+pub fn tasklet_memory(
+    task: &RlTask,
+    job: &JobConfig,
+    layers_j: usize,
+    tp: usize,
+    local_batch: usize,
+) -> TaskletMemory {
+    let m = &task.model;
+    let seq = job.seq_total();
+    match task.kind() {
+        TaskKind::Training => TaskletMemory {
+            model: m.train_state_bytes(layers_j, tp),
+            working: m.activation_bytes(job.mbs, seq, layers_j, tp),
+        },
+        TaskKind::Inference => TaskletMemory {
+            model: m.weight_bytes(layers_j, tp),
+            // Forward-only scoring keeps ~4 live activation tensors.
+            working: 4.0 * crate::util::units::B_BF16
+                * job.mbs as f64
+                * seq as f64
+                * m.h1 as f64
+                / tp as f64,
+        },
+        TaskKind::Generation => {
+            let weights = m.weight_bytes(layers_j, tp);
+            // KV cache for the decode batch; `dbs` is derived elsewhere,
+            // here we budget for at least one sequence so feasibility is
+            // conservative but not impossible.
+            let one_seq_kv = m.kv_cache_bytes(1, seq, layers_j, tp);
+            TaskletMemory { model: weights, working: one_seq_kv.min(local_batch as f64 * one_seq_kv) }
+        }
+    }
+}
+
+/// Decoding batch size `dbs_d` on a device with `mem_bytes` capacity:
+/// how many sequences' KV cache fit beside the weights, clamped to
+/// `[1, local_batch]` and scaled by the job's `decode_batch_frac`.
+pub fn decode_batch_size(
+    task: &RlTask,
+    job: &JobConfig,
+    layers_j: usize,
+    tp: usize,
+    local_batch: usize,
+    mem_bytes: f64,
+) -> usize {
+    debug_assert_eq!(task.kind(), TaskKind::Generation);
+    let m = &task.model;
+    let weights = m.weight_bytes(layers_j, tp);
+    let one_seq_kv = m.kv_cache_bytes(1, job.seq_total(), layers_j, tp);
+    let free = (mem_bytes * 0.9 - weights).max(0.0);
+    let fit = (free / one_seq_kv).floor() as usize;
+    ((fit as f64 * job.decode_batch_frac) as usize).clamp(1, local_batch.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::GIB;
+    use crate::workflow::{ModelSpec, RlTaskId};
+
+    fn task(id: RlTaskId) -> RlTask {
+        RlTask { id, model: ModelSpec::qwen_4b() }
+    }
+
+    #[test]
+    fn training_needs_most_model_memory() {
+        let job = JobConfig::default();
+        let t_train = tasklet_memory(&task(RlTaskId::ActorTrain), &job, 36, 1, 96);
+        let t_inf = tasklet_memory(&task(RlTaskId::RefInf), &job, 36, 1, 96);
+        let t_gen = tasklet_memory(&task(RlTaskId::ActorGen), &job, 36, 1, 96);
+        assert!(t_train.model > 8.0 * t_inf.model); // 18 vs 2 bytes/param
+        assert!((t_inf.model - t_gen.model).abs() < 1e-6);
+    }
+
+    #[test]
+    fn tp_divides_memory() {
+        let job = JobConfig::default();
+        let t1 = tasklet_memory(&task(RlTaskId::ActorTrain), &job, 36, 1, 96);
+        let t4 = tasklet_memory(&task(RlTaskId::ActorTrain), &job, 36, 4, 96);
+        assert!((t1.model / t4.model - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decode_batch_respects_memory() {
+        let job = JobConfig::default();
+        let gen = task(RlTaskId::ActorGen);
+        // A100-40G, full 36-layer model TP1: a handful of 2k-token KV
+        // caches fit.
+        let dbs_small = decode_batch_size(&gen, &job, 36, 1, 384, 40.0 * GIB);
+        let dbs_big = decode_batch_size(&gen, &job, 36, 1, 384, 80.0 * GIB);
+        assert!(dbs_small >= 1);
+        assert!(dbs_big > dbs_small);
+        // Splitting layers across 4 pipeline stages frees memory.
+        let dbs_pp = decode_batch_size(&gen, &job, 9, 1, 384, 40.0 * GIB);
+        assert!(dbs_pp > dbs_small);
+    }
+
+    #[test]
+    fn decode_batch_clamped_to_local_batch() {
+        let job = JobConfig::tiny();
+        let gen = task(RlTaskId::ActorGen);
+        let dbs = decode_batch_size(&gen, &job, 4, 1, 4, 1000.0 * GIB);
+        assert_eq!(dbs, 4);
+    }
+}

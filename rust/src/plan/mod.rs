@@ -1,0 +1,10 @@
+//! The plan layer: partitioning strategy ρ (task grouping + intra-model
+//! parallelization → tasklet graph `G_L`) and assignment strategy σ
+//! (tasklet → device), with the paper's feasibility constraints C1–C3.
+
+pub mod parallel;
+pub mod memory;
+pub mod plan;
+
+pub use parallel::ParallelStrategy;
+pub use plan::{ExecutionPlan, PlanError, TaskPlan};

@@ -1,0 +1,148 @@
+//! Intra-model parallelization strategies (Level 4): DP × PP × TP degree
+//! triples `(i, j, k)` with `i·j·k ≤ n_t` (paper §3.2 search-space
+//! analysis), plus enumeration helpers.
+
+/// A parallelization strategy for one task.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ParallelStrategy {
+    pub dp: usize,
+    pub pp: usize,
+    pub tp: usize,
+}
+
+impl ParallelStrategy {
+    pub fn new(dp: usize, pp: usize, tp: usize) -> Self {
+        assert!(dp >= 1 && pp >= 1 && tp >= 1);
+        ParallelStrategy { dp, pp, tp }
+    }
+
+    /// Number of tasklets (= devices used) under this strategy.
+    pub fn degree(&self) -> usize {
+        self.dp * self.pp * self.tp
+    }
+
+    /// Flattened tasklet index for `(i, j, k)` = (dp, pp, tp) coordinates.
+    #[inline]
+    pub fn tasklet_index(&self, i: usize, j: usize, k: usize) -> usize {
+        debug_assert!(i < self.dp && j < self.pp && k < self.tp);
+        (i * self.pp + j) * self.tp + k
+    }
+
+    /// Inverse of [`Self::tasklet_index`].
+    #[inline]
+    pub fn tasklet_coords(&self, idx: usize) -> (usize, usize, usize) {
+        let k = idx % self.tp;
+        let j = (idx / self.tp) % self.pp;
+        let i = idx / (self.tp * self.pp);
+        (i, j, k)
+    }
+
+    pub fn label(&self) -> String {
+        format!("dp{}·pp{}·tp{}", self.dp, self.pp, self.tp)
+    }
+
+    /// Enumerate feasible strategies for a group of `n` GPUs and a model
+    /// of `nl` layers:
+    /// * `tp` a power of two ≤ 8 (all-reduce rings degrade fast beyond a
+    ///   machine; matches Megatron practice),
+    /// * `pp ≤ nl` and `pp ≤ 16`,
+    /// * `dp·pp·tp ≤ n`, and at least `utilization · n` GPUs used (the
+    ///   scheduler passes 0.5 by default so mostly-idle plans are pruned
+    ///   but deliberately-undersized ones remain reachable).
+    pub fn enumerate(n: usize, nl: usize, utilization: f64) -> Vec<ParallelStrategy> {
+        let mut out = Vec::new();
+        let min_used = ((n as f64) * utilization).ceil() as usize;
+        for tp in [1usize, 2, 4, 8] {
+            if tp > n {
+                break;
+            }
+            let mut pp = 1;
+            while pp <= nl.min(16) && tp * pp <= n {
+                for dp in 1..=(n / (tp * pp)) {
+                    let used = dp * pp * tp;
+                    if used >= min_used.max(1) {
+                        out.push(ParallelStrategy::new(dp, pp, tp));
+                    }
+                }
+                pp *= 2;
+            }
+        }
+        out.sort_by_key(|s| (std::cmp::Reverse(s.degree()), s.tp, s.pp));
+        out
+    }
+}
+
+/// Split `nl` layers into `pp` pipeline stages as evenly as possible
+/// (earlier stages take the remainder). The layer-level load balancer
+/// replaces this with a cost-model-driven split.
+pub fn uniform_layer_split(nl: usize, pp: usize) -> Vec<usize> {
+    assert!(pp >= 1 && nl >= pp, "need at least one layer per stage");
+    let base = nl / pp;
+    let extra = nl % pp;
+    (0..pp).map(|j| base + usize::from(j < extra)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check, Gen};
+
+    #[test]
+    fn degree_and_indexing_roundtrip() {
+        let s = ParallelStrategy::new(3, 4, 2);
+        assert_eq!(s.degree(), 24);
+        for idx in 0..s.degree() {
+            let (i, j, k) = s.tasklet_coords(idx);
+            assert_eq!(s.tasklet_index(i, j, k), idx);
+        }
+    }
+
+    #[test]
+    fn enumerate_respects_bounds() {
+        let strategies = ParallelStrategy::enumerate(16, 36, 0.5);
+        assert!(!strategies.is_empty());
+        for s in &strategies {
+            assert!(s.degree() <= 16);
+            assert!(s.degree() >= 8); // 0.5 utilization floor
+            assert!([1, 2, 4, 8].contains(&s.tp));
+            assert!(s.pp <= 16);
+        }
+        // Full-utilization strategies come first.
+        assert_eq!(strategies[0].degree(), 16);
+    }
+
+    #[test]
+    fn enumerate_small_groups() {
+        let s1 = ParallelStrategy::enumerate(1, 36, 0.5);
+        assert_eq!(s1, vec![ParallelStrategy::new(1, 1, 1)]);
+        let s3 = ParallelStrategy::enumerate(3, 36, 0.9);
+        // 3 GPUs at 90%: dp3, or dp1·pp?·tp? combos of degree 3
+        assert!(s3.iter().all(|s| s.degree() == 3));
+    }
+
+    #[test]
+    fn uniform_split_sums() {
+        assert_eq!(uniform_layer_split(36, 4), vec![9, 9, 9, 9]);
+        assert_eq!(uniform_layer_split(10, 4), vec![3, 3, 2, 2]);
+        assert_eq!(uniform_layer_split(5, 1), vec![5]);
+    }
+
+    #[test]
+    fn prop_uniform_split_invariants() {
+        check(
+            "uniform layer split sums to nl, stages within 1 of each other",
+            300,
+            Gen::pair(Gen::usize_range(1, 96), Gen::usize_range(1, 16)),
+            |&(nl, pp)| {
+                if pp > nl {
+                    return true; // precondition
+                }
+                let split = uniform_layer_split(nl, pp);
+                let sum: usize = split.iter().sum();
+                let min = *split.iter().min().unwrap();
+                let max = *split.iter().max().unwrap();
+                split.len() == pp && sum == nl && max - min <= 1 && min >= 1
+            },
+        );
+    }
+}

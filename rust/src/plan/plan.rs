@@ -1,0 +1,381 @@
+//! Execution plans: the joint `(ρ, σ)` object the schedulers search over
+//! and the simulator/engine execute, with validation of the paper's
+//! constraints:
+//!
+//! * **C1** — each task's tasklet count ≤ number of devices;
+//! * **C2** — every tasklet is assigned a device (σ total);
+//! * **C3** — per device: `max_l M_working(l) + Σ_l M_model(l) ≤ M_gpu(d)`.
+
+use super::memory::tasklet_memory;
+use super::parallel::{uniform_layer_split, ParallelStrategy};
+use crate::topology::DeviceTopology;
+use crate::workflow::{JobConfig, RlWorkflow};
+
+/// Plan for one task: strategy + layer split + σ restricted to the task.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskPlan {
+    pub strategy: ParallelStrategy,
+    /// Layers per pipeline stage (len == pp, sums to the model's nl).
+    pub layer_split: Vec<usize>,
+    /// Device id per tasklet, indexed by
+    /// [`ParallelStrategy::tasklet_index`]. Injective within a task.
+    pub assignment: Vec<usize>,
+    /// Fraction of the task's micro-batches per DP replica (len == dp,
+    /// sums to 1). Uniform unless the data-level load balancer ran.
+    pub dp_shares: Vec<f64>,
+}
+
+impl TaskPlan {
+    /// Build with uniform layer split and uniform DP shares.
+    pub fn uniform(strategy: ParallelStrategy, nl: usize, assignment: Vec<usize>) -> TaskPlan {
+        assert_eq!(assignment.len(), strategy.degree());
+        TaskPlan {
+            layer_split: uniform_layer_split(nl, strategy.pp),
+            dp_shares: vec![1.0 / strategy.dp as f64; strategy.dp],
+            strategy,
+            assignment,
+        }
+    }
+
+    /// Devices of the TP subgraph `G_D^{t}_{i,j}` (replica i, stage j).
+    pub fn tp_group(&self, i: usize, j: usize) -> Vec<usize> {
+        (0..self.strategy.tp)
+            .map(|k| self.assignment[self.strategy.tasklet_index(i, j, k)])
+            .collect()
+    }
+
+    /// Devices of the DP subgraph `G_D^{t}_{j,k}` (stage j, shard k).
+    pub fn dp_group(&self, j: usize, k: usize) -> Vec<usize> {
+        (0..self.strategy.dp)
+            .map(|i| self.assignment[self.strategy.tasklet_index(i, j, k)])
+            .collect()
+    }
+
+    /// Devices of replica i (all stages and shards): `V_D^{t}_i`.
+    pub fn replica_devices(&self, i: usize) -> Vec<usize> {
+        (0..self.strategy.pp)
+            .flat_map(|j| self.tp_group(i, j))
+            .collect()
+    }
+
+    /// All devices the task touches.
+    pub fn devices(&self) -> Vec<usize> {
+        let mut v = self.assignment.clone();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Micro-batch count for replica `i` given the task's total `nm`.
+    pub fn replica_microbatches(&self, nm_total: usize, i: usize) -> usize {
+        ((nm_total as f64) * self.dp_shares[i]).round().max(1.0) as usize
+    }
+}
+
+/// Complete execution plan for a workflow.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecutionPlan {
+    /// Level 1: partition of task indices into colocated groups.
+    pub task_groups: Vec<Vec<usize>>,
+    /// Levels 2–3: device ids per task group (disjoint across groups).
+    pub gpu_groups: Vec<Vec<usize>>,
+    /// Levels 4–5: per-task plan, indexed by workflow task index.
+    pub task_plans: Vec<TaskPlan>,
+}
+
+/// Plan validation failure.
+#[derive(Debug, Clone, thiserror::Error, PartialEq)]
+pub enum PlanError {
+    #[error("task groups are not a partition of the workflow's tasks")]
+    BadTaskGrouping,
+    #[error("gpu groups overlap or reference unknown devices")]
+    BadGpuGrouping,
+    #[error("task {task}: tasklet count {tasklets} exceeds devices {devices} (C1)")]
+    TooManyTasklets { task: usize, tasklets: usize, devices: usize },
+    #[error("task {task}: assignment uses device {device} outside its gpu group")]
+    AssignmentOutsideGroup { task: usize, device: usize },
+    #[error("task {task}: device {device} assigned more than one tasklet of the task")]
+    DuplicateDevice { task: usize, device: usize },
+    #[error("task {task}: layer split invalid")]
+    BadLayerSplit { task: usize },
+    #[error("task {task}: dp shares invalid")]
+    BadDpShares { task: usize },
+    #[error("device {device}: memory over capacity ({need_gib:.1} GiB > {cap_gib:.1} GiB) (C3)")]
+    OutOfMemory { device: usize, need_gib: f64, cap_gib: f64 },
+}
+
+impl ExecutionPlan {
+    /// Which task group a task belongs to.
+    pub fn group_of_task(&self, task: usize) -> usize {
+        self.task_groups
+            .iter()
+            .position(|g| g.contains(&task))
+            .expect("task not in any group")
+    }
+
+    /// Validate C1–C3 plus structural well-formedness.
+    pub fn validate(
+        &self,
+        wf: &RlWorkflow,
+        topo: &DeviceTopology,
+        job: &JobConfig,
+    ) -> Result<(), PlanError> {
+        let t_count = wf.n_tasks();
+        // ρ: task groups partition tasks.
+        let mut seen = vec![false; t_count];
+        for g in &self.task_groups {
+            for &t in g {
+                if t >= t_count || seen[t] {
+                    return Err(PlanError::BadTaskGrouping);
+                }
+                seen[t] = true;
+            }
+        }
+        if !seen.iter().all(|&s| s) || self.task_groups.len() != self.gpu_groups.len() {
+            return Err(PlanError::BadTaskGrouping);
+        }
+        // GPU groups: disjoint, valid ids.
+        let mut dev_seen = vec![false; topo.n()];
+        for g in &self.gpu_groups {
+            for &d in g {
+                if d >= topo.n() || dev_seen[d] {
+                    return Err(PlanError::BadGpuGrouping);
+                }
+                dev_seen[d] = true;
+            }
+        }
+        if self.task_plans.len() != t_count {
+            return Err(PlanError::BadTaskGrouping);
+        }
+        // Per-task checks.
+        for (t, tp) in self.task_plans.iter().enumerate() {
+            let group = &self.gpu_groups[self.group_of_task(t)];
+            let s = &tp.strategy;
+            if s.degree() > topo.n() {
+                return Err(PlanError::TooManyTasklets {
+                    task: t,
+                    tasklets: s.degree(),
+                    devices: topo.n(),
+                });
+            }
+            if tp.assignment.len() != s.degree() {
+                return Err(PlanError::TooManyTasklets {
+                    task: t,
+                    tasklets: tp.assignment.len(),
+                    devices: s.degree(),
+                });
+            }
+            let mut used = std::collections::BTreeSet::new();
+            for &d in &tp.assignment {
+                if !group.contains(&d) {
+                    return Err(PlanError::AssignmentOutsideGroup { task: t, device: d });
+                }
+                if !used.insert(d) {
+                    return Err(PlanError::DuplicateDevice { task: t, device: d });
+                }
+            }
+            let nl = wf.tasks[t].model.nl;
+            if tp.layer_split.len() != s.pp
+                || tp.layer_split.iter().sum::<usize>() != nl
+                || tp.layer_split.iter().any(|&l| l == 0)
+            {
+                return Err(PlanError::BadLayerSplit { task: t });
+            }
+            if tp.dp_shares.len() != s.dp
+                || (tp.dp_shares.iter().sum::<f64>() - 1.0).abs() > 1e-6
+                || tp.dp_shares.iter().any(|&x| x <= 0.0)
+            {
+                return Err(PlanError::BadDpShares { task: t });
+            }
+        }
+        // C3: memory per device.
+        self.check_memory(wf, topo, job)
+    }
+
+    /// C3 check: `max_l M_working + Σ_l M_model ≤ M_gpu` per device.
+    pub fn check_memory(
+        &self,
+        wf: &RlWorkflow,
+        topo: &DeviceTopology,
+        job: &JobConfig,
+    ) -> Result<(), PlanError> {
+        let mut model_sum = vec![0.0f64; topo.n()];
+        let mut working_max = vec![0.0f64; topo.n()];
+        for (t, tp) in self.task_plans.iter().enumerate() {
+            let task = &wf.tasks[t];
+            let s = &tp.strategy;
+            let local_batch = (job.total_samples() as f64 / s.dp as f64).ceil() as usize;
+            for idx in 0..s.degree() {
+                let (_, j, _) = s.tasklet_coords(idx);
+                let mem = tasklet_memory(task, job, tp.layer_split[j], s.tp, local_batch);
+                let d = tp.assignment[idx];
+                model_sum[d] += mem.model;
+                working_max[d] = working_max[d].max(mem.working);
+            }
+        }
+        for d in 0..topo.n() {
+            let need = model_sum[d] + working_max[d];
+            let cap = topo.devices[d].spec().mem_bytes;
+            if need > cap {
+                return Err(PlanError::OutOfMemory {
+                    device: d,
+                    need_gib: need / crate::util::units::GIB,
+                    cap_gib: cap / crate::util::units::GIB,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Human-readable plan dump.
+    pub fn describe(&self, wf: &RlWorkflow, topo: &DeviceTopology) -> String {
+        let mut s = String::new();
+        for (gi, (tg, gg)) in self.task_groups.iter().zip(&self.gpu_groups).enumerate() {
+            let names: Vec<&str> = tg.iter().map(|&t| wf.tasks[t].id.name()).collect();
+            s.push_str(&format!(
+                "group {gi}: tasks [{}] on {} GPUs\n",
+                names.join(", "),
+                gg.len()
+            ));
+            for &t in tg {
+                let tp = &self.task_plans[t];
+                let devs = tp.devices();
+                let census: Vec<String> = {
+                    let sub = devs.iter().map(|&d| topo.devices[d].gpu).collect::<Vec<_>>();
+                    let mut counts: Vec<(String, usize)> = Vec::new();
+                    for g in sub {
+                        let name = g.spec().name.to_string();
+                        match counts.iter_mut().find(|(n, _)| *n == name) {
+                            Some((_, c)) => *c += 1,
+                            None => counts.push((name, 1)),
+                        }
+                    }
+                    counts.into_iter().map(|(n, c)| format!("{c}×{n}")).collect()
+                };
+                s.push_str(&format!(
+                    "  {}: {} layers {:?} on [{}]\n",
+                    wf.tasks[t].id.name(),
+                    tp.strategy.label(),
+                    tp.layer_split,
+                    census.join(", ")
+                ));
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{build_testbed, Scenario, TestbedSpec};
+    use crate::workflow::{Algo, Mode, ModelSpec};
+
+    fn setup() -> (RlWorkflow, DeviceTopology, JobConfig) {
+        let wf = RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_4b());
+        let topo = build_testbed(Scenario::SingleRegion, &TestbedSpec::default());
+        (wf, topo, JobConfig::default())
+    }
+
+    /// A simple valid plan: all 4 GRPO tasks in one group over all GPUs,
+    /// each task on a disjoint 16-GPU slice.
+    fn simple_plan(wf: &RlWorkflow, topo: &DeviceTopology) -> ExecutionPlan {
+        let all: Vec<usize> = (0..topo.n()).collect();
+        let mut task_plans = Vec::new();
+        for (t, task) in wf.tasks.iter().enumerate() {
+            let s = ParallelStrategy::new(2, 2, 4); // 16 GPUs
+            let devs: Vec<usize> = (t * 16..(t + 1) * 16).collect();
+            task_plans.push(TaskPlan::uniform(s, task.model.nl, devs));
+        }
+        ExecutionPlan {
+            task_groups: vec![(0..wf.n_tasks()).collect()],
+            gpu_groups: vec![all],
+            task_plans,
+        }
+    }
+
+    #[test]
+    fn valid_plan_passes() {
+        let (wf, topo, job) = setup();
+        let plan = simple_plan(&wf, &topo);
+        plan.validate(&wf, &topo, &job).unwrap();
+    }
+
+    #[test]
+    fn duplicate_device_rejected() {
+        let (wf, topo, job) = setup();
+        let mut plan = simple_plan(&wf, &topo);
+        plan.task_plans[0].assignment[1] = plan.task_plans[0].assignment[0];
+        assert!(matches!(
+            plan.validate(&wf, &topo, &job),
+            Err(PlanError::DuplicateDevice { .. })
+        ));
+    }
+
+    #[test]
+    fn assignment_outside_group_rejected() {
+        let (wf, topo, job) = setup();
+        let mut plan = simple_plan(&wf, &topo);
+        plan.gpu_groups[0].retain(|&d| d != 0); // drop device 0 from group
+        assert!(matches!(
+            plan.validate(&wf, &topo, &job),
+            Err(PlanError::AssignmentOutsideGroup { .. }) | Err(PlanError::BadGpuGrouping)
+        ));
+    }
+
+    #[test]
+    fn bad_layer_split_rejected() {
+        let (wf, topo, job) = setup();
+        let mut plan = simple_plan(&wf, &topo);
+        plan.task_plans[0].layer_split[0] += 1; // no longer sums to nl
+        assert!(matches!(
+            plan.validate(&wf, &topo, &job),
+            Err(PlanError::BadLayerSplit { .. })
+        ));
+    }
+
+    #[test]
+    fn oom_detected_for_oversized_model() {
+        let (_, topo, job) = setup();
+        // 14B on a single L4 (24 GiB) cannot hold training state.
+        let wf = RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_14b());
+        let l4 = topo
+            .devices
+            .iter()
+            .find(|d| d.spec().name == "L4")
+            .unwrap()
+            .id;
+        let mut plan = simple_plan(&wf, &topo);
+        // Put actor training entirely on one L4.
+        let t = wf.task_index(crate::workflow::RlTaskId::ActorTrain).unwrap();
+        plan.task_plans[t] = TaskPlan::uniform(
+            ParallelStrategy::new(1, 1, 1),
+            wf.tasks[t].model.nl,
+            vec![l4],
+        );
+        assert!(matches!(
+            plan.validate(&wf, &topo, &job),
+            Err(PlanError::OutOfMemory { .. })
+        ));
+    }
+
+    #[test]
+    fn subgroup_accessors() {
+        let s = ParallelStrategy::new(2, 3, 2);
+        let tp = TaskPlan::uniform(s, 6, (0..12).collect());
+        assert_eq!(tp.tp_group(0, 0), vec![0, 1]);
+        assert_eq!(tp.tp_group(1, 2), vec![10, 11]);
+        assert_eq!(tp.dp_group(0, 0), vec![0, 6]);
+        assert_eq!(tp.replica_devices(0), vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn replica_microbatches_follow_shares() {
+        let s = ParallelStrategy::new(2, 1, 1);
+        let mut tp = TaskPlan::uniform(s, 4, vec![0, 1]);
+        assert_eq!(tp.replica_microbatches(100, 0), 50);
+        tp.dp_shares = vec![0.75, 0.25];
+        assert_eq!(tp.replica_microbatches(100, 0), 75);
+        assert_eq!(tp.replica_microbatches(100, 1), 25);
+    }
+}

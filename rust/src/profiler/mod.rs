@@ -1,0 +1,198 @@
+//! Profiler (paper §4.1): "collects hardware information about the
+//! computing environment, including the computation power (TFLOPs),
+//! memory capacity (GBs), and HBM bandwidth (GB/s) of available GPUs,
+//! intra-machine bandwidth (GB/s), and network delay (ms) and bandwidth
+//! (Gbps) between them."
+//!
+//! On the real testbed this runs micro-benchmarks; on the simulator
+//! substrate it probes the topology with measurement noise and fits the
+//! per-model MFU calibration the cost model consumes.
+
+use crate::topology::{DeviceTopology, GpuModel};
+use crate::util::rng::Rng;
+
+/// Measured properties of one device.
+#[derive(Debug, Clone)]
+pub struct DeviceProfile {
+    pub id: usize,
+    pub model: GpuModel,
+    /// Measured achievable dense FLOP/s.
+    pub flops: f64,
+    /// Measured HBM bandwidth (bytes/s).
+    pub hbm: f64,
+    /// Usable memory (bytes).
+    pub mem: f64,
+}
+
+/// Measured properties of one (directed) link.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkProbe {
+    pub from: usize,
+    pub to: usize,
+    /// RTT/2 (s).
+    pub latency: f64,
+    /// Achieved bandwidth (bytes/s).
+    pub bandwidth: f64,
+}
+
+/// Full profile of a computing environment.
+#[derive(Debug, Clone)]
+pub struct ProfileReport {
+    pub devices: Vec<DeviceProfile>,
+    pub links: Vec<LinkProbe>,
+}
+
+/// Profiler configuration.
+#[derive(Debug, Clone)]
+pub struct ProfilerConfig {
+    /// Relative measurement noise (σ of multiplicative error).
+    pub noise: f64,
+    /// Links probed per device (full N² probing is wasteful; HetRL
+    /// probes a deterministic sample and infers the rest from region
+    /// structure).
+    pub links_per_device: usize,
+    pub seed: u64,
+}
+
+impl Default for ProfilerConfig {
+    fn default() -> Self {
+        ProfilerConfig { noise: 0.02, links_per_device: 4, seed: 0xFACE }
+    }
+}
+
+/// Probe the environment.
+pub fn profile(topo: &DeviceTopology, cfg: &ProfilerConfig) -> ProfileReport {
+    let mut rng = Rng::new(cfg.seed);
+    let mut jitter = |x: f64| x * (1.0 + cfg.noise * rng.normal());
+    let devices = topo
+        .devices
+        .iter()
+        .map(|d| DeviceProfile {
+            id: d.id,
+            model: d.gpu,
+            flops: jitter(d.effective_flops()),
+            hbm: jitter(d.spec().hbm_bps),
+            mem: d.spec().mem_bytes * 0.95, // framework reserve
+        })
+        .collect();
+    let mut links = Vec::new();
+    let mut rng2 = Rng::new(cfg.seed ^ 0xABCD);
+    for a in 0..topo.n() {
+        for _ in 0..cfg.links_per_device {
+            let b = rng2.below(topo.n());
+            if a == b {
+                continue;
+            }
+            links.push(LinkProbe {
+                from: a,
+                to: b,
+                latency: topo.lat(a, b) * (1.0 + cfg.noise * rng2.normal()).max(0.5),
+                bandwidth: topo.bw(a, b).min(1e18) * (1.0 + cfg.noise * rng2.normal()).max(0.5),
+            });
+        }
+    }
+    ProfileReport { devices, links }
+}
+
+impl ProfileReport {
+    /// Fit per-GPU-model MFU: measured achievable FLOPs / peak.
+    pub fn calibrate_mfu(&self) -> Vec<(GpuModel, f64)> {
+        let mut acc: Vec<(GpuModel, f64, usize)> = Vec::new();
+        for d in &self.devices {
+            let mfu = d.flops / d.model.spec().fp16_flops;
+            match acc.iter_mut().find(|(m, _, _)| *m == d.model) {
+                Some((_, s, c)) => {
+                    *s += mfu;
+                    *c += 1;
+                }
+                None => acc.push((d.model, mfu, 1)),
+            }
+        }
+        acc.into_iter().map(|(m, s, c)| (m, s / c as f64)).collect()
+    }
+
+    /// Human-readable hardware summary (the CLI `profile` subcommand).
+    pub fn summary(&self, topo: &DeviceTopology) -> String {
+        use crate::util::table::Table;
+        let mut t = Table::new(
+            "Profiled hardware",
+            &["model", "count", "eff TFLOPS", "HBM GB/s", "mem GiB"],
+        );
+        for (model, mfu) in self.calibrate_mfu() {
+            let count = self.devices.iter().filter(|d| d.model == model).count();
+            let spec = model.spec();
+            t.row(vec![
+                spec.name.to_string(),
+                count.to_string(),
+                format!("{:.0}", spec.fp16_flops * mfu / 1e12),
+                format!("{:.0}", spec.hbm_bps / 1e9),
+                format!("{:.0}", spec.mem_bytes / crate::util::units::GIB),
+            ]);
+        }
+        let mut s = t.render();
+        let wan: Vec<&LinkProbe> = self
+            .links
+            .iter()
+            .filter(|l| topo.devices[l.from].region != topo.devices[l.to].region)
+            .collect();
+        if !wan.is_empty() {
+            let lat: Vec<f64> = wan.iter().map(|l| l.latency * 1e3).collect();
+            let bw: Vec<f64> = wan.iter().map(|l| l.bandwidth * 8.0 / 1e9).collect();
+            let sl = crate::util::stats::summarize(&lat);
+            let sb = crate::util::stats::summarize(&bw);
+            s.push_str(&format!(
+                "WAN links probed: {} | delay {:.1}-{:.1} ms | bw {:.1}-{:.1} Gbps\n",
+                wan.len(),
+                sl.min,
+                sl.max,
+                sb.min,
+                sb.max
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{build_testbed, Scenario, TestbedSpec};
+
+    #[test]
+    fn profile_covers_all_devices() {
+        let topo = build_testbed(Scenario::MultiCountry, &TestbedSpec::default());
+        let rep = profile(&topo, &ProfilerConfig::default());
+        assert_eq!(rep.devices.len(), 64);
+        assert!(!rep.links.is_empty());
+    }
+
+    #[test]
+    fn calibration_recovers_mfu_within_noise() {
+        let topo = build_testbed(Scenario::SingleRegion, &TestbedSpec::default());
+        let rep = profile(&topo, &ProfilerConfig { noise: 0.02, ..Default::default() });
+        for (model, mfu) in rep.calibrate_mfu() {
+            let truth = model.spec().mfu;
+            assert!(
+                (mfu / truth - 1.0).abs() < 0.05,
+                "{model:?}: {mfu} vs {truth}"
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let topo = build_testbed(Scenario::SingleRegion, &TestbedSpec::default());
+        let a = profile(&topo, &ProfilerConfig::default());
+        let b = profile(&topo, &ProfilerConfig::default());
+        assert_eq!(a.devices[0].flops, b.devices[0].flops);
+    }
+
+    #[test]
+    fn summary_renders() {
+        let topo = build_testbed(Scenario::MultiContinent, &TestbedSpec::default());
+        let rep = profile(&topo, &ProfilerConfig::default());
+        let s = rep.summary(&topo);
+        assert!(s.contains("A100"));
+        assert!(s.contains("WAN links"));
+    }
+}

@@ -1,0 +1,217 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the rust runtime (entry-point files, tensor shapes/dtypes, parameter
+//! layout, model hyperparameters).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Tensor element type used in the manifest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+    U32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            "u32" => Ok(Dtype::U32),
+            other => bail!("unknown dtype '{other}'"),
+        }
+    }
+}
+
+/// Shape + dtype of one tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .get("shape")
+            .as_arr()
+            .ok_or_else(|| anyhow!("spec missing shape"))?
+            .iter()
+            .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = Dtype::parse(
+            j.get("dtype").as_str().ok_or_else(|| anyhow!("missing dtype"))?,
+        )?;
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One AOT-lowered entry point.
+#[derive(Debug, Clone)]
+pub struct EntryPoint {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Model hyperparameters baked into the artifacts.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_layers: usize,
+    pub max_len: usize,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelInfo,
+    pub batch: usize,
+    pub n_params: usize,
+    pub param_names: Vec<String>,
+    pub param_shapes: Vec<Vec<usize>>,
+    pub entrypoints: BTreeMap<String, EntryPoint>,
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let dir = Path::new(dir).to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let usize_field = |obj: &Json, k: &str| -> Result<usize> {
+            obj.get(k).as_usize().ok_or_else(|| anyhow!("manifest missing {k}"))
+        };
+        let mj = j.get("model");
+        let model = ModelInfo {
+            vocab: usize_field(mj, "vocab")?,
+            d_model: usize_field(mj, "d_model")?,
+            n_heads: usize_field(mj, "n_heads")?,
+            d_ff: usize_field(mj, "d_ff")?,
+            n_layers: usize_field(mj, "n_layers")?,
+            max_len: usize_field(mj, "max_len")?,
+        };
+        let param_names = j
+            .get("param_names")
+            .as_arr()
+            .ok_or_else(|| anyhow!("missing param_names"))?
+            .iter()
+            .map(|x| x.as_str().unwrap_or("?").to_string())
+            .collect::<Vec<_>>();
+        let param_shapes = j
+            .get("param_shapes")
+            .as_arr()
+            .ok_or_else(|| anyhow!("missing param_shapes"))?
+            .iter()
+            .map(|s| {
+                s.as_arr()
+                    .ok_or_else(|| anyhow!("bad shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                    .collect::<Result<Vec<_>>>()
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut entrypoints = BTreeMap::new();
+        let eps = j
+            .get("entrypoints")
+            .as_obj()
+            .ok_or_else(|| anyhow!("missing entrypoints"))?;
+        for (name, ej) in eps {
+            let file = dir.join(
+                ej.get("file").as_str().ok_or_else(|| anyhow!("missing file"))?,
+            );
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                ej.get(key)
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("missing {key}"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            entrypoints.insert(
+                name.clone(),
+                EntryPoint {
+                    name: name.clone(),
+                    file,
+                    inputs: parse_specs("inputs")?,
+                    outputs: parse_specs("outputs")?,
+                },
+            );
+        }
+        Ok(Manifest {
+            dir,
+            model,
+            batch: usize_field(&j, "batch")?,
+            n_params: usize_field(&j, "n_params")?,
+            param_names,
+            param_shapes,
+            entrypoints,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntryPoint> {
+        self.entrypoints
+            .get(name)
+            .ok_or_else(|| anyhow!("entrypoint '{name}' not in manifest"))
+    }
+
+    /// Total parameter count of the model.
+    pub fn total_params(&self) -> usize {
+        self.param_shapes.iter().map(|s| s.iter().product::<usize>()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> bool {
+        std::path::Path::new("artifacts/manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load("artifacts").unwrap();
+        assert!(m.n_params > 10);
+        assert_eq!(m.param_names.len(), m.n_params);
+        assert_eq!(m.param_shapes.len(), m.n_params);
+        assert!(m.total_params() > 100_000);
+        for name in ["init", "forward", "logprobs", "grpo_train"] {
+            let e = m.entry(name).unwrap();
+            assert!(e.file.exists(), "{:?}", e.file);
+        }
+        // grpo_train threads 3 copies of the state + 6 aux inputs.
+        let gt = m.entry("grpo_train").unwrap();
+        assert_eq!(gt.inputs.len(), 3 * m.n_params + 6);
+        assert_eq!(gt.outputs.len(), 3 * m.n_params + 2);
+    }
+
+    #[test]
+    fn dtype_parsing() {
+        assert_eq!(Dtype::parse("f32").unwrap(), Dtype::F32);
+        assert_eq!(Dtype::parse("i32").unwrap(), Dtype::I32);
+        assert!(Dtype::parse("f64").is_err());
+    }
+
+    #[test]
+    fn missing_dir_is_helpful() {
+        let err = Manifest::load("/nonexistent/artifacts").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `manifest.json`) produced by `python/compile/aot.py` and executes
+//! them from the rust request path. Python never runs at execution time.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{Dtype, EntryPoint, Manifest, TensorSpec};
+pub use client::{DeviceTensors, HostTensor, Runtime};

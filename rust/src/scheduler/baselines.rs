@@ -1,0 +1,421 @@
+//! Baseline schedulers used across the paper's evaluation:
+//!
+//! * [`VerlScheduler`] — verl's (HybridFlow) scheduling: colocate the
+//!   whole workflow on all GPUs, pick parallelization by a cost model
+//!   that *assumes homogeneous devices and a uniform fast network* —
+//!   heterogeneity-blind by construction (the paper's §2.3.2 point).
+//! * [`StreamRlScheduler`] — StreamRL's disaggregated-stream design:
+//!   two groups, actor generation vs everything else, with the paper's
+//!   stated restriction that "all GPUs within the same group are
+//!   homogeneous and located in the same data center".
+//! * [`RandomScheduler`] — uniform random feasible plans (sanity floor).
+
+use super::levels::{
+    assemble, assign_devices, default_task_plans, gpu_groupings, set_partitions, TaskGrouping,
+};
+use super::{Budget, EvalCtx, ScheduleOutcome, Scheduler};
+use crate::plan::ExecutionPlan;
+use crate::topology::{Device, DeviceTopology, GpuModel};
+use crate::util::rng::Rng;
+use crate::workflow::{JobConfig, RlWorkflow};
+
+// ---------------------------------------------------------------------
+// verl
+// ---------------------------------------------------------------------
+
+/// verl-like scheduler (homogeneity-assuming).
+pub struct VerlScheduler {
+    pub seed: u64,
+}
+
+impl VerlScheduler {
+    pub fn new(seed: u64) -> Self {
+        VerlScheduler { seed }
+    }
+
+    /// Homogenized view of a topology: every device becomes the modal GPU
+    /// model; every link becomes a uniform fast datacenter link. This is
+    /// the world verl's search believes it lives in.
+    pub fn homogenized(topo: &DeviceTopology) -> DeviceTopology {
+        let census = topo.census();
+        let modal: GpuModel = census
+            .iter()
+            .max_by_key(|(_, c)| *c)
+            .map(|(m, _)| *m)
+            .unwrap_or(GpuModel::A100);
+        let n = topo.n();
+        let devices: Vec<Device> = (0..n)
+            .map(|id| Device { id, gpu: modal, machine: id / 8, zone: 0, region: 0 })
+            .collect();
+        let mut alpha = vec![vec![0.0; n]; n];
+        let mut beta = vec![vec![f64::INFINITY; n]; n];
+        for i in 0..n {
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                if devices[i].machine == devices[j].machine {
+                    alpha[i][j] = 25e-6;
+                    beta[i][j] = modal.spec().link_bps;
+                } else {
+                    alpha[i][j] = 0.2e-3;
+                    beta[i][j] = 100.0e9 / 8.0;
+                }
+            }
+        }
+        DeviceTopology { devices, alpha, beta, region_names: vec!["homogeneous".into()] }
+    }
+}
+
+impl Scheduler for VerlScheduler {
+    fn name(&self) -> &'static str {
+        "verl"
+    }
+
+    fn schedule(
+        &mut self,
+        topo: &DeviceTopology,
+        wf: &RlWorkflow,
+        job: &JobConfig,
+        budget: Budget,
+    ) -> ScheduleOutcome {
+        let mut ctx = EvalCtx::new(topo, wf, job, budget);
+        let fake = Self::homogenized(topo);
+        let fake_cm = crate::costmodel::CostModel::new(&fake, wf, job);
+        let mut rng = Rng::new(self.seed);
+
+        // verl's candidate groupings: fully colocated, or generation
+        // split from the rest (its two standard resource-pool layouts).
+        let colocated: TaskGrouping = vec![(0..wf.n_tasks()).collect()];
+        let gen_idx = wf
+            .task_index(crate::workflow::RlTaskId::ActorGen)
+            .unwrap_or(0);
+        let rest: Vec<usize> = (0..wf.n_tasks()).filter(|&t| t != gen_idx).collect();
+        let split: TaskGrouping = vec![vec![gen_idx], rest];
+
+        let mut best_fake = f64::INFINITY;
+        let mut best_plan: Option<ExecutionPlan> = None;
+        for grouping in [colocated, split] {
+            for sizes in gpu_groupings(wf, job, topo, &grouping, 8) {
+                for roll in 0..6 {
+                    if ctx.exhausted() {
+                        break;
+                    }
+                    // Device-id-order assignment: verl does not reason
+                    // about which physical GPU goes where.
+                    let mut groups: Vec<Vec<usize>> = Vec::new();
+                    let mut next = 0;
+                    for &sz in &sizes {
+                        groups.push((next..next + sz).collect());
+                        next += sz;
+                    }
+                    // Placement memory-checks against the *real* fleet
+                    // (verl users bump TP/PP until the job stops OOM-ing
+                    // on the smallest GPU) — but ranking stays blind.
+                    let Some(plans) = default_task_plans(
+                        wf,
+                        job,
+                        topo,
+                        &grouping,
+                        &groups,
+                        &mut rng,
+                        roll > 0,
+                    ) else {
+                        continue;
+                    };
+                    let plan = assemble(&grouping, groups, plans);
+                    // verl users iterate TP/PP settings until the job
+                    // stops OOM-ing on the real fleet — real-infeasible
+                    // candidates are discarded, but *ranking* still uses
+                    // the homogeneity-assuming model.
+                    if plan.validate(wf, topo, job).is_err() {
+                        ctx.evals += 1;
+                        continue;
+                    }
+                    let fake_cost = fake_cm.plan_cost(&plan).iter_time;
+                    let _real = ctx.eval(&plan);
+                    if fake_cost < best_fake {
+                        best_fake = fake_cost;
+                        best_plan = Some(plan);
+                    }
+                }
+            }
+        }
+        // verl deploys the plan *it* believes is best.
+        let mut out = ctx.outcome();
+        if let Some(p) = best_plan {
+            if p.validate(wf, topo, job).is_ok() {
+                let real = crate::costmodel::CostModel::new(topo, wf, job)
+                    .plan_cost(&p)
+                    .iter_time;
+                out.cost = real;
+                out.plan = Some(p);
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// StreamRL
+// ---------------------------------------------------------------------
+
+/// StreamRL-like scheduler: generation | rest disaggregation over
+/// homogeneous same-region buckets.
+pub struct StreamRlScheduler {
+    pub seed: u64,
+}
+
+impl StreamRlScheduler {
+    pub fn new(seed: u64) -> Self {
+        StreamRlScheduler { seed }
+    }
+
+    /// Buckets of device ids by (GPU model, region).
+    fn buckets(topo: &DeviceTopology) -> Vec<Vec<usize>> {
+        let mut keys: Vec<(GpuModel, usize)> = Vec::new();
+        let mut out: Vec<Vec<usize>> = Vec::new();
+        for d in &topo.devices {
+            let key = (d.gpu, d.region);
+            match keys.iter().position(|&k| k == key) {
+                Some(i) => out[i].push(d.id),
+                None => {
+                    keys.push(key);
+                    out.push(vec![d.id]);
+                }
+            }
+        }
+        out
+    }
+
+    /// Model-homogeneous buckets spanning regions: the training-side
+    /// group needs enough aggregate memory for the whole non-generation
+    /// pipeline, which a single 8-GPU (model, region) bucket cannot hold
+    /// for the larger models. StreamRL's constraint is homogeneity
+    /// within a group; the cross-DC link sits between the two groups.
+    fn model_buckets(topo: &DeviceTopology) -> Vec<Vec<usize>> {
+        let mut keys: Vec<GpuModel> = Vec::new();
+        let mut out: Vec<Vec<usize>> = Vec::new();
+        for d in &topo.devices {
+            match keys.iter().position(|&k| k == d.gpu) {
+                Some(i) => out[i].push(d.id),
+                None => {
+                    keys.push(d.gpu);
+                    out.push(vec![d.id]);
+                }
+            }
+        }
+        out
+    }
+}
+
+impl Scheduler for StreamRlScheduler {
+    fn name(&self) -> &'static str {
+        "StreamRL"
+    }
+
+    fn schedule(
+        &mut self,
+        topo: &DeviceTopology,
+        wf: &RlWorkflow,
+        job: &JobConfig,
+        budget: Budget,
+    ) -> ScheduleOutcome {
+        let mut ctx = EvalCtx::new(topo, wf, job, budget);
+        let mut rng = Rng::new(self.seed);
+        let gen_buckets = Self::buckets(topo);
+        let mut rest_buckets = Self::buckets(topo);
+        rest_buckets.extend(Self::model_buckets(topo));
+        let gen_idx = wf
+            .task_index(crate::workflow::RlTaskId::ActorGen)
+            .unwrap_or(0);
+        let rest: Vec<usize> = (0..wf.n_tasks()).filter(|&t| t != gen_idx).collect();
+        let grouping: TaskGrouping = vec![vec![gen_idx], rest];
+
+        for gen_bucket in gen_buckets.iter() {
+            for rest_bucket in rest_buckets.iter() {
+                let disjoint = gen_bucket.iter().all(|d| !rest_bucket.contains(d));
+                if !disjoint || ctx.exhausted() {
+                    continue;
+                }
+                let groups = vec![gen_bucket.clone(), rest_bucket.clone()];
+                let Some(plans) =
+                    default_task_plans(wf, job, topo, &grouping, &groups, &mut rng, false)
+                else {
+                    continue;
+                };
+                let plan = assemble(&grouping, groups, plans);
+                ctx.eval(&plan);
+                // A couple of strategy re-rolls per bucket pair.
+                for _ in 0..3 {
+                    if ctx.exhausted() {
+                        break;
+                    }
+                    let groups = vec![gen_bucket.clone(), rest_bucket.clone()];
+                    if let Some(plans) =
+                        default_task_plans(wf, job, topo, &grouping, &groups, &mut rng, true)
+                    {
+                        let plan = assemble(&grouping, groups, plans);
+                        ctx.eval(&plan);
+                    }
+                }
+            }
+        }
+        ctx.outcome()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Random search
+// ---------------------------------------------------------------------
+
+/// Uniform random feasible plans.
+pub struct RandomScheduler {
+    pub seed: u64,
+}
+
+impl RandomScheduler {
+    pub fn new(seed: u64) -> Self {
+        RandomScheduler { seed }
+    }
+}
+
+impl Scheduler for RandomScheduler {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn schedule(
+        &mut self,
+        topo: &DeviceTopology,
+        wf: &RlWorkflow,
+        job: &JobConfig,
+        budget: Budget,
+    ) -> ScheduleOutcome {
+        let mut ctx = EvalCtx::new(topo, wf, job, budget);
+        let mut rng = Rng::new(self.seed);
+        let groupings = set_partitions(wf.n_tasks());
+        while !ctx.exhausted() {
+            let grouping = groupings[rng.below(groupings.len())].clone();
+            let ggs = gpu_groupings(wf, job, topo, &grouping, 16);
+            if ggs.is_empty() {
+                ctx.evals += 1;
+                continue;
+            }
+            let sizes = ggs[rng.below(ggs.len())].clone();
+            let groups = assign_devices(wf, &grouping, &sizes, topo, &mut rng);
+            if let Some(plans) =
+                default_task_plans(wf, job, topo, &grouping, &groups, &mut rng, true)
+            {
+                let plan = assemble(&grouping, groups, plans);
+                ctx.eval(&plan);
+            } else {
+                ctx.evals += 1;
+            }
+        }
+        ctx.outcome()
+    }
+}
+
+/// Build a "use every GPU for every task, id-ordered" reference plan —
+/// handy for tests and the quickstart.
+pub fn naive_colocated_plan(
+    topo: &DeviceTopology,
+    wf: &RlWorkflow,
+    job: &JobConfig,
+) -> Option<ExecutionPlan> {
+    let grouping: TaskGrouping = vec![(0..wf.n_tasks()).collect()];
+    let groups = vec![(0..topo.n()).collect::<Vec<usize>>()];
+    let mut rng = Rng::new(0);
+    let plans = default_task_plans(wf, job, topo, &grouping, &groups, &mut rng, false)?;
+    Some(assemble(&grouping, groups, plans))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{build_testbed, Scenario, TestbedSpec};
+    use crate::workflow::{Algo, Mode, ModelSpec};
+
+    fn setup(s: Scenario) -> (RlWorkflow, DeviceTopology, JobConfig) {
+        (
+            RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_4b()),
+            build_testbed(s, &TestbedSpec::default()),
+            JobConfig::default(),
+        )
+    }
+
+    #[test]
+    fn verl_produces_valid_plan() {
+        let (wf, topo, job) = setup(Scenario::SingleRegion);
+        let out = VerlScheduler::new(1).schedule(&topo, &wf, &job, Budget::evals(50));
+        let plan = out.plan.expect("verl plan");
+        plan.validate(&wf, &topo, &job).unwrap();
+        assert!(out.cost.is_finite());
+    }
+
+    #[test]
+    fn homogenized_topo_is_flat() {
+        let (_, topo, _) = setup(Scenario::MultiContinent);
+        let h = VerlScheduler::homogenized(&topo);
+        assert_eq!(h.n(), topo.n());
+        let models: std::collections::BTreeSet<_> =
+            h.devices.iter().map(|d| d.gpu).collect();
+        assert_eq!(models.len(), 1);
+        // no WAN latencies
+        for i in 0..h.n() {
+            for j in 0..h.n() {
+                assert!(h.lat(i, j) < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn streamrl_produces_valid_plan() {
+        let (wf, topo, job) = setup(Scenario::MultiCountry);
+        let out = StreamRlScheduler::new(2).schedule(&topo, &wf, &job, Budget::evals(200));
+        let plan = out.plan.expect("streamrl plan");
+        plan.validate(&wf, &topo, &job).unwrap();
+        // Group 0 (generation) must be homogeneous and single-region.
+        let gen_devices = &plan.gpu_groups[0];
+        let models: std::collections::BTreeSet<_> =
+            gen_devices.iter().map(|&d| topo.devices[d].gpu).collect();
+        let regions: std::collections::BTreeSet<_> =
+            gen_devices.iter().map(|&d| topo.devices[d].region).collect();
+        assert_eq!(models.len(), 1);
+        assert_eq!(regions.len(), 1);
+    }
+
+    #[test]
+    fn random_finds_something() {
+        let (wf, topo, job) = setup(Scenario::SingleRegion);
+        let out = RandomScheduler::new(3).schedule(&topo, &wf, &job, Budget::evals(40));
+        assert!(out.cost.is_finite());
+    }
+
+    #[test]
+    fn naive_plan_valid() {
+        let (wf, topo, job) = setup(Scenario::SingleRegion);
+        let plan = naive_colocated_plan(&topo, &wf, &job).unwrap();
+        plan.validate(&wf, &topo, &job).unwrap();
+    }
+
+    #[test]
+    fn verl_blind_to_heterogeneity() {
+        // verl picks (nearly) the same plan on Single-Region and
+        // Multi-Continent — its model cannot tell them apart. The real
+        // costs must then differ wildly.
+        let job = JobConfig::default();
+        let wf = RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_8b());
+        let t1 = build_testbed(Scenario::SingleRegion, &TestbedSpec::default());
+        let t4 = build_testbed(Scenario::MultiContinent, &TestbedSpec::default());
+        let p1 = VerlScheduler::new(5).schedule(&t1, &wf, &job, Budget::evals(50));
+        let p4 = VerlScheduler::new(5).schedule(&t4, &wf, &job, Budget::evals(50));
+        assert_eq!(
+            p1.plan.as_ref().map(|p| p.task_groups.clone()),
+            p4.plan.as_ref().map(|p| p.task_groups.clone())
+        );
+        // WAN can never make verl's (identically-chosen) plan faster.
+        assert!(p4.cost >= p1.cost * 0.999, "p4 {} p1 {}", p4.cost, p1.cost);
+    }
+}

@@ -1,0 +1,487 @@
+//! Evolutionary low-level plan generation (paper §3.4).
+//!
+//! Given a Level-1 task grouping and Level-2 GPU group sizes, the EA
+//! searches Levels 3–5: concrete device assignment per group, per-task
+//! parallelization, and tasklet ordering. Two paper-specific operators:
+//!
+//! * **TFLOPS-upgrade mutation** — "replaces a GPU in a training-task
+//!   group with a higher-TFLOPS one selected from GPUs not assigned to
+//!   any training-task group";
+//! * **Baldwinian swap local search** — greedy cross-group swaps
+//!   maximizing machine/zone/region locality; the improved *phenotype*
+//!   is evaluated but "not mapped back to the genotype", preserving
+//!   population diversity (Hinton & Nowlan 1987; Baldwin 1896).
+
+use super::levels::{
+    assemble, assign_devices, default_task_plans, strategy_feasible, TaskGrouping,
+};
+use super::{Budget, EvalCtx, ScheduleOutcome, Scheduler};
+use crate::plan::parallel::uniform_layer_split;
+use crate::plan::{ExecutionPlan, ParallelStrategy};
+use crate::topology::DeviceTopology;
+use crate::util::rng::Rng;
+use crate::workflow::{JobConfig, RlWorkflow, TaskKind};
+
+/// EA hyperparameters.
+#[derive(Debug, Clone)]
+pub struct EaConfig {
+    pub population: usize,
+    /// Probability of the TFLOPS-upgrade mutation (vs generic ones).
+    pub upgrade_prob: f64,
+    /// Swap pairs sampled per local-search pass.
+    pub swap_samples: usize,
+    pub swap_passes: usize,
+    /// Disable the paper-specific operators (the DEAP-like baseline).
+    pub vanilla: bool,
+}
+
+impl Default for EaConfig {
+    fn default() -> Self {
+        EaConfig {
+            population: 12,
+            upgrade_prob: 0.35,
+            swap_samples: 160,
+            swap_passes: 2,
+            vanilla: false,
+        }
+    }
+}
+
+/// EA population for one (task grouping, GPU grouping) arm.
+pub struct EaArm {
+    pub grouping: TaskGrouping,
+    pub sizes: Vec<usize>,
+    cfg: EaConfig,
+    population: Vec<(ExecutionPlan, f64)>,
+    rng: Rng,
+    /// Best cost this arm has produced (for SHA's BestHalf).
+    pub best: f64,
+}
+
+impl EaArm {
+    pub fn new(grouping: TaskGrouping, sizes: Vec<usize>, cfg: EaConfig, seed: u64) -> Self {
+        EaArm {
+            grouping,
+            sizes,
+            cfg,
+            population: Vec::new(),
+            rng: Rng::new(seed),
+            best: f64::INFINITY,
+        }
+    }
+
+    /// Run `budget_evals` evaluations of this arm (or until ctx budget).
+    pub fn run(&mut self, ctx: &mut EvalCtx<'_>, budget_evals: usize) {
+        let mut spent = 0;
+        while spent < budget_evals && !ctx.exhausted() {
+            if self.population.len() < self.cfg.population {
+                if let Some(plan) = self.random_plan(ctx) {
+                    spent += self.offer(ctx, plan);
+                } else {
+                    // This arm cannot produce feasible plans.
+                    self.best = self.best.min(f64::INFINITY);
+                    spent += 1;
+                    ctx.evals += 1;
+                }
+                continue;
+            }
+            // offspring by mutation
+            let parent = self.rng.below(self.population.len());
+            let mut child = self.population[parent].0.clone();
+            self.mutate(ctx, &mut child);
+            spent += self.offer(ctx, child);
+        }
+    }
+
+    /// Evaluate (with Baldwinian local search) and insert into the
+    /// population. Returns evaluations consumed.
+    fn offer(&mut self, ctx: &mut EvalCtx<'_>, genotype: ExecutionPlan) -> usize {
+        let phenotype = if self.cfg.vanilla {
+            genotype.clone()
+        } else {
+            self.local_search(ctx.topo, &genotype)
+        };
+        let cost = ctx.eval(&phenotype);
+        self.best = self.best.min(cost);
+        // Population stores the *genotype* with the phenotype's fitness.
+        if self.population.len() < self.cfg.population {
+            self.population.push((genotype, cost));
+        } else {
+            let worst = self
+                .population
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1 .1.partial_cmp(&b.1 .1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap();
+            if cost < self.population[worst].1 {
+                self.population[worst] = (genotype, cost);
+            }
+        }
+        1
+    }
+
+    /// Random Level-3/4/5 initialization for this arm.
+    fn random_plan(&mut self, ctx: &EvalCtx<'_>) -> Option<ExecutionPlan> {
+        let groups = assign_devices(ctx.wf, &self.grouping, &self.sizes, ctx.topo, &mut self.rng);
+        let plans = default_task_plans(
+            ctx.wf,
+            ctx.job,
+            ctx.topo,
+            &self.grouping,
+            &groups,
+            &mut self.rng,
+            true,
+        )?;
+        Some(assemble(&self.grouping, groups, plans))
+    }
+
+    /// Mutation operators (paper-specific + generic).
+    fn mutate(&mut self, ctx: &EvalCtx<'_>, plan: &mut ExecutionPlan) {
+        let use_upgrade =
+            !self.cfg.vanilla && self.rng.chance(self.cfg.upgrade_prob);
+        if use_upgrade && self.tflops_upgrade(ctx, plan) {
+            return;
+        }
+        match self.rng.below(3) {
+            0 => self.mutate_strategy(ctx, plan),
+            1 => self.mutate_cross_group_swap(ctx, plan),
+            _ => self.mutate_assignment(ctx, plan),
+        }
+    }
+
+    /// Paper mutation: move a higher-TFLOPS GPU from a non-training group
+    /// into a training-task group (swapping with one of its members).
+    fn tflops_upgrade(&mut self, ctx: &EvalCtx<'_>, plan: &mut ExecutionPlan) -> bool {
+        let wf = ctx.wf;
+        // Find training groups and non-training groups.
+        let is_training_group = |gi: usize| {
+            plan.task_groups[gi]
+                .iter()
+                .any(|&t| wf.tasks[t].kind() == TaskKind::Training)
+        };
+        let train_groups: Vec<usize> =
+            (0..plan.task_groups.len()).filter(|&g| is_training_group(g)).collect();
+        let other_groups: Vec<usize> =
+            (0..plan.task_groups.len()).filter(|&g| !is_training_group(g)).collect();
+        if train_groups.is_empty() || other_groups.is_empty() {
+            return false;
+        }
+        let tg = *self.rng.choice(&train_groups);
+        let og = *self.rng.choice(&other_groups);
+        if plan.gpu_groups[tg].is_empty() || plan.gpu_groups[og].is_empty() {
+            return false;
+        }
+        // Slowest device in the training group / fastest outside.
+        let slow = *plan.gpu_groups[tg]
+            .iter()
+            .min_by(|&&a, &&b| {
+                ctx.topo.devices[a]
+                    .effective_flops()
+                    .partial_cmp(&ctx.topo.devices[b].effective_flops())
+                    .unwrap()
+            })
+            .unwrap();
+        let fast = *plan.gpu_groups[og]
+            .iter()
+            .max_by(|&&a, &&b| {
+                ctx.topo.devices[a]
+                    .effective_flops()
+                    .partial_cmp(&ctx.topo.devices[b].effective_flops())
+                    .unwrap()
+            })
+            .unwrap();
+        if ctx.topo.devices[fast].effective_flops() <= ctx.topo.devices[slow].effective_flops() {
+            return false;
+        }
+        swap_devices(plan, slow, fast);
+        true
+    }
+
+    /// Re-pick the parallelization of one random task.
+    fn mutate_strategy(&mut self, ctx: &EvalCtx<'_>, plan: &mut ExecutionPlan) {
+        let t = self.rng.below(ctx.wf.n_tasks());
+        let gi = plan.group_of_task(t);
+        let devs = plan.gpu_groups[gi].clone();
+        let task = &ctx.wf.tasks[t];
+        let strategies: Vec<ParallelStrategy> =
+            ParallelStrategy::enumerate(devs.len(), task.model.nl, 0.5)
+                .into_iter()
+                .filter(|&s| strategy_feasible(task, ctx.job, ctx.topo, &devs, s))
+                .collect();
+        if strategies.is_empty() {
+            return;
+        }
+        let s = *self.rng.choice(&strategies);
+        let ordered = ctx.topo.locality_order(&devs);
+        plan.task_plans[t].strategy = s;
+        plan.task_plans[t].layer_split = uniform_layer_split(task.model.nl, s.pp);
+        plan.task_plans[t].dp_shares = vec![1.0 / s.dp as f64; s.dp];
+        plan.task_plans[t].assignment = ordered[..s.degree()].to_vec();
+    }
+
+    /// Swap one device between two GPU groups (keeping sizes fixed).
+    fn mutate_cross_group_swap(&mut self, _ctx: &EvalCtx<'_>, plan: &mut ExecutionPlan) {
+        if plan.gpu_groups.len() < 2 {
+            return;
+        }
+        let a = self.rng.below(plan.gpu_groups.len());
+        let mut b = self.rng.below(plan.gpu_groups.len());
+        if a == b {
+            b = (b + 1) % plan.gpu_groups.len();
+        }
+        if plan.gpu_groups[a].is_empty() || plan.gpu_groups[b].is_empty() {
+            return;
+        }
+        let da = *self.rng.choice(&plan.gpu_groups[a]);
+        let db = *self.rng.choice(&plan.gpu_groups[b]);
+        swap_devices(plan, da, db);
+    }
+
+    /// Permute a task's tasklet→device map: swap two used devices, or
+    /// swap a used device for an idle one in the same group.
+    fn mutate_assignment(&mut self, _ctx: &EvalCtx<'_>, plan: &mut ExecutionPlan) {
+        let t = self.rng.below(plan.task_plans.len());
+        let gi = plan.group_of_task(t);
+        let group = plan.gpu_groups[gi].clone();
+        let tp = &mut plan.task_plans[t];
+        if tp.assignment.len() >= 2 && self.rng.chance(0.5) {
+            let i = self.rng.below(tp.assignment.len());
+            let j = self.rng.below(tp.assignment.len());
+            tp.assignment.swap(i, j);
+        } else {
+            let unused: Vec<usize> = group
+                .iter()
+                .filter(|d| !tp.assignment.contains(d))
+                .cloned()
+                .collect();
+            if unused.is_empty() {
+                return;
+            }
+            let i = self.rng.below(tp.assignment.len());
+            tp.assignment[i] = *self.rng.choice(&unused);
+        }
+    }
+
+    /// Greedy cross-group swap local search on the locality score
+    /// (machine > zone > region affinity). Returns the improved
+    /// phenotype; the genotype is left untouched by the caller.
+    ///
+    /// Perf note (§Perf L3-1): swap gains are computed *incrementally*
+    /// on the group membership vectors — swapping `a∈A` with `b∈B`
+    /// changes the total locality by
+    /// `Σ_{m∈A\{a}} (aff(b,m) − aff(a,m)) + Σ_{m∈B\{b}} (aff(a,m) − aff(b,m))`
+    /// — and accepted swaps are recorded and applied to the plan once at
+    /// the end, instead of cloning the full plan per sampled swap.
+    fn local_search(&mut self, topo: &DeviceTopology, plan: &ExecutionPlan) -> ExecutionPlan {
+        if plan.gpu_groups.len() < 2 {
+            return plan.clone();
+        }
+        let mut groups: Vec<Vec<usize>> = plan.gpu_groups.clone();
+        let mut accepted: Vec<(usize, usize)> = Vec::new();
+        for _pass in 0..self.cfg.swap_passes {
+            let mut improved = false;
+            for _ in 0..self.cfg.swap_samples {
+                let gi = self.rng.below(groups.len());
+                let mut gj = self.rng.below(groups.len());
+                if gi == gj {
+                    gj = (gj + 1) % groups.len();
+                }
+                if groups[gi].is_empty() || groups[gj].is_empty() {
+                    continue;
+                }
+                let ia = self.rng.below(groups[gi].len());
+                let ib = self.rng.below(groups[gj].len());
+                let (da, db) = (groups[gi][ia], groups[gj][ib]);
+                // Incremental gain of swapping da <-> db.
+                let mut gain = 0.0f64;
+                for &m in &groups[gi] {
+                    if m != da {
+                        gain += topo.affinity(db, m) as f64 - topo.affinity(da, m) as f64;
+                    }
+                }
+                for &m in &groups[gj] {
+                    if m != db {
+                        gain += topo.affinity(da, m) as f64 - topo.affinity(db, m) as f64;
+                    }
+                }
+                if gain > 0.0 {
+                    groups[gi][ia] = db;
+                    groups[gj][ib] = da;
+                    accepted.push((da, db));
+                    improved = true;
+                }
+            }
+            if !improved {
+                break;
+            }
+        }
+        if accepted.is_empty() {
+            return plan.clone();
+        }
+        let mut best = plan.clone();
+        for (a, b) in accepted {
+            swap_devices(&mut best, a, b);
+        }
+        best
+    }
+}
+
+/// Swap group membership of devices `a` and `b` and rewrite all task
+/// assignments accordingly. Works whether or not the devices are in
+/// different groups.
+pub fn swap_devices(plan: &mut ExecutionPlan, a: usize, b: usize) {
+    if a == b {
+        return;
+    }
+    for grp in plan.gpu_groups.iter_mut() {
+        for d in grp.iter_mut() {
+            if *d == a {
+                *d = b;
+            } else if *d == b {
+                *d = a;
+            }
+        }
+        grp.sort_unstable();
+    }
+    for tp in plan.task_plans.iter_mut() {
+        for d in tp.assignment.iter_mut() {
+            if *d == a {
+                *d = b;
+            } else if *d == b {
+                *d = a;
+            }
+        }
+    }
+}
+
+/// The pure-EA baseline (DEAP-like, §6 "Pure EA"): evolves full plans —
+/// including the Level-1/2 decisions — with generic operators only, no
+/// SHA pruning and no Baldwinian local search.
+pub struct PureEaScheduler {
+    pub seed: u64,
+    pub cfg: EaConfig,
+}
+
+impl PureEaScheduler {
+    pub fn new(seed: u64) -> Self {
+        PureEaScheduler {
+            seed,
+            cfg: EaConfig { vanilla: true, population: 24, ..EaConfig::default() },
+        }
+    }
+}
+
+impl Scheduler for PureEaScheduler {
+    fn name(&self) -> &'static str {
+        "DEAP(pure-EA)"
+    }
+
+    fn schedule(
+        &mut self,
+        topo: &DeviceTopology,
+        wf: &RlWorkflow,
+        job: &JobConfig,
+        budget: Budget,
+    ) -> ScheduleOutcome {
+        let mut ctx = EvalCtx::new(topo, wf, job, budget);
+        let mut rng = Rng::new(self.seed);
+        let groupings = super::levels::set_partitions(wf.n_tasks());
+        // One arm per random grouping+sizes, all evolving in a single
+        // shared population (no hierarchy — that is the point of the
+        // baseline).
+        let mut arms: Vec<EaArm> = Vec::new();
+        for _ in 0..6 {
+            let grouping = groupings[rng.below(groupings.len())].clone();
+            let sizes_all =
+                super::levels::gpu_groupings(wf, job, topo, &grouping, 8);
+            if sizes_all.is_empty() {
+                continue;
+            }
+            let sizes = sizes_all[rng.below(sizes_all.len())].clone();
+            arms.push(EaArm::new(grouping, sizes, self.cfg.clone(), rng.next_u64()));
+        }
+        if arms.is_empty() {
+            return ctx.outcome();
+        }
+        // Round-robin without pruning.
+        let chunk = 16;
+        while !ctx.exhausted() {
+            for arm in arms.iter_mut() {
+                arm.run(&mut ctx, chunk);
+                if ctx.exhausted() {
+                    break;
+                }
+            }
+        }
+        ctx.outcome()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{build_testbed, Scenario, TestbedSpec};
+    use crate::workflow::{Algo, Mode, ModelSpec};
+
+    fn setup() -> (RlWorkflow, DeviceTopology, JobConfig) {
+        (
+            RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_4b()),
+            build_testbed(Scenario::SingleRegion, &TestbedSpec::default()),
+            JobConfig::default(),
+        )
+    }
+
+    #[test]
+    fn ea_arm_finds_feasible_plans() {
+        let (wf, topo, job) = setup();
+        let mut ctx = EvalCtx::new(&topo, &wf, &job, Budget::evals(60));
+        let grouping: TaskGrouping = vec![vec![0, 1, 2, 3]];
+        let mut arm = EaArm::new(grouping, vec![64], EaConfig::default(), 42);
+        arm.run(&mut ctx, 60);
+        assert!(arm.best.is_finite(), "no feasible plan found");
+        let out = ctx.outcome();
+        out.plan
+            .expect("plan")
+            .validate(&wf, &topo, &job)
+            .unwrap();
+    }
+
+    #[test]
+    fn ea_improves_over_time() {
+        let (wf, topo, job) = setup();
+        let mut ctx = EvalCtx::new(&topo, &wf, &job, Budget::evals(150));
+        let grouping: TaskGrouping = vec![vec![0], vec![1, 2, 3]];
+        let sizes = vec![24, 40];
+        let mut arm = EaArm::new(grouping, sizes, EaConfig::default(), 7);
+        arm.run(&mut ctx, 20);
+        let early = arm.best;
+        arm.run(&mut ctx, 130);
+        assert!(arm.best <= early);
+    }
+
+    #[test]
+    fn swap_devices_keeps_validity() {
+        let (wf, topo, job) = setup();
+        let mut ctx = EvalCtx::new(&topo, &wf, &job, Budget::evals(20));
+        let grouping: TaskGrouping = vec![vec![0, 1], vec![2, 3]];
+        let mut arm = EaArm::new(grouping, vec![32, 32], EaConfig::default(), 3);
+        arm.run(&mut ctx, 10);
+        let mut plan = ctx.best_plan.clone().expect("plan");
+        plan.validate(&wf, &topo, &job).unwrap();
+        let a = plan.gpu_groups[0][0];
+        let b = plan.gpu_groups[1][0];
+        swap_devices(&mut plan, a, b);
+        plan.validate(&wf, &topo, &job).unwrap();
+    }
+
+    #[test]
+    fn pure_ea_scheduler_runs() {
+        let (wf, topo, job) = setup();
+        let mut s = PureEaScheduler::new(11);
+        let out = s.schedule(&topo, &wf, &job, Budget::evals(120));
+        assert!(out.cost.is_finite());
+        assert!(out.evals <= 125);
+        out.plan.unwrap().validate(&wf, &topo, &job).unwrap();
+    }
+}

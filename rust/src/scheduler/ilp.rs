@@ -1,0 +1,678 @@
+//! ILP-based scheduling (paper §3.5): "for each RL task, we enumerate all
+//! feasible parallelization strategies …, associate each strategy with a
+//! binary decision variable, … use the analytical cost model to
+//! parameterize the execution cost of each task, … introduce time
+//! variables for each task … and minimize the overall workflow makespan."
+//!
+//! Concretely we build a *candidate-option* MILP: an option is one task's
+//! (strategy × device-class allocation) with its exact analytical cost on
+//! a locality-ordered representative assignment; binaries pick one option
+//! per task; linear capacity rows keep class usage within the fleet;
+//! wave/time variables express the workflow makespan. Tasklet
+//! permutations within a device class are cost-equivalent under locality
+//! ordering, so class-granular options preserve the effective search
+//! space (documented in DESIGN.md §7). Solved exactly with the in-crate
+//! simplex + branch & bound.
+
+use super::levels::{strategy_feasible, TaskGrouping};
+use super::{Budget, EvalCtx, ScheduleOutcome, Scheduler};
+use crate::costmodel::task_cost::task_cost;
+use crate::plan::parallel::uniform_layer_split;
+use crate::plan::{ExecutionPlan, ParallelStrategy, TaskPlan};
+use crate::solver::{solve_milp, BnbConfig, Cmp, Lp};
+use crate::topology::{DeviceTopology, GpuModel};
+use crate::workflow::{JobConfig, RlWorkflow};
+
+/// One candidate deployment of one task.
+#[derive(Debug, Clone)]
+struct Option_ {
+    task: usize,
+    strategy: ParallelStrategy,
+    /// Devices drawn from each class (aligned with the class list).
+    class_counts: Vec<usize>,
+    /// Representative device assignment (locality-ordered).
+    assignment: Vec<usize>,
+    /// Analytical cost of the task under this option (seconds).
+    cost: f64,
+    /// Worst per-device memory demand (bytes) — for the stacking rows.
+    mem_per_device: f64,
+}
+
+/// Worst-stage per-device memory of a task under a strategy.
+fn option_mem(task: &crate::workflow::RlTask, job: &JobConfig, s: ParallelStrategy) -> f64 {
+    let split = uniform_layer_split(task.model.nl, s.pp);
+    let local_batch = (job.total_samples() as f64 / s.dp as f64).ceil() as usize;
+    split
+        .iter()
+        .map(|&nl_j| {
+            let m = crate::plan::memory::tasklet_memory(task, job, nl_j, s.tp, local_batch);
+            m.model + m.working
+        })
+        .fold(0.0, f64::max)
+}
+
+/// HetRL (ILP).
+pub struct IlpScheduler {
+    pub bnb: BnbConfig,
+    /// Cap on strategies per (task, class-combo) to bound option count.
+    pub max_strategies: usize,
+}
+
+impl IlpScheduler {
+    pub fn new() -> Self {
+        IlpScheduler {
+            bnb: BnbConfig { time_limit: 120.0, max_nodes: 20_000, gap: 1e-6 },
+            max_strategies: 6,
+        }
+    }
+
+    pub fn with_time_limit(secs: f64) -> Self {
+        let mut s = Self::new();
+        s.bnb.time_limit = secs;
+        s
+    }
+}
+
+impl Default for IlpScheduler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Device classes: (model, region) buckets with their member ids
+/// (locality-ordered).
+fn device_classes(topo: &DeviceTopology) -> Vec<((GpuModel, usize), Vec<usize>)> {
+    let mut out: Vec<((GpuModel, usize), Vec<usize>)> = Vec::new();
+    for d in &topo.devices {
+        let key = (d.gpu, d.region);
+        match out.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, v)) => v.push(d.id),
+            None => out.push((key, vec![d.id])),
+        }
+    }
+    for (_, v) in out.iter_mut() {
+        let ordered = topo.locality_order(v);
+        *v = ordered;
+    }
+    out.sort_by_key(|(k, _)| *k);
+    out
+}
+
+impl Scheduler for IlpScheduler {
+    fn name(&self) -> &'static str {
+        "HetRL(ILP)"
+    }
+
+    fn schedule(
+        &mut self,
+        topo: &DeviceTopology,
+        wf: &RlWorkflow,
+        job: &JobConfig,
+        budget: Budget,
+    ) -> ScheduleOutcome {
+        let mut ctx = EvalCtx::new(topo, wf, job, budget);
+        let classes = device_classes(topo);
+        let n_classes = classes.len();
+
+        // ---- 1. Enumerate candidate options with analytical costs. ----
+        // NOTE: enumeration cost is charged to ctx.evals for reporting,
+        // but is not aborted by the eval budget — an ILP run with a tiny
+        // budget should still produce its (poor) incumbent, matching the
+        // paper's Figure 5 behaviour.
+        let mut options: Vec<Option_> = Vec::new();
+        for (t, task) in wf.tasks.iter().enumerate() {
+            // Single-class options, spread across degrees so the MILP can
+            // trade devices between tasks (all-maximal options would make
+            // the capacity rows infeasible).
+            for (ci, (_, devs)) in classes.iter().enumerate() {
+                let strategies = ParallelStrategy::enumerate(devs.len(), task.model.nl, 0.0);
+                let mut taken = 0;
+                let mut per_degree: Vec<(usize, usize)> = Vec::new(); // (degree, count)
+                for s in strategies {
+                    if taken >= self.max_strategies * 3 {
+                        break;
+                    }
+                    // At most 2 options per distinct degree.
+                    let deg = s.degree();
+                    let cnt = per_degree
+                        .iter_mut()
+                        .find(|(d, _)| *d == deg)
+                        .map(|(_, c)| {
+                            *c += 1;
+                            *c
+                        })
+                        .unwrap_or_else(|| {
+                            per_degree.push((deg, 1));
+                            1
+                        });
+                    if cnt > 2 {
+                        continue;
+                    }
+                    if !strategy_feasible(task, job, topo, devs, s) {
+                        continue;
+                    }
+                    let assignment: Vec<usize> = devs[..s.degree()].to_vec();
+                    let tp = TaskPlan {
+                        layer_split: uniform_layer_split(task.model.nl, s.pp),
+                        dp_shares: vec![1.0 / s.dp as f64; s.dp],
+                        strategy: s,
+                        assignment: assignment.clone(),
+                    };
+                    let cost = task_cost(topo, task, job, &tp).total;
+                    ctx.evals += 1;
+                    let mut counts = vec![0usize; n_classes];
+                    counts[ci] = s.degree();
+                    options.push(Option_ {
+                        task: t,
+                        strategy: s,
+                        class_counts: counts,
+                        assignment,
+                        cost,
+                        mem_per_device: option_mem(task, job, s),
+                    });
+                    taken += 1;
+                }
+            }
+            // Two-class options: all of class a plus a prefix of class b.
+            // Pairs are restricted to same-region or same-model classes
+            // (the only mixes locality-ordered assignment keeps cheap),
+            // bounding the option count on many-region fleets.
+            for a in 0..n_classes {
+                for b in 0..n_classes {
+                    if a == b {
+                        continue;
+                    }
+                    let (ka, kb) = (&classes[a].0, &classes[b].0);
+                    if ka.0 != kb.0 && ka.1 != kb.1 {
+                        continue;
+                    }
+                    let (ka, da) = (&classes[a].0, &classes[a].1);
+                    let db = &classes[b].1;
+                    let _ = ka;
+                    let pool: Vec<usize> =
+                        da.iter().chain(db.iter()).cloned().collect();
+                    let strategies =
+                        ParallelStrategy::enumerate(pool.len(), task.model.nl, 0.6);
+                    let mut taken = 0;
+                    for s in strategies {
+                        if taken >= 2 {
+                            break;
+                        }
+                        if s.degree() <= da.len() {
+                            continue; // single-class already covers it
+                        }
+                        if !strategy_feasible(task, job, topo, &pool, s) {
+                            continue;
+                        }
+                        let assignment: Vec<usize> = pool[..s.degree()].to_vec();
+                        let tp = TaskPlan {
+                            layer_split: uniform_layer_split(task.model.nl, s.pp),
+                            dp_shares: vec![1.0 / s.dp as f64; s.dp],
+                            strategy: s,
+                            assignment: assignment.clone(),
+                        };
+                        let cost = task_cost(topo, task, job, &tp).total;
+                        ctx.evals += 1;
+                        let mut counts = vec![0usize; n_classes];
+                        counts[a] = da.len();
+                        counts[b] = s.degree() - da.len();
+                        options.push(Option_ {
+                            task: t,
+                            strategy: s,
+                            class_counts: counts,
+                            assignment,
+                            cost,
+                            mem_per_device: option_mem(task, job, s),
+                        });
+                        taken += 1;
+                    }
+                }
+            }
+        }
+        // Thin to the cheapest options per task (degree-diverse: best 2
+        // per distinct degree, then best overall) to keep the MILP dense
+        // tableau tractable.
+        let cap_per_task = self.max_strategies * 8;
+        {
+            let mut keep: Vec<bool> = vec![false; options.len()];
+            for t in 0..wf.n_tasks() {
+                let mut idx: Vec<usize> =
+                    (0..options.len()).filter(|&i| options[i].task == t).collect();
+                idx.sort_by(|&a, &b| options[a].cost.partial_cmp(&options[b].cost).unwrap());
+                let mut per_degree: Vec<(usize, usize)> = Vec::new();
+                let mut kept = 0;
+                for &i in &idx {
+                    if kept >= cap_per_task {
+                        break;
+                    }
+                    let deg = options[i].strategy.degree();
+                    let cnt = match per_degree.iter_mut().find(|(d, _)| *d == deg) {
+                        Some((_, c)) => {
+                            *c += 1;
+                            *c
+                        }
+                        None => {
+                            per_degree.push((deg, 1));
+                            1
+                        }
+                    };
+                    if cnt <= 2 {
+                        keep[i] = true;
+                        kept += 1;
+                    }
+                }
+                // Backfill with cheapest regardless of degree.
+                for &i in &idx {
+                    if kept >= cap_per_task {
+                        break;
+                    }
+                    if !keep[i] {
+                        keep[i] = true;
+                        kept += 1;
+                    }
+                }
+            }
+            let mut thinned = Vec::new();
+            for (i, o) in options.into_iter().enumerate() {
+                if keep[i] {
+                    thinned.push(o);
+                }
+            }
+            options = thinned;
+        }
+        // Index options per task.
+        let mut per_task: Vec<Vec<usize>> = vec![Vec::new(); wf.n_tasks()];
+        for (oi, o) in options.iter().enumerate() {
+            per_task[o.task].push(oi);
+        }
+        if per_task.iter().any(|v| v.is_empty()) {
+            return ctx.outcome(); // some task has no feasible option
+        }
+
+        // ---- 2. Build the MILP. ----
+        // Variables: x[o] binaries, then one duration var per wave.
+        let waves = wf.waves();
+        let n_x = options.len();
+        let n_vars = n_x + waves.len();
+        let mut c = vec![0.0f64; n_vars];
+        // Objective: minimize sum of wave durations (= sync makespan).
+        for (w, cw) in c.iter_mut().skip(n_x).enumerate() {
+            let _ = w;
+            *cw = 1.0;
+        }
+        let mut lp = Lp::new(n_vars, c, false);
+        // One option per task.
+        for opts in per_task.iter() {
+            lp.constrain(opts.iter().map(|&o| (o, 1.0)).collect(), Cmp::Eq, 1.0);
+        }
+        // Class capacities *per wave*: tasks in different waves run at
+        // different times and may reuse devices (colocation); tasks in
+        // the same wave run concurrently and may not.
+        for wave in &waves {
+            for (ci, (_, devs)) in classes.iter().enumerate() {
+                let terms: Vec<(usize, f64)> = options
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, o)| o.class_counts[ci] > 0 && wave.contains(&o.task))
+                    .map(|(oi, o)| (oi, o.class_counts[ci] as f64))
+                    .collect();
+                if !terms.is_empty() {
+                    lp.constrain(terms, Cmp::Le, devs.len() as f64);
+                }
+            }
+        }
+        // Approximate memory stacking across waves: the sum over all
+        // tasks of per-device memory demand drawn from class `k` must fit
+        // the class's per-device capacity (uniform-spread approximation;
+        // the exact C3 check re-validates the extracted plan).
+        for (ci, (key, _)) in classes.iter().enumerate() {
+            let cap = key.0.spec().mem_bytes;
+            let terms: Vec<(usize, f64)> = options
+                .iter()
+                .enumerate()
+                .filter(|(_, o)| o.class_counts[ci] > 0)
+                .map(|(oi, o)| (oi, o.mem_per_device))
+                .collect();
+            if !terms.is_empty() {
+                lp.constrain(terms, Cmp::Le, cap);
+            }
+        }
+        // Wave durations: W_w ≥ dur[t] = Σ_o cost·x for t in wave w.
+        for (w, wave) in waves.iter().enumerate() {
+            for &t in wave {
+                let mut terms: Vec<(usize, f64)> =
+                    per_task[t].iter().map(|&o| (o, -options[o].cost)).collect();
+                terms.push((n_x + w, 1.0));
+                lp.constrain(terms, Cmp::Ge, 0.0);
+            }
+        }
+
+        // ---- 3. Greedy wave-capacity incumbent (always evaluated) ----
+        // The "ILP with insufficient budget" regime of Figure 5 still
+        // deploys *something*; it also seeds the comparison when the
+        // solver times out without an integral solution.
+        let greedy_chosen: Option<Vec<usize>> = (|| {
+            let mut chosen = vec![usize::MAX; wf.n_tasks()];
+            for wave in &waves {
+                let mut used = vec![0usize; n_classes];
+                for &t in wave {
+                    let mut best: Option<(usize, f64)> = None;
+                    for &oi in &per_task[t] {
+                        let o = &options[oi];
+                        let fits = o
+                            .class_counts
+                            .iter()
+                            .enumerate()
+                            .all(|(ci, &c)| used[ci] + c <= classes[ci].1.len());
+                        if fits && best.map(|(_, c)| o.cost < c).unwrap_or(true) {
+                            best = Some((oi, o.cost));
+                        }
+                    }
+                    let (oi, _) = best?;
+                    chosen[t] = oi;
+                    for (ci, &c) in options[oi].class_counts.iter().enumerate() {
+                        used[ci] += c;
+                    }
+                }
+            }
+            Some(chosen)
+        })();
+        if let Some(chosen) = &greedy_chosen {
+            let plans = extract_plans(wf, topo, &waves, &classes, &options, &per_task, chosen);
+            log::debug!("ILP greedy: {} extracted plan variants", plans.len());
+            for plan in plans {
+                let c = ctx.eval(&plan);
+                if !c.is_finite() {
+                    log::debug!(
+                        "ILP greedy variant invalid: {:?}",
+                        plan.validate(wf, topo, job).err()
+                    );
+                }
+            }
+        } else {
+            log::debug!("ILP greedy: no capacity-feasible choice");
+        }
+
+        // ---- 4. Solve exactly and evaluate the MILP's choice. ----
+        let binaries: Vec<usize> = (0..n_x).collect();
+        let mut bnb = self.bnb.clone();
+        bnb.time_limit = bnb
+            .time_limit
+            .min(ctx.budget.wall_secs - ctx.wall())
+            .max(0.1);
+        let result = solve_milp(&lp, &binaries, &bnb);
+        if let Some(x) = &result.x {
+            let chosen: Vec<usize> = per_task
+                .iter()
+                .map(|opts| {
+                    *opts
+                        .iter()
+                        .max_by(|&&a, &&b| x[a].partial_cmp(&x[b]).unwrap())
+                        .unwrap()
+                })
+                .collect();
+            for plan in extract_plans(wf, topo, &waves, &classes, &options, &per_task, &chosen) {
+                ctx.eval(&plan);
+            }
+        }
+        let mut out = ctx.outcome();
+        if !result.optimal {
+            log::warn!(
+                "ILP hit budget: bound {:.3}, incumbent {:.3}, {} nodes",
+                result.bound,
+                result.obj,
+                result.nodes
+            );
+        }
+        out.evals += result.nodes;
+        out
+    }
+}
+
+/// Try to place one option on the fleet given the committed memory
+/// ledger and this wave's used set: least-loaded fitting devices of each
+/// requested class first, then any fitting spare. On success commits
+/// the memory and returns the locality-ordered devices.
+fn try_place(
+    topo: &DeviceTopology,
+    classes: &[((GpuModel, usize), Vec<usize>)],
+    o: &Option_,
+    load: &mut [f64],
+    used_in_wave: &mut [bool],
+) -> Option<Vec<usize>> {
+    let mut devices: Vec<usize> = Vec::with_capacity(o.strategy.degree());
+    for (ci, &cnt) in o.class_counts.iter().enumerate() {
+        if cnt == 0 {
+            continue;
+        }
+        let mut pool: Vec<usize> = classes[ci]
+            .1
+            .iter()
+            .cloned()
+            .filter(|&d| !used_in_wave[d] && !devices.contains(&d))
+            .collect();
+        pool.sort_by(|&a, &b| load[a].partial_cmp(&load[b]).unwrap());
+        let mut taken = 0;
+        for &d in &pool {
+            if taken >= cnt {
+                break;
+            }
+            if load[d] + o.mem_per_device <= topo.devices[d].spec().mem_bytes {
+                devices.push(d);
+                taken += 1;
+            }
+        }
+    }
+    if devices.len() < o.strategy.degree() {
+        // Backfill with any unused, fitting device.
+        let mut spares: Vec<usize> = (0..topo.n())
+            .filter(|&d| !used_in_wave[d] && !devices.contains(&d))
+            .collect();
+        spares.sort_by(|&a, &b| load[a].partial_cmp(&load[b]).unwrap());
+        for d in spares {
+            if devices.len() >= o.strategy.degree() {
+                break;
+            }
+            if load[d] + o.mem_per_device <= topo.devices[d].spec().mem_bytes {
+                devices.push(d);
+            }
+        }
+    }
+    if devices.len() < o.strategy.degree() {
+        return None;
+    }
+    for &d in &devices {
+        used_in_wave[d] = true;
+        load[d] += o.mem_per_device;
+    }
+    Some(topo.locality_order(&devices))
+}
+
+/// Materialize execution plans from a per-task option choice: one
+/// variant reusing devices across waves (colocation), one fully
+/// disaggregated (returned only if capacity allows) — the caller
+/// evaluates both and keeps the better (memory stacking can invalidate
+/// the colocated variant).
+fn extract_plans(
+    wf: &RlWorkflow,
+    topo: &DeviceTopology,
+    waves: &[Vec<usize>],
+    classes: &[((GpuModel, usize), Vec<usize>)],
+    options: &[Option_],
+    per_task: &[Vec<usize>],
+    chosen: &[usize],
+) -> Vec<ExecutionPlan> {
+    let mut out = Vec::new();
+    let n_classes = classes.len();
+    for reuse in [true, false] {
+        let pseudo_waves: Vec<Vec<usize>> = if reuse {
+            waves.to_vec()
+        } else {
+            vec![(0..wf.n_tasks()).collect()]
+        };
+        // disjoint devices; across (pseudo-)waves, devices may be reused
+        // (colocation), with a per-device memory ledger steering reuse
+        // toward the least-loaded members of each class.
+        let mut task_devices: Vec<Vec<usize>> = vec![Vec::new(); wf.n_tasks()];
+        let mut placed_opt: Vec<usize> = chosen.to_vec();
+        let mut load = vec![0.0f64; topo.n()]; // committed bytes per device
+        let mut feasible = true;
+        for wave in &pseudo_waves {
+            let mut used_in_wave = vec![false; topo.n()];
+            for &t in wave {
+                // Preference order: the chosen option, then the task's
+                // other options by ascending cost (self-repair when the
+                // memory ledger cannot materialize the first choice).
+                let mut prefs: Vec<usize> = vec![chosen[t]];
+                let mut rest: Vec<usize> = per_task[t]
+                    .iter()
+                    .cloned()
+                    .filter(|&oi| oi != chosen[t])
+                    .collect();
+                rest.sort_by(|&a, &b| options[a].cost.partial_cmp(&options[b].cost).unwrap());
+                prefs.extend(rest);
+                let mut placed = false;
+                for oi in prefs {
+                    let o = &options[oi];
+                    if let Some(devices) =
+                        try_place(topo, classes, o, &mut load, &mut used_in_wave)
+                    {
+                        task_devices[t] = devices;
+                        placed_opt[t] = oi;
+                        placed = true;
+                        break;
+                    }
+                }
+                if !placed {
+                    log::debug!("extract(reuse={reuse}): task {t} unplaceable");
+                    feasible = false;
+                    break;
+                }
+            }
+            if !feasible {
+                break;
+            }
+        }
+        if !feasible {
+            continue;
+        }
+
+        // Task groups = connected components of device sharing.
+        let mut comp: Vec<usize> = (0..wf.n_tasks()).collect();
+        fn find(comp: &mut Vec<usize>, x: usize) -> usize {
+            if comp[x] != x {
+                let r = find(comp, comp[x]);
+                comp[x] = r;
+            }
+            comp[x]
+        }
+        for a in 0..wf.n_tasks() {
+            for b in a + 1..wf.n_tasks() {
+                if task_devices[a].iter().any(|d| task_devices[b].contains(d)) {
+                    let (ra, rb) = (find(&mut comp, a), find(&mut comp, b));
+                    if ra != rb {
+                        comp[ra] = rb;
+                    }
+                }
+            }
+        }
+        let mut grouping: TaskGrouping = Vec::new();
+        let mut groups: Vec<Vec<usize>> = Vec::new();
+        let mut roots: Vec<usize> = Vec::new();
+        for t in 0..wf.n_tasks() {
+            let r = find(&mut comp, t);
+            let gi = match roots.iter().position(|&x| x == r) {
+                Some(i) => i,
+                None => {
+                    roots.push(r);
+                    grouping.push(Vec::new());
+                    groups.push(Vec::new());
+                    roots.len() - 1
+                }
+            };
+            grouping[gi].push(t);
+            for &d in &task_devices[t] {
+                if !groups[gi].contains(&d) {
+                    groups[gi].push(d);
+                }
+            }
+        }
+        for g in groups.iter_mut() {
+            g.sort_unstable();
+        }
+        let task_plans: Vec<TaskPlan> = (0..wf.n_tasks())
+            .map(|t| {
+                let o = &options[placed_opt[t]];
+                TaskPlan {
+                    layer_split: uniform_layer_split(wf.tasks[t].model.nl, o.strategy.pp),
+                    dp_shares: vec![1.0 / o.strategy.dp as f64; o.strategy.dp],
+                    strategy: o.strategy,
+                    assignment: task_devices[t].clone(),
+                }
+            })
+            .collect();
+        out.push(ExecutionPlan { task_groups: grouping, gpu_groups: groups, task_plans });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{build_testbed, subset_by_model, Scenario, TestbedSpec};
+    use crate::workflow::{Algo, Mode, ModelSpec};
+
+    fn small_topo(n_per_model: usize) -> DeviceTopology {
+        let full = build_testbed(Scenario::SingleRegion, &TestbedSpec::default());
+        subset_by_model(
+            &full,
+            &[
+                (GpuModel::A100, n_per_model),
+                (GpuModel::L40S, n_per_model),
+                (GpuModel::L4, n_per_model),
+            ],
+        )
+    }
+
+    #[test]
+    fn classes_partition_devices() {
+        let topo = small_topo(8);
+        let classes = device_classes(&topo);
+        let total: usize = classes.iter().map(|(_, v)| v.len()).sum();
+        assert_eq!(total, topo.n());
+    }
+
+    #[test]
+    fn ilp_schedules_small_cluster() {
+        let topo = small_topo(8); // 24 GPUs, the paper's small-scale size
+        let wf = RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_4b());
+        let job = JobConfig::default();
+        let mut s = IlpScheduler::with_time_limit(30.0);
+        let out = s.schedule(&topo, &wf, &job, Budget::timed(100_000, 60.0));
+        let plan = out.plan.expect("ILP plan");
+        plan.validate(&wf, &topo, &job).unwrap();
+        assert!(out.cost.is_finite());
+    }
+
+    #[test]
+    fn ilp_close_to_or_better_than_sha_small() {
+        // Paper: "the performance gaps between the solutions obtained by
+        // HetRL (SHA-EA) and the optimal solutions obtained by HetRL
+        // (ILP) are within 1%" — here we just require the ILP not to be
+        // much worse than SHA-EA on a small instance (both near-optimal).
+        let topo = small_topo(4); // 12 GPUs
+        let wf = RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_1b7());
+        let job = JobConfig::default();
+        let ilp = IlpScheduler::with_time_limit(30.0)
+            .schedule(&topo, &wf, &job, Budget::timed(100_000, 60.0));
+        let sha = crate::scheduler::ShaEaScheduler::new(1)
+            .schedule(&topo, &wf, &job, Budget::evals(800));
+        assert!(ilp.cost.is_finite() && sha.cost.is_finite());
+        assert!(
+            ilp.cost <= sha.cost * 1.25,
+            "ilp {} vs sha {}",
+            ilp.cost,
+            sha.cost
+        );
+    }
+}

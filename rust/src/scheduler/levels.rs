@@ -1,0 +1,564 @@
+//! The multi-level search framework (paper §3.2, Figure 1).
+//!
+//! * **Level 1** — task groupings: set partitions of the workflow's task
+//!   list (`B_T` of them, the Bell number).
+//! * **Level 2** — coarse GPU groupings: compositions of N GPUs into
+//!   |groups| positive parts, pruned by per-group memory lower bounds
+//!   and (for large N) quantized to keep the arm count tractable.
+//! * **Level 3** — medium-grained assignment: which concrete GPUs each
+//!   group gets (randomized, affinity-aware; mutated by the EA).
+//! * **Level 4** — intra-model parallelization
+//!   ([`crate::plan::ParallelStrategy::enumerate`]).
+//! * **Level 5** — fine-grained tasklet→GPU maps (orderings within the
+//!   group; mutated by the EA).
+
+use crate::plan::memory::tasklet_memory;
+use crate::plan::parallel::uniform_layer_split;
+use crate::plan::{ExecutionPlan, ParallelStrategy, TaskPlan};
+use crate::topology::DeviceTopology;
+use crate::util::rng::Rng;
+use crate::workflow::{JobConfig, RlWorkflow, TaskKind};
+
+/// A Level-1 decision: partition of task indices.
+pub type TaskGrouping = Vec<Vec<usize>>;
+
+/// A Level-2 decision: GPUs per group (aligned with the task grouping).
+pub type GpuGrouping = Vec<usize>;
+
+/// Enumerate all set partitions of `0..n` (Bell(n) of them) in a
+/// deterministic order. n ≤ 6 for RL workflows, so Bell(6) = 203.
+pub fn set_partitions(n: usize) -> Vec<TaskGrouping> {
+    assert!(n >= 1 && n <= 10, "set_partitions is for small n");
+    let mut out = Vec::new();
+    // Restricted growth strings: a[i] ≤ 1 + max(a[0..i])
+    let mut a = vec![0usize; n];
+    loop {
+        let groups = a.iter().max().unwrap() + 1;
+        let mut part: TaskGrouping = vec![Vec::new(); groups];
+        for (i, &g) in a.iter().enumerate() {
+            part[g].push(i);
+        }
+        out.push(part);
+        // next restricted growth string
+        let mut i = n - 1;
+        loop {
+            if i == 0 {
+                return out;
+            }
+            let max_prefix = a[..i].iter().max().unwrap() + 1;
+            if a[i] < max_prefix {
+                a[i] += 1;
+                for x in a.iter_mut().skip(i + 1) {
+                    *x = 0;
+                }
+                break;
+            }
+            i -= 1;
+        }
+    }
+}
+
+/// Minimum GPUs a task group needs: ceil(total model memory of the
+/// group's tasks / largest GPU memory), and at least 1.
+pub fn min_gpus_for_group(
+    wf: &RlWorkflow,
+    job: &JobConfig,
+    topo: &DeviceTopology,
+    group: &[usize],
+) -> usize {
+    let max_mem = topo
+        .devices
+        .iter()
+        .map(|d| d.spec().mem_bytes)
+        .fold(0.0f64, f64::max);
+    let mut total = 0.0;
+    for &t in group {
+        let task = &wf.tasks[t];
+        // Cheapest memory configuration: maximal TP+PP sharding (cap 8·16)
+        // still must hold the model somewhere.
+        let mem = tasklet_memory(task, job, task.model.nl, 1, 1);
+        total += mem.model + mem.working;
+    }
+    ((total / max_mem).ceil() as usize).max(1)
+}
+
+/// Enumerate Level-2 GPU groupings for a task grouping: compositions of
+/// `n` into `groups.len()` parts, each ≥ its group's memory lower bound.
+/// For large `n` the parts are quantized to multiples of `quantum` to
+/// bound the arm count (the paper prunes with SHA instead; quantization
+/// keeps the same coverage at coarser stride).
+pub fn gpu_groupings(
+    wf: &RlWorkflow,
+    job: &JobConfig,
+    topo: &DeviceTopology,
+    grouping: &TaskGrouping,
+    max_arms: usize,
+) -> Vec<GpuGrouping> {
+    let n = topo.n();
+    let g = grouping.len();
+    let mins: Vec<usize> = grouping
+        .iter()
+        .map(|grp| min_gpus_for_group(wf, job, topo, grp))
+        .collect();
+    let quantum = if n >= 32 { 4 } else if n >= 16 { 2 } else { 1 };
+    let mut out = Vec::new();
+    let mut parts = vec![0usize; g];
+    compose(n, 0, &mut parts, &mins, quantum, &mut out);
+    // Deterministically thin to `max_arms`, keeping spread.
+    if out.len() > max_arms {
+        let step = out.len() as f64 / max_arms as f64;
+        let mut thin = Vec::with_capacity(max_arms);
+        let mut idx = 0.0;
+        while (idx as usize) < out.len() && thin.len() < max_arms {
+            thin.push(out[idx as usize].clone());
+            idx += step;
+        }
+        out = thin;
+    }
+    out
+}
+
+fn compose(
+    remaining: usize,
+    i: usize,
+    parts: &mut Vec<usize>,
+    mins: &[usize],
+    quantum: usize,
+    out: &mut Vec<GpuGrouping>,
+) {
+    let g = mins.len();
+    if i == g - 1 {
+        if remaining >= mins[i] {
+            parts[i] = remaining;
+            out.push(parts.clone());
+        }
+        return;
+    }
+    // Reserve minima for the remaining groups.
+    let reserve: usize = mins[i + 1..].iter().sum();
+    let mut size = mins[i].max(1);
+    // Round up to quantum.
+    if size % quantum != 0 {
+        size += quantum - size % quantum;
+    }
+    while size + reserve <= remaining {
+        parts[i] = size;
+        compose(remaining - size, i + 1, parts, mins, quantum, out);
+        size += quantum;
+    }
+}
+
+/// Level 3: assign concrete devices to groups given sizes. The heuristic
+/// scores each group's appetite (generation → HBM bandwidth, training →
+/// FLOPs, inference → FLOPs) and deals whole machines first to preserve
+/// locality; `rng` perturbs the order for EA initialization diversity.
+pub fn assign_devices(
+    wf: &RlWorkflow,
+    grouping: &TaskGrouping,
+    sizes: &[usize],
+    topo: &DeviceTopology,
+    rng: &mut Rng,
+) -> Vec<Vec<usize>> {
+    let g = grouping.len();
+    assert_eq!(sizes.len(), g);
+    // Appetite: 0 = prefer HBM (generation-heavy), 1 = prefer FLOPs.
+    let mut appetite = vec![0.0f64; g];
+    for (gi, grp) in grouping.iter().enumerate() {
+        let mut hbm = 0;
+        let mut comp = 0;
+        for &t in grp {
+            match wf.tasks[t].kind() {
+                TaskKind::Generation => hbm += 1,
+                _ => comp += 1,
+            }
+        }
+        appetite[gi] = if hbm + comp == 0 {
+            0.5
+        } else {
+            comp as f64 / (hbm + comp) as f64
+        };
+    }
+    // Machines sorted two ways.
+    let mut machines: Vec<(usize, Vec<usize>)> = Vec::new();
+    for d in &topo.devices {
+        match machines.iter_mut().find(|(m, _)| *m == d.machine) {
+            Some((_, v)) => v.push(d.id),
+            None => machines.push((d.machine, vec![d.id])),
+        }
+    }
+    let score_hbm = |devs: &[usize]| -> f64 {
+        devs.iter().map(|&d| topo.devices[d].spec().hbm_bps).sum()
+    };
+    let score_comp = |devs: &[usize]| -> f64 {
+        devs.iter().map(|&d| topo.devices[d].effective_flops()).sum()
+    };
+
+    // Groups pick machines greedily in order of size (largest first),
+    // with a random tiebreak for diversity.
+    let mut order: Vec<usize> = (0..g).collect();
+    order.sort_by_key(|&gi| std::cmp::Reverse(sizes[gi]));
+    let mut taken: Vec<bool> = vec![false; machines.len()];
+    let mut result: Vec<Vec<usize>> = vec![Vec::new(); g];
+    for &gi in &order {
+        let want_comp = appetite[gi];
+        while result[gi].len() < sizes[gi] {
+            // Pick the best remaining machine for this group's appetite.
+            let mut best: Option<(usize, f64)> = None;
+            for (mi, (_, devs)) in machines.iter().enumerate() {
+                if taken[mi] {
+                    continue;
+                }
+                let s = want_comp * score_comp(devs) + (1.0 - want_comp) * score_hbm(devs) * 0.15;
+                let jittered = s * (1.0 + 0.1 * rng.f64());
+                if best.map(|(_, bs)| jittered > bs).unwrap_or(true) {
+                    best = Some((mi, jittered));
+                }
+            }
+            let Some((mi, _)) = best else { break };
+            taken[mi] = true;
+            for &d in &machines[mi].1 {
+                if result[gi].len() < sizes[gi] {
+                    result[gi].push(d);
+                }
+            }
+        }
+    }
+    // Any shortfall (machines exhausted while partially filled): take
+    // leftover devices.
+    let mut used: Vec<bool> = vec![false; topo.n()];
+    for grp in &result {
+        for &d in grp {
+            used[d] = true;
+        }
+    }
+    let mut leftovers: Vec<usize> = (0..topo.n()).filter(|&d| !used[d]).collect();
+    for gi in 0..g {
+        while result[gi].len() < sizes[gi] {
+            let d = leftovers.pop().expect("not enough devices for sizes");
+            result[gi].push(d);
+        }
+    }
+    for grp in result.iter_mut() {
+        grp.sort_unstable();
+    }
+    result
+}
+
+/// Pick a memory-feasible strategy for each task of a group (Level 4)
+/// and build locality-ordered assignments (Level 5 default), yielding
+/// TaskPlans. Colocated tasks stack on the same devices, so placement is
+/// load-aware: each task takes the cyclic window of the group's locality
+/// order that fits beside what is already placed. Returns `None` if any
+/// task cannot be placed.
+pub fn default_task_plans(
+    wf: &RlWorkflow,
+    job: &JobConfig,
+    topo: &DeviceTopology,
+    grouping: &TaskGrouping,
+    group_devices: &[Vec<usize>],
+    rng: &mut Rng,
+    randomize: bool,
+) -> Option<Vec<TaskPlan>> {
+    let mut plans: Vec<Option<TaskPlan>> = vec![None; wf.n_tasks()];
+    // Per-device committed model memory / max working memory (C3 shape).
+    let mut model_sum = vec![0.0f64; topo.n()];
+    let mut working_max = vec![0.0f64; topo.n()];
+    for (gi, grp) in grouping.iter().enumerate() {
+        let devs = &group_devices[gi];
+        let ordered = topo.locality_order(devs);
+        // Place training tasks first (largest footprints).
+        let mut order: Vec<usize> = grp.clone();
+        order.sort_by_key(|&t| match wf.tasks[t].kind() {
+            TaskKind::Training => 0,
+            TaskKind::Generation => 1,
+            TaskKind::Inference => 2,
+        });
+        // Headroom reservation: placing a task may not squeeze out the
+        // tasks still waiting — reserve each later task's minimal
+        // per-device footprint (C3 is checked against cap − reserve).
+        let min_mem: Vec<f64> = order
+            .iter()
+            .map(|&t| {
+                let task = &wf.tasks[t];
+                ParallelStrategy::enumerate(devs.len(), task.model.nl, 0.0)
+                    .into_iter()
+                    .map(|s| {
+                        let split = uniform_layer_split(task.model.nl, s.pp);
+                        let lb =
+                            (job.total_samples() as f64 / s.dp as f64).ceil() as usize;
+                        split
+                            .iter()
+                            .map(|&nl_j| {
+                                let m = tasklet_memory(task, job, nl_j, s.tp, lb);
+                                m.model + m.working
+                            })
+                            .fold(0.0f64, f64::max)
+                    })
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .collect();
+        let mut rotation = 0usize;
+        for (oi, &t) in order.iter().enumerate() {
+            let reserve: f64 = min_mem[oi + 1..].iter().sum();
+            let task = &wf.tasks[t];
+            let mut strategies = ParallelStrategy::enumerate(devs.len(), task.model.nl, 0.5);
+            if randomize && strategies.len() > 1 {
+                let cut = strategies.len().min(6);
+                let pick = rng.below(cut);
+                strategies.swap(0, pick);
+            }
+            let placed = strategies
+                .into_iter()
+                .find_map(|s| {
+                    place_task(
+                        task, job, topo, &ordered, s, rotation, &model_sum, &working_max,
+                        reserve,
+                    )
+                })
+                .or_else(|| {
+                    // Second chance: drop the utilization floor and try
+                    // the most memory-sharded strategies first — heavily
+                    // colocated groups (e.g. StreamRL's 5-task "rest"
+                    // group) only fit when later tasks slice thin.
+                    let mut fallback =
+                        ParallelStrategy::enumerate(devs.len(), task.model.nl, 0.0);
+                    fallback.sort_by_key(|s| std::cmp::Reverse(s.tp * s.pp));
+                    fallback.into_iter().find_map(|s| {
+                        place_task(
+                            task, job, topo, &ordered, s, rotation, &model_sum,
+                            &working_max, 0.0,
+                        )
+                    })
+                });
+            let Some(placed) = placed else {
+                let max_load = devs
+                    .iter()
+                    .map(|&d| model_sum[d])
+                    .fold(0.0f64, f64::max);
+                log::debug!(
+                    "default_task_plans: cannot place task {t} ({}) on {} devices (max committed {:.1} GiB, cap min {:.1} GiB)",
+                    wf.tasks[t].id.name(),
+                    devs.len(),
+                    max_load / crate::util::units::GIB,
+                    devs.iter().map(|&d| topo.devices[d].spec().mem_bytes).fold(f64::INFINITY, f64::min) / crate::util::units::GIB
+                );
+                return None;
+            };
+            // Commit memory.
+            let s = placed.strategy;
+            let local_batch = (job.total_samples() as f64 / s.dp as f64).ceil() as usize;
+            for idx in 0..s.degree() {
+                let (_, j, _) = s.tasklet_coords(idx);
+                let mem = tasklet_memory(task, job, placed.layer_split[j], s.tp, local_batch);
+                let d = placed.assignment[idx];
+                model_sum[d] += mem.model;
+                working_max[d] = working_max[d].max(mem.working);
+            }
+            rotation += s.degree();
+            plans[t] = Some(placed);
+        }
+    }
+    plans.into_iter().collect()
+}
+
+/// Try to place one task with strategy `s` on a cyclic window of
+/// `ordered` devices, respecting residual memory. Tries the preferred
+/// rotation first, then all others.
+#[allow(clippy::too_many_arguments)]
+#[allow(clippy::too_many_arguments)]
+fn place_task(
+    task: &crate::workflow::RlTask,
+    job: &JobConfig,
+    topo: &DeviceTopology,
+    ordered: &[usize],
+    s: ParallelStrategy,
+    prefer_rot: usize,
+    model_sum: &[f64],
+    working_max: &[f64],
+    reserve: f64,
+) -> Option<TaskPlan> {
+    let n = ordered.len();
+    if s.degree() > n || s.pp > task.model.nl {
+        return None;
+    }
+    let split = uniform_layer_split(task.model.nl, s.pp);
+    let local_batch = (job.total_samples() as f64 / s.dp as f64).ceil() as usize;
+    // Per-stage memory needs (same for every replica/shard).
+    let stage_mem: Vec<crate::plan::memory::TaskletMemory> = split
+        .iter()
+        .map(|&nl_j| tasklet_memory(task, job, nl_j, s.tp, local_batch))
+        .collect();
+    'rot: for r in 0..n {
+        let rot = (prefer_rot + r) % n;
+        let window: Vec<usize> = (0..s.degree()).map(|i| ordered[(rot + i) % n]).collect();
+        for (idx, &d) in window.iter().enumerate() {
+            let (_, j, _) = s.tasklet_coords(idx);
+            let need = model_sum[d]
+                + stage_mem[j].model
+                + working_max[d].max(stage_mem[j].working);
+            if need + reserve > topo.devices[d].spec().mem_bytes {
+                continue 'rot;
+            }
+        }
+        return Some(TaskPlan {
+            layer_split: split,
+            dp_shares: vec![1.0 / s.dp as f64; s.dp],
+            strategy: s,
+            assignment: window,
+        });
+    }
+    None
+}
+
+/// Quick memory feasibility for a strategy on a device set: the stage
+/// with the most layers must fit on the smallest GPU of the set.
+pub fn strategy_feasible(
+    task: &crate::workflow::RlTask,
+    job: &JobConfig,
+    topo: &DeviceTopology,
+    devs: &[usize],
+    s: ParallelStrategy,
+) -> bool {
+    if s.degree() > devs.len() {
+        return false;
+    }
+    let split = uniform_layer_split(task.model.nl.max(s.pp), s.pp);
+    let worst_layers = *split.iter().max().unwrap();
+    let local_batch = (job.total_samples() as f64 / s.dp as f64).ceil() as usize;
+    let mem = tasklet_memory(task, job, worst_layers, s.tp, local_batch);
+    let min_cap = devs
+        .iter()
+        .map(|&d| topo.devices[d].spec().mem_bytes)
+        .fold(f64::INFINITY, f64::min);
+    s.pp <= task.model.nl && mem.model + mem.working <= min_cap
+}
+
+/// Assemble a full [`ExecutionPlan`].
+pub fn assemble(
+    grouping: &TaskGrouping,
+    group_devices: Vec<Vec<usize>>,
+    task_plans: Vec<TaskPlan>,
+) -> ExecutionPlan {
+    ExecutionPlan {
+        task_groups: grouping.clone(),
+        gpu_groups: group_devices,
+        task_plans,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{build_testbed, Scenario, TestbedSpec};
+    use crate::workflow::{Algo, Mode, ModelSpec};
+
+    fn setup() -> (RlWorkflow, DeviceTopology, JobConfig) {
+        (
+            RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_4b()),
+            build_testbed(Scenario::SingleRegion, &TestbedSpec::default()),
+            JobConfig::default(),
+        )
+    }
+
+    #[test]
+    fn bell_numbers() {
+        assert_eq!(set_partitions(1).len(), 1);
+        assert_eq!(set_partitions(2).len(), 2);
+        assert_eq!(set_partitions(3).len(), 5);
+        assert_eq!(set_partitions(4).len(), 15);
+        assert_eq!(set_partitions(6).len(), 203);
+    }
+
+    #[test]
+    fn partitions_are_partitions() {
+        for p in set_partitions(4) {
+            let mut all: Vec<usize> = p.iter().flatten().cloned().collect();
+            all.sort_unstable();
+            assert_eq!(all, vec![0, 1, 2, 3]);
+        }
+    }
+
+    #[test]
+    fn gpu_groupings_cover_and_respect_minimums() {
+        let (wf, topo, job) = setup();
+        let grouping: TaskGrouping = vec![vec![0], vec![1, 2], vec![3]];
+        let ggs = gpu_groupings(&wf, &job, &topo, &grouping, 64);
+        assert!(!ggs.is_empty());
+        for gg in &ggs {
+            assert_eq!(gg.iter().sum::<usize>(), topo.n());
+            assert_eq!(gg.len(), 3);
+            for (i, &sz) in gg.iter().enumerate() {
+                assert!(sz >= min_gpus_for_group(&wf, &job, &topo, &grouping[i]));
+            }
+        }
+    }
+
+    #[test]
+    fn arm_cap_respected() {
+        let (wf, topo, job) = setup();
+        let grouping: TaskGrouping = vec![vec![0], vec![1], vec![2], vec![3]];
+        let ggs = gpu_groupings(&wf, &job, &topo, &grouping, 10);
+        assert!(ggs.len() <= 10);
+    }
+
+    #[test]
+    fn assign_devices_partitions() {
+        let (wf, topo, _) = setup();
+        let grouping: TaskGrouping = vec![vec![0], vec![1, 2, 3]];
+        let sizes = vec![24, 40];
+        let mut rng = Rng::new(5);
+        let groups = assign_devices(&wf, &grouping, &sizes, &topo, &mut rng);
+        assert_eq!(groups[0].len(), 24);
+        assert_eq!(groups[1].len(), 40);
+        let mut all: Vec<usize> = groups.iter().flatten().cloned().collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 64);
+    }
+
+    #[test]
+    fn default_plans_validate() {
+        let (wf, topo, job) = setup();
+        let grouping: TaskGrouping = vec![vec![0, 1, 2, 3]];
+        let sizes = vec![64];
+        let mut rng = Rng::new(1);
+        let groups = assign_devices(&wf, &grouping, &sizes, &topo, &mut rng);
+        let plans = default_task_plans(&wf, &job, &topo, &grouping, &groups, &mut rng, false)
+            .expect("feasible");
+        let plan = assemble(&grouping, groups, plans);
+        plan.validate(&wf, &topo, &job).unwrap();
+    }
+
+    #[test]
+    fn default_plans_validate_across_groupings_and_scenarios() {
+        let job = JobConfig::default();
+        for algo in [Algo::Ppo, Algo::Grpo] {
+            let wf = RlWorkflow::new(algo, Mode::Sync, ModelSpec::qwen_8b());
+            let topo = build_testbed(Scenario::MultiCountry, &TestbedSpec::default());
+            let mut rng = Rng::new(7);
+            for grouping in set_partitions(wf.n_tasks()).into_iter().take(8) {
+                let ggs = gpu_groupings(&wf, &job, &topo, &grouping, 4);
+                for sizes in ggs.into_iter().take(2) {
+                    let groups = assign_devices(&wf, &grouping, &sizes, &topo, &mut rng);
+                    if let Some(plans) =
+                        default_task_plans(&wf, &job, &topo, &grouping, &groups, &mut rng, false)
+                    {
+                        let plan = assemble(&grouping, groups, plans);
+                        plan.validate(&wf, &topo, &job).unwrap();
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn min_gpus_scales_with_model() {
+        let (_, topo, job) = setup();
+        let wf4 = RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_4b());
+        let wf14 = RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_14b());
+        let g: Vec<usize> = (0..4).collect();
+        let m4 = min_gpus_for_group(&wf4, &job, &topo, &g);
+        let m14 = min_gpus_for_group(&wf14, &job, &topo, &g);
+        assert!(m14 > m4);
+    }
+}

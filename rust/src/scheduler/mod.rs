@@ -1,0 +1,170 @@
+//! HetRL scheduling algorithms (paper §3).
+//!
+//! * [`levels`] — the multi-level search framework (Figure 1): task
+//!   grouping (L1), coarse GPU grouping (L2), medium-grained GPU
+//!   assignment (L3), intra-model parallelization (L4), fine-grained
+//!   tasklet assignment (L5).
+//! * [`ea`] — evolutionary low-level plan generation with the TFLOPS
+//!   upgrade mutation and the Baldwinian swap local search (§3.4).
+//! * [`sha`] — the nested successive-halving hybrid scheduler
+//!   (Algorithm 1).
+//! * [`ilp`] — the exact ILP formulation solved with the in-crate
+//!   simplex + branch & bound (§3.5).
+//! * [`baselines`] — verl-like, StreamRL-like, pure-EA (DEAP-like) and
+//!   random-search baselines used across the evaluation.
+
+pub mod levels;
+pub mod ea;
+pub mod sha;
+pub mod ilp;
+pub mod baselines;
+
+use crate::costmodel::CostModel;
+use crate::plan::ExecutionPlan;
+use crate::topology::DeviceTopology;
+use crate::workflow::{JobConfig, RlWorkflow};
+use std::time::Instant;
+
+/// Search budget: cost-model evaluations (deterministic unit used by the
+/// algorithms) plus a wall-clock cap.
+#[derive(Debug, Clone, Copy)]
+pub struct Budget {
+    pub evals: usize,
+    pub wall_secs: f64,
+}
+
+impl Budget {
+    pub fn evals(evals: usize) -> Budget {
+        Budget { evals, wall_secs: f64::INFINITY }
+    }
+
+    pub fn timed(evals: usize, wall_secs: f64) -> Budget {
+        Budget { evals, wall_secs }
+    }
+}
+
+/// A point on the search-efficiency curve (Figures 5/6): after `evals`
+/// evaluations / `wall` seconds, the best plan cost was `best_cost`.
+#[derive(Debug, Clone, Copy)]
+pub struct TracePoint {
+    pub wall: f64,
+    pub evals: usize,
+    pub best_cost: f64,
+}
+
+/// Result of a scheduling run.
+#[derive(Debug, Clone)]
+pub struct ScheduleOutcome {
+    pub plan: Option<ExecutionPlan>,
+    /// Cost-model iteration time of the best plan (∞ if none found).
+    pub cost: f64,
+    pub evals: usize,
+    pub wall: f64,
+    pub trace: Vec<TracePoint>,
+}
+
+impl ScheduleOutcome {
+    pub fn empty() -> Self {
+        ScheduleOutcome {
+            plan: None,
+            cost: f64::INFINITY,
+            evals: 0,
+            wall: 0.0,
+            trace: Vec::new(),
+        }
+    }
+}
+
+/// Common interface for all scheduling algorithms.
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+    fn schedule(
+        &mut self,
+        topo: &DeviceTopology,
+        wf: &RlWorkflow,
+        job: &JobConfig,
+        budget: Budget,
+    ) -> ScheduleOutcome;
+}
+
+/// Shared evaluation context: counts cost-model evaluations, tracks the
+/// incumbent and the search trace, and enforces the budget.
+pub struct EvalCtx<'a> {
+    pub cm: CostModel<'a>,
+    pub wf: &'a RlWorkflow,
+    pub topo: &'a DeviceTopology,
+    pub job: &'a JobConfig,
+    pub budget: Budget,
+    pub evals: usize,
+    pub best_cost: f64,
+    pub best_plan: Option<ExecutionPlan>,
+    pub trace: Vec<TracePoint>,
+    started: Instant,
+}
+
+impl<'a> EvalCtx<'a> {
+    pub fn new(
+        topo: &'a DeviceTopology,
+        wf: &'a RlWorkflow,
+        job: &'a JobConfig,
+        budget: Budget,
+    ) -> Self {
+        EvalCtx {
+            cm: CostModel::new(topo, wf, job),
+            wf,
+            topo,
+            job,
+            budget,
+            evals: 0,
+            best_cost: f64::INFINITY,
+            best_plan: None,
+            trace: Vec::new(),
+            started: Instant::now(),
+        }
+    }
+
+    pub fn exhausted(&self) -> bool {
+        self.evals >= self.budget.evals
+            || self.started.elapsed().as_secs_f64() >= self.budget.wall_secs
+    }
+
+    pub fn wall(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Evaluate a candidate plan: validity check + cost model. Returns
+    /// the cost (∞ for invalid plans). Updates incumbent and trace.
+    pub fn eval(&mut self, plan: &ExecutionPlan) -> f64 {
+        self.evals += 1;
+        let cost = if plan.validate(self.wf, self.topo, self.job).is_ok() {
+            self.cm.plan_cost(plan).iter_time
+        } else {
+            f64::INFINITY
+        };
+        if cost < self.best_cost {
+            self.best_cost = cost;
+            self.best_plan = Some(plan.clone());
+            self.trace.push(TracePoint {
+                wall: self.wall(),
+                evals: self.evals,
+                best_cost: cost,
+            });
+        }
+        cost
+    }
+
+    pub fn outcome(self) -> ScheduleOutcome {
+        ScheduleOutcome {
+            plan: self.best_plan,
+            cost: self.best_cost,
+            evals: self.evals,
+            wall: self.started.elapsed().as_secs_f64(),
+            trace: self.trace,
+        }
+    }
+}
+
+pub use baselines::{RandomScheduler, StreamRlScheduler, VerlScheduler};
+pub use ea::PureEaScheduler;
+pub use ilp::IlpScheduler;
+pub use sha::ShaEaScheduler;

@@ -1,0 +1,240 @@
+//! The hybrid SHA-EA scheduler — paper Algorithm 1.
+//!
+//! Nested successive halving: Level-1 task groupings are the outer arms,
+//! Level-2 GPU groupings the inner arms; each (outer, inner) pair owns an
+//! evolutionary population ([`EaArm`]) that generates and evaluates
+//! low-level plans. Budgets are measured in cost-model evaluations (the
+//! deterministic unit); wall-clock caps still apply through [`EvalCtx`].
+
+use super::ea::{EaArm, EaConfig};
+use super::levels::{gpu_groupings, set_partitions};
+use super::{Budget, EvalCtx, ScheduleOutcome, Scheduler};
+use crate::topology::DeviceTopology;
+use crate::workflow::{JobConfig, RlWorkflow};
+
+/// Configuration of the hybrid scheduler.
+#[derive(Debug, Clone)]
+pub struct ShaConfig {
+    pub ea: EaConfig,
+    /// Cap on Level-2 arms per task grouping (quantized enumeration).
+    pub max_gpu_groupings: usize,
+    pub seed: u64,
+}
+
+impl Default for ShaConfig {
+    fn default() -> Self {
+        ShaConfig { ea: EaConfig::default(), max_gpu_groupings: 12, seed: 0x5EED }
+    }
+}
+
+/// HetRL (SHA-EA).
+pub struct ShaEaScheduler {
+    pub cfg: ShaConfig,
+}
+
+impl ShaEaScheduler {
+    pub fn new(seed: u64) -> Self {
+        ShaEaScheduler { cfg: ShaConfig { seed, ..ShaConfig::default() } }
+    }
+}
+
+/// One outer arm: a task grouping with its surviving inner arms.
+struct OuterArm {
+    inner: Vec<EaArm>,
+    best: f64,
+}
+
+impl Scheduler for ShaEaScheduler {
+    fn name(&self) -> &'static str {
+        "HetRL(SHA-EA)"
+    }
+
+    fn schedule(
+        &mut self,
+        topo: &DeviceTopology,
+        wf: &RlWorkflow,
+        job: &JobConfig,
+        budget: Budget,
+    ) -> ScheduleOutcome {
+        let mut ctx = EvalCtx::new(topo, wf, job, budget);
+        let mut seed = self.cfg.seed;
+        let mut next_seed = || {
+            seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            seed
+        };
+
+        // Line 5–12: enumerate TG and per-tg GG, init populations.
+        let mut outers: Vec<OuterArm> = Vec::new();
+        for tg in set_partitions(wf.n_tasks()) {
+            let ggs = gpu_groupings(wf, job, topo, &tg, self.cfg.max_gpu_groupings);
+            if ggs.is_empty() {
+                continue;
+            }
+            let inner: Vec<EaArm> = ggs
+                .into_iter()
+                .map(|sizes| EaArm::new(tg.clone(), sizes, self.cfg.ea.clone(), next_seed()))
+                .collect();
+            outers.push(OuterArm { inner, best: f64::INFINITY });
+        }
+        if outers.is_empty() {
+            return ctx.outcome();
+        }
+
+        let n_tg = outers.len();
+        let outer_rounds = (n_tg as f64).log2().ceil().max(1.0) as usize;
+
+        // Line 14–33: outer SHA over task groupings.
+        let mut alive: Vec<OuterArm> = outers;
+        for _m in 0..outer_rounds {
+            if ctx.exhausted() || alive.is_empty() {
+                break;
+            }
+            // b_m = B / (|TG_m| * ceil(log2 |TG|))
+            let b_m = (ctx.budget.evals / (alive.len() * outer_rounds)).max(4);
+            for outer in alive.iter_mut() {
+                if ctx.exhausted() {
+                    break;
+                }
+                run_inner_sha(&mut ctx, outer, b_m);
+            }
+            // Line 31: keep the best half of task groupings.
+            alive = best_half(alive, |o| o.best);
+        }
+        ctx.outcome()
+    }
+}
+
+/// Inner SHA over the GPU groupings of one task grouping
+/// (Algorithm 1 lines 17–29).
+fn run_inner_sha(ctx: &mut EvalCtx<'_>, outer: &mut OuterArm, b_m: usize) {
+    let n_gg = outer.inner.len();
+    if n_gg == 0 {
+        return;
+    }
+    let inner_rounds = (n_gg as f64).log2().ceil().max(1.0) as usize;
+    // Move populations out so survivors (and their EA state) persist.
+    let mut alive: Vec<EaArm> = std::mem::take(&mut outer.inner);
+    for _n in 0..inner_rounds {
+        if ctx.exhausted() || alive.is_empty() {
+            break;
+        }
+        // b_{m,n} = b_m / (|GG_n| * ceil(log2 |GG|))
+        let b_mn = (b_m / (alive.len() * inner_rounds)).max(2);
+        for arm in alive.iter_mut() {
+            if ctx.exhausted() {
+                break;
+            }
+            // Lines 21–25: EA generates and scores b_{m,n} plans.
+            arm.run(ctx, b_mn);
+        }
+        alive = best_half(alive, |a| a.best);
+    }
+    outer.best = alive
+        .iter()
+        .map(|a| a.best)
+        .fold(f64::INFINITY, f64::min)
+        .min(outer.best);
+    // Line 29: retain the surviving (best-half) GPU groupings.
+    outer.inner = alive;
+}
+
+/// Keep the better half (ties broken stably by original index).
+fn best_half<T>(items: Vec<T>, score: impl Fn(&T) -> f64) -> Vec<T> {
+    if items.len() <= 1 {
+        return items;
+    }
+    let keep = (items.len() + 1) / 2;
+    let mut scored: Vec<(f64, usize, T)> = items
+        .into_iter()
+        .enumerate()
+        .map(|(i, x)| (score(&x), i, x))
+        .collect();
+    scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+    scored.truncate(keep);
+    scored.into_iter().map(|(_, _, x)| x).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{build_testbed, Scenario, TestbedSpec};
+    use crate::workflow::{Algo, Mode, ModelSpec};
+
+    fn setup(scenario: Scenario) -> (RlWorkflow, DeviceTopology, JobConfig) {
+        (
+            RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_4b()),
+            build_testbed(scenario, &TestbedSpec::default()),
+            JobConfig::default(),
+        )
+    }
+
+    #[test]
+    fn best_half_keeps_best() {
+        let v = vec![3.0, 1.0, 2.0, 5.0];
+        let kept = best_half(v, |x| *x);
+        assert_eq!(kept, vec![1.0, 2.0]);
+        let single = best_half(vec![9.0], |x| *x);
+        assert_eq!(single, vec![9.0]);
+        // Odd count keeps ceil(n/2).
+        let odd = best_half(vec![3.0, 1.0, 2.0], |x| *x);
+        assert_eq!(odd, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn sha_finds_valid_plan_within_budget() {
+        let (wf, topo, job) = setup(Scenario::SingleRegion);
+        let mut s = ShaEaScheduler::new(1);
+        let out = s.schedule(&topo, &wf, &job, Budget::evals(400));
+        assert!(out.cost.is_finite(), "no plan found");
+        assert!(out.evals <= 450, "budget overrun: {}", out.evals);
+        out.plan.unwrap().validate(&wf, &topo, &job).unwrap();
+        assert!(!out.trace.is_empty());
+    }
+
+    #[test]
+    fn sha_beats_random_plans_on_wan() {
+        let (wf, topo, job) = setup(Scenario::MultiContinent);
+        let mut sha = ShaEaScheduler::new(3);
+        let out = sha.schedule(&topo, &wf, &job, Budget::evals(600));
+        // Compare to the *average* of a few random feasible plans.
+        let mut ctx = EvalCtx::new(&topo, &wf, &job, Budget::evals(40));
+        let mut rng = crate::util::rng::Rng::new(5);
+        let groupings = set_partitions(wf.n_tasks());
+        let mut costs = Vec::new();
+        for i in 0..30 {
+            let tg = groupings[i % groupings.len()].clone();
+            let ggs = gpu_groupings(&wf, &job, &topo, &tg, 4);
+            if ggs.is_empty() {
+                continue;
+            }
+            let sizes = ggs[i % ggs.len()].clone();
+            let groups =
+                super::super::levels::assign_devices(&wf, &tg, &sizes, &topo, &mut rng);
+            if let Some(plans) = super::super::levels::default_task_plans(
+                &wf, &job, &topo, &tg, &groups, &mut rng, true,
+            ) {
+                let plan = super::super::levels::assemble(&tg, groups, plans);
+                let c = ctx.cm.plan_cost(&plan).iter_time;
+                if plan.validate(&wf, &topo, &job).is_ok() {
+                    costs.push(c);
+                }
+            }
+        }
+        assert!(!costs.is_empty());
+        let mean_random = costs.iter().sum::<f64>() / costs.len() as f64;
+        assert!(
+            out.cost < mean_random,
+            "SHA {} should beat mean random {}",
+            out.cost,
+            mean_random
+        );
+    }
+
+    #[test]
+    fn more_budget_no_worse() {
+        let (wf, topo, job) = setup(Scenario::MultiCountry);
+        let small = ShaEaScheduler::new(9).schedule(&topo, &wf, &job, Budget::evals(120));
+        let large = ShaEaScheduler::new(9).schedule(&topo, &wf, &job, Budget::evals(900));
+        assert!(large.cost <= small.cost * 1.001);
+    }
+}

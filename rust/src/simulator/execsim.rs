@@ -1,0 +1,632 @@
+//! Plan execution on the discrete-event core: builds a [`SimGraph`] from
+//! an [`ExecutionPlan`] at micro-batch granularity and measures iteration
+//! time.
+//!
+//! Differences from the analytical cost model (intentional — this is the
+//! "measured" side of Figure 7):
+//! * micro-batches are scheduled individually; pipeline bubbles, 1F1B
+//!   interleaving and stage imbalance emerge from the event order;
+//! * response lengths are *sampled* per micro-batch (the cost model uses
+//!   the expected length);
+//! * collectives are simulated step-by-step: a ring all-reduce is
+//!   `2(g-1)` chunk steps, each paying the worst link's latency — the
+//!   cost model folds this into one α + cv/β term;
+//! * WAN links are shared resources: transfers between the same region
+//!   pair serialize across tasks;
+//! * multiplicative lognormal jitter on compute and communication.
+
+use super::des::{OpId, SimGraph};
+use super::noise::NoiseModel;
+use crate::costmodel::comm::{cv_all_gather, cv_dp, cv_p2p, cv_pp, cv_tp, layer_params};
+use crate::plan::memory::decode_batch_size;
+use crate::plan::{ExecutionPlan, TaskPlan};
+use crate::topology::DeviceTopology;
+use crate::util::rng::Rng;
+use crate::util::units::B_BF16;
+use crate::workflow::{JobConfig, Mode, RlTaskId, RlWorkflow, TaskKind};
+
+/// Simulation configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Iterations to simulate (results are averaged).
+    pub iters: usize,
+    pub seed: u64,
+    pub noise: NoiseModel,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig { iters: 3, seed: 0xBEEF, noise: NoiseModel::default() }
+    }
+}
+
+/// Simulation result.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Mean iteration time (s).
+    pub iter_time: f64,
+    pub iter_std: f64,
+    /// Mean per-task busy span (s), indexed like the workflow tasks.
+    pub per_task: Vec<f64>,
+    /// Mean device utilization in [0,1].
+    pub utilization: f64,
+    /// Throughput, samples/s.
+    pub throughput: f64,
+}
+
+/// Effective sustained FLOP/s of a device (see
+/// [`crate::topology::Device::effective_flops`]).
+#[inline]
+pub fn effective_flops(topo: &DeviceTopology, d: usize) -> f64 {
+    topo.devices[d].effective_flops()
+}
+
+struct Builder<'a> {
+    topo: &'a DeviceTopology,
+    job: &'a JobConfig,
+    g: SimGraph,
+    /// Synthetic shared resources per region pair (WAN backbone). Real
+    /// inter-region paths are ECMP multi-flow, so each pair gets
+    /// `WAN_CHANNELS` parallel channels; concurrent transfers beyond
+    /// that serialize.
+    wan_links: Vec<Vec<Vec<usize>>>,
+    wan_next: std::cell::Cell<usize>,
+    rng: Rng,
+    noise: NoiseModel,
+}
+
+impl<'a> Builder<'a> {
+    fn new(topo: &'a DeviceTopology, job: &'a JobConfig, seed: u64, noise: NoiseModel) -> Self {
+        let nr = topo.region_names.len().max(
+            topo.devices.iter().map(|d| d.region + 1).max().unwrap_or(1),
+        );
+        Builder {
+            topo,
+            job,
+            g: SimGraph::new(topo.n()),
+            wan_links: vec![vec![Vec::new(); nr]; nr],
+            wan_next: std::cell::Cell::new(0),
+            rng: Rng::new(seed),
+            noise,
+        }
+    }
+
+    /// WAN backbone channels per region pair.
+    const WAN_CHANNELS: usize = 4;
+
+    /// WAN backbone resource for a cross-region transfer (lazily
+    /// created; transfers rotate over the pair's channels).
+    fn wan_link(&mut self, ra: usize, rb: usize) -> Option<usize> {
+        if ra == rb {
+            return None;
+        }
+        let (x, y) = (ra.min(rb), ra.max(rb));
+        if self.wan_links[x][y].is_empty() {
+            self.wan_links[x][y] =
+                (0..Self::WAN_CHANNELS).map(|_| self.g.add_resource()).collect();
+        }
+        let k = self.wan_next.get();
+        self.wan_next.set(k.wrapping_add(1));
+        Some(self.wan_links[x][y][k % Self::WAN_CHANNELS])
+    }
+
+    /// Simulated duration of a ring all-reduce over `devs` moving `vol`
+    /// payload bytes (already scaled by the collective's volume factor):
+    /// `2(g-1)` steps of `α_worst + vol/(g·β_worst)`.
+    fn allreduce_time(&mut self, devs: &[usize], vol: f64) -> f64 {
+        let g = devs.len();
+        if g <= 1 || vol <= 0.0 {
+            return 0.0;
+        }
+        let order = self.topo.locality_order(devs);
+        let mut alpha_max: f64 = 0.0;
+        let mut beta_min = f64::INFINITY;
+        for i in 0..g {
+            let (a, b) = (order[i], order[(i + 1) % g]);
+            alpha_max = alpha_max.max(self.topo.lat(a, b));
+            beta_min = beta_min.min(self.topo.bw(a, b));
+        }
+        let steps = 2.0 * (g as f64 - 1.0);
+        let t = steps * (alpha_max + vol / (g as f64 * beta_min));
+        t * self.noise.comm_jitter(&mut self.rng)
+    }
+
+    /// Best (min) point-to-point pair between two stages and its transfer
+    /// duration for `bytes`.
+    fn p2p(&mut self, from: &[usize], to: &[usize], bytes: f64) -> (usize, usize, f64) {
+        let mut best = (from[0], to[0], f64::INFINITY);
+        for &a in from {
+            for &b in to {
+                if a == b {
+                    return (a, b, 0.0);
+                }
+                let t = self.topo.xfer_time(a, b, bytes);
+                if t < best.2 {
+                    best = (a, b, t);
+                }
+            }
+        }
+        let jt = best.2 * self.noise.comm_jitter(&mut self.rng);
+        (best.0, best.1, jt)
+    }
+
+    /// Transfer op between stages; uses the WAN backbone resource when
+    /// crossing regions so concurrent cross-region transfers contend.
+    fn transfer_op(&mut self, from: &[usize], to: &[usize], bytes: f64, deps: Vec<OpId>, tag: usize) -> OpId {
+        let (a, b, dur) = self.p2p(from, to, bytes);
+        let (ra, rb) = (self.topo.devices[a].region, self.topo.devices[b].region);
+        let mut resources = Vec::new();
+        if let Some(l) = self.wan_link(ra, rb) {
+            resources.push(l);
+        }
+        self.g.add(resources, dur, deps, tag)
+    }
+
+    /// Build ops for one task. Returns the "task finished" barrier op.
+    fn build_task(
+        &mut self,
+        t_idx: usize,
+        kind: TaskKind,
+        model: &crate::workflow::ModelSpec,
+        plan: &TaskPlan,
+        after: &[OpId],
+    ) -> OpId {
+        let s = plan.strategy;
+        let job = self.job;
+        let total_m = crate::costmodel::task_cost::total_microbatches(job);
+        let mut replica_ends: Vec<OpId> = Vec::new();
+        // Per (stage, shard) last-backward deps for the DP all-reduce.
+        let mut stage_bwd_deps: Vec<Vec<Vec<OpId>>> =
+            vec![vec![Vec::new(); s.tp.max(1)]; s.pp];
+
+        for i in 0..s.dp {
+            let nm_i = plan.replica_microbatches(total_m, i);
+            match kind {
+                TaskKind::Generation => {
+                    let end = self.build_generation_replica(t_idx, model, plan, i, after);
+                    replica_ends.push(end);
+                }
+                TaskKind::Inference | TaskKind::Training => {
+                    let end = self.build_pipeline_replica(
+                        t_idx,
+                        model,
+                        plan,
+                        i,
+                        nm_i,
+                        kind == TaskKind::Training,
+                        after,
+                        &mut stage_bwd_deps,
+                    );
+                    replica_ends.push(end);
+                }
+            }
+        }
+
+        // DP gradient all-reduce (training only, dp > 1).
+        if kind == TaskKind::Training && s.dp > 1 {
+            let mut ar_ops = Vec::new();
+            for j in 0..s.pp {
+                let vol = cv_dp(plan.layer_split[j], model.h1, model.h2, s.dp, s.tp);
+                for k in 0..s.tp {
+                    let devs = plan.dp_group(j, k);
+                    let dur = self.allreduce_time(&devs, vol);
+                    let deps = stage_bwd_deps[j][k].clone();
+                    ar_ops.push(self.g.add(devs, dur, deps, t_idx));
+                }
+            }
+            replica_ends.extend(ar_ops);
+        }
+        self.g.barrier(replica_ends)
+    }
+
+    /// Forward(/backward) pipeline for one replica of an inference or
+    /// training task.
+    #[allow(clippy::too_many_arguments)]
+    fn build_pipeline_replica(
+        &mut self,
+        t_idx: usize,
+        model: &crate::workflow::ModelSpec,
+        plan: &TaskPlan,
+        i: usize,
+        nm_i: usize,
+        training: bool,
+        after: &[OpId],
+        stage_bwd_deps: &mut [Vec<Vec<OpId>>],
+    ) -> OpId {
+        let s = plan.strategy;
+        let job = self.job;
+        let vol_pp = cv_pp(job.mbs, job.seq_total(), model.h1);
+        let mut fwd: Vec<Vec<OpId>> = vec![Vec::new(); s.pp]; // [j][m]
+        let mut last_ops: Vec<OpId> = Vec::new();
+
+        // Sampled sequence length per micro-batch (responses vary).
+        let seqs: Vec<usize> = (0..nm_i)
+            .map(|_| job.seq_in + self.noise.response_len(&mut self.rng, job.seq_out))
+            .collect();
+
+        // forward sweep
+        for m in 0..nm_i {
+            let mut carry: Option<OpId> = None;
+            for j in 0..s.pp {
+                let devs = plan.tp_group(i, j);
+                let dur = self.stage_time(model, plan, j, seqs[m], &devs, false);
+                let mut deps: Vec<OpId> = after.to_vec();
+                if let Some(c) = carry {
+                    deps.push(c);
+                }
+                let f = self.g.add(devs.clone(), dur, deps, t_idx);
+                fwd[j].push(f);
+                if j + 1 < s.pp {
+                    let next = plan.tp_group(i, j + 1);
+                    carry = Some(self.transfer_op(&devs, &next, vol_pp, vec![f], t_idx));
+                } else {
+                    carry = Some(f);
+                }
+            }
+            last_ops.push(carry.unwrap());
+        }
+
+        if !training {
+            return self.g.barrier(last_ops);
+        }
+
+        // backward sweep (2× forward cost), reverse stage order
+        let mut bwd_prev: Vec<Option<OpId>> = vec![None; nm_i];
+        let mut ends = Vec::new();
+        for m in 0..nm_i {
+            // backward for microbatch m starts after its own forward
+            let mut carry: Option<OpId> = Some(last_ops[m]);
+            for j in (0..s.pp).rev() {
+                let devs = plan.tp_group(i, j);
+                let dur = self.stage_time(model, plan, j, seqs[m], &devs, true);
+                let mut deps: Vec<OpId> = Vec::new();
+                if let Some(c) = carry {
+                    deps.push(c);
+                }
+                if let Some(p) = bwd_prev[m] {
+                    deps.push(p);
+                }
+                let b = self.g.add(devs.clone(), dur, deps, t_idx);
+                if j > 0 {
+                    let prev = plan.tp_group(i, j - 1);
+                    carry = Some(self.transfer_op(&devs, &prev, vol_pp, vec![b], t_idx));
+                } else {
+                    carry = None;
+                    ends.push(b);
+                }
+                bwd_prev[m] = Some(b);
+                if m == nm_i - 1 {
+                    for k in 0..s.tp {
+                        stage_bwd_deps[j][k].push(b);
+                    }
+                }
+            }
+        }
+        self.g.barrier(ends)
+    }
+
+    /// Duration of one pipeline-stage execution of one micro-batch:
+    /// compute (slowest TP shard) + per-layer TP all-reduces.
+    fn stage_time(
+        &mut self,
+        model: &crate::workflow::ModelSpec,
+        plan: &TaskPlan,
+        j: usize,
+        seq: usize,
+        devs: &[usize],
+        backward: bool,
+    ) -> f64 {
+        let s = plan.strategy;
+        let job = self.job;
+        let nl_j = plan.layer_split[j];
+        let flops = job.mbs as f64
+            * nl_j as f64
+            * crate::costmodel::compute::layer_flops(seq, model.h1, model.h2);
+        let mut comp: f64 = 0.0;
+        for &d in devs {
+            comp = comp.max(flops / (effective_flops(self.topo, d) * s.tp as f64));
+        }
+        if backward {
+            comp *= 2.0;
+        }
+        let comp = comp * self.noise.comp_jitter(&mut self.rng);
+        // TP all-reduces: one per layer (fwd), two per layer (bwd w/
+        // recompute folded into the factor).
+        let per_layer = if backward { 2.0 } else { 1.0 };
+        let vol_tp = cv_tp(job.mbs, seq, model.h1, s.tp);
+        let tp_time = if s.tp > 1 {
+            per_layer * nl_j as f64 * self.allreduce_time(devs, vol_tp / 2.0)
+        } else {
+            0.0
+        };
+        comp + tp_time
+    }
+
+    /// Generation replica: prefill + token-by-token decode, in decode
+    /// batches sized by what fits in memory.
+    fn build_generation_replica(
+        &mut self,
+        t_idx: usize,
+        model: &crate::workflow::ModelSpec,
+        plan: &TaskPlan,
+        i: usize,
+        after: &[OpId],
+    ) -> OpId {
+        let s = plan.strategy;
+        let job = self.job;
+        let local_batch = ((job.total_samples() as f64) * plan.dp_shares[i]).ceil() as usize;
+        // Decode batch bounded by the most memory-constrained device.
+        let task = crate::workflow::RlTask {
+            id: RlTaskId::ActorGen,
+            model: model.clone(),
+        };
+        let mut dbs = usize::MAX;
+        for j in 0..s.pp {
+            for &d in &plan.tp_group(i, j) {
+                let cap = self.topo.devices[d].spec().mem_bytes;
+                dbs = dbs.min(decode_batch_size(
+                    &task,
+                    job,
+                    plan.layer_split[j],
+                    s.tp,
+                    local_batch,
+                    cap,
+                ));
+            }
+        }
+        let dbs = dbs.max(1).min(local_batch.max(1));
+        let n_batches = local_batch.div_ceil(dbs).max(1);
+
+        let mut batch_ends = Vec::new();
+        let mut prev_batch: Option<OpId> = None;
+        for _b in 0..n_batches {
+            // Response length for this batch: max of dbs samples (the
+            // batch runs until its longest sequence finishes).
+            let resp = (0..dbs.min(64))
+                .map(|_| self.noise.response_len(&mut self.rng, job.seq_out))
+                .max()
+                .unwrap_or(job.seq_out);
+            let mut carry: Option<OpId> = prev_batch;
+            for j in 0..s.pp {
+                let devs = plan.tp_group(i, j);
+                let nl_j = plan.layer_split[j];
+                // prefill: forward over seq_in for dbs sequences
+                let prefill_flops = dbs as f64
+                    * nl_j as f64
+                    * crate::costmodel::compute::layer_flops(job.seq_in, model.h1, model.h2);
+                let mut prefill: f64 = 0.0;
+                for &d in &devs {
+                    prefill = prefill
+                        .max(prefill_flops / (effective_flops(self.topo, d) * s.tp as f64));
+                }
+                // decode: every token re-reads stage weights; batch of
+                // dbs amortizes one read.
+                let weight_bytes = B_BF16 * nl_j as f64 * layer_params(model.h1, model.h2);
+                let mut per_token: f64 = 0.0;
+                for &d in &devs {
+                    let hbm = self.topo.devices[d].spec().hbm_bps;
+                    per_token = per_token.max(weight_bytes / (hbm * s.tp as f64));
+                }
+                // TP all-reduce per layer per token (latency-bound).
+                let tp_tok = if s.tp > 1 {
+                    let order = self.topo.locality_order(&devs);
+                    let mut alpha_max: f64 = 0.0;
+                    for x in 0..order.len() {
+                        let (a, b) = (order[x], order[(x + 1) % order.len()]);
+                        alpha_max = alpha_max.max(self.topo.lat(a, b));
+                    }
+                    2.0 * (s.tp as f64 - 1.0) * alpha_max * nl_j as f64
+                } else {
+                    0.0
+                };
+                let decode = resp as f64 * (per_token + tp_tok);
+                let dur = (prefill + decode)
+                    * self.noise.comp_jitter(&mut self.rng);
+                let mut deps: Vec<OpId> = after.to_vec();
+                if let Some(c) = carry {
+                    deps.push(c);
+                }
+                let op = self.g.add(devs, dur, deps, t_idx);
+                carry = Some(op);
+            }
+            prev_batch = carry;
+            batch_ends.push(carry.unwrap());
+        }
+        self.g.barrier(batch_ends)
+    }
+}
+
+/// Simulate an execution plan; averages `cfg.iters` sampled iterations.
+pub fn simulate_plan(
+    topo: &DeviceTopology,
+    wf: &RlWorkflow,
+    job: &JobConfig,
+    plan: &ExecutionPlan,
+    cfg: &SimConfig,
+) -> SimResult {
+    let mut iter_times = Vec::with_capacity(cfg.iters);
+    let mut per_task_acc = vec![0.0f64; wf.n_tasks()];
+    let mut util_acc = 0.0;
+    for it in 0..cfg.iters {
+        let seed = cfg.seed ^ (it as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut b = Builder::new(topo, job, seed, cfg.noise);
+
+        // Build per-task subgraphs with dependency barriers. In async
+        // mode, edges out of actor-gen are dropped (the trainer consumes
+        // the previous iteration's rollouts) and the weight-sync cost is
+        // appended.
+        let gen_idx = wf.task_index(RlTaskId::ActorGen);
+        let mut barriers: Vec<Option<OpId>> = vec![None; wf.n_tasks()];
+        let order = wf.waves().concat();
+        for &t in &order {
+            let mut after: Vec<OpId> = Vec::new();
+            for &(from, to) in &wf.deps {
+                if to == t {
+                    let dropped = wf.mode == Mode::Async && Some(from) == gen_idx;
+                    if !dropped {
+                        if let Some(bar) = barriers[from] {
+                            after.push(bar);
+                        }
+                    }
+                }
+            }
+            let task = &wf.tasks[t];
+            let bar = b.build_task(t, task.kind(), &task.model, &plan.task_plans[t], &after);
+            barriers[t] = Some(bar);
+        }
+
+        // Weight propagation: reshard (sync) or train→gen sync (async),
+        // simulated as all-gather + p2p + broadcast ops.
+        if let (Some(tt), Some(tg)) = (wf.task_index(RlTaskId::ActorTrain), gen_idx) {
+            let pt = &plan.task_plans[tt];
+            let pg = &plan.task_plans[tg];
+            let m = &wf.tasks[tt].model;
+            let deps: Vec<OpId> = barriers.iter().flatten().cloned().collect();
+            let ag_vol = cv_all_gather(m.nl, m.h1, m.h2, pt.strategy.pp * pt.strategy.tp);
+            let devs0 = pt.replica_devices(0);
+            let dur_ag = b.allreduce_time(&devs0, ag_vol) / 2.0; // all-gather ≈ half an all-reduce
+            let ag = b.g.add(devs0, dur_ag, deps, usize::MAX - 1);
+            if wf.mode == Mode::Async || pt.devices() != pg.devices() {
+                let p2p_vol = cv_p2p(m.nl, m.h1, m.h2);
+                let x = b.transfer_op(&pt.devices(), &pg.devices(), p2p_vol, vec![ag], usize::MAX - 1);
+                let bc_vol = cv_all_gather(m.nl, m.h1, m.h2, pg.strategy.pp * pg.strategy.tp);
+                let gdevs = pg.replica_devices(0);
+                let dur_bc = b.allreduce_time(&gdevs, bc_vol) / 2.0;
+                b.g.add(gdevs, dur_bc, vec![x], usize::MAX - 1);
+            }
+        }
+
+        let outcome = b.g.simulate();
+        iter_times.push(outcome.makespan);
+        for t in 0..wf.n_tasks() {
+            let f = b.g.tag_finish(&outcome, t);
+            if f.is_finite() {
+                per_task_acc[t] += f;
+            }
+        }
+        let busy: f64 = outcome.busy[..topo.n()].iter().sum();
+        util_acc += busy / (outcome.makespan * topo.n() as f64);
+    }
+    let s = crate::util::stats::summarize(&iter_times);
+    SimResult {
+        iter_time: s.mean,
+        iter_std: s.std,
+        per_task: per_task_acc.iter().map(|x| x / cfg.iters as f64).collect(),
+        utilization: util_acc / cfg.iters as f64,
+        throughput: job.total_samples() as f64 / s.mean,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::{ParallelStrategy, TaskPlan};
+    use crate::topology::{build_testbed, Scenario, TestbedSpec};
+    use crate::workflow::{Algo, ModelSpec};
+
+    fn make_plan(wf: &RlWorkflow, n: usize, per_task: usize) -> ExecutionPlan {
+        let mut task_plans = Vec::new();
+        for (t, task) in wf.tasks.iter().enumerate() {
+            let s = ParallelStrategy::new((per_task / 8).max(1), 2, 4);
+            let start = (t * per_task) % n;
+            let devs: Vec<usize> = (start..start + per_task).collect();
+            task_plans.push(TaskPlan::uniform(s, task.model.nl, devs));
+        }
+        ExecutionPlan {
+            task_groups: vec![(0..wf.n_tasks()).collect()],
+            gpu_groups: vec![(0..n).collect()],
+            task_plans,
+        }
+    }
+
+    fn fast_cfg() -> SimConfig {
+        SimConfig { iters: 2, seed: 7, noise: NoiseModel::default() }
+    }
+
+    #[test]
+    fn simulates_grpo_plan() {
+        let topo = build_testbed(Scenario::SingleRegion, &TestbedSpec::default());
+        let job = JobConfig::tiny();
+        let wf = RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_4b());
+        let plan = make_plan(&wf, 64, 16);
+        let r = simulate_plan(&topo, &wf, &job, &plan, &fast_cfg());
+        assert!(r.iter_time > 0.0 && r.iter_time.is_finite());
+        assert!(r.utilization > 0.0 && r.utilization <= 1.0);
+        assert_eq!(r.per_task.len(), 4);
+    }
+
+    #[test]
+    fn wan_slower_than_local() {
+        let job = JobConfig::tiny();
+        let wf = RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_4b());
+        let plan = make_plan(&wf, 64, 16);
+        let local = build_testbed(Scenario::SingleRegion, &TestbedSpec::default());
+        let wan = build_testbed(Scenario::MultiContinent, &TestbedSpec::default());
+        let r_local = simulate_plan(&local, &wf, &job, &plan, &fast_cfg());
+        let r_wan = simulate_plan(&wan, &wf, &job, &plan, &fast_cfg());
+        assert!(
+            r_wan.iter_time > 1.5 * r_local.iter_time,
+            "wan {} local {}",
+            r_wan.iter_time,
+            r_local.iter_time
+        );
+    }
+
+    #[test]
+    fn async_not_slower_than_sync_same_plan() {
+        let topo = build_testbed(Scenario::SingleRegion, &TestbedSpec::default());
+        let job = JobConfig::tiny();
+        let model = ModelSpec::qwen_4b();
+        let sync = RlWorkflow::new(Algo::Grpo, Mode::Sync, model.clone());
+        let asyn = RlWorkflow::new(Algo::Grpo, Mode::Async, model);
+        // Disaggregated plan: generation on its own devices.
+        let plan = make_plan(&sync, 64, 16);
+        let cfg = SimConfig { iters: 2, seed: 3, noise: NoiseModel::off() };
+        let r_sync = simulate_plan(&topo, &sync, &job, &plan, &cfg);
+        let r_async = simulate_plan(&topo, &asyn, &job, &plan, &cfg);
+        assert!(r_async.iter_time <= r_sync.iter_time * 1.05);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let topo = build_testbed(Scenario::MultiCountry, &TestbedSpec::default());
+        let job = JobConfig::tiny();
+        let wf = RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_4b());
+        let plan = make_plan(&wf, 64, 16);
+        let a = simulate_plan(&topo, &wf, &job, &plan, &fast_cfg());
+        let b = simulate_plan(&topo, &wf, &job, &plan, &fast_cfg());
+        assert_eq!(a.iter_time, b.iter_time);
+    }
+
+    #[test]
+    fn bigger_model_slower() {
+        let topo = build_testbed(Scenario::SingleRegion, &TestbedSpec::default());
+        let job = JobConfig::tiny();
+        let wf4 = RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_4b());
+        let wf14 = RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_14b());
+        let p4 = make_plan(&wf4, 64, 16);
+        let p14 = make_plan(&wf14, 64, 16);
+        let r4 = simulate_plan(&topo, &wf4, &job, &p4, &fast_cfg());
+        let r14 = simulate_plan(&topo, &wf14, &job, &p14, &fast_cfg());
+        assert!(r14.iter_time > r4.iter_time);
+    }
+
+    #[test]
+    fn sim_in_same_ballpark_as_cost_model() {
+        // The two paths are different but should land within ~2.5× of
+        // each other for a sane local plan (Figure 7's premise).
+        let topo = build_testbed(Scenario::SingleRegion, &TestbedSpec::default());
+        let job = JobConfig::default();
+        let wf = RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_4b());
+        let plan = make_plan(&wf, 64, 16);
+        let cm = crate::costmodel::CostModel::new(&topo, &wf, &job);
+        let pred = cm.plan_cost(&plan).iter_time;
+        let cfg = SimConfig { iters: 2, seed: 11, noise: NoiseModel::default() };
+        let meas = simulate_plan(&topo, &wf, &job, &plan, &cfg).iter_time;
+        let ratio = pred / meas;
+        assert!(
+            (0.4..2.5).contains(&ratio),
+            "pred {pred:.1}s vs meas {meas:.1}s (ratio {ratio:.2})"
+        );
+    }
+}

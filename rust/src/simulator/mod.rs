@@ -1,0 +1,19 @@
+//! Discrete-event cluster simulator — the testbed substitute.
+//!
+//! The paper evaluates on 64 physical GPUs with traffic-shaped WAN links;
+//! we replay execution plans on a discrete-event simulation of the same
+//! device/network graphs. The simulator is deliberately a *different,
+//! more detailed* code path than the analytical cost model (§3.3 /
+//! Appendix B): it schedules individual micro-batches through pipeline
+//! stages with device and link contention, samples response lengths and
+//! multiplicative compute/communication jitter, and derives pipeline
+//! bubbles and task overlap from the event order rather than closed
+//! forms. Cost-model validation (paper Figure 7) compares the two.
+
+pub mod des;
+pub mod noise;
+pub mod execsim;
+
+pub use des::{OpId, SimGraph};
+pub use execsim::{simulate_plan, SimConfig, SimResult};
+pub use noise::NoiseModel;

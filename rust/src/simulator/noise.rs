@@ -1,0 +1,112 @@
+//! Stochastic components of the simulator: multiplicative lognormal
+//! jitter on compute/communication and the response-length distribution
+//! for generation (real RL rollouts rarely use the full budget; the
+//! paper's GSM8K workload produces a long-tailed length mix).
+
+use crate::util::rng::Rng;
+
+/// Noise configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct NoiseModel {
+    /// Sigma of lognormal jitter on compute durations.
+    pub comp_sigma: f64,
+    /// Sigma of lognormal jitter on communication durations.
+    pub comm_sigma: f64,
+    /// Mean response length as a fraction of `seq_out`.
+    pub mean_resp_frac: f64,
+    /// Coefficient of variation of response lengths.
+    pub resp_cv: f64,
+}
+
+impl Default for NoiseModel {
+    fn default() -> Self {
+        NoiseModel {
+            comp_sigma: 0.03,
+            comm_sigma: 0.08,
+            mean_resp_frac: 0.70,
+            resp_cv: 0.35,
+        }
+    }
+}
+
+impl NoiseModel {
+    /// Deterministic model (used by tests and the ILP-vs-sim checks).
+    pub fn off() -> Self {
+        NoiseModel { comp_sigma: 0.0, comm_sigma: 0.0, mean_resp_frac: 0.70, resp_cv: 0.0 }
+    }
+
+    /// Jitter factor with E[x] = 1 for compute.
+    pub fn comp_jitter(&self, rng: &mut Rng) -> f64 {
+        jitter(rng, self.comp_sigma)
+    }
+
+    /// Jitter factor with E[x] = 1 for communication.
+    pub fn comm_jitter(&self, rng: &mut Rng) -> f64 {
+        jitter(rng, self.comm_sigma)
+    }
+
+    /// Sample a response length in `[1, seq_out]`.
+    pub fn response_len(&self, rng: &mut Rng, seq_out: usize) -> usize {
+        let mean = self.mean_resp_frac * seq_out as f64;
+        if self.resp_cv == 0.0 {
+            return (mean.round() as usize).clamp(1, seq_out);
+        }
+        // Lognormal with the requested mean and CV.
+        let sigma2 = (1.0 + self.resp_cv * self.resp_cv).ln();
+        let mu = mean.ln() - sigma2 / 2.0;
+        let x = rng.lognormal(mu, sigma2.sqrt());
+        (x.round() as usize).clamp(1, seq_out)
+    }
+
+    /// Expected response length (what an oracle cost model would use).
+    pub fn expected_response_len(&self, seq_out: usize) -> f64 {
+        self.mean_resp_frac * seq_out as f64
+    }
+}
+
+fn jitter(rng: &mut Rng, sigma: f64) -> f64 {
+    if sigma == 0.0 {
+        return 1.0;
+    }
+    // lognormal(μ=-σ²/2, σ) has mean exactly 1.
+    rng.lognormal(-sigma * sigma / 2.0, sigma)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jitter_mean_one() {
+        let nm = NoiseModel::default();
+        let mut rng = Rng::new(1);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| nm.comm_jitter(&mut rng)).sum::<f64>() / n as f64;
+        assert!((mean - 1.0).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn off_is_deterministic() {
+        let nm = NoiseModel::off();
+        let mut rng = Rng::new(2);
+        assert_eq!(nm.comp_jitter(&mut rng), 1.0);
+        assert_eq!(nm.response_len(&mut rng, 1000), 700);
+    }
+
+    #[test]
+    fn response_len_statistics() {
+        let nm = NoiseModel::default();
+        let mut rng = Rng::new(3);
+        let n = 50_000;
+        let lens: Vec<f64> = (0..n).map(|_| nm.response_len(&mut rng, 1024) as f64).collect();
+        let mean = lens.iter().sum::<f64>() / n as f64;
+        // Mean close to 0.7*1024 (clamping pulls it down slightly).
+        assert!((mean - 716.8).abs() < 40.0, "mean {mean}");
+        assert!(lens.iter().all(|&l| (1.0..=1024.0).contains(&l)));
+        // Actually long-tailed: p95 well above mean.
+        let mut sorted = lens.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p95 = crate::util::stats::percentile_sorted(&sorted, 95.0);
+        assert!(p95 > mean * 1.3);
+    }
+}

@@ -1,0 +1,292 @@
+//! Best-first branch & bound over the binary variables of a mixed 0-1
+//! LP. LP relaxations come from [`super::simplex`]; fractional binaries
+//! are branched most-fractional-first; incumbent solutions come from an
+//! LP-rounding heuristic plus exact subtree leaves.
+
+use super::simplex::{solve, Cmp, Lp, LpOutcome};
+use std::time::Instant;
+
+/// Solver configuration.
+#[derive(Debug, Clone)]
+pub struct BnbConfig {
+    /// Wall-clock budget in seconds.
+    pub time_limit: f64,
+    /// Node limit (safety).
+    pub max_nodes: usize,
+    /// Absolute optimality gap at which a node is pruned.
+    pub gap: f64,
+}
+
+impl Default for BnbConfig {
+    fn default() -> Self {
+        BnbConfig { time_limit: 60.0, max_nodes: 200_000, gap: 1e-6 }
+    }
+}
+
+/// Result of a branch & bound run.
+#[derive(Debug, Clone)]
+pub struct BnbResult {
+    /// Best feasible (integral) solution found, if any.
+    pub x: Option<Vec<f64>>,
+    pub obj: f64,
+    /// Best bound proven (equal to `obj` when `optimal`).
+    pub bound: f64,
+    pub optimal: bool,
+    pub nodes: usize,
+    pub elapsed: f64,
+}
+
+#[derive(Clone, Debug)]
+struct Node {
+    fixed: Vec<(usize, f64)>,
+    bound: f64,
+}
+
+impl Node {
+    fn depth(&self) -> usize {
+        self.fixed.len()
+    }
+}
+
+/// Solve `lp` with the variables in `binaries` restricted to {0,1}.
+pub fn solve_milp(lp: &Lp, binaries: &[usize], cfg: &BnbConfig) -> BnbResult {
+    let t0 = Instant::now();
+    let minimize = !lp.maximize;
+    let better = |a: f64, b: f64| if minimize { a < b } else { a > b };
+
+    let mut best_obj = if minimize { f64::INFINITY } else { f64::NEG_INFINITY };
+    let mut best_x: Option<Vec<f64>> = None;
+    let mut nodes_explored = 0usize;
+
+    // Add 0/1 upper bounds for the binaries once.
+    let base_lp = {
+        let mut l = lp.clone();
+        for &b in binaries {
+            l.constrain(vec![(b, 1.0)], Cmp::Le, 1.0);
+        }
+        l
+    };
+
+    let relax = |fixed: &[(usize, f64)]| -> LpOutcome {
+        let mut l = base_lp.clone();
+        for &(v, val) in fixed {
+            l.constrain(vec![(v, 1.0)], Cmp::Eq, val);
+        }
+        solve(&l)
+    };
+
+    let root = relax(&[]);
+    let root_bound = match &root {
+        LpOutcome::Optimal { obj, .. } => *obj,
+        LpOutcome::Infeasible => {
+            return BnbResult {
+                x: None,
+                obj: best_obj,
+                bound: best_obj,
+                optimal: true,
+                nodes: 1,
+                elapsed: t0.elapsed().as_secs_f64(),
+            }
+        }
+        LpOutcome::Unbounded => {
+            return BnbResult {
+                x: None,
+                obj: best_obj,
+                bound: if minimize { f64::NEG_INFINITY } else { f64::INFINITY },
+                optimal: false,
+                nodes: 1,
+                elapsed: t0.elapsed().as_secs_f64(),
+            }
+        }
+    };
+
+    let mut queue: Vec<Node> = vec![Node { fixed: Vec::new(), bound: root_bound }];
+    let mut timed_out = false;
+
+    while !queue.is_empty() {
+        // Best-first with depth dives: pick the best bound, breaking
+        // (near-)ties toward the deepest node so degenerate plateaus
+        // still produce incumbents quickly.
+        let mut best_i = 0;
+        for (i, n) in queue.iter().enumerate() {
+            let cur = &queue[best_i];
+            let tie = (n.bound - cur.bound).abs() <= 1e-9 * (1.0 + cur.bound.abs());
+            if (tie && n.depth() > cur.depth()) || (!tie && better(n.bound, cur.bound)) {
+                best_i = i;
+            }
+        }
+        let node = queue.swap_remove(best_i);
+
+        nodes_explored += 1;
+        if nodes_explored > cfg.max_nodes || t0.elapsed().as_secs_f64() > cfg.time_limit {
+            timed_out = true;
+            queue.push(node);
+            break;
+        }
+        // Prune by incumbent.
+        if best_x.is_some() && !strictly_improving(node.bound, best_obj, minimize, cfg.gap) {
+            continue;
+        }
+        let (x, obj) = match relax(&node.fixed) {
+            LpOutcome::Optimal { x, obj } => (x, obj),
+            _ => continue, // infeasible subtree
+        };
+        if best_x.is_some() && !strictly_improving(obj, best_obj, minimize, cfg.gap) {
+            continue;
+        }
+        // Most fractional binary.
+        let mut branch_var = usize::MAX;
+        let mut best_frac = -1.0;
+        for &b in binaries {
+            let v = x[b];
+            let dist = (v - v.round()).abs();
+            if dist > 1e-6 {
+                let frac_score = 0.5 - (v - v.floor() - 0.5).abs();
+                if frac_score > best_frac {
+                    best_frac = frac_score;
+                    branch_var = b;
+                }
+            }
+        }
+        if branch_var == usize::MAX {
+            if best_x.is_none() || better(obj, best_obj) {
+                best_obj = obj;
+                best_x = Some(x);
+            }
+            continue;
+        }
+        // Rounding heuristic for an early incumbent.
+        if best_x.is_none() {
+            if let Some((rx, robj)) = try_round(&base_lp, binaries, &x) {
+                best_obj = robj;
+                best_x = Some(rx);
+            }
+        }
+        let toward = x[branch_var].round().clamp(0.0, 1.0);
+        for val in [toward, 1.0 - toward] {
+            let mut fixed = node.fixed.clone();
+            fixed.push((branch_var, val));
+            queue.push(Node { fixed, bound: obj });
+        }
+    }
+
+    let mut proven_bound = best_obj;
+    if timed_out || !queue.is_empty() {
+        proven_bound = best_obj;
+        for n in &queue {
+            if better(n.bound, proven_bound) {
+                proven_bound = n.bound;
+            }
+        }
+        if best_x.is_none() {
+            proven_bound = root_bound;
+        }
+    }
+
+    BnbResult {
+        optimal: !timed_out && queue.is_empty() && best_x.is_some(),
+        x: best_x,
+        obj: best_obj,
+        bound: proven_bound,
+        nodes: nodes_explored,
+        elapsed: t0.elapsed().as_secs_f64(),
+    }
+}
+
+/// Fix all binaries to rounded values and re-solve; returns the rounded
+/// solution if feasible.
+fn try_round(base: &Lp, binaries: &[usize], x: &[f64]) -> Option<(Vec<f64>, f64)> {
+    let mut l = base.clone();
+    for &b in binaries {
+        l.constrain(vec![(b, 1.0)], Cmp::Eq, x[b].round().clamp(0.0, 1.0));
+    }
+    match solve(&l) {
+        LpOutcome::Optimal { x, obj } => Some((x, obj)),
+        _ => None,
+    }
+}
+
+fn strictly_improving(bound: f64, incumbent: f64, minimize: bool, gap: f64) -> bool {
+    if minimize {
+        bound < incumbent - gap
+    } else {
+        bound > incumbent + gap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> BnbConfig {
+        BnbConfig { time_limit: 10.0, max_nodes: 50_000, gap: 1e-6 }
+    }
+
+    #[test]
+    fn knapsack() {
+        // max 10a + 13b + 7c s.t. 3a + 4b + 2c ≤ 6, binary → a+c (17) vs
+        // b+c (20, weight 6 OK) → optimal 20.
+        let mut lp = Lp::new(3, vec![10.0, 13.0, 7.0], true);
+        lp.constrain(vec![(0, 3.0), (1, 4.0), (2, 2.0)], Cmp::Le, 6.0);
+        let r = solve_milp(&lp, &[0, 1, 2], &cfg());
+        assert!(r.optimal);
+        assert!((r.obj - 20.0).abs() < 1e-6, "obj {}", r.obj);
+        let x = r.x.unwrap();
+        assert!(x[1] > 0.5 && x[2] > 0.5 && x[0] < 0.5);
+    }
+
+    #[test]
+    fn matches_exhaustive_on_random_instances() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(42);
+        for case in 0..20 {
+            let n = 6;
+            let c: Vec<f64> = (0..n).map(|_| rng.range_f64(-5.0, 10.0)).collect();
+            let w: Vec<f64> = (0..n).map(|_| rng.range_f64(1.0, 5.0)).collect();
+            let cap = rng.range_f64(4.0, 12.0);
+            let mut lp = Lp::new(n, c.clone(), true);
+            lp.constrain(w.iter().cloned().enumerate().collect(), Cmp::Le, cap);
+            let r = solve_milp(&lp, &(0..n).collect::<Vec<_>>(), &cfg());
+            // Exhaustive check.
+            let mut best = 0.0f64;
+            for mask in 0..(1usize << n) {
+                let weight: f64 = (0..n).filter(|i| mask >> i & 1 == 1).map(|i| w[i]).sum();
+                if weight <= cap + 1e-9 {
+                    let val: f64 = (0..n).filter(|i| mask >> i & 1 == 1).map(|i| c[i]).sum();
+                    best = best.max(val);
+                }
+            }
+            assert!(r.optimal, "case {case} not optimal");
+            assert!((r.obj - best).abs() < 1e-5, "case {case}: {} vs {best}", r.obj);
+        }
+    }
+
+    #[test]
+    fn mixed_integer_with_continuous() {
+        // min 2x + y, x binary, y ≥ 0 continuous, x + y ≥ 1.5.
+        // x=1 → y=0.5, obj 2.5 ; x=0 → y=1.5, obj 1.5 → optimal 1.5.
+        let mut lp = Lp::new(2, vec![2.0, 1.0], false);
+        lp.constrain(vec![(0, 1.0), (1, 1.0)], Cmp::Ge, 1.5);
+        let r = solve_milp(&lp, &[0], &cfg());
+        assert!(r.optimal);
+        assert!((r.obj - 1.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn infeasible_milp() {
+        let mut lp = Lp::new(2, vec![1.0, 1.0], false);
+        lp.constrain(vec![(0, 1.0), (1, 1.0)], Cmp::Ge, 3.0); // binaries sum ≤ 2
+        let r = solve_milp(&lp, &[0, 1], &cfg());
+        assert!(r.x.is_none());
+    }
+
+    #[test]
+    fn respects_node_budget() {
+        let mut lp = Lp::new(12, (0..12).map(|i| (i % 5) as f64 + 0.37).collect(), true);
+        let terms: Vec<(usize, f64)> = (0..12).map(|i| (i, ((i * 7) % 3) as f64 + 1.1)).collect();
+        lp.constrain(terms, Cmp::Le, 9.0);
+        let tight = BnbConfig { time_limit: 10.0, max_nodes: 3, gap: 1e-6 };
+        let r = solve_milp(&lp, &(0..12).collect::<Vec<_>>(), &tight);
+        assert!(r.nodes <= 4);
+    }
+}

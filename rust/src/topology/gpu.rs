@@ -1,0 +1,152 @@
+//! GPU catalog — paper Table 1, plus a few extra models so the catalog is
+//! extensible (the paper's Limitations section notes only three NVIDIA
+//! models were evaluated; we keep those three as the evaluation default).
+
+use crate::util::units::{GBPS_BYTES, GIB, TFLOPS};
+
+/// Static specification of a GPU model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    pub arch: &'static str,
+    /// Memory capacity in bytes.
+    pub mem_bytes: f64,
+    /// FP16/BF16 dense throughput in FLOP/s.
+    pub fp16_flops: f64,
+    /// HBM/GDDR bandwidth in bytes/s.
+    pub hbm_bps: f64,
+    /// Intra-machine interconnect (NVLink or PCIe) in bytes/s per direction.
+    pub link_bps: f64,
+    /// Achievable fraction of peak FLOPs for dense transformer work
+    /// (model-FLOPs-utilization ceiling used by the simulator; the
+    /// analytical cost model uses peak, as the paper's Appendix B does).
+    pub mfu: f64,
+}
+
+/// GPU models known to the catalog. Table 1 rows first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum GpuModel {
+    A100,
+    L40S,
+    L4,
+    /// Extension models (not in the paper's evaluation; used by tests to
+    /// check the catalog is not hard-coded to three entries).
+    V100,
+    H100,
+}
+
+impl GpuModel {
+    /// Table 1. GPU specifications.
+    ///
+    /// | Model | Arch   | Size (GB) | FP16 (TFLOPS) | HBM (GB/s) | Link (GB/s) |
+    /// |-------|--------|-----------|---------------|------------|-------------|
+    /// | A100  | Ampere | 40        | 312           | 2039       | 600         |
+    /// | L40S  | Ada    | 48        | 366           | 864        | 64          |
+    /// | L4    | Ada    | 24        | 121           | 300        | 64          |
+    pub fn spec(self) -> GpuSpec {
+        match self {
+            GpuModel::A100 => GpuSpec {
+                name: "A100",
+                arch: "Ampere",
+                mem_bytes: 40.0 * GIB,
+                fp16_flops: 312.0 * TFLOPS,
+                hbm_bps: 2039.0 * GBPS_BYTES,
+                link_bps: 600.0 * GBPS_BYTES,
+                mfu: 0.48,
+            },
+            GpuModel::L40S => GpuSpec {
+                name: "L40S",
+                arch: "Ada",
+                mem_bytes: 48.0 * GIB,
+                fp16_flops: 366.0 * TFLOPS,
+                hbm_bps: 864.0 * GBPS_BYTES,
+                link_bps: 64.0 * GBPS_BYTES,
+                mfu: 0.38,
+            },
+            GpuModel::L4 => GpuSpec {
+                name: "L4",
+                arch: "Ada",
+                mem_bytes: 24.0 * GIB,
+                fp16_flops: 121.0 * TFLOPS,
+                hbm_bps: 300.0 * GBPS_BYTES,
+                link_bps: 64.0 * GBPS_BYTES,
+                mfu: 0.35,
+            },
+            GpuModel::V100 => GpuSpec {
+                name: "V100",
+                arch: "Volta",
+                mem_bytes: 32.0 * GIB,
+                fp16_flops: 125.0 * TFLOPS,
+                hbm_bps: 900.0 * GBPS_BYTES,
+                link_bps: 300.0 * GBPS_BYTES,
+                mfu: 0.40,
+            },
+            GpuModel::H100 => GpuSpec {
+                name: "H100",
+                arch: "Hopper",
+                mem_bytes: 80.0 * GIB,
+                fp16_flops: 989.0 * TFLOPS,
+                hbm_bps: 3350.0 * GBPS_BYTES,
+                link_bps: 900.0 * GBPS_BYTES,
+                mfu: 0.45,
+            },
+        }
+    }
+
+    /// The three models from the paper's testbed.
+    pub fn table1() -> [GpuModel; 3] {
+        [GpuModel::A100, GpuModel::L40S, GpuModel::L4]
+    }
+
+    pub fn parse(s: &str) -> Option<GpuModel> {
+        match s.to_ascii_lowercase().as_str() {
+            "a100" => Some(GpuModel::A100),
+            "l40s" => Some(GpuModel::L40S),
+            "l4" => Some(GpuModel::L4),
+            "v100" => Some(GpuModel::V100),
+            "h100" => Some(GpuModel::H100),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper() {
+        let a100 = GpuModel::A100.spec();
+        assert_eq!(a100.mem_bytes, 40.0 * GIB);
+        assert_eq!(a100.fp16_flops, 312.0 * TFLOPS);
+        assert_eq!(a100.hbm_bps, 2039.0 * GBPS_BYTES);
+        assert_eq!(a100.link_bps, 600.0 * GBPS_BYTES);
+
+        let l40s = GpuModel::L40S.spec();
+        assert_eq!(l40s.mem_bytes, 48.0 * GIB);
+        assert_eq!(l40s.fp16_flops, 366.0 * TFLOPS);
+
+        let l4 = GpuModel::L4.spec();
+        assert_eq!(l4.fp16_flops, 121.0 * TFLOPS);
+        assert_eq!(l4.hbm_bps, 300.0 * GBPS_BYTES);
+    }
+
+    #[test]
+    fn l40s_flops_beat_a100_but_hbm_does_not() {
+        // The crux of the heterogeneity: L40S has *more* peak FLOPs than
+        // A100 but less than half the HBM bandwidth, so generation
+        // (HBM-bound) and training (compute-bound) prefer different GPUs.
+        let a = GpuModel::A100.spec();
+        let l = GpuModel::L40S.spec();
+        assert!(l.fp16_flops > a.fp16_flops);
+        assert!(l.hbm_bps < a.hbm_bps / 2.0);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for m in [GpuModel::A100, GpuModel::L40S, GpuModel::L4, GpuModel::V100, GpuModel::H100] {
+            assert_eq!(GpuModel::parse(m.spec().name), Some(m));
+        }
+        assert_eq!(GpuModel::parse("rtx5090"), None);
+    }
+}

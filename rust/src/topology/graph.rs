@@ -1,0 +1,342 @@
+//! The device topology graph `G_D = (V_D, E_D, comp, mem, hbm, A, B)`
+//! (paper §3.1 / Appendix B.1): N devices, each labeled with computation
+//! capability, memory capacity and HBM bandwidth; each edge labeled with
+//! latency α and bandwidth β.
+
+use super::gpu::{GpuModel, GpuSpec};
+use crate::util::units::MS;
+
+/// One GPU with its placement in the machine/zone/region hierarchy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Device {
+    pub id: usize,
+    pub gpu: GpuModel,
+    /// Machine (server) index; GPUs on a machine share NVLink/PCIe.
+    pub machine: usize,
+    /// Availability zone index (unique per region in our builders).
+    pub zone: usize,
+    /// Region index into the testbed's region list.
+    pub region: usize,
+}
+
+impl Device {
+    pub fn spec(&self) -> GpuSpec {
+        self.gpu.spec()
+    }
+
+    /// Achievable sustained FLOP/s (peak × MFU ceiling). Both the cost
+    /// model and the simulator use this — it is what the HetRL profiler
+    /// measures on real hardware ("computation power (TFLOPs)", §4.1).
+    #[inline]
+    pub fn effective_flops(&self) -> f64 {
+        let s = self.spec();
+        s.fp16_flops * s.mfu
+    }
+}
+
+/// Full device topology with dense α/β matrices (seconds, bytes/s).
+#[derive(Debug, Clone)]
+pub struct DeviceTopology {
+    pub devices: Vec<Device>,
+    /// `alpha[i][j]`: one-way latency in seconds (0 on the diagonal).
+    pub alpha: Vec<Vec<f64>>,
+    /// `beta[i][j]`: bandwidth in bytes/s (infinite on the diagonal).
+    pub beta: Vec<Vec<f64>>,
+    /// Region names for display.
+    pub region_names: Vec<String>,
+}
+
+impl DeviceTopology {
+    pub fn n(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Total FP16 compute across devices (FLOP/s).
+    pub fn total_flops(&self) -> f64 {
+        self.devices.iter().map(|d| d.spec().fp16_flops).sum()
+    }
+
+    /// Total memory capacity (bytes).
+    pub fn total_mem(&self) -> f64 {
+        self.devices.iter().map(|d| d.spec().mem_bytes).sum()
+    }
+
+    /// Latency between two devices (one-way, seconds).
+    #[inline]
+    pub fn lat(&self, a: usize, b: usize) -> f64 {
+        self.alpha[a][b]
+    }
+
+    /// Bandwidth between two devices (bytes/s).
+    #[inline]
+    pub fn bw(&self, a: usize, b: usize) -> f64 {
+        self.beta[a][b]
+    }
+
+    /// α + volume/β for a point-to-point transfer.
+    #[inline]
+    pub fn xfer_time(&self, a: usize, b: usize, bytes: f64) -> f64 {
+        if a == b {
+            return 0.0;
+        }
+        self.alpha[a][b] + bytes / self.beta[a][b]
+    }
+
+    /// Locality score between two devices: 3 = same machine, 2 = same
+    /// zone, 1 = same region, 0 = cross-region. Used by the EA's swap
+    /// local search (paper §3.4: "machine-, zone-, and region-level
+    /// affinities").
+    #[inline]
+    pub fn affinity(&self, a: usize, b: usize) -> u32 {
+        let (da, db) = (&self.devices[a], &self.devices[b]);
+        if da.machine == db.machine {
+            3
+        } else if da.zone == db.zone {
+            2
+        } else if da.region == db.region {
+            1
+        } else {
+            0
+        }
+    }
+
+    /// Sum of pairwise affinities within a device set (the EA's
+    /// group-locality objective).
+    pub fn group_locality(&self, devs: &[usize]) -> f64 {
+        let mut s = 0.0;
+        for (idx, &a) in devs.iter().enumerate() {
+            for &b in devs.iter().skip(idx + 1) {
+                s += self.affinity(a, b) as f64;
+            }
+        }
+        s
+    }
+
+    /// Devices sorted by locality (region, zone, machine, id): the
+    /// nearest-neighbour ring order used by the comm cost heuristics.
+    pub fn locality_order(&self, devs: &[usize]) -> Vec<usize> {
+        let mut v = devs.to_vec();
+        v.sort_by_key(|&d| {
+            let dev = &self.devices[d];
+            (dev.region, dev.zone, dev.machine, dev.id)
+        });
+        v
+    }
+
+    /// Count devices of each GPU model, for display.
+    pub fn census(&self) -> Vec<(GpuModel, usize)> {
+        let mut counts: Vec<(GpuModel, usize)> = Vec::new();
+        for d in &self.devices {
+            match counts.iter_mut().find(|(m, _)| *m == d.gpu) {
+                Some((_, c)) => *c += 1,
+                None => counts.push((d.gpu, 1)),
+            }
+        }
+        counts.sort_by_key(|(m, _)| *m);
+        counts
+    }
+
+    /// Restrict the topology to a subset of device ids, renumbering them
+    /// 0..k. Returns the sub-topology and the old-id mapping.
+    pub fn subset(&self, ids: &[usize]) -> (DeviceTopology, Vec<usize>) {
+        let k = ids.len();
+        let mut devices = Vec::with_capacity(k);
+        for (new_id, &old) in ids.iter().enumerate() {
+            let mut d = self.devices[old];
+            d.id = new_id;
+            devices.push(d);
+        }
+        let mut alpha = vec![vec![0.0; k]; k];
+        let mut beta = vec![vec![f64::INFINITY; k]; k];
+        for (i, &a) in ids.iter().enumerate() {
+            for (j, &b) in ids.iter().enumerate() {
+                alpha[i][j] = self.alpha[a][b];
+                beta[i][j] = self.beta[a][b];
+            }
+        }
+        (
+            DeviceTopology {
+                devices,
+                alpha,
+                beta,
+                region_names: self.region_names.clone(),
+            },
+            ids.to_vec(),
+        )
+    }
+}
+
+/// Builder that places machines (8 GPUs each by default) into regions and
+/// wires up the three-tier link model:
+/// * same machine: GPU `link_bps` (NVLink/PCIe), ~25 µs launch latency;
+/// * same region (different machine): `intra_bw` / `intra_lat`
+///   (EFA-class 100 Gbps, 0.2 ms unless overridden);
+/// * cross-region: the region graph's α/β (or explicit overrides).
+#[derive(Debug, Clone)]
+pub struct TopologyBuilder {
+    machines: Vec<(GpuModel, usize, usize)>, // (model, gpus, region)
+    region_names: Vec<String>,
+    /// (region_i, region_j) -> (delay s, bw bytes/s); symmetric.
+    region_links: Vec<Vec<(f64, f64)>>,
+    intra_lat: f64,
+    intra_bw: f64,
+    /// Optional per-machine bandwidth cap (edge machines in scenario 2).
+    machine_bw_cap: Vec<Option<f64>>,
+}
+
+impl TopologyBuilder {
+    pub fn new(region_names: Vec<String>, region_links: Vec<Vec<(f64, f64)>>) -> Self {
+        TopologyBuilder {
+            machines: Vec::new(),
+            region_names,
+            region_links,
+            intra_lat: 0.2 * MS,
+            intra_bw: 100.0e9 / 8.0, // 100 Gbps EFA-class
+            machine_bw_cap: Vec::new(),
+        }
+    }
+
+    pub fn intra_link(mut self, lat_s: f64, bw_bps: f64) -> Self {
+        self.intra_lat = lat_s;
+        self.intra_bw = bw_bps;
+        self
+    }
+
+    /// Add a machine of `count` GPUs of `model` in `region`.
+    pub fn machine(mut self, model: GpuModel, count: usize, region: usize) -> Self {
+        assert!(region < self.region_names.len());
+        self.machines.push((model, count, region));
+        self.machine_bw_cap.push(None);
+        self
+    }
+
+    /// Add a machine whose *all* external links are capped at `bw_bps`
+    /// (edge machines in Multi-Region-Hybrid).
+    pub fn edge_machine(mut self, model: GpuModel, count: usize, region: usize, bw_bps: f64) -> Self {
+        assert!(region < self.region_names.len());
+        self.machines.push((model, count, region));
+        self.machine_bw_cap.push(Some(bw_bps));
+        self
+    }
+
+    pub fn build(self) -> DeviceTopology {
+        let mut devices = Vec::new();
+        for (m_idx, &(model, count, region)) in self.machines.iter().enumerate() {
+            for _ in 0..count {
+                devices.push(Device {
+                    id: devices.len(),
+                    gpu: model,
+                    machine: m_idx,
+                    zone: region, // one zone per region in the default builders
+                    region,
+                });
+            }
+        }
+        let n = devices.len();
+        let mut alpha = vec![vec![0.0; n]; n];
+        let mut beta = vec![vec![f64::INFINITY; n]; n];
+        for i in 0..n {
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                let (di, dj) = (&devices[i], &devices[j]);
+                let (mut lat, mut bw);
+                if di.machine == dj.machine {
+                    lat = 25e-6;
+                    bw = di.spec().link_bps.min(dj.spec().link_bps);
+                } else if di.region == dj.region {
+                    lat = self.intra_lat;
+                    bw = self.intra_bw;
+                } else {
+                    let (d, b) = self.region_links[di.region][dj.region];
+                    lat = d;
+                    bw = b;
+                }
+                // Edge-machine caps apply to all off-machine traffic.
+                if di.machine != dj.machine {
+                    for m in [di.machine, dj.machine] {
+                        if let Some(cap) = self.machine_bw_cap[m] {
+                            bw = bw.min(cap);
+                            lat = lat.max(self.intra_lat);
+                        }
+                    }
+                }
+                alpha[i][j] = lat;
+                beta[i][j] = bw;
+            }
+        }
+        DeviceTopology { devices, alpha, beta, region_names: self.region_names }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::GBITPS_BYTES;
+
+    fn tiny() -> DeviceTopology {
+        let links = vec![
+            vec![(0.0, f64::INFINITY), (10.0 * MS, 5.0 * GBITPS_BYTES)],
+            vec![(10.0 * MS, 5.0 * GBITPS_BYTES), (0.0, f64::INFINITY)],
+        ];
+        TopologyBuilder::new(vec!["r0".into(), "r1".into()], links)
+            .machine(GpuModel::A100, 2, 0)
+            .machine(GpuModel::L4, 2, 0)
+            .machine(GpuModel::L40S, 2, 1)
+            .build()
+    }
+
+    #[test]
+    fn tiers_ordered() {
+        let t = tiny();
+        // same machine (0,1) < same region (0,2) < cross region (0,4)
+        assert!(t.lat(0, 1) < t.lat(0, 2));
+        assert!(t.lat(0, 2) < t.lat(0, 4));
+        assert!(t.bw(0, 1) > t.bw(0, 2));
+        assert!(t.bw(0, 2) > t.bw(0, 4));
+    }
+
+    #[test]
+    fn affinity_hierarchy() {
+        let t = tiny();
+        assert_eq!(t.affinity(0, 1), 3); // same machine
+        assert_eq!(t.affinity(0, 2), 2); // same zone (zone == region here)
+        assert_eq!(t.affinity(0, 4), 0); // cross region
+        assert!(t.group_locality(&[0, 1]) > t.group_locality(&[0, 4]));
+    }
+
+    #[test]
+    fn subset_renumbers() {
+        let t = tiny();
+        let (s, map) = t.subset(&[4, 0]);
+        assert_eq!(s.n(), 2);
+        assert_eq!(map, vec![4, 0]);
+        assert_eq!(s.devices[0].gpu, GpuModel::L40S);
+        assert!((s.lat(0, 1) - t.lat(4, 0)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn census_counts() {
+        let t = tiny();
+        let c = t.census();
+        assert_eq!(c, vec![(GpuModel::A100, 2), (GpuModel::L40S, 2), (GpuModel::L4, 2)]);
+    }
+
+    #[test]
+    fn locality_order_groups_by_region() {
+        let t = tiny();
+        let order = t.locality_order(&[5, 0, 4, 1]);
+        // region 0 devices first, then region 1
+        assert_eq!(order, vec![0, 1, 4, 5]);
+    }
+
+    #[test]
+    fn xfer_time_includes_latency_and_volume() {
+        let t = tiny();
+        let bytes = 1.0 * GBITPS_BYTES; // 1 Gbit worth of bytes
+        let want = 10.0 * MS + bytes / (5.0 * GBITPS_BYTES);
+        assert!((t.xfer_time(0, 4, bytes) - want).abs() < 1e-9);
+        assert_eq!(t.xfer_time(3, 3, 1e9), 0.0);
+    }
+}

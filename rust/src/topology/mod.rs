@@ -1,0 +1,14 @@
+//! Device topology substrate: GPU catalog (paper Table 1), geographic
+//! regions with measured-style latency/bandwidth matrices, the four
+//! evaluation network scenarios, and the `DeviceTopology` graph
+//! `G_D = (V_D, E_D, comp, mem, hbm, A, B)` the scheduler consumes.
+
+pub mod gpu;
+pub mod network;
+pub mod scenarios;
+pub mod graph;
+
+pub use gpu::{GpuModel, GpuSpec};
+pub use graph::{Device, DeviceTopology};
+pub use network::{Region, RegionGraph};
+pub use scenarios::{build_testbed, subset_by_model, Scenario, TestbedSpec};

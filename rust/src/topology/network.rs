@@ -1,0 +1,196 @@
+//! Region-level network model. The paper measured latencies/bandwidths
+//! between 10 cloud regions (Virginia, Ohio, Paris, Stockholm, London,
+//! Ireland, Spain, Zurich, Frankfurt, Milan) and replayed them on the
+//! testbed. We reconstruct a measured-style matrix from great-circle
+//! distances: delay ≈ RTT over fiber (~2/3 c) plus a routing overhead,
+//! and WAN bandwidth in the paper's reported envelopes (0.9–5.0 Gbps).
+
+use crate::util::units::{GBITPS_BYTES, MS};
+
+/// The ten regions of the paper's Figure 3(a,b).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Region {
+    Virginia,
+    Ohio,
+    Paris,
+    Stockholm,
+    London,
+    Ireland,
+    Spain,
+    Zurich,
+    Frankfurt,
+    Milan,
+}
+
+impl Region {
+    pub const ALL: [Region; 10] = [
+        Region::Virginia,
+        Region::Ohio,
+        Region::Paris,
+        Region::Stockholm,
+        Region::London,
+        Region::Ireland,
+        Region::Spain,
+        Region::Zurich,
+        Region::Frankfurt,
+        Region::Milan,
+    ];
+
+    /// Regions on the EU side (the paper's Multi-Country scenario).
+    pub const EUROPE: [Region; 8] = [
+        Region::Paris,
+        Region::Stockholm,
+        Region::London,
+        Region::Ireland,
+        Region::Spain,
+        Region::Zurich,
+        Region::Frankfurt,
+        Region::Milan,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Region::Virginia => "Virginia",
+            Region::Ohio => "Ohio",
+            Region::Paris => "Paris",
+            Region::Stockholm => "Stockholm",
+            Region::London => "London",
+            Region::Ireland => "Ireland",
+            Region::Spain => "Spain",
+            Region::Zurich => "Zurich",
+            Region::Frankfurt => "Frankfurt",
+            Region::Milan => "Milan",
+        }
+    }
+
+    /// Approximate (lat, lon) of the region's data-center metro.
+    fn coords(self) -> (f64, f64) {
+        match self {
+            Region::Virginia => (38.9, -77.4),
+            Region::Ohio => (40.0, -83.0),
+            Region::Paris => (48.9, 2.4),
+            Region::Stockholm => (59.3, 18.1),
+            Region::London => (51.5, -0.1),
+            Region::Ireland => (53.3, -6.3),
+            Region::Spain => (40.4, -3.7),
+            Region::Zurich => (47.4, 8.5),
+            Region::Frankfurt => (50.1, 8.7),
+            Region::Milan => (45.5, 9.2),
+        }
+    }
+
+    pub fn is_us(self) -> bool {
+        matches!(self, Region::Virginia | Region::Ohio)
+    }
+}
+
+fn haversine_km(a: (f64, f64), b: (f64, f64)) -> f64 {
+    let (lat1, lon1) = (a.0.to_radians(), a.1.to_radians());
+    let (lat2, lon2) = (b.0.to_radians(), b.1.to_radians());
+    let dlat = lat2 - lat1;
+    let dlon = lon2 - lon1;
+    let h = (dlat / 2.0).sin().powi(2) + lat1.cos() * lat2.cos() * (dlon / 2.0).sin().powi(2);
+    2.0 * 6371.0 * h.sqrt().asin()
+}
+
+/// Inter-region network graph: one-way delay (s) and bandwidth (bytes/s)
+/// between every pair of regions.
+#[derive(Debug, Clone)]
+pub struct RegionGraph {
+    pub regions: Vec<Region>,
+    /// One-way delay in seconds, indexed by position in `regions`.
+    pub delay: Vec<Vec<f64>>,
+    /// Bandwidth in bytes/s.
+    pub bandwidth: Vec<Vec<f64>>,
+}
+
+impl RegionGraph {
+    /// Build the measured-style matrix for a set of regions.
+    ///
+    /// One-way delay model: `distance / (0.66 c) * 1.25` routing factor
+    /// (fiber paths are not geodesics), floor of 0.25 ms. WAN bandwidth
+    /// model: decays with distance from ~5 Gbps (nearby regions) to
+    /// ~0.9 Gbps (trans-atlantic), matching the envelopes the paper
+    /// reports (Multi-Country: 5–30 ms, 1.9–5.0 Gbps; Multi-Continent:
+    /// 5–60 ms, 0.9–5.0 Gbps).
+    pub fn build(regions: &[Region]) -> RegionGraph {
+        let n = regions.len();
+        let mut delay = vec![vec![0.0; n]; n];
+        let mut bandwidth = vec![vec![f64::INFINITY; n]; n];
+        const C_FIBER_KM_PER_S: f64 = 199_862.0; // 2/3 c
+        for i in 0..n {
+            for j in 0..n {
+                if i == j {
+                    delay[i][j] = 0.05 * MS;
+                    bandwidth[i][j] = 25.0 * 8.0 * GBITPS_BYTES; // same-DC: 25 GB/s class
+                    continue;
+                }
+                let km = haversine_km(regions[i].coords(), regions[j].coords());
+                let d = (km / C_FIBER_KM_PER_S * 1.25).max(0.25 * MS);
+                delay[i][j] = d;
+                // Bandwidth: 5 Gbps within ~1200 km decaying to 0.9 Gbps
+                // at ~7000 km, clamped.
+                let bw_gbps = (5.0 - (km - 1200.0).max(0.0) / 5800.0 * 4.1).clamp(0.9, 5.0);
+                bandwidth[i][j] = bw_gbps * GBITPS_BYTES;
+            }
+        }
+        RegionGraph { regions: regions.to_vec(), delay, bandwidth }
+    }
+
+    pub fn index_of(&self, r: Region) -> usize {
+        self.regions.iter().position(|&x| x == r).expect("region not in graph")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delays_in_paper_envelopes() {
+        let g = RegionGraph::build(&Region::ALL);
+        // EU↔EU pairs: 5–30 ms envelope (allow small slack at the bottom
+        // for adjacent metros like Frankfurt–Zurich).
+        for &a in &Region::EUROPE {
+            for &b in &Region::EUROPE {
+                if a == b {
+                    continue;
+                }
+                let d = g.delay[g.index_of(a)][g.index_of(b)];
+                assert!(d > 0.2 * MS && d < 30.0 * MS, "{}-{} delay {d}", a.name(), b.name());
+            }
+        }
+        // Transatlantic: up to 60 ms, at least 15 ms.
+        let d = g.delay[g.index_of(Region::Virginia)][g.index_of(Region::Stockholm)];
+        assert!(d > 15.0 * MS && d < 60.0 * MS, "transatlantic delay {d}");
+    }
+
+    #[test]
+    fn bandwidth_in_paper_envelopes() {
+        let g = RegionGraph::build(&Region::ALL);
+        for i in 0..g.regions.len() {
+            for j in 0..g.regions.len() {
+                if i == j {
+                    continue;
+                }
+                let bw = g.bandwidth[i][j] / GBITPS_BYTES;
+                assert!((0.9..=5.0).contains(&bw), "bw {bw} Gbps out of envelope");
+            }
+        }
+        // Transatlantic links are the slowest.
+        let va_sto = g.bandwidth[g.index_of(Region::Virginia)][g.index_of(Region::Stockholm)];
+        let par_fra = g.bandwidth[g.index_of(Region::Paris)][g.index_of(Region::Frankfurt)];
+        assert!(va_sto < par_fra);
+    }
+
+    #[test]
+    fn symmetric() {
+        let g = RegionGraph::build(&Region::ALL);
+        for i in 0..10 {
+            for j in 0..10 {
+                assert!((g.delay[i][j] - g.delay[j][i]).abs() < 1e-12);
+                assert!((g.bandwidth[i][j] - g.bandwidth[j][i]).abs() < 1e-3);
+            }
+        }
+    }
+}

@@ -1,0 +1,287 @@
+//! The four evaluation network scenarios (paper §5.1) over the 64-GPU
+//! testbed: 24×A100, 24×L40S, 16×L4 arranged as eight 8-GPU machines.
+//!
+//! * **Scenario 1 (Single-Region)** — all machines in one region, no
+//!   latency/bandwidth shaping.
+//! * **Scenario 2 (Multi-Region-Hybrid)** — Ohio + Virginia; a subset of
+//!   Virginia machines are *edge* machines with 1 Gbps uplinks; the
+//!   Ohio↔Virginia links have 10 ms delay and 5 Gbps bandwidth.
+//! * **Scenario 3 (Multi-Country)** — eight EU regions (5–30 ms,
+//!   1.9–5.0 Gbps between regions).
+//! * **Scenario 4 (Multi-Continent)** — EU + US regions (5–60 ms,
+//!   0.9–5.0 Gbps).
+
+use super::gpu::GpuModel;
+use super::graph::{DeviceTopology, TopologyBuilder};
+use super::network::{Region, RegionGraph};
+use crate::util::units::{GBITPS_BYTES, MS};
+
+/// Evaluation scenario selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scenario {
+    SingleRegion,
+    MultiRegionHybrid,
+    MultiCountry,
+    MultiContinent,
+}
+
+impl Scenario {
+    pub const ALL: [Scenario; 4] = [
+        Scenario::SingleRegion,
+        Scenario::MultiRegionHybrid,
+        Scenario::MultiCountry,
+        Scenario::MultiContinent,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Scenario::SingleRegion => "Single-Region",
+            Scenario::MultiRegionHybrid => "Multi-Region-Hybrid",
+            Scenario::MultiCountry => "Multi-Country",
+            Scenario::MultiContinent => "Multi-Continent",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Scenario> {
+        match s.to_ascii_lowercase().replace('_', "-").as_str() {
+            "single-region" | "single" | "s1" => Some(Scenario::SingleRegion),
+            "multi-region-hybrid" | "hybrid" | "s2" => Some(Scenario::MultiRegionHybrid),
+            "multi-country" | "country" | "s3" => Some(Scenario::MultiCountry),
+            "multi-continent" | "continent" | "s4" => Some(Scenario::MultiContinent),
+            _ => None,
+        }
+    }
+}
+
+/// Testbed composition. Default = the paper's 64-GPU fleet.
+#[derive(Debug, Clone)]
+pub struct TestbedSpec {
+    /// (model, number of 8-GPU machines)
+    pub machines: Vec<(GpuModel, usize)>,
+    pub gpus_per_machine: usize,
+}
+
+impl Default for TestbedSpec {
+    fn default() -> Self {
+        // 24 A100 + 24 L40S + 16 L4 = 64 GPUs
+        TestbedSpec {
+            machines: vec![(GpuModel::A100, 3), (GpuModel::L40S, 3), (GpuModel::L4, 2)],
+            gpus_per_machine: 8,
+        }
+    }
+}
+
+impl TestbedSpec {
+    pub fn total_gpus(&self) -> usize {
+        self.machines.iter().map(|(_, n)| n * self.gpus_per_machine).sum()
+    }
+
+    /// Flattened machine list (model per machine), interleaved so each
+    /// region gets a mix of GPU models when distributed round-robin.
+    fn machine_models(&self) -> Vec<GpuModel> {
+        let mut queues: Vec<(GpuModel, usize)> = self.machines.clone();
+        let mut out = Vec::new();
+        loop {
+            let mut progressed = false;
+            for (model, left) in queues.iter_mut() {
+                if *left > 0 {
+                    out.push(*model);
+                    *left -= 1;
+                    progressed = true;
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+        out
+    }
+}
+
+fn region_links_from_graph(g: &RegionGraph) -> Vec<Vec<(f64, f64)>> {
+    let n = g.regions.len();
+    let mut links = vec![vec![(0.0, f64::INFINITY); n]; n];
+    for i in 0..n {
+        for j in 0..n {
+            links[i][j] = (g.delay[i][j], g.bandwidth[i][j]);
+        }
+    }
+    links
+}
+
+/// Build the testbed topology for a scenario.
+pub fn build_testbed(scenario: Scenario, spec: &TestbedSpec) -> DeviceTopology {
+    let models = spec.machine_models();
+    let g = spec.gpus_per_machine;
+    match scenario {
+        Scenario::SingleRegion => {
+            let links = vec![vec![(0.0, f64::INFINITY)]];
+            let mut b = TopologyBuilder::new(vec!["Virginia".into()], links);
+            for &m in &models {
+                b = b.machine(m, g, 0);
+            }
+            b.build()
+        }
+        Scenario::MultiRegionHybrid => {
+            // Ohio (region 0) + Virginia (region 1); 10 ms / 5 Gbps between
+            // them; the last ~third of Virginia machines are edge machines
+            // capped at 1 Gbps.
+            let inter = (10.0 * MS, 5.0 * GBITPS_BYTES);
+            let links = vec![
+                vec![(0.0, f64::INFINITY), inter],
+                vec![inter, (0.0, f64::INFINITY)],
+            ];
+            let mut b = TopologyBuilder::new(vec!["Ohio".into(), "Virginia".into()], links);
+            let half = models.len() / 2;
+            for (i, &m) in models.iter().enumerate() {
+                if i < half {
+                    b = b.machine(m, g, 0); // Ohio
+                } else if i < models.len() - models.len() / 4 {
+                    b = b.machine(m, g, 1); // Virginia core
+                } else {
+                    b = b.edge_machine(m, g, 1, 1.0 * GBITPS_BYTES); // Virginia edge
+                }
+            }
+            b.build()
+        }
+        Scenario::MultiCountry => {
+            let rg = RegionGraph::build(&Region::EUROPE);
+            let names = rg.regions.iter().map(|r| r.name().to_string()).collect();
+            let mut b = TopologyBuilder::new(names, region_links_from_graph(&rg));
+            for (i, &m) in models.iter().enumerate() {
+                b = b.machine(m, g, i % Region::EUROPE.len());
+            }
+            b.build()
+        }
+        Scenario::MultiContinent => {
+            // Eight regions across Europe and the US (paper: "eight
+            // different regions across Europe and US").
+            let regions = [
+                Region::Virginia,
+                Region::Ohio,
+                Region::Paris,
+                Region::Stockholm,
+                Region::London,
+                Region::Ireland,
+                Region::Frankfurt,
+                Region::Milan,
+            ];
+            let rg = RegionGraph::build(&regions);
+            let names = rg.regions.iter().map(|r| r.name().to_string()).collect();
+            let mut b = TopologyBuilder::new(names, region_links_from_graph(&rg));
+            for (i, &m) in models.iter().enumerate() {
+                b = b.machine(m, g, i % regions.len());
+            }
+            b.build()
+        }
+    }
+}
+
+/// Homogeneous-subset topologies used by Figure 10 (GPU-combination study)
+/// and the "24×A100 only" comparisons: keep only devices of the given
+/// models, at most `limit` of each.
+pub fn subset_by_model(
+    topo: &DeviceTopology,
+    keep: &[(GpuModel, usize)],
+) -> DeviceTopology {
+    let mut ids = Vec::new();
+    for &(model, limit) in keep {
+        let mut count = 0;
+        for d in &topo.devices {
+            if d.gpu == model && count < limit {
+                ids.push(d.id);
+                count += 1;
+            }
+        }
+    }
+    ids.sort_unstable();
+    topo.subset(&ids).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_testbed_is_64_gpus() {
+        let spec = TestbedSpec::default();
+        assert_eq!(spec.total_gpus(), 64);
+        for s in Scenario::ALL {
+            let t = build_testbed(s, &spec);
+            assert_eq!(t.n(), 64, "{}", s.name());
+            let census = t.census();
+            assert!(census.contains(&(GpuModel::A100, 24)));
+            assert!(census.contains(&(GpuModel::L40S, 24)));
+            assert!(census.contains(&(GpuModel::L4, 16)));
+        }
+    }
+
+    #[test]
+    fn single_region_has_no_wan_links() {
+        let t = build_testbed(Scenario::SingleRegion, &TestbedSpec::default());
+        for i in 0..t.n() {
+            for j in 0..t.n() {
+                if i != j {
+                    assert!(t.lat(i, j) <= 0.5 * MS, "lat({i},{j}) = {}", t.lat(i, j));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hybrid_has_edge_caps() {
+        let t = build_testbed(Scenario::MultiRegionHybrid, &TestbedSpec::default());
+        // Some pair must be capped at 1 Gbps (edge), some at 5 Gbps (inter).
+        let mut saw_edge = false;
+        let mut saw_inter = false;
+        for i in 0..t.n() {
+            for j in 0..t.n() {
+                if i == j {
+                    continue;
+                }
+                let bw = t.bw(i, j);
+                if (bw - 1.0 * GBITPS_BYTES).abs() < 1.0 {
+                    saw_edge = true;
+                }
+                if (bw - 5.0 * GBITPS_BYTES).abs() < 1.0 {
+                    saw_inter = true;
+                }
+            }
+        }
+        assert!(saw_edge && saw_inter);
+    }
+
+    #[test]
+    fn continent_slower_than_country() {
+        let spec = TestbedSpec::default();
+        let country = build_testbed(Scenario::MultiCountry, &spec);
+        let continent = build_testbed(Scenario::MultiContinent, &spec);
+        let max_lat = |t: &DeviceTopology| {
+            let mut m: f64 = 0.0;
+            for i in 0..t.n() {
+                for j in 0..t.n() {
+                    m = m.max(t.lat(i, j));
+                }
+            }
+            m
+        };
+        assert!(max_lat(&continent) > max_lat(&country));
+    }
+
+    #[test]
+    fn scenario_parse() {
+        assert_eq!(Scenario::parse("multi-country"), Some(Scenario::MultiCountry));
+        assert_eq!(Scenario::parse("S2"), Some(Scenario::MultiRegionHybrid));
+        assert_eq!(Scenario::parse("nope"), None);
+    }
+
+    #[test]
+    fn subset_by_model_limits() {
+        let t = build_testbed(Scenario::SingleRegion, &TestbedSpec::default());
+        let s = subset_by_model(&t, &[(GpuModel::A100, 24)]);
+        assert_eq!(s.n(), 24);
+        assert!(s.devices.iter().all(|d| d.gpu == GpuModel::A100));
+        let mixed = subset_by_model(&t, &[(GpuModel::A100, 8), (GpuModel::L4, 8)]);
+        assert_eq!(mixed.n(), 16);
+    }
+}

@@ -1,0 +1,132 @@
+//! Micro-benchmark harness used by `cargo bench` (criterion is not
+//! available offline). Provides warmup, repeated timed runs, median/MAD
+//! reporting and a tiny runner with `--filter` support so `cargo bench`
+//! behaves like a normal bench target.
+
+use std::time::Instant;
+
+use super::stats;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "bench {:<44} {:>12}/iter (median over {} iters, min {}, max {})",
+            self.name,
+            super::units::fmt_secs(self.median_ns * 1e-9),
+            self.iters,
+            super::units::fmt_secs(self.min_ns * 1e-9),
+            super::units::fmt_secs(self.max_ns * 1e-9),
+        )
+    }
+}
+
+/// Time `f` with `warmup` untimed runs then `iters` timed runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    assert!(iters >= 1);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    let s = stats::summarize(&samples);
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        median_ns: s.p50,
+        mean_ns: s.mean,
+        min_ns: s.min,
+        max_ns: s.max,
+    }
+}
+
+/// A named group of benchmarks with a shared `main()`-style runner.
+pub struct Runner {
+    title: String,
+    filter: Option<String>,
+    results: Vec<BenchResult>,
+}
+
+impl Runner {
+    /// Build from `std::env::args()`; accepts `--bench` (ignored, cargo
+    /// passes it) and an optional substring filter argument.
+    pub fn from_args(title: &str) -> Runner {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        let filter = args.into_iter().find(|a| !a.starts_with("--"));
+        println!("=== {title} ===");
+        Runner { title: title.to_string(), filter, results: Vec::new() }
+    }
+
+    /// Whether a bench with this name should run under the filter.
+    pub fn enabled(&self, name: &str) -> bool {
+        match &self.filter {
+            None => true,
+            Some(f) => name.contains(f.as_str()),
+        }
+    }
+
+    /// Run one micro-benchmark if enabled.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, warmup: usize, iters: usize, f: F) {
+        if !self.enabled(name) {
+            return;
+        }
+        let r = bench(name, warmup, iters, f);
+        println!("{}", r.report());
+        self.results.push(r);
+    }
+
+    /// Run an arbitrary "scenario" block (used by figure benches that print
+    /// tables rather than timing a closure).
+    pub fn scenario<F: FnOnce()>(&self, name: &str, f: F) {
+        if !self.enabled(name) {
+            return;
+        }
+        println!("--- {} :: {} ---", self.title, name);
+        let t0 = Instant::now();
+        f();
+        println!(
+            "--- {} :: {} done in {} ---\n",
+            self.title,
+            name,
+            super::units::fmt_secs(t0.elapsed().as_secs_f64())
+        );
+    }
+
+    pub fn finish(self) {
+        println!("=== {} complete ({} timed benches) ===", self.title, self.results.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_times_something() {
+        let mut acc = 0u64;
+        let r = bench("spin", 1, 5, || {
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.median_ns > 0.0);
+        assert!(r.min_ns <= r.median_ns && r.median_ns <= r.max_ns);
+        // keep acc alive
+        assert!(acc < u64::MAX);
+    }
+}

@@ -1,0 +1,151 @@
+//! Tiny CLI argument parser (no clap offline). Supports subcommands,
+//! `--flag`, `--key value` and `--key=value` forms, with typed accessors
+//! and automatically generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Declarative option spec used to render `--help`.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments: a subcommand, positional args and key/value options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (without the program name). The first non-option
+    /// token becomes the subcommand; later non-option tokens are positional.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if body.is_empty() {
+                    // "--": everything after is positional
+                    out.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects a number, got '{v}'")),
+        }
+    }
+}
+
+/// Render a usage/help block.
+pub fn usage(program: &str, subcommands: &[(&str, &str)], opts: &[OptSpec]) -> String {
+    let mut s = format!("usage: {program} <subcommand> [options]\n\nsubcommands:\n");
+    for (name, help) in subcommands {
+        s.push_str(&format!("  {name:<22} {help}\n"));
+    }
+    if !opts.is_empty() {
+        s.push_str("\noptions:\n");
+        for o in opts {
+            let d = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            s.push_str(&format!("  --{:<20} {}{}\n", o.name, o.help, d));
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("schedule pos1 --gpus 64 --scenario=multi-country --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("schedule"));
+        assert_eq!(a.get("gpus"), Some("64"));
+        assert_eq!(a.get("scenario"), Some("multi-country"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+        // NOTE: `--verbose pos1` would bind pos1 as the option's value —
+        // value-taking and boolean options are disambiguated by position.
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse("x --n 12 --f 2.5");
+        assert_eq!(a.get_usize("n", 0).unwrap(), 12);
+        assert_eq!(a.get_f64("f", 0.0).unwrap(), 2.5);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert!(parse("x --n abc").get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn double_dash_positional() {
+        let a = parse("run -- --not-an-option");
+        assert_eq!(a.positional, vec!["--not-an-option"]);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("run --fast");
+        assert!(a.flag("fast"));
+        assert_eq!(a.get("fast"), None);
+    }
+}

@@ -1,0 +1,86 @@
+//! In-crate substrates for facilities that would normally come from the
+//! crates.io ecosystem (unavailable in this offline environment): PRNG,
+//! JSON, CLI parsing, logging, a threadpool, ASCII tables, statistics and
+//! a micro-benchmark harness used by `cargo bench`.
+
+pub mod rng;
+pub mod json;
+pub mod cli;
+pub mod logging;
+pub mod threadpool;
+pub mod table;
+pub mod stats;
+pub mod units;
+pub mod benchkit;
+
+/// A deterministic, order-stable "hash" map replacement for small keys —
+/// a sorted Vec. Used where iteration order must be reproducible across
+/// runs (the scheduler relies on determinism for SHA tie-breaking).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct VecMap<K: Ord, V> {
+    entries: Vec<(K, V)>,
+}
+
+impl<K: Ord, V> VecMap<K, V> {
+    pub fn new() -> Self {
+        VecMap { entries: Vec::new() }
+    }
+
+    pub fn insert(&mut self, k: K, v: V) -> Option<V> {
+        match self.entries.binary_search_by(|(ek, _)| ek.cmp(&k)) {
+            Ok(i) => Some(std::mem::replace(&mut self.entries[i].1, v)),
+            Err(i) => {
+                self.entries.insert(i, (k, v));
+                None
+            }
+        }
+    }
+
+    pub fn get(&self, k: &K) -> Option<&V> {
+        self.entries
+            .binary_search_by(|(ek, _)| ek.cmp(k))
+            .ok()
+            .map(|i| &self.entries[i].1)
+    }
+
+    pub fn get_mut(&mut self, k: &K) -> Option<&mut V> {
+        match self.entries.binary_search_by(|(ek, _)| ek.cmp(k)) {
+            Ok(i) => Some(&mut self.entries[i].1),
+            Err(_) => None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&K, &V)> {
+        self.entries.iter().map(|(k, v)| (k, v))
+    }
+
+    pub fn contains_key(&self, k: &K) -> bool {
+        self.get(k).is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vecmap_insert_get() {
+        let mut m = VecMap::new();
+        assert_eq!(m.insert(3, "c"), None);
+        assert_eq!(m.insert(1, "a"), None);
+        assert_eq!(m.insert(2, "b"), None);
+        assert_eq!(m.insert(2, "B"), Some("b"));
+        assert_eq!(m.get(&2), Some(&"B"));
+        assert_eq!(m.len(), 3);
+        let keys: Vec<_> = m.iter().map(|(k, _)| *k).collect();
+        assert_eq!(keys, vec![1, 2, 3]); // sorted iteration order
+    }
+}

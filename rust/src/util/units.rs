@@ -1,0 +1,78 @@
+//! Unit helpers. The cost model mixes TFLOPS, GB, GB/s, Gbps and
+//! milliseconds; converting consistently to SI base units (FLOP/s, bytes,
+//! bytes/s, seconds) at the boundary avoids an entire class of bugs.
+
+/// 1 TFLOP/s in FLOP/s.
+pub const TFLOPS: f64 = 1e12;
+/// 1 GiB in bytes (GPU memory sizes are marketed in GB but allocated in GiB;
+/// we follow the paper's Table 1 and use binary GiB for capacities).
+pub const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+/// 1 GB/s in bytes/s (HBM and NVLink bandwidths are decimal).
+pub const GBPS_BYTES: f64 = 1e9;
+/// 1 Gbit/s in bytes/s (network bandwidths are decimal bits).
+pub const GBITPS_BYTES: f64 = 1e9 / 8.0;
+/// 1 millisecond in seconds.
+pub const MS: f64 = 1e-3;
+
+/// Bytes of a BF16 scalar.
+pub const B_BF16: f64 = 2.0;
+/// Bytes of an FP32 scalar.
+pub const B_FP32: f64 = 4.0;
+
+/// Pretty-print a duration in seconds with adaptive units.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 60.0 {
+        format!("{:.1}m", s / 60.0)
+    } else if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.2}us", s * 1e6)
+    } else {
+        format!("{:.0}ns", s * 1e9)
+    }
+}
+
+/// Pretty-print a byte count.
+pub fn fmt_bytes(b: f64) -> String {
+    if b >= GIB {
+        format!("{:.2}GiB", b / GIB)
+    } else if b >= 1024.0 * 1024.0 {
+        format!("{:.2}MiB", b / (1024.0 * 1024.0))
+    } else if b >= 1024.0 {
+        format!("{:.2}KiB", b / 1024.0)
+    } else {
+        format!("{b:.0}B")
+    }
+}
+
+/// Pretty-print a throughput in samples/s.
+pub fn fmt_throughput(x: f64) -> String {
+    if x >= 1000.0 {
+        format!("{:.2}k/s", x / 1000.0)
+    } else {
+        format!("{x:.2}/s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions() {
+        assert_eq!(10.0 * MS, 0.01);
+        assert_eq!(GBITPS_BYTES * 8.0, GBPS_BYTES);
+        assert!((312.0 * TFLOPS - 3.12e14).abs() < 1.0);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_secs(90.0), "1.5m");
+        assert_eq!(fmt_secs(2.0), "2.00s");
+        assert_eq!(fmt_secs(0.002), "2.00ms");
+        assert_eq!(fmt_bytes(GIB * 2.0), "2.00GiB");
+        assert_eq!(fmt_throughput(1500.0), "1.50k/s");
+    }
+}

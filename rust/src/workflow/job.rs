@@ -1,0 +1,103 @@
+//! RL training job configuration (paper §4.1: "an RL algorithm, a
+//! dataset, models for different tasks, an optimizer, numerical precision,
+//! global batch size, sequence lengths of prompts and responses, and
+//! other optional configurations").
+
+/// Hyperparameters of an RL training job that the scheduler and cost
+/// model need. Defaults match the paper's evaluation setup (§5.1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobConfig {
+    /// Global batch size (prompts per iteration). Paper: 384.
+    pub global_batch: usize,
+    /// Max input-prompt length. Paper: 1024.
+    pub seq_in: usize,
+    /// Max generated-response length. Paper: 1024.
+    pub seq_out: usize,
+    /// Responses generated per prompt (GRPO group size). Paper: 8.
+    pub n_responses: usize,
+    /// Micro-batch size for training.
+    pub mbs: usize,
+    /// Task-parallelism coefficient η of Φ (0 sequential … 1 parallel).
+    pub eta: f64,
+    /// Whether activation recomputation is enabled for training
+    /// (switches the 2× vs 6× TP-communication multiplier, Appendix B).
+    pub recompute: bool,
+    /// Decoding batch size per serving-engine replica, `dbs_d`, as a
+    /// fraction of the local generation batch (vLLM continuous batching
+    /// keeps this near the whole local batch).
+    pub decode_batch_frac: f64,
+}
+
+impl Default for JobConfig {
+    fn default() -> Self {
+        JobConfig {
+            global_batch: 384,
+            seq_in: 1024,
+            seq_out: 1024,
+            n_responses: 8,
+            mbs: 2,
+            eta: 0.8,
+            recompute: true,
+            decode_batch_frac: 1.0,
+        }
+    }
+}
+
+impl JobConfig {
+    /// Total sequences entering inference/training per iteration
+    /// (prompts × responses-per-prompt).
+    pub fn total_samples(&self) -> usize {
+        self.global_batch * self.n_responses
+    }
+
+    /// Full sequence length (prompt + response).
+    pub fn seq_total(&self) -> usize {
+        self.seq_in + self.seq_out
+    }
+
+    /// Number of micro-batches for a task replicated over `dp` data
+    /// parallel groups ("we have preprocessed nm based on the number of
+    /// responses generated per prompt [and] the data parallelism degree").
+    pub fn num_microbatches(&self, dp: usize) -> usize {
+        let local = self.total_samples().div_ceil(dp);
+        local.div_ceil(self.mbs).max(1)
+    }
+
+    /// A scaled-down config for unit tests.
+    pub fn tiny() -> Self {
+        JobConfig {
+            global_batch: 8,
+            seq_in: 128,
+            seq_out: 128,
+            n_responses: 2,
+            mbs: 1,
+            eta: 0.8,
+            recompute: true,
+            decode_batch_frac: 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let j = JobConfig::default();
+        assert_eq!(j.global_batch, 384);
+        assert_eq!(j.seq_in, 1024);
+        assert_eq!(j.seq_out, 1024);
+        assert_eq!(j.n_responses, 8);
+        assert_eq!(j.total_samples(), 3072);
+    }
+
+    #[test]
+    fn microbatches_divide_by_dp() {
+        let j = JobConfig::default();
+        assert_eq!(j.num_microbatches(1), 1536);
+        assert_eq!(j.num_microbatches(4), 384);
+        // dp larger than samples still yields >= 1
+        assert_eq!(JobConfig::tiny().num_microbatches(64), 1);
+    }
+}

@@ -1,0 +1,11 @@
+//! RL workflow model: LLM specs (Qwen-style), the six PPO / four GRPO
+//! tasks with their computational and data dependencies, and the job
+//! configuration (batch size, sequence lengths, precision...).
+
+pub mod model;
+pub mod task;
+pub mod job;
+
+pub use job::JobConfig;
+pub use model::ModelSpec;
+pub use task::{Algo, Mode, RlTask, RlTaskId, RlWorkflow, TaskKind};

@@ -1,0 +1,310 @@
+//! RL tasks and workflows.
+//!
+//! PPO (paper Figure 1(b)): four models (actor, critic, reward, reference)
+//! and six tasks — actor generation (t=1), reward inference (t=2),
+//! reference inference (t=3), critic inference (t=4), actor training
+//! (t=5), critic training (t=6). GRPO drops the critic model, leaving
+//! actor generation, reward inference, reference inference and actor
+//! training.
+
+use super::model::ModelSpec;
+
+/// What kind of computation a task performs; drives the cost model's
+/// choice of Ψ (gen / inf / train) and the memory model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    /// Autoregressive decoding (HBM-bandwidth bound, keeps KV cache).
+    Generation,
+    /// Forward-only scoring (compute bound, no KV cache across calls).
+    Inference,
+    /// Forward + backward + optimizer step (compute bound, keeps
+    /// activations, gradients and optimizer state).
+    Training,
+}
+
+/// Identity of a task in the canonical PPO ordering (paper t = 1..6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum RlTaskId {
+    ActorGen,
+    RewardInf,
+    RefInf,
+    CriticInf,
+    ActorTrain,
+    CriticTrain,
+}
+
+impl RlTaskId {
+    pub fn name(self) -> &'static str {
+        match self {
+            RlTaskId::ActorGen => "actor-gen",
+            RlTaskId::RewardInf => "reward-inf",
+            RlTaskId::RefInf => "ref-inf",
+            RlTaskId::CriticInf => "critic-inf",
+            RlTaskId::ActorTrain => "actor-train",
+            RlTaskId::CriticTrain => "critic-train",
+        }
+    }
+
+    pub fn kind(self) -> TaskKind {
+        match self {
+            RlTaskId::ActorGen => TaskKind::Generation,
+            RlTaskId::RewardInf | RlTaskId::RefInf | RlTaskId::CriticInf => TaskKind::Inference,
+            RlTaskId::ActorTrain | RlTaskId::CriticTrain => TaskKind::Training,
+        }
+    }
+
+    /// Which of the four RL models this task uses.
+    pub fn model_role(self) -> ModelRole {
+        match self {
+            RlTaskId::ActorGen | RlTaskId::ActorTrain => ModelRole::Actor,
+            RlTaskId::RewardInf => ModelRole::Reward,
+            RlTaskId::RefInf => ModelRole::Reference,
+            RlTaskId::CriticInf | RlTaskId::CriticTrain => ModelRole::Critic,
+        }
+    }
+}
+
+/// The four RL models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelRole {
+    Actor,
+    Critic,
+    Reward,
+    Reference,
+}
+
+/// RL algorithm family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Algo {
+    Ppo,
+    Grpo,
+}
+
+impl Algo {
+    pub fn name(self) -> &'static str {
+        match self {
+            Algo::Ppo => "PPO",
+            Algo::Grpo => "GRPO",
+        }
+    }
+}
+
+/// Synchronous (iteration barrier) or asynchronous (generation of the
+/// next iterations overlaps training) execution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Mode {
+    Sync,
+    Async,
+}
+
+impl Mode {
+    pub fn name(self) -> &'static str {
+        match self {
+            Mode::Sync => "Sync",
+            Mode::Async => "Async",
+        }
+    }
+}
+
+/// One task instance in a workflow: identity + the model it runs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RlTask {
+    pub id: RlTaskId,
+    pub model: ModelSpec,
+}
+
+impl RlTask {
+    pub fn kind(&self) -> TaskKind {
+        self.id.kind()
+    }
+}
+
+/// A concrete RL workflow: tasks plus inter-task data dependencies
+/// (`E_inter` in the paper's computational graph `G`).
+#[derive(Debug, Clone)]
+pub struct RlWorkflow {
+    pub algo: Algo,
+    pub mode: Mode,
+    pub tasks: Vec<RlTask>,
+    /// Edges `(from, to)` over indices into `tasks`.
+    pub deps: Vec<(usize, usize)>,
+}
+
+impl RlWorkflow {
+    /// Build a workflow where every task runs the same-size model (the
+    /// paper's evaluation setting; heterogeneous model sizes are allowed
+    /// via [`RlWorkflow::with_models`]).
+    pub fn new(algo: Algo, mode: Mode, model: ModelSpec) -> RlWorkflow {
+        let ids = Self::task_ids(algo);
+        let models = ids.iter().map(|_| model.clone()).collect();
+        Self::with_models(algo, mode, models)
+    }
+
+    /// Build with a distinct model per task (lengths must match the
+    /// algorithm's task list).
+    pub fn with_models(algo: Algo, mode: Mode, models: Vec<ModelSpec>) -> RlWorkflow {
+        let ids = Self::task_ids(algo);
+        assert_eq!(models.len(), ids.len(), "one model per task");
+        let tasks: Vec<RlTask> = ids
+            .iter()
+            .zip(models)
+            .map(|(&id, model)| RlTask { id, model })
+            .collect();
+        let deps = Self::dependency_edges(algo, &tasks);
+        RlWorkflow { algo, mode, tasks, deps }
+    }
+
+    /// Canonical task lists.
+    pub fn task_ids(algo: Algo) -> Vec<RlTaskId> {
+        match algo {
+            Algo::Ppo => vec![
+                RlTaskId::ActorGen,
+                RlTaskId::RewardInf,
+                RlTaskId::RefInf,
+                RlTaskId::CriticInf,
+                RlTaskId::ActorTrain,
+                RlTaskId::CriticTrain,
+            ],
+            Algo::Grpo => vec![
+                RlTaskId::ActorGen,
+                RlTaskId::RewardInf,
+                RlTaskId::RefInf,
+                RlTaskId::ActorTrain,
+            ],
+        }
+    }
+
+    fn dependency_edges(algo: Algo, tasks: &[RlTask]) -> Vec<(usize, usize)> {
+        let idx = |id: RlTaskId| tasks.iter().position(|t| t.id == id).unwrap();
+        match algo {
+            Algo::Ppo => {
+                let (g, rw, rf, ci, at, ct) = (
+                    idx(RlTaskId::ActorGen),
+                    idx(RlTaskId::RewardInf),
+                    idx(RlTaskId::RefInf),
+                    idx(RlTaskId::CriticInf),
+                    idx(RlTaskId::ActorTrain),
+                    idx(RlTaskId::CriticTrain),
+                );
+                vec![
+                    (g, rw),
+                    (g, rf),
+                    (g, ci),
+                    (rw, at),
+                    (rf, at),
+                    (ci, at),
+                    (rw, ct),
+                    (rf, ct),
+                    (ci, ct),
+                ]
+            }
+            Algo::Grpo => {
+                let (g, rw, rf, at) = (
+                    idx(RlTaskId::ActorGen),
+                    idx(RlTaskId::RewardInf),
+                    idx(RlTaskId::RefInf),
+                    idx(RlTaskId::ActorTrain),
+                );
+                vec![(g, rw), (g, rf), (rw, at), (rf, at)]
+            }
+        }
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Task indices with no outstanding dependencies among `done`.
+    pub fn ready(&self, done: &[bool]) -> Vec<usize> {
+        (0..self.tasks.len())
+            .filter(|&t| {
+                !done[t]
+                    && self
+                        .deps
+                        .iter()
+                        .all(|&(from, to)| to != t || done[from])
+            })
+            .collect()
+    }
+
+    /// Topological "waves" of tasks: tasks in the same wave have no
+    /// dependencies among each other (gen → inferences → trainings).
+    pub fn waves(&self) -> Vec<Vec<usize>> {
+        let mut done = vec![false; self.tasks.len()];
+        let mut out = Vec::new();
+        while done.iter().any(|d| !d) {
+            let wave = self.ready(&done);
+            assert!(!wave.is_empty(), "dependency cycle in workflow");
+            for &t in &wave {
+                done[t] = true;
+            }
+            out.push(wave);
+        }
+        out
+    }
+
+    /// Display name, e.g. "PPO-Sync".
+    pub fn name(&self) -> String {
+        format!("{}-{}", self.algo.name(), self.mode.name())
+    }
+
+    /// Index of a task by id, if present.
+    pub fn task_index(&self, id: RlTaskId) -> Option<usize> {
+        self.tasks.iter().position(|t| t.id == id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> ModelSpec {
+        ModelSpec::qwen_4b()
+    }
+
+    #[test]
+    fn ppo_has_six_tasks_grpo_four() {
+        let ppo = RlWorkflow::new(Algo::Ppo, Mode::Sync, model());
+        let grpo = RlWorkflow::new(Algo::Grpo, Mode::Sync, model());
+        assert_eq!(ppo.n_tasks(), 6);
+        assert_eq!(grpo.n_tasks(), 4);
+        assert!(grpo.task_index(RlTaskId::CriticInf).is_none());
+        assert!(grpo.task_index(RlTaskId::CriticTrain).is_none());
+    }
+
+    #[test]
+    fn ppo_waves_match_paper() {
+        // gen → {reward, ref, critic} inference → {actor, critic} training
+        let ppo = RlWorkflow::new(Algo::Ppo, Mode::Sync, model());
+        let waves = ppo.waves();
+        assert_eq!(waves.len(), 3);
+        assert_eq!(waves[0], vec![0]);
+        assert_eq!(waves[1].len(), 3);
+        assert_eq!(waves[2].len(), 2);
+    }
+
+    #[test]
+    fn grpo_waves() {
+        let grpo = RlWorkflow::new(Algo::Grpo, Mode::Sync, model());
+        let waves = grpo.waves();
+        assert_eq!(waves.len(), 3);
+        assert_eq!(waves[1].len(), 2); // reward + ref inference
+        assert_eq!(waves[2].len(), 1); // actor training
+    }
+
+    #[test]
+    fn kinds() {
+        assert_eq!(RlTaskId::ActorGen.kind(), TaskKind::Generation);
+        assert_eq!(RlTaskId::RefInf.kind(), TaskKind::Inference);
+        assert_eq!(RlTaskId::CriticTrain.kind(), TaskKind::Training);
+    }
+
+    #[test]
+    fn ready_respects_deps() {
+        let ppo = RlWorkflow::new(Algo::Ppo, Mode::Sync, model());
+        let mut done = vec![false; 6];
+        assert_eq!(ppo.ready(&done), vec![0]);
+        done[0] = true;
+        assert_eq!(ppo.ready(&done).len(), 3);
+    }
+}

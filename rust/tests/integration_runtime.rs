@@ -1,0 +1,126 @@
+//! Integration: PJRT runtime ↔ AOT artifacts numerics. These tests run
+//! only when `artifacts/` exists (`make artifacts`).
+
+use hetrl::runtime::{HostTensor, Runtime};
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::load("artifacts").expect("runtime load"))
+}
+
+#[test]
+fn logprobs_consistent_with_forward() {
+    // logprobs(tokens)[t] must equal log_softmax(forward(tokens))[t+1]
+    // gathered at the next token — two different executables computing
+    // the same math.
+    let Some(rt) = runtime() else { return };
+    let params = rt
+        .execute("init", &[HostTensor::u32(vec![2], vec![0, 5])])
+        .unwrap();
+    let b = rt.manifest.batch;
+    let l = rt.model().max_len;
+    let v = rt.model().vocab;
+    let tokens: Vec<i32> = (0..b * l).map(|i| ((i * 7 + 3) % 60) as i32 + 3).collect();
+
+    let mut inputs = params.clone();
+    inputs.push(HostTensor::i32(vec![b, l], tokens.clone()));
+    let logits = rt.execute("forward", &inputs).unwrap()[0]
+        .as_f32()
+        .unwrap()
+        .to_vec();
+
+    let mut inputs = params.clone();
+    inputs.push(HostTensor::i32(vec![b, l], tokens.clone()));
+    let lp = rt.execute("logprobs", &inputs).unwrap()[0]
+        .as_f32()
+        .unwrap()
+        .to_vec();
+
+    for i in 0..b {
+        for t in 0..l - 1 {
+            let row = &logits[(i * l + t) * v..(i * l + t + 1) * v];
+            let max = row.iter().cloned().fold(f32::MIN, f32::max);
+            let lse: f32 = row.iter().map(|&x| (x - max).exp()).sum::<f32>().ln() + max;
+            let want = row[tokens[i * l + t + 1] as usize] - lse;
+            let got = lp[i * (l - 1) + t];
+            assert!(
+                (got - want).abs() < 2e-4,
+                "mismatch at ({i},{t}): {got} vs {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn grpo_train_loss_matches_manual_formula_at_identity() {
+    // With old == ref == current policy and advantage a, the token loss
+    // reduces to -a per masked token (ratio = 1, KL = 0).
+    let Some(rt) = runtime() else { return };
+    let params = rt
+        .execute("init", &[HostTensor::u32(vec![2], vec![0, 9])])
+        .unwrap();
+    let n_p = rt.manifest.n_params;
+    let b = rt.manifest.batch;
+    let l = rt.model().max_len;
+    let tokens: Vec<i32> = (0..b * l).map(|i| ((i * 11 + 5) % 60) as i32 + 3).collect();
+    let mut inputs = params.clone();
+    inputs.push(HostTensor::i32(vec![b, l], tokens.clone()));
+    let lp = rt.execute("logprobs", &inputs).unwrap()[0].clone();
+
+    let zeros: Vec<HostTensor> = params
+        .iter()
+        .map(|p| HostTensor::f32(p.shape().to_vec(), vec![0.0; p.shape().iter().product()]))
+        .collect();
+    let adv: Vec<f32> = (0..b).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+    let mask = vec![1.0f32; b * (l - 1)];
+
+    let mut inputs: Vec<HostTensor> = Vec::new();
+    inputs.extend(params.clone());
+    inputs.extend(zeros.clone());
+    inputs.extend(zeros);
+    inputs.push(HostTensor::scalar_f32(1.0));
+    inputs.push(HostTensor::i32(vec![b, l], tokens));
+    inputs.push(lp.clone());
+    inputs.push(lp);
+    inputs.push(HostTensor::f32(vec![b], adv.clone()));
+    inputs.push(HostTensor::f32(vec![b, l - 1], mask));
+    let out = rt.execute("grpo_train", &inputs).unwrap();
+    let kl = out[3 * n_p + 1].as_f32().unwrap()[0];
+    let loss = out[3 * n_p].as_f32().unwrap()[0];
+    // mean over tokens of -adv (adv broadcast per row) = -mean(adv) = 0
+    assert!(loss.abs() < 1e-4, "loss {loss}");
+    assert!(kl.abs() < 1e-5, "kl {kl}");
+    // updated params differ from inputs (gradient is nonzero per row)
+    assert_ne!(out[2].as_f32().unwrap(), params[2].as_f32().unwrap());
+}
+
+#[test]
+fn reward_and_value_heads_run() {
+    let Some(rt) = runtime() else { return };
+    let params = rt
+        .execute("init", &[HostTensor::u32(vec![2], vec![1, 1])])
+        .unwrap();
+    let b = rt.manifest.batch;
+    let l = rt.model().max_len;
+    let tokens = HostTensor::i32(vec![b, l], vec![4; b * l]);
+    let mut inputs = params.clone();
+    inputs.push(tokens.clone());
+    let score = rt.execute("reward", &inputs).unwrap();
+    assert_eq!(score[0].shape(), &[b]);
+    let mut inputs = params;
+    inputs.push(tokens);
+    let values = rt.execute("value", &inputs).unwrap();
+    assert_eq!(values[0].shape(), &[b, l]);
+}
+
+#[test]
+fn exec_counts_tracked() {
+    let Some(rt) = runtime() else { return };
+    let _ = rt
+        .execute("init", &[HostTensor::u32(vec![2], vec![0, 0])])
+        .unwrap();
+    assert_eq!(*rt.exec_counts.borrow().get("init").unwrap(), 1);
+}

@@ -1,0 +1,102 @@
+//! Integration: schedulers → plans → cost model across scenarios.
+
+use hetrl::balance::{self, BalanceConfig};
+use hetrl::costmodel::CostModel;
+use hetrl::scheduler::{
+    Budget, PureEaScheduler, RandomScheduler, Scheduler, ShaEaScheduler, StreamRlScheduler,
+    VerlScheduler,
+};
+use hetrl::topology::{build_testbed, Scenario, TestbedSpec};
+use hetrl::workflow::{Algo, JobConfig, Mode, ModelSpec, RlWorkflow};
+
+fn env(
+    scenario: Scenario,
+    algo: Algo,
+    mode: Mode,
+) -> (RlWorkflow, hetrl::topology::DeviceTopology, JobConfig) {
+    (
+        RlWorkflow::new(algo, mode, ModelSpec::qwen_4b()),
+        build_testbed(scenario, &TestbedSpec::default()),
+        JobConfig::default(),
+    )
+}
+
+#[test]
+fn every_scheduler_yields_valid_plans_everywhere() {
+    for scenario in [Scenario::SingleRegion, Scenario::MultiContinent] {
+        let (wf, topo, job) = env(scenario, Algo::Grpo, Mode::Sync);
+        let mut scheds: Vec<Box<dyn Scheduler>> = vec![
+            Box::new(ShaEaScheduler::new(1)),
+            Box::new(VerlScheduler::new(1)),
+            Box::new(StreamRlScheduler::new(1)),
+            Box::new(PureEaScheduler::new(1)),
+            Box::new(RandomScheduler::new(1)),
+        ];
+        for s in scheds.iter_mut() {
+            let out = s.schedule(&topo, &wf, &job, Budget::timed(150, 30.0));
+            let plan = out
+                .plan
+                .unwrap_or_else(|| panic!("{} found no plan on {}", s.name(), scenario.name()));
+            plan.validate(&wf, &topo, &job)
+                .unwrap_or_else(|e| panic!("{} invalid plan: {e}", s.name()));
+            assert!(out.cost.is_finite());
+        }
+    }
+}
+
+#[test]
+fn hetrl_beats_verl_on_wan() {
+    // The paper's core claim, checked on the cost model: HetRL's
+    // heterogeneity-aware search finds faster plans than verl in
+    // geo-distributed scenarios.
+    let (wf, topo, job) = env(Scenario::MultiContinent, Algo::Ppo, Mode::Sync);
+    let sha = ShaEaScheduler::new(2).schedule(&topo, &wf, &job, Budget::timed(700, 60.0));
+    let verl = VerlScheduler::new(2).schedule(&topo, &wf, &job, Budget::timed(200, 30.0));
+    assert!(sha.cost.is_finite() && verl.cost.is_finite());
+    assert!(
+        sha.cost < verl.cost,
+        "HetRL {} should beat verl {}",
+        sha.cost,
+        verl.cost
+    );
+}
+
+#[test]
+fn traces_are_monotone() {
+    let (wf, topo, job) = env(Scenario::MultiCountry, Algo::Grpo, Mode::Sync);
+    let out = ShaEaScheduler::new(3).schedule(&topo, &wf, &job, Budget::timed(300, 30.0));
+    let costs: Vec<f64> = out.trace.iter().map(|p| p.best_cost).collect();
+    assert!(!costs.is_empty());
+    for w in costs.windows(2) {
+        assert!(w[1] <= w[0], "incumbent must only improve: {costs:?}");
+    }
+}
+
+#[test]
+fn balancing_composes_with_scheduler_output() {
+    let (wf, topo, job) = env(Scenario::MultiRegionHybrid, Algo::Grpo, Mode::Sync);
+    let cm = CostModel::new(&topo, &wf, &job);
+    for seed in [1, 2] {
+        let out = ShaEaScheduler::new(seed).schedule(&topo, &wf, &job, Budget::timed(250, 30.0));
+        let plan = out.plan.unwrap();
+        let balanced = balance::apply(&plan, &wf, &topo, BalanceConfig::default());
+        balanced.validate(&wf, &topo, &job).unwrap();
+        let before = cm.plan_cost(&plan).iter_time;
+        let after = cm.plan_cost(&balanced).iter_time;
+        assert!(after <= before * 1.0001, "balancing hurt: {after} vs {before}");
+    }
+}
+
+#[test]
+fn async_plans_not_slower_than_sync_for_hetrl() {
+    let (wf_s, topo, job) = env(Scenario::MultiCountry, Algo::Grpo, Mode::Sync);
+    let (wf_a, _, _) = env(Scenario::MultiCountry, Algo::Grpo, Mode::Async);
+    let sync = ShaEaScheduler::new(4).schedule(&topo, &wf_s, &job, Budget::timed(400, 40.0));
+    let asyn = ShaEaScheduler::new(4).schedule(&topo, &wf_a, &job, Budget::timed(400, 40.0));
+    assert!(
+        asyn.cost <= sync.cost * 1.10,
+        "async {} vs sync {}",
+        asyn.cost,
+        sync.cost
+    );
+}

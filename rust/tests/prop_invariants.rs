@@ -1,0 +1,225 @@
+//! Property-based tests on coordinator invariants, via the in-crate
+//! `testing` framework (proptest substitute): plan validity closed under
+//! the EA's operators, cost-model monotonicities, SHA budget respect,
+//! solver exactness on random instances, simulator lower bounds.
+
+use hetrl::costmodel::{ring_minmax, CostModel};
+use hetrl::plan::parallel::uniform_layer_split;
+use hetrl::scheduler::ea::swap_devices;
+use hetrl::scheduler::levels::{
+    assemble, assign_devices, default_task_plans, gpu_groupings, set_partitions,
+};
+use hetrl::scheduler::{Budget, Scheduler, ShaEaScheduler};
+use hetrl::solver::{solve_milp, BnbConfig, Cmp, Lp};
+use hetrl::testing::{check_seeded, Gen};
+use hetrl::topology::{build_testbed, DeviceTopology, Scenario, TestbedSpec};
+use hetrl::util::rng::Rng;
+use hetrl::workflow::{Algo, JobConfig, Mode, ModelSpec, RlWorkflow};
+
+fn env() -> (RlWorkflow, DeviceTopology, JobConfig) {
+    (
+        RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_4b()),
+        build_testbed(Scenario::MultiCountry, &TestbedSpec::default()),
+        JobConfig::default(),
+    )
+}
+
+/// Generate a random valid plan (None when generation fails).
+fn random_plan(
+    wf: &RlWorkflow,
+    topo: &DeviceTopology,
+    job: &JobConfig,
+    seed: u64,
+) -> Option<hetrl::plan::ExecutionPlan> {
+    let mut rng = Rng::new(seed);
+    let groupings = set_partitions(wf.n_tasks());
+    for _ in 0..10 {
+        let tg = groupings[rng.below(groupings.len())].clone();
+        let ggs = gpu_groupings(wf, job, topo, &tg, 8);
+        if ggs.is_empty() {
+            continue;
+        }
+        let sizes = ggs[rng.below(ggs.len())].clone();
+        let groups = assign_devices(wf, &tg, &sizes, topo, &mut rng);
+        if let Some(plans) = default_task_plans(wf, job, topo, &tg, &groups, &mut rng, true) {
+            let plan = assemble(&tg, groups, plans);
+            if plan.validate(wf, topo, job).is_ok() {
+                return Some(plan);
+            }
+        }
+    }
+    None
+}
+
+#[test]
+fn prop_plan_validity_closed_under_device_swap() {
+    let (wf, topo, job) = env();
+    check_seeded(
+        "validate(swap_devices(valid plan)) holds",
+        40,
+        7,
+        Gen::pair(Gen::usize_range(0, 1_000_000), Gen::usize_range(0, 64 * 64)),
+        |&(seed, pair)| {
+            let Some(mut plan) = random_plan(&wf, &topo, &job, seed as u64) else {
+                return true; // generation failed: vacuous
+            };
+            let (a, b) = (pair / 64, pair % 64);
+            // Swaps may move a big tasklet onto a small GPU: structural
+            // validity must hold; OOM is the only acceptable failure.
+            swap_devices(&mut plan, a, b);
+            match plan.validate(&wf, &topo, &job) {
+                Ok(()) => true,
+                Err(hetrl::plan::PlanError::OutOfMemory { .. }) => true,
+                Err(e) => {
+                    eprintln!("structural violation after swap({a},{b}): {e}");
+                    false
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_uniform_layer_split_well_formed() {
+    check_seeded(
+        "layer split: right length, sums, min 1",
+        300,
+        11,
+        Gen::pair(Gen::usize_range(1, 100), Gen::usize_range(1, 17)),
+        |&(nl, pp)| {
+            if pp > nl {
+                return true;
+            }
+            let s = uniform_layer_split(nl, pp);
+            s.len() == pp && s.iter().sum::<usize>() == nl && s.iter().all(|&x| x >= 1)
+        },
+    );
+}
+
+#[test]
+fn prop_ring_minmax_never_beats_best_edge_nor_exceeds_worst() {
+    let (_, topo, _) = env();
+    check_seeded(
+        "min edge ≤ ring bottleneck ≤ max edge (over the group)",
+        120,
+        13,
+        Gen::vec(Gen::usize_range(0, 64), 2, 8),
+        |devs| {
+            let mut d = devs.clone();
+            d.sort_unstable();
+            d.dedup();
+            if d.len() < 2 {
+                return true;
+            }
+            let cv = 1e8;
+            let ring = ring_minmax(&topo, &d, cv);
+            let mut emin = f64::INFINITY;
+            let mut emax: f64 = 0.0;
+            for i in 0..d.len() {
+                for j in 0..d.len() {
+                    if i != j {
+                        let e = topo.lat(d[i], d[j]) + cv / topo.bw(d[i], d[j]);
+                        emin = emin.min(e);
+                        emax = emax.max(e);
+                    }
+                }
+            }
+            ring >= emin - 1e-12 && ring <= emax + 1e-12
+        },
+    );
+}
+
+#[test]
+fn prop_cost_model_monotone_in_bandwidth() {
+    // Scaling all bandwidths up can never increase a plan's cost.
+    let (wf, topo, job) = env();
+    let cm = CostModel::new(&topo, &wf, &job);
+    let mut fast = topo.clone();
+    for row in fast.beta.iter_mut() {
+        for b in row.iter_mut() {
+            *b *= 4.0;
+        }
+    }
+    let cm_fast = CostModel::new(&fast, &wf, &job);
+    check_seeded(
+        "4x bandwidth never hurts",
+        25,
+        17,
+        Gen::usize_range(0, 1_000_000),
+        |&seed| {
+            let Some(plan) = random_plan(&wf, &topo, &job, seed as u64) else {
+                return true;
+            };
+            let slow = cm.plan_cost(&plan).iter_time;
+            let quick = cm_fast.plan_cost(&plan).iter_time;
+            quick <= slow + 1e-9
+        },
+    );
+}
+
+#[test]
+fn prop_sha_respects_eval_budget() {
+    let (wf, topo, job) = env();
+    check_seeded(
+        "SHA-EA stays within ~budget+population slack",
+        6,
+        19,
+        Gen::pair(Gen::usize_range(20, 300), Gen::usize_range(0, 1000)),
+        |&(budget, seed)| {
+            let out = ShaEaScheduler::new(seed as u64).schedule(
+                &topo,
+                &wf,
+                &job,
+                Budget::evals(budget),
+            );
+            out.evals <= budget + 16
+        },
+    );
+}
+
+#[test]
+fn prop_milp_matches_exhaustive_small_knapsacks() {
+    let mut rng = Rng::new(23);
+    for _case in 0..12 {
+        let n = 7;
+        let c: Vec<f64> = (0..n).map(|_| rng.range_f64(-4.0, 9.0)).collect();
+        let w: Vec<f64> = (0..n).map(|_| rng.range_f64(0.5, 4.0)).collect();
+        let cap = rng.range_f64(3.0, 10.0);
+        let mut lp = Lp::new(n, c.clone(), true);
+        lp.constrain(w.iter().cloned().enumerate().collect(), Cmp::Le, cap);
+        let cfg = BnbConfig { time_limit: 10.0, max_nodes: 20_000, gap: 1e-6 };
+        let r = solve_milp(&lp, &(0..n).collect::<Vec<_>>(), &cfg);
+        let mut best = 0.0f64;
+        for mask in 0..(1usize << n) {
+            let weight: f64 = (0..n).filter(|i| mask >> i & 1 == 1).map(|i| w[i]).sum();
+            if weight <= cap + 1e-9 {
+                best = best.max((0..n).filter(|i| mask >> i & 1 == 1).map(|i| c[i]).sum());
+            }
+        }
+        assert!(r.optimal && (r.obj - best).abs() < 1e-5, "{} vs {best}", r.obj);
+    }
+}
+
+#[test]
+fn prop_simulator_makespan_at_least_critical_compute() {
+    // Simulated iteration time can never undercut the slowest single
+    // task's pure-compute lower bound by more than jitter allows.
+    use hetrl::simulator::{simulate_plan, NoiseModel, SimConfig};
+    let (wf, topo, job) = env();
+    check_seeded(
+        "makespan ≥ max over tasks of per-task busy span",
+        6,
+        29,
+        Gen::usize_range(0, 1_000_000),
+        |&seed| {
+            let Some(plan) = random_plan(&wf, &topo, &job, seed as u64) else {
+                return true;
+            };
+            let cfg = SimConfig { iters: 1, seed: 1, noise: NoiseModel::off() };
+            let r = simulate_plan(&topo, &wf, &job, &plan, &cfg);
+            r.per_task
+                .iter()
+                .all(|&t| t <= r.iter_time + 1e-6)
+        },
+    );
+}
