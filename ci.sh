@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# CI entry point: build, test, and smoke-run the dynamic-replay path.
+#
+#   ./ci.sh          fast checks (tier-1 + replay smoke)
+#   ./ci.sh --bench  also runs the fig11 elastic bench (reduced budgets)
+#
+# Bench/RunRecord output lands in rust/bench_out/ (HETRL_RESULTS overrides).
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "ci.sh: WARNING - no rust toolchain on PATH; skipping build/test." >&2
+    echo "ci.sh: the crate is dependency-free; any stock cargo can build it." >&2
+    exit 0
+fi
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== replay smoke (tiny trace, deterministic) =="
+./target/release/hetrl replay --scenario country --seed 0 \
+    --iters 6 --events 3 --budget 120 --warm-budget 60 --policy warm --tiny
+
+if [[ "${1:-}" == "--bench" ]]; then
+    echo "== fig11 elastic bench =="
+    cargo bench --bench fig11_elastic
+    ls -l bench_out/ || true
+fi
+
+echo "ci.sh: OK"

@@ -14,7 +14,7 @@ use hetrl::runtime::Runtime;
 use hetrl::util::json::Json;
 use hetrl::util::units::fmt_secs;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> hetrl::util::error::Result<()> {
     hetrl::util::logging::init();
     let steps: usize = std::env::args()
         .nth(1)

@@ -1,0 +1,117 @@
+//! Figure 11 (new, beyond the paper) — elastic cluster dynamics: replay
+//! a seeded event trace (with a guaranteed spot preemption) through the
+//! full stack under three policies and compare simulated throughput:
+//!
+//! * static        — incumbent plan repaired only, never re-searched;
+//! * warm-replan   — event-driven warm-started search, migration-aware
+//!                   objective, reduced budget;
+//! * oracle        — full-budget re-search with free instant migration
+//!                   (upper bound).
+//!
+//! Expected shape: after the first preemption, warm-replan recovers
+//! most of the oracle's throughput while static — stuck with a plan
+//! shaped for the departed fleet — trails; warm-replan spends a small
+//! fraction of the oracle's search evaluations. Rows are persisted as a
+//! `RunRecord` under `bench_out/`.
+
+mod common;
+
+use hetrl::elastic::{self, first_event_iter, generate_trace, Policy, ReplanConfig, ReplayConfig, TraceConfig};
+use hetrl::metrics::RunRecord;
+use hetrl::topology::{build_testbed, Scenario, TestbedSpec};
+use hetrl::util::json::Json;
+use hetrl::util::table::Table;
+use hetrl::workflow::{Algo, JobConfig, Mode, ModelSpec, RlWorkflow};
+
+fn main() {
+    hetrl::util::logging::init();
+    let seed = 17u64;
+    let iters = if common::full() { 32 } else { 16 };
+    let wf = RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_4b());
+    let job = JobConfig::default();
+    let spec = TestbedSpec::default();
+    let cfg = ReplayConfig {
+        iters,
+        trace: TraceConfig { horizon: iters, n_events: 5, ..TraceConfig::default() },
+        replan: ReplanConfig {
+            warm_budget: if common::full() { 200 } else { 120 },
+            cold_budget: common::sha_budget(),
+            ..ReplanConfig::default()
+        },
+        ..ReplayConfig::default()
+    };
+
+    let mut record = RunRecord::new(
+        "fig11_elastic",
+        &[
+            "scenario",
+            "policy",
+            "iter",
+            "iter_secs",
+            "migration_secs",
+            "active_gpus",
+            "evals",
+            "events",
+        ],
+    );
+    let mut summary = Table::new(
+        &format!("Figure 11: elastic replay (Qwen-4B sync GRPO, {iters} iters, seed {seed})"),
+        &[
+            "scenario",
+            "policy",
+            "thpt (samp/s)",
+            "post-event thpt",
+            "vs static",
+            "evals",
+            "migration (s)",
+        ],
+    );
+    for scenario in Scenario::ALL {
+        let base = build_testbed(scenario, &spec);
+        let trace = generate_trace(&base, &cfg.trace, seed);
+        let post = first_event_iter(&trace).unwrap_or(0);
+        eprintln!(
+            "{}: {} events, first at iter {post}",
+            scenario.name(),
+            trace.len()
+        );
+        let mut static_post = f64::NAN;
+        for policy in Policy::ALL {
+            let r = elastic::replay(scenario, &spec, &wf, &job, policy, &cfg, seed);
+            for rec in &r.records {
+                record.push(vec![
+                    Json::str(scenario.name()),
+                    Json::str(policy.name()),
+                    Json::num(rec.iter as f64),
+                    Json::num(rec.iter_secs),
+                    Json::num(rec.migration_secs),
+                    Json::num(rec.active_gpus as f64),
+                    Json::num(rec.evals as f64),
+                    Json::str(&rec.events.join("+")),
+                ]);
+            }
+            let post_thpt = r.throughput_after(post);
+            if policy == Policy::Static {
+                static_post = post_thpt;
+            }
+            let mig: f64 = r.records.iter().map(|x| x.migration_secs).sum();
+            summary.row(vec![
+                scenario.name().to_string(),
+                policy.name().to_string(),
+                format!("{:.2}", r.throughput()),
+                format!("{post_thpt:.2}"),
+                if static_post.is_finite() && static_post > 0.0 {
+                    format!("{:+.1}%", (post_thpt / static_post - 1.0) * 100.0)
+                } else {
+                    "-".to_string()
+                },
+                r.total_evals.to_string(),
+                format!("{mig:.1}"),
+            ]);
+        }
+    }
+    summary.print();
+    if let Ok(p) = record.save(&hetrl::metrics::results_dir()) {
+        println!("rows saved to {}", p.display());
+    }
+}

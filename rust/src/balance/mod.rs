@@ -82,14 +82,35 @@ fn stage_speeds(tp: &crate::plan::TaskPlan, topo: &DeviceTopology) -> Vec<f64> {
 }
 
 /// Distribute `nl` layers over stages proportionally to `speeds`
-/// (largest-remainder rounding, every stage ≥ 1 layer).
+/// (largest-remainder rounding, every stage ≥ 1 layer when `nl ≥ pp`).
+///
+/// Total function on degenerate inputs instead of panicking:
+/// * non-finite or non-positive speeds are treated as 0 (a stage whose
+///   speed cannot be measured gets only the 1-layer floor);
+/// * all speeds unusable → uniform split;
+/// * `pp > nl` (more stages than layers — no split with every stage
+///   ≥ 1 exists) → one layer to each of the first `nl` stages, zeros
+///   after, so the length/sum contract still holds for callers that
+///   clamp the strategy afterwards.
 pub fn balanced_layer_split(nl: usize, pp: usize, speeds: &[f64]) -> Vec<usize> {
     assert_eq!(speeds.len(), pp);
-    assert!(nl >= pp);
-    let total: f64 = speeds.iter().sum();
+    assert!(pp >= 1, "need at least one stage");
+    if pp > nl {
+        let mut split = vec![0usize; pp];
+        for s in split.iter_mut().take(nl) {
+            *s = 1;
+        }
+        return split;
+    }
+    let clean: Vec<f64> = speeds
+        .iter()
+        .map(|&s| if s.is_finite() && s > 0.0 { s } else { 0.0 })
+        .collect();
+    let total: f64 = clean.iter().sum();
     if total <= 0.0 {
         return crate::plan::parallel::uniform_layer_split(nl, pp);
     }
+    let speeds = &clean;
     // Ideal fractional shares with a 1-layer floor.
     let spare = nl - pp;
     let ideal: Vec<f64> = speeds.iter().map(|s| spare as f64 * s / total).collect();
@@ -168,6 +189,35 @@ mod tests {
         let skew = balanced_layer_split(8, 4, &[1000.0, 1.0, 1.0, 1.0]);
         assert!(skew.iter().all(|&l| l >= 1));
         assert_eq!(skew.iter().sum::<usize>(), 8);
+    }
+
+    #[test]
+    fn balanced_split_edge_cases_do_not_panic() {
+        // pp > nl: no ≥1-per-stage split exists; the contract degrades
+        // to len == pp, sum == nl, first nl stages get the layers.
+        let degenerate = balanced_layer_split(3, 5, &[1.0; 5]);
+        assert_eq!(degenerate.len(), 5);
+        assert_eq!(degenerate.iter().sum::<usize>(), 3);
+        assert_eq!(&degenerate[..3], &[1, 1, 1]);
+
+        // Zero / negative / NaN / infinite speeds: valid uniform-ish
+        // splits, never a panic.
+        for speeds in [
+            vec![0.0; 4],
+            vec![-1.0; 4],
+            vec![f64::NAN; 4],
+            vec![f64::INFINITY; 4],
+            vec![f64::NAN, 1.0, 1.0, f64::NAN],
+            vec![0.0, 0.0, 2.0, 2.0],
+        ] {
+            let split = balanced_layer_split(36, 4, &speeds);
+            assert_eq!(split.len(), 4, "{speeds:?}");
+            assert_eq!(split.iter().sum::<usize>(), 36, "{speeds:?}");
+            assert!(split.iter().all(|&l| l >= 1), "{speeds:?} -> {split:?}");
+        }
+        // Usable speeds still dominate unusable ones.
+        let mixed = balanced_layer_split(36, 4, &[f64::NAN, 9.0, 9.0, f64::NAN]);
+        assert!(mixed[1] > mixed[0] && mixed[2] > mixed[3], "{mixed:?}");
     }
 
     #[test]

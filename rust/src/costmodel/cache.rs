@@ -1,0 +1,127 @@
+//! Memoization of per-task cost-model sub-results, used by the elastic
+//! replanner: across a replanning episode the topology is fixed, so the
+//! expensive [`super::task_cost::task_cost`] evaluation of a `TaskPlan`
+//! depends only on the task index and the plan fields. Warm-started
+//! searches mutate one task at a time, so most per-task results are
+//! reusable between candidate plans.
+
+use super::task_cost::TaskCost;
+use crate::plan::TaskPlan;
+use std::collections::HashMap;
+
+/// FNV-1a over the fields of a task plan that determine its cost.
+/// The topology, workflow and job are fixed for a cache's lifetime
+/// (a fresh [`CostCache`] is created per replanning episode).
+pub fn task_plan_key(task_idx: usize, tp: &TaskPlan) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01B3;
+    let mut h = OFFSET;
+    let mut mix = |x: u64| {
+        for b in x.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+    };
+    mix(task_idx as u64);
+    mix(tp.strategy.dp as u64);
+    mix(tp.strategy.pp as u64);
+    mix(tp.strategy.tp as u64);
+    for &l in &tp.layer_split {
+        mix(l as u64);
+    }
+    for &d in &tp.assignment {
+        mix(d as u64);
+    }
+    for &s in &tp.dp_shares {
+        mix(s.to_bits());
+    }
+    h
+}
+
+/// Per-task cost memo with hit/miss telemetry.
+#[derive(Debug, Default)]
+pub struct CostCache {
+    map: HashMap<u64, TaskCost>,
+    pub hits: usize,
+    pub misses: usize,
+}
+
+impl CostCache {
+    pub fn new() -> CostCache {
+        CostCache::default()
+    }
+
+    /// Entries currently memoized.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Drop all entries (topology changed — results are stale).
+    pub fn clear(&mut self) {
+        self.map.clear();
+    }
+
+    /// Look up the cost for `(task_idx, tp)`, computing via `f` on miss.
+    pub fn get_or(
+        &mut self,
+        task_idx: usize,
+        tp: &TaskPlan,
+        f: impl FnOnce() -> TaskCost,
+    ) -> TaskCost {
+        let key = task_plan_key(task_idx, tp);
+        if let Some(&c) = self.map.get(&key) {
+            self.hits += 1;
+            return c;
+        }
+        self.misses += 1;
+        let c = f();
+        self.map.insert(key, c);
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::{ParallelStrategy, TaskPlan};
+
+    fn plan(devs: Vec<usize>) -> TaskPlan {
+        TaskPlan::uniform(ParallelStrategy::new(1, 2, 2), 8, devs)
+    }
+
+    #[test]
+    fn key_sensitive_to_fields() {
+        let a = plan(vec![0, 1, 2, 3]);
+        let mut b = plan(vec![0, 1, 2, 3]);
+        assert_eq!(task_plan_key(0, &a), task_plan_key(0, &b));
+        assert_ne!(task_plan_key(0, &a), task_plan_key(1, &a));
+        b.assignment[3] = 7;
+        assert_ne!(task_plan_key(0, &a), task_plan_key(0, &b));
+        let mut c = plan(vec![0, 1, 2, 3]);
+        c.layer_split = vec![5, 3];
+        assert_ne!(task_plan_key(0, &a), task_plan_key(0, &c));
+    }
+
+    #[test]
+    fn cache_hits_after_first_eval() {
+        let mut cache = CostCache::new();
+        let p = plan(vec![0, 1, 2, 3]);
+        let mut calls = 0;
+        for _ in 0..3 {
+            let c = cache.get_or(0, &p, || {
+                calls += 1;
+                TaskCost { total: 42.0, ..TaskCost::default() }
+            });
+            assert_eq!(c.total, 42.0);
+        }
+        assert_eq!(calls, 1);
+        assert_eq!(cache.hits, 2);
+        assert_eq!(cache.misses, 1);
+        cache.clear();
+        assert!(cache.is_empty());
+    }
+}

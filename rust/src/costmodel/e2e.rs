@@ -61,7 +61,32 @@ impl<'a> CostModel<'a> {
             .zip(&plan.task_plans)
             .map(|(task, tp)| task_cost(self.topo, task, self.job, tp))
             .collect();
+        self.aggregate(plan, per_task)
+    }
 
+    /// [`Self::plan_cost`] with per-task memoization (see
+    /// [`super::cache::CostCache`]); the warm-started replanner's hot
+    /// path — candidate plans share most task plans with the incumbent.
+    pub fn plan_cost_cached(
+        &self,
+        plan: &ExecutionPlan,
+        cache: &mut super::cache::CostCache,
+    ) -> PlanCost {
+        let per_task: Vec<TaskCost> = self
+            .wf
+            .tasks
+            .iter()
+            .zip(&plan.task_plans)
+            .enumerate()
+            .map(|(t, (task, tp))| {
+                cache.get_or(t, tp, || task_cost(self.topo, task, self.job, tp))
+            })
+            .collect();
+        self.aggregate(plan, per_task)
+    }
+
+    /// Combine per-task Ψ costs into the end-to-end iteration time.
+    fn aggregate(&self, plan: &ExecutionPlan, per_task: Vec<TaskCost>) -> PlanCost {
         let c = |id: RlTaskId| -> f64 {
             self.wf
                 .task_index(id)
@@ -303,5 +328,22 @@ mod tests {
         let cost = CostModel::new(&topo, &wf, &job).plan_cost(&plan_over(&wf, 64, 16));
         let tp = cost.throughput(&job);
         assert!((tp * cost.iter_time - job.total_samples() as f64).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cached_matches_uncached() {
+        let topo = build_testbed(Scenario::MultiCountry, &TestbedSpec::default());
+        let job = JobConfig::default();
+        let wf = RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_4b());
+        let cm = CostModel::new(&topo, &wf, &job);
+        let plan = plan_over(&wf, 64, 16);
+        let mut cache = super::super::cache::CostCache::new();
+        let a = cm.plan_cost(&plan);
+        let b = cm.plan_cost_cached(&plan, &mut cache);
+        let c = cm.plan_cost_cached(&plan, &mut cache);
+        assert_eq!(a, b);
+        assert_eq!(b, c);
+        assert_eq!(cache.misses, wf.n_tasks());
+        assert_eq!(cache.hits, wf.n_tasks());
     }
 }

@@ -1,0 +1,304 @@
+//! Migration cost: what it takes to *switch* execution plans on a live
+//! fleet. Replanning after a cluster event is not free — devices that
+//! newly serve a shard of a task must receive that shard's state
+//! (weights, and for training tasks the optimizer state, folded into
+//! the memory model's `M_model`) over the current — possibly degraded —
+//! heterogeneous links, or re-load it from the checkpoint store when no
+//! live holder survived the event.
+//!
+//! Shard identity is tracked per *(layer range, tp slot, tp degree)*:
+//! DP replicas hold identical weights, so a device that held stage j /
+//! tp-slot k before the event can serve any replica's (j, k) shard for
+//! free, while a plan that keeps a task's device set but reshuffles its
+//! parallelization (new pp/tp or layer split) pays for the internal
+//! reshard it really causes.
+//!
+//! The elastic replanner adds `migration_time / horizon` to the search
+//! objective so a marginally-faster plan that moves terabytes across a
+//! WAN loses to a slightly-slower plan that stays put.
+
+use crate::plan::memory::tasklet_memory;
+use crate::plan::{ExecutionPlan, TaskPlan};
+use crate::topology::DeviceTopology;
+use crate::util::units::GBITPS_BYTES;
+use crate::workflow::{JobConfig, RlWorkflow};
+
+/// Identity of a model shard: `(first_layer, n_layers, tp_slot, tp_degree)`.
+/// The DP replica index is deliberately absent — replicas share weights.
+pub type ShardKey = (usize, usize, usize, usize);
+
+/// What survived of one task's previous placement (snapshot-id space).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PrevTask {
+    /// Shard key → surviving devices that hold it.
+    pub shards: Vec<(ShardKey, Vec<usize>)>,
+    /// Union of all surviving holder devices (any shard of the task).
+    pub holders: Vec<usize>,
+}
+
+impl PrevTask {
+    /// Build from a task plan in *base* ids, keeping only devices that
+    /// `translate` maps into the current snapshot.
+    pub fn from_task_plan(
+        tp: &TaskPlan,
+        mut translate: impl FnMut(usize) -> Option<usize>,
+    ) -> PrevTask {
+        let mut out = PrevTask::default();
+        let s = tp.strategy;
+        let starts = stage_starts(&tp.layer_split);
+        for idx in 0..s.degree() {
+            let Some(d) = translate(tp.assignment[idx]) else { continue };
+            let (_, j, k) = s.tasklet_coords(idx);
+            let key: ShardKey = (starts[j], tp.layer_split[j], k, s.tp);
+            match out.shards.iter_mut().find(|(sk, _)| *sk == key) {
+                Some((_, devs)) => {
+                    if !devs.contains(&d) {
+                        devs.push(d);
+                    }
+                }
+                None => out.shards.push((key, vec![d])),
+            }
+            if !out.holders.contains(&d) {
+                out.holders.push(d);
+            }
+        }
+        out
+    }
+
+    /// Build the per-task list for a whole plan (base ids) under a
+    /// base→snapshot translation — the one constructor both the replay
+    /// driver and the replanner use, so policies charge identically.
+    pub fn from_plan(
+        plan: &ExecutionPlan,
+        mut translate: impl FnMut(usize) -> Option<usize>,
+    ) -> Vec<PrevTask> {
+        plan.task_plans
+            .iter()
+            .map(|tp| PrevTask::from_task_plan(tp, &mut translate))
+            .collect()
+    }
+
+    /// Surviving devices that hold exactly this shard.
+    fn holders_of(&self, key: &ShardKey) -> &[usize] {
+        self.shards
+            .iter()
+            .find(|(sk, _)| sk == key)
+            .map(|(_, devs)| devs.as_slice())
+            .unwrap_or(&[])
+    }
+}
+
+/// Cumulative layer offset of each pipeline stage.
+fn stage_starts(layer_split: &[usize]) -> Vec<usize> {
+    let mut starts = Vec::with_capacity(layer_split.len());
+    let mut acc = 0;
+    for &l in layer_split {
+        starts.push(acc);
+        acc += l;
+    }
+    starts
+}
+
+/// Parameters of the migration model.
+#[derive(Debug, Clone, Copy)]
+pub struct MigrationModel {
+    /// Bandwidth to the checkpoint/object store (bytes/s), used when no
+    /// surviving device holds the task's state (e.g. after a preemption
+    /// of the whole group).
+    pub ckpt_bw: f64,
+    /// Fixed overhead of any non-empty migration: engine teardown,
+    /// process restart, weight-reload bookkeeping (seconds).
+    pub setup_secs: f64,
+}
+
+impl Default for MigrationModel {
+    fn default() -> Self {
+        MigrationModel {
+            ckpt_bw: 2.5 * GBITPS_BYTES,
+            setup_secs: 2.0,
+        }
+    }
+}
+
+impl MigrationModel {
+    /// Wall-clock cost of migrating from the previous placement to
+    /// `plan` (both in `topo`'s id space). Per destination shard:
+    ///
+    /// * a device that already holds the identical shard — free;
+    /// * else fetched from the nearest device holding that shard
+    ///   (`α + bytes/β` over the *current* link state);
+    /// * else (shard shape changed / no shard holder survived) fetched
+    ///   from the nearest holder of *any* of the task's state, which
+    ///   can re-shard on the fly;
+    /// * else restored from the checkpoint store.
+    ///
+    /// Fetches to one destination serialize on its NIC; destinations
+    /// proceed in parallel, so the cost is the worst per-device total
+    /// plus a fixed setup term.
+    pub fn migration_time(
+        &self,
+        topo: &DeviceTopology,
+        wf: &RlWorkflow,
+        job: &JobConfig,
+        prev: &[PrevTask],
+        plan: &ExecutionPlan,
+    ) -> f64 {
+        static EMPTY: PrevTask = PrevTask { shards: Vec::new(), holders: Vec::new() };
+        let mut per_dev = vec![0.0f64; topo.n()];
+        for (t, tp) in plan.task_plans.iter().enumerate() {
+            let task = &wf.tasks[t];
+            let s = tp.strategy;
+            let prev_t = prev.get(t).unwrap_or(&EMPTY);
+            let starts = stage_starts(&tp.layer_split);
+            let local_batch = (job.total_samples() as f64 / s.dp as f64).ceil() as usize;
+            for idx in 0..s.degree() {
+                let d = tp.assignment[idx];
+                let (_, j, k) = s.tasklet_coords(idx);
+                let key: ShardKey = (starts[j], tp.layer_split[j], k, s.tp);
+                let shard_holders = prev_t.holders_of(&key);
+                if shard_holders.contains(&d) {
+                    continue; // this device already holds this shard
+                }
+                let bytes =
+                    tasklet_memory(task, job, tp.layer_split[j], s.tp, local_batch).model;
+                let sources = if !shard_holders.is_empty() {
+                    shard_holders
+                } else {
+                    prev_t.holders.as_slice()
+                };
+                // Remote fetch from the nearest (other) source device.
+                let remote = sources
+                    .iter()
+                    .filter(|&&src| src != d)
+                    .map(|&src| topo.xfer_time(src, d, bytes))
+                    .fold(f64::INFINITY, f64::min);
+                // A device that holds *some* state of the task can
+                // re-shard locally at HBM speed (never free: the shard
+                // shape changed or it would have matched above).
+                let local = if prev_t.holders.contains(&d) {
+                    bytes / topo.devices[d].spec().hbm_bps
+                } else {
+                    f64::INFINITY
+                };
+                let fetch = if remote.is_finite() || local.is_finite() {
+                    remote.min(local)
+                } else {
+                    bytes / self.ckpt_bw
+                };
+                per_dev[d] += fetch;
+            }
+        }
+        let worst = per_dev.iter().cloned().fold(0.0f64, f64::max);
+        if worst > 0.0 {
+            worst + self.setup_secs
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::ParallelStrategy;
+    use crate::topology::{build_testbed, Scenario, TestbedSpec};
+    use crate::workflow::{Algo, Mode, ModelSpec};
+
+    fn setup(scenario: Scenario) -> (RlWorkflow, DeviceTopology, JobConfig) {
+        (
+            RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_4b()),
+            build_testbed(scenario, &TestbedSpec::default()),
+            JobConfig::default(),
+        )
+    }
+
+    fn plan(wf: &RlWorkflow, shift: usize) -> ExecutionPlan {
+        let mut task_plans = Vec::new();
+        for (t, task) in wf.tasks.iter().enumerate() {
+            let s = ParallelStrategy::new(2, 2, 4);
+            let devs: Vec<usize> = (0..16).map(|i| (t * 16 + i + shift) % 64).collect();
+            task_plans.push(TaskPlan::uniform(s, task.model.nl, devs));
+        }
+        ExecutionPlan {
+            task_groups: vec![(0..wf.n_tasks()).collect()],
+            gpu_groups: vec![(0..64).collect()],
+            task_plans,
+        }
+    }
+
+    fn identity_prev(p: &ExecutionPlan) -> Vec<PrevTask> {
+        PrevTask::from_plan(p, Some)
+    }
+
+    #[test]
+    fn staying_put_is_free() {
+        let (wf, topo, job) = setup(Scenario::MultiRegionHybrid);
+        let p = plan(&wf, 0);
+        let mm = MigrationModel::default();
+        assert_eq!(mm.migration_time(&topo, &wf, &job, &identity_prev(&p), &p), 0.0);
+    }
+
+    #[test]
+    fn moving_costs_more_than_staying() {
+        let (wf, topo, job) = setup(Scenario::MultiRegionHybrid);
+        let old = plan(&wf, 0);
+        let moved = plan(&wf, 8);
+        let mm = MigrationModel::default();
+        let c = mm.migration_time(&topo, &wf, &job, &identity_prev(&old), &moved);
+        assert!(c > mm.setup_secs, "moving half the devices must cost: {c}");
+    }
+
+    #[test]
+    fn internal_reshuffle_is_not_free() {
+        // Same devices, different parallelization: every shard changes
+        // shape, so the migration model must charge a reshard.
+        let (wf, topo, job) = setup(Scenario::SingleRegion);
+        let old = plan(&wf, 0);
+        let mut reshaped = plan(&wf, 0);
+        for tp in reshaped.task_plans.iter_mut() {
+            let nl = wf.tasks[0].model.nl;
+            *tp = TaskPlan::uniform(
+                ParallelStrategy::new(1, 4, 4),
+                nl,
+                tp.assignment.clone(),
+            );
+        }
+        let mm = MigrationModel::default();
+        let c = mm.migration_time(&topo, &wf, &job, &identity_prev(&old), &reshaped);
+        assert!(c > 0.0, "reshuffled shards must not be free");
+    }
+
+    #[test]
+    fn dp_replicas_share_shards() {
+        // Swapping the two DP replicas' device sets keeps every device
+        // on a shard it already holds (replica index is not part of
+        // shard identity) — free.
+        let (wf, topo, job) = setup(Scenario::SingleRegion);
+        let old = plan(&wf, 0);
+        let mut swapped = old.clone();
+        for tp in swapped.task_plans.iter_mut() {
+            let s = tp.strategy; // dp2·pp2·tp4: replica blocks of 8
+            let half = s.degree() / 2;
+            tp.assignment.rotate_left(half);
+        }
+        let mm = MigrationModel::default();
+        assert_eq!(
+            mm.migration_time(&topo, &wf, &job, &identity_prev(&old), &swapped),
+            0.0
+        );
+    }
+
+    #[test]
+    fn checkpoint_restore_slower_than_peer_fetch() {
+        // Single region: peer links (100 Gbps EFA-class) beat the
+        // checkpoint store, and the ckpt path re-fetches *everything*.
+        let (wf, topo, job) = setup(Scenario::SingleRegion);
+        let old = plan(&wf, 0);
+        let moved = plan(&wf, 8);
+        let none: Vec<PrevTask> = wf.tasks.iter().map(|_| PrevTask::default()).collect();
+        let mm = MigrationModel::default();
+        let peer = mm.migration_time(&topo, &wf, &job, &identity_prev(&old), &moved);
+        let ckpt = mm.migration_time(&topo, &wf, &job, &none, &moved);
+        assert!(ckpt > peer, "ckpt {ckpt} vs peer {peer}");
+    }
+}

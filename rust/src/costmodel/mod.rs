@@ -11,7 +11,11 @@ pub mod comm;
 pub mod compute;
 pub mod task_cost;
 pub mod e2e;
+pub mod cache;
+pub mod migration;
 
+pub use cache::{task_plan_key, CostCache};
 pub use comm::ring_minmax;
 pub use e2e::{CostModel, PlanCost};
+pub use migration::{MigrationModel, PrevTask};
 pub use task_cost::TaskCost;

@@ -1,0 +1,289 @@
+//! Cluster event model and the deterministic, seeded trace generator.
+//!
+//! Events are expressed against the *base* topology (machine indices,
+//! base device ids, region indices), never against a snapshot's
+//! renumbered ids — [`super::fleet::FleetState`] owns the translation.
+//! Traces are ordered by iteration index; the generator is a pure
+//! function of `(base topology, config, seed)` so a replay is exactly
+//! reproducible.
+
+use crate::topology::DeviceTopology;
+use crate::util::rng::Rng;
+
+/// One dynamic event in the life of the fleet.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClusterEvent {
+    /// Spot preemption: the machine vanishes with (effectively) no
+    /// notice — its task state is lost unless replicated elsewhere.
+    MachinePreempt { machine: usize },
+    /// Graceful departure (scale-down / maintenance drain).
+    MachineLeave { machine: usize },
+    /// A previously departed machine rejoins the fleet.
+    MachineJoin { machine: usize },
+    /// WAN degradation between two regions: latency multiplied by
+    /// `lat_factor` (≥ 1), bandwidth by `bw_factor` (≤ 1).
+    LinkDegrade { ra: usize, rb: usize, lat_factor: f64, bw_factor: f64 },
+    /// The region pair's links return to their base state.
+    LinkRestore { ra: usize, rb: usize },
+    /// A device starts underperforming (thermal throttling, noisy
+    /// neighbour): sustained speed multiplied by `slowdown` (≤ 1).
+    StragglerOnset { device: usize, slowdown: f64 },
+    /// The straggler recovers.
+    StragglerClear { device: usize },
+}
+
+impl ClusterEvent {
+    /// Compact display label for timelines and run records.
+    pub fn label(&self) -> String {
+        match self {
+            ClusterEvent::MachinePreempt { machine } => format!("preempt(m{machine})"),
+            ClusterEvent::MachineLeave { machine } => format!("leave(m{machine})"),
+            ClusterEvent::MachineJoin { machine } => format!("join(m{machine})"),
+            ClusterEvent::LinkDegrade { ra, rb, bw_factor, .. } => {
+                format!("degrade(r{ra}-r{rb},bw×{bw_factor:.2})")
+            }
+            ClusterEvent::LinkRestore { ra, rb } => format!("restore(r{ra}-r{rb})"),
+            ClusterEvent::StragglerOnset { device, slowdown } => {
+                format!("straggler(d{device},×{slowdown:.2})")
+            }
+            ClusterEvent::StragglerClear { device } => format!("recover(d{device})"),
+        }
+    }
+}
+
+/// An event stamped with the training iteration *before* which it fires.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub at_iter: usize,
+    pub event: ClusterEvent,
+}
+
+/// Trace-generation knobs.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// Iterations the trace spans; events land in `[1, horizon)`.
+    pub horizon: usize,
+    /// Number of events to generate (rejoin/restore events that pair
+    /// with earlier ones count toward this too).
+    pub n_events: usize,
+    /// The fleet never shrinks below this fraction of its machines.
+    pub min_active_frac: f64,
+    /// Guarantee at least one machine preemption (the fig11 scenario).
+    pub force_preempt: bool,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            horizon: 24,
+            n_events: 5,
+            min_active_frac: 0.5,
+            force_preempt: true,
+        }
+    }
+}
+
+/// Distinct machine indices of a topology, ascending.
+fn machine_ids(topo: &DeviceTopology) -> Vec<usize> {
+    let mut ids: Vec<usize> = topo.devices.iter().map(|d| d.machine).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    ids
+}
+
+/// Distinct cross-region pairs `(ra < rb)` present in the topology.
+fn region_pairs(topo: &DeviceTopology) -> Vec<(usize, usize)> {
+    let mut regions: Vec<usize> = topo.devices.iter().map(|d| d.region).collect();
+    regions.sort_unstable();
+    regions.dedup();
+    let mut pairs = Vec::new();
+    for (i, &a) in regions.iter().enumerate() {
+        for &b in regions.iter().skip(i + 1) {
+            pairs.push((a, b));
+        }
+    }
+    pairs
+}
+
+/// Generate a deterministic event trace for `topo`. Same `(topo, cfg,
+/// seed)` → identical trace, bit for bit. Generated events are mutually
+/// consistent: only active machines leave, only departed machines
+/// rejoin, only healthy devices become stragglers, and the active
+/// machine count never drops below `min_active_frac`.
+pub fn generate_trace(topo: &DeviceTopology, cfg: &TraceConfig, seed: u64) -> Vec<TraceEvent> {
+    let mut rng = Rng::new(seed ^ 0xE1A5_71C0_FFEE);
+    let machines = machine_ids(topo);
+    let pairs = region_pairs(topo);
+    let floor = ((machines.len() as f64 * cfg.min_active_frac).ceil() as usize).max(1);
+
+    // Mutable world model mirrored while generating.
+    let mut active: Vec<usize> = machines.clone();
+    let mut departed: Vec<usize> = Vec::new();
+    let mut degraded: Vec<(usize, usize)> = Vec::new();
+    let mut stragglers: Vec<usize> = Vec::new();
+
+    // Event iterations: sorted, in [1, horizon).
+    let hi = cfg.horizon.max(2);
+    let mut iters: Vec<usize> = (0..cfg.n_events).map(|_| rng.range(1, hi)).collect();
+    iters.sort_unstable();
+
+    let mut out: Vec<TraceEvent> = Vec::new();
+    for (k, &at_iter) in iters.iter().enumerate() {
+        // The first event is a preemption when forced (and legal).
+        let force_now = cfg.force_preempt && k == 0 && active.len() > floor;
+        let event = loop {
+            let roll = if force_now { 0 } else { rng.below(100) };
+            match roll {
+                // 0..35: machine loss (preempt or graceful).
+                r if r < 35 => {
+                    if active.len() <= floor {
+                        continue;
+                    }
+                    let m = *rng.choice(&active);
+                    active.retain(|&x| x != m);
+                    departed.push(m);
+                    break if force_now || rng.chance(0.7) {
+                        ClusterEvent::MachinePreempt { machine: m }
+                    } else {
+                        ClusterEvent::MachineLeave { machine: m }
+                    };
+                }
+                // 35..50: rejoin.
+                r if r < 50 => {
+                    if departed.is_empty() {
+                        continue;
+                    }
+                    let m = *rng.choice(&departed);
+                    departed.retain(|&x| x != m);
+                    active.push(m);
+                    break ClusterEvent::MachineJoin { machine: m };
+                }
+                // 50..75: WAN bandwidth/latency shift.
+                r if r < 75 => {
+                    if pairs.is_empty() {
+                        continue;
+                    }
+                    let &(ra, rb) = rng.choice(&pairs);
+                    if degraded.contains(&(ra, rb)) {
+                        degraded.retain(|&p| p != (ra, rb));
+                        break ClusterEvent::LinkRestore { ra, rb };
+                    }
+                    degraded.push((ra, rb));
+                    break ClusterEvent::LinkDegrade {
+                        ra,
+                        rb,
+                        lat_factor: 1.0 + 3.0 * rng.f64(),
+                        bw_factor: 0.15 + 0.5 * rng.f64(),
+                    };
+                }
+                // 75..100: straggler onset/clear.
+                _ => {
+                    if !stragglers.is_empty() && rng.chance(0.4) {
+                        let d = *rng.choice(&stragglers);
+                        stragglers.retain(|&x| x != d);
+                        break ClusterEvent::StragglerClear { device: d };
+                    }
+                    // Pick a device on an active machine.
+                    let candidates: Vec<usize> = topo
+                        .devices
+                        .iter()
+                        .filter(|d| active.contains(&d.machine) && !stragglers.contains(&d.id))
+                        .map(|d| d.id)
+                        .collect();
+                    if candidates.is_empty() {
+                        continue;
+                    }
+                    let d = *rng.choice(&candidates);
+                    stragglers.push(d);
+                    break ClusterEvent::StragglerOnset {
+                        device: d,
+                        slowdown: 0.25 + 0.5 * rng.f64(),
+                    };
+                }
+            }
+        };
+        out.push(TraceEvent { at_iter, event });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{build_testbed, Scenario, TestbedSpec};
+
+    fn topo() -> DeviceTopology {
+        build_testbed(Scenario::MultiCountry, &TestbedSpec::default())
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let t = topo();
+        let cfg = TraceConfig::default();
+        let a = generate_trace(&t, &cfg, 7);
+        let b = generate_trace(&t, &cfg, 7);
+        assert_eq!(a, b);
+        let c = generate_trace(&t, &cfg, 8);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn sorted_and_sized() {
+        let t = topo();
+        let cfg = TraceConfig { n_events: 8, ..TraceConfig::default() };
+        let trace = generate_trace(&t, &cfg, 3);
+        assert_eq!(trace.len(), 8);
+        for w in trace.windows(2) {
+            assert!(w[0].at_iter <= w[1].at_iter);
+        }
+        for e in &trace {
+            assert!(e.at_iter >= 1 && e.at_iter < cfg.horizon);
+        }
+    }
+
+    #[test]
+    fn forced_preempt_present() {
+        let t = topo();
+        for seed in 0..12 {
+            let trace = generate_trace(&t, &TraceConfig::default(), seed);
+            assert!(
+                trace
+                    .iter()
+                    .any(|e| matches!(e.event, ClusterEvent::MachinePreempt { .. })),
+                "seed {seed} lacks a preemption"
+            );
+        }
+    }
+
+    #[test]
+    fn machine_floor_respected() {
+        let t = topo();
+        let cfg = TraceConfig { n_events: 24, min_active_frac: 0.5, ..TraceConfig::default() };
+        for seed in 0..6 {
+            let trace = generate_trace(&t, &cfg, seed);
+            let mut active = 8i64; // default testbed: 8 machines
+            let mut min_seen = active;
+            for e in &trace {
+                match e.event {
+                    ClusterEvent::MachinePreempt { .. } | ClusterEvent::MachineLeave { .. } => {
+                        active -= 1
+                    }
+                    ClusterEvent::MachineJoin { .. } => active += 1,
+                    _ => {}
+                }
+                min_seen = min_seen.min(active);
+            }
+            assert!(min_seen >= 4, "seed {seed}: dropped to {min_seen} machines");
+        }
+    }
+
+    #[test]
+    fn single_region_has_no_link_events() {
+        let t = build_testbed(Scenario::SingleRegion, &TestbedSpec::default());
+        let trace = generate_trace(&t, &TraceConfig { n_events: 16, ..Default::default() }, 1);
+        assert!(trace.iter().all(|e| !matches!(
+            e.event,
+            ClusterEvent::LinkDegrade { .. } | ClusterEvent::LinkRestore { .. }
+        )));
+    }
+}

@@ -1,0 +1,214 @@
+//! Live fleet state: the base topology plus the cumulative effect of
+//! every applied [`ClusterEvent`], and snapshotting into a concrete
+//! [`DeviceTopology`] the schedulers/simulator consume.
+//!
+//! Snapshots renumber surviving devices `0..k` (the scheduler stack
+//! assumes dense ids); the returned map translates snapshot ids back to
+//! base ids so plans can be carried across epochs.
+
+use super::events::ClusterEvent;
+use crate::topology::DeviceTopology;
+use std::collections::BTreeMap;
+
+/// Mutable fleet model over a fixed base topology.
+#[derive(Debug, Clone)]
+pub struct FleetState {
+    base: DeviceTopology,
+    /// Machine id → active? (indexed by machine id, which the builders
+    /// keep dense; sized to the max machine id + 1).
+    active: Vec<bool>,
+    /// Base device id → speed multiplier (1.0 = healthy).
+    slowdown: Vec<f64>,
+    /// Region pair (min, max) → (lat_factor, bw_factor).
+    link_scale: BTreeMap<(usize, usize), (f64, f64)>,
+    /// Bumped on every applied event; snapshot caches key off it.
+    epoch: u64,
+}
+
+impl FleetState {
+    pub fn new(base: DeviceTopology) -> FleetState {
+        let n_machines = base.devices.iter().map(|d| d.machine + 1).max().unwrap_or(0);
+        let n = base.n();
+        FleetState {
+            base,
+            active: vec![true; n_machines],
+            slowdown: vec![1.0; n],
+            link_scale: BTreeMap::new(),
+            epoch: 0,
+        }
+    }
+
+    /// The unmodified base topology.
+    pub fn base(&self) -> &DeviceTopology {
+        &self.base
+    }
+
+    /// Monotone epoch counter (one tick per applied event).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Number of currently active machines.
+    pub fn active_machines(&self) -> usize {
+        self.active.iter().filter(|&&a| a).count()
+    }
+
+    /// Apply one event. Out-of-range indices are ignored (a trace built
+    /// for a different testbed cannot corrupt the state).
+    pub fn apply(&mut self, event: &ClusterEvent) {
+        match *event {
+            ClusterEvent::MachinePreempt { machine } | ClusterEvent::MachineLeave { machine } => {
+                if let Some(a) = self.active.get_mut(machine) {
+                    *a = false;
+                }
+            }
+            ClusterEvent::MachineJoin { machine } => {
+                if let Some(a) = self.active.get_mut(machine) {
+                    *a = true;
+                }
+            }
+            ClusterEvent::LinkDegrade { ra, rb, lat_factor, bw_factor } => {
+                let key = (ra.min(rb), ra.max(rb));
+                self.link_scale
+                    .insert(key, (lat_factor.max(1.0), bw_factor.clamp(1e-3, 1.0)));
+            }
+            ClusterEvent::LinkRestore { ra, rb } => {
+                self.link_scale.remove(&(ra.min(rb), ra.max(rb)));
+            }
+            ClusterEvent::StragglerOnset { device, slowdown } => {
+                if let Some(s) = self.slowdown.get_mut(device) {
+                    *s = slowdown.clamp(0.05, 1.0);
+                }
+            }
+            ClusterEvent::StragglerClear { device } => {
+                if let Some(s) = self.slowdown.get_mut(device) {
+                    *s = 1.0;
+                }
+            }
+        }
+        self.epoch += 1;
+    }
+
+    /// Base device ids currently active.
+    pub fn active_device_ids(&self) -> Vec<usize> {
+        self.base
+            .devices
+            .iter()
+            .filter(|d| self.active[d.machine])
+            .map(|d| d.id)
+            .collect()
+    }
+
+    /// Materialize the current fleet: a dense sub-topology with link
+    /// degradation and straggler slowdowns applied, plus the
+    /// snapshot-id → base-id map.
+    pub fn snapshot(&self) -> (DeviceTopology, Vec<usize>) {
+        let ids = self.active_device_ids();
+        let (mut topo, map) = self.base.subset(&ids);
+        // Straggler slowdowns.
+        for d in topo.devices.iter_mut() {
+            d.speed = self.base.devices[map[d.id]].speed * self.slowdown[map[d.id]];
+        }
+        // Link degradation on cross-region edges.
+        if !self.link_scale.is_empty() {
+            let n = topo.n();
+            for i in 0..n {
+                for j in 0..n {
+                    if i == j {
+                        continue;
+                    }
+                    let (ri, rj) = (topo.devices[i].region, topo.devices[j].region);
+                    if ri == rj {
+                        continue;
+                    }
+                    if let Some(&(lat, bw)) = self.link_scale.get(&(ri.min(rj), ri.max(rj))) {
+                        topo.alpha[i][j] *= lat;
+                        topo.beta[i][j] *= bw;
+                    }
+                }
+            }
+        }
+        (topo, map)
+    }
+
+    /// Inverse of a snapshot map: base id → snapshot id.
+    pub fn base_to_snapshot(map: &[usize]) -> BTreeMap<usize, usize> {
+        map.iter().enumerate().map(|(new, &old)| (old, new)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{build_testbed, Scenario, TestbedSpec};
+
+    fn fleet() -> FleetState {
+        FleetState::new(build_testbed(Scenario::MultiCountry, &TestbedSpec::default()))
+    }
+
+    #[test]
+    fn preemption_shrinks_snapshot() {
+        let mut f = fleet();
+        let (t0, m0) = f.snapshot();
+        assert_eq!(t0.n(), 64);
+        assert_eq!(m0, (0..64).collect::<Vec<_>>());
+        f.apply(&ClusterEvent::MachinePreempt { machine: 0 });
+        let (t1, m1) = f.snapshot();
+        assert_eq!(t1.n(), 56);
+        assert!(m1.iter().all(|&b| f.base().devices[b].machine != 0));
+        f.apply(&ClusterEvent::MachineJoin { machine: 0 });
+        assert_eq!(f.snapshot().0.n(), 64);
+        assert_eq!(f.epoch(), 2);
+    }
+
+    #[test]
+    fn straggler_slows_effective_flops() {
+        let mut f = fleet();
+        let before = f.snapshot().0.devices[5].effective_flops();
+        f.apply(&ClusterEvent::StragglerOnset { device: 5, slowdown: 0.5 });
+        let after = f.snapshot().0.devices[5].effective_flops();
+        assert!((after / before - 0.5).abs() < 1e-9);
+        f.apply(&ClusterEvent::StragglerClear { device: 5 });
+        assert_eq!(f.snapshot().0.devices[5].effective_flops(), before);
+    }
+
+    #[test]
+    fn link_degrade_scales_cross_region_only() {
+        let mut f = fleet();
+        let (t0, _) = f.snapshot();
+        // Find a cross-region and an intra-region pair.
+        let cross = {
+            let mut found = None;
+            'o: for i in 0..t0.n() {
+                for j in 0..t0.n() {
+                    if t0.devices[i].region == 0 && t0.devices[j].region == 1 {
+                        found = Some((i, j));
+                        break 'o;
+                    }
+                }
+            }
+            found.unwrap()
+        };
+        f.apply(&ClusterEvent::LinkDegrade { ra: 0, rb: 1, lat_factor: 2.0, bw_factor: 0.5 });
+        let (t1, _) = f.snapshot();
+        assert!((t1.lat(cross.0, cross.1) / t0.lat(cross.0, cross.1) - 2.0).abs() < 1e-9);
+        assert!((t1.bw(cross.0, cross.1) / t0.bw(cross.0, cross.1) - 0.5).abs() < 1e-9);
+        // Same-machine links untouched.
+        assert_eq!(t1.lat(0, 1), t0.lat(0, 1));
+        f.apply(&ClusterEvent::LinkRestore { ra: 1, rb: 0 });
+        let (t2, _) = f.snapshot();
+        assert_eq!(t2.lat(cross.0, cross.1), t0.lat(cross.0, cross.1));
+    }
+
+    #[test]
+    fn base_to_snapshot_inverts() {
+        let mut f = fleet();
+        f.apply(&ClusterEvent::MachineLeave { machine: 2 });
+        let (_, map) = f.snapshot();
+        let inv = FleetState::base_to_snapshot(&map);
+        for (new, &old) in map.iter().enumerate() {
+            assert_eq!(inv[&old], new);
+        }
+        assert!(!inv.contains_key(&16)); // machine 2 = devices 16..24
+    }
+}

@@ -1,0 +1,35 @@
+//! Elastic cluster dynamics (the paper's implied deployment reality:
+//! underutilized mid-range GPUs across regions come and go).
+//!
+//! The static HetRL pipeline — profile → multi-level search → plan →
+//! execute — assumes a fixed fleet. This subsystem makes the stack
+//! dynamic:
+//!
+//! * [`events`] — the [`events::ClusterEvent`] model (GPU machine
+//!   join/leave/preempt, per-link bandwidth/latency shifts, straggler
+//!   onset) and a deterministic, seeded trace generator;
+//! * [`fleet`] — [`fleet::FleetState`]: the base topology plus applied
+//!   events, snapshotted into the dense [`crate::topology::DeviceTopology`]
+//!   the schedulers consume (with id maps across epochs);
+//! * [`replan`] — [`replan::Replanner`]: event-driven *incremental*
+//!   re-search — repair the incumbent, warm-start the EA from it under
+//!   a reduced budget, memoize per-task cost-model sub-results
+//!   ([`crate::costmodel::CostCache`]), and optimize a migration-aware
+//!   objective (`iter_time + migration/horizon`, see
+//!   [`crate::costmodel::MigrationModel`]);
+//! * [`replay`] — end-to-end dynamic-trace replay on the DES
+//!   ([`crate::simulator`]): plan → event → replan → resume, comparing
+//!   static / warm-replan / oracle policies (`hetrl replay`,
+//!   `benches/fig11_elastic.rs`).
+
+pub mod events;
+pub mod fleet;
+pub mod replan;
+pub mod replay;
+
+pub use events::{generate_trace, ClusterEvent, TraceConfig, TraceEvent};
+pub use fleet::FleetState;
+pub use replan::{
+    plan_to_base, prev_placement, repair_plan, ReplanConfig, ReplanOutcome, Replanner,
+};
+pub use replay::{first_event_iter, replay, IterRecord, Policy, ReplayConfig, ReplayResult};

@@ -1,0 +1,471 @@
+//! Event-driven replanning: repair the incumbent plan against the new
+//! fleet snapshot, warm-start the evolutionary search from it under a
+//! reduced budget, and score candidates with a migration-aware
+//! objective (`iter_time + migration_time / horizon`), reusing
+//! unchanged per-task cost-model sub-results through
+//! [`crate::costmodel::CostCache`].
+
+use crate::costmodel::migration::PrevTask;
+use crate::costmodel::{CostModel, MigrationModel};
+use crate::plan::parallel::uniform_layer_split;
+use crate::plan::{ExecutionPlan, ParallelStrategy, TaskPlan};
+use crate::scheduler::ea::{swap_devices, EaArm, EaConfig};
+use crate::scheduler::levels::{default_task_plans, strategy_feasible};
+use crate::scheduler::{Budget, EvalCtx, Scheduler, ShaEaScheduler};
+use crate::topology::DeviceTopology;
+use crate::util::rng::Rng;
+use crate::workflow::{JobConfig, RlWorkflow};
+use std::collections::BTreeMap;
+
+/// Replanning knobs.
+#[derive(Debug, Clone)]
+pub struct ReplanConfig {
+    /// Cost-model evaluations for an event-driven (warm) replan.
+    pub warm_budget: usize,
+    /// Evaluations for a cold search (initial plan / fallback / oracle).
+    pub cold_budget: usize,
+    /// Iterations over which a migration is amortized in the objective.
+    pub horizon_iters: f64,
+    /// Perturbed copies of the repaired incumbent injected into the
+    /// warm-start population.
+    pub seed_mutants: usize,
+    pub migration: MigrationModel,
+    pub ea: EaConfig,
+}
+
+impl Default for ReplanConfig {
+    fn default() -> Self {
+        ReplanConfig {
+            warm_budget: 150,
+            cold_budget: 600,
+            horizon_iters: 8.0,
+            seed_mutants: 6,
+            migration: MigrationModel::default(),
+            ea: EaConfig::default(),
+        }
+    }
+}
+
+/// Outcome of one replanning episode.
+#[derive(Debug, Clone)]
+pub struct ReplanOutcome {
+    /// Best plan, in the snapshot's device-id space.
+    pub plan: Option<ExecutionPlan>,
+    /// Pure predicted iteration time of that plan (seconds).
+    pub iter_time: f64,
+    /// One-off migration pause the switch costs (seconds).
+    pub migration_secs: f64,
+    /// Objective the search minimized (iter_time + amortized migration).
+    pub objective: f64,
+    pub evals: usize,
+    /// Whether the warm-started path produced the plan (vs cold search).
+    pub warm: bool,
+    /// Per-task cost-cache hits during the episode.
+    pub cache_hits: usize,
+}
+
+/// Translate a plan across id spaces and drop vanished devices.
+/// `base_to_new` maps base ids to snapshot ids; `plan` must be in base
+/// ids. Tasks whose assignment lost devices get `None` task plans and
+/// must be re-placed by the caller.
+fn translate(
+    plan: &ExecutionPlan,
+    base_to_new: &BTreeMap<usize, usize>,
+) -> (Vec<Vec<usize>>, Vec<Option<TaskPlan>>) {
+    let gpu_groups: Vec<Vec<usize>> = plan
+        .gpu_groups
+        .iter()
+        .map(|g| g.iter().filter_map(|d| base_to_new.get(d).copied()).collect())
+        .collect();
+    let task_plans: Vec<Option<TaskPlan>> = plan
+        .task_plans
+        .iter()
+        .map(|tp| {
+            let assignment: Vec<usize> = tp
+                .assignment
+                .iter()
+                .filter_map(|d| base_to_new.get(d).copied())
+                .collect();
+            if assignment.len() == tp.assignment.len() {
+                Some(TaskPlan { assignment, ..tp.clone() })
+            } else {
+                None
+            }
+        })
+        .collect();
+    (gpu_groups, task_plans)
+}
+
+/// Repair an incumbent plan (base ids) against a fleet snapshot:
+/// translate ids, keep intact task plans, and re-place tasks that lost
+/// devices on their (shrunken) groups. Returns a plan valid under the
+/// snapshot, or `None` when the surviving fleet cannot hold the
+/// workload in the incumbent's structure.
+pub fn repair_plan(
+    plan: &ExecutionPlan,
+    wf: &RlWorkflow,
+    job: &JobConfig,
+    topo: &DeviceTopology,
+    base_to_new: &BTreeMap<usize, usize>,
+    seed: u64,
+) -> Option<ExecutionPlan> {
+    let (gpu_groups, mut task_plans) = translate(plan, base_to_new);
+    if gpu_groups.iter().any(|g| g.is_empty()) {
+        return None;
+    }
+    let broken: Vec<usize> = (0..task_plans.len())
+        .filter(|&t| task_plans[t].is_none())
+        .collect();
+    if !broken.is_empty() {
+        // Re-place every task of each broken task's group: colocation
+        // memory budgeting is per group, so regenerating group-wise via
+        // the Level-4/5 machinery keeps C3 honest.
+        let mut rng = Rng::new(seed ^ 0x5EAF00D);
+        let regenerated =
+            default_task_plans(wf, job, topo, &plan.task_groups, &gpu_groups, &mut rng, false)?;
+        let broken_groups: Vec<usize> = broken.iter().map(|&t| plan.group_of_task(t)).collect();
+        for (t, tp) in task_plans.iter_mut().enumerate() {
+            let gi = plan.group_of_task(t);
+            if tp.is_none() || broken_groups.contains(&gi) {
+                *tp = Some(regenerated[t].clone());
+            }
+        }
+    }
+    let repaired = ExecutionPlan {
+        task_groups: plan.task_groups.clone(),
+        gpu_groups,
+        task_plans: task_plans.into_iter().collect::<Option<Vec<_>>>()?,
+    };
+    match repaired.validate(wf, topo, job) {
+        Ok(()) => Some(repaired),
+        Err(_) => repair_rebuild_all(&repaired, wf, job, topo, seed),
+    }
+}
+
+/// Last-resort repair: keep the grouping structure, rebuild every task
+/// plan from scratch on the surviving groups.
+fn repair_rebuild_all(
+    plan: &ExecutionPlan,
+    wf: &RlWorkflow,
+    job: &JobConfig,
+    topo: &DeviceTopology,
+    seed: u64,
+) -> Option<ExecutionPlan> {
+    let mut rng = Rng::new(seed ^ 0xBADCAFE);
+    let task_plans =
+        default_task_plans(wf, job, topo, &plan.task_groups, &plan.gpu_groups, &mut rng, false)?;
+    let rebuilt = ExecutionPlan {
+        task_groups: plan.task_groups.clone(),
+        gpu_groups: plan.gpu_groups.clone(),
+        task_plans,
+    };
+    rebuilt.validate(wf, topo, job).ok()?;
+    Some(rebuilt)
+}
+
+/// Pick a memory-feasible fallback strategy for one task on `devs`
+/// (most-sharded first). Used by tests and kept public for reuse.
+pub fn fallback_task_plan(
+    wf: &RlWorkflow,
+    job: &JobConfig,
+    topo: &DeviceTopology,
+    t: usize,
+    devs: &[usize],
+) -> Option<TaskPlan> {
+    let task = &wf.tasks[t];
+    let mut strategies = ParallelStrategy::enumerate(devs.len(), task.model.nl, 0.0);
+    strategies.sort_by_key(|s| std::cmp::Reverse(s.tp * s.pp));
+    let ordered = topo.locality_order(devs);
+    strategies
+        .into_iter()
+        .filter(|&s| strategy_feasible(task, job, topo, devs, s))
+        .map(|s| TaskPlan {
+            layer_split: uniform_layer_split(task.model.nl, s.pp),
+            dp_shares: vec![1.0 / s.dp as f64; s.dp],
+            strategy: s,
+            assignment: ordered[..s.degree()].to_vec(),
+        })
+        .next()
+}
+
+/// Event-driven replanner: owns the warm-start policy and seeds.
+#[derive(Debug, Clone)]
+pub struct Replanner {
+    pub cfg: ReplanConfig,
+    seed: u64,
+    episodes: u64,
+}
+
+impl Replanner {
+    pub fn new(seed: u64, cfg: ReplanConfig) -> Replanner {
+        Replanner { cfg, seed, episodes: 0 }
+    }
+
+    fn next_seed(&mut self) -> u64 {
+        self.episodes += 1;
+        self.seed
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(self.episodes.wrapping_mul(1442695040888963407))
+    }
+
+    /// Cold search (initial plan, oracle, or warm-path fallback): a full
+    /// multi-level SHA-EA run, no migration penalty.
+    pub fn cold_plan(
+        &mut self,
+        topo: &DeviceTopology,
+        wf: &RlWorkflow,
+        job: &JobConfig,
+    ) -> ReplanOutcome {
+        let seed = self.next_seed();
+        let mut sched = ShaEaScheduler::new(seed);
+        let out = sched.schedule(topo, wf, job, Budget::evals(self.cfg.cold_budget));
+        ReplanOutcome {
+            iter_time: out.cost,
+            objective: out.cost,
+            migration_secs: 0.0,
+            evals: out.evals,
+            warm: false,
+            cache_hits: 0,
+            plan: out.plan,
+        }
+    }
+
+    /// React to a fleet change: repair the incumbent (base-id space,
+    /// translated through `base_to_new`), warm-start the EA from it
+    /// under `warm_budget`, and minimize the migration-aware objective.
+    /// Falls back to a cold search when repair is impossible.
+    pub fn replan(
+        &mut self,
+        topo: &DeviceTopology,
+        wf: &RlWorkflow,
+        job: &JobConfig,
+        incumbent_base: &ExecutionPlan,
+        base_to_new: &BTreeMap<usize, usize>,
+    ) -> ReplanOutcome {
+        let seed = self.next_seed();
+        // Surviving shard placement of the incumbent (snapshot ids).
+        let prev = prev_placement(incumbent_base, base_to_new);
+
+        let repaired = repair_plan(incumbent_base, wf, job, topo, base_to_new, seed);
+        let Some(repaired) = repaired else {
+            // Surviving fleet can't hold the incumbent's structure —
+            // cold search, migration still charged against the result.
+            let mut out = self.cold_plan(topo, wf, job);
+            if let Some(plan) = &out.plan {
+                out.migration_secs =
+                    self.cfg.migration.migration_time(topo, wf, job, &prev, plan);
+                out.objective =
+                    out.iter_time + out.migration_secs / self.cfg.horizon_iters.max(1.0);
+            }
+            return out;
+        };
+
+        let mm = self.cfg.migration;
+        let horizon = self.cfg.horizon_iters.max(1.0);
+        let prev_for_penalty = prev.clone();
+        let mut ctx = EvalCtx::new(topo, wf, job, Budget::evals(self.cfg.warm_budget));
+        ctx.cache = Some(crate::costmodel::CostCache::new());
+        ctx.penalty = Some(Box::new(move |plan: &ExecutionPlan| {
+            mm.migration_time(topo, wf, job, &prev_for_penalty, plan) / horizon
+        }));
+
+        // Warm arm: the incumbent's Level-1/2 structure, population
+        // seeded with the repaired plan and light perturbations of it.
+        let grouping = repaired.task_groups.clone();
+        let sizes: Vec<usize> = repaired.gpu_groups.iter().map(|g| g.len()).collect();
+        let mut arm = EaArm::new(grouping, sizes, self.cfg.ea.clone(), seed);
+        arm.inject(&mut ctx, repaired.clone());
+        let mut rng = Rng::new(seed ^ 0x3A57_11CE);
+        for _ in 0..self.cfg.seed_mutants {
+            if ctx.exhausted() {
+                break;
+            }
+            let mut mutant = repaired.clone();
+            // Perturb: swap a random pair of devices across groups (or
+            // within one when the plan has a single group).
+            let all: Vec<usize> = mutant.gpu_groups.iter().flatten().copied().collect();
+            if all.len() >= 2 {
+                let a = all[rng.below(all.len())];
+                let mut b = all[rng.below(all.len())];
+                if a == b {
+                    b = all[(rng.below(all.len()) + 1) % all.len()];
+                }
+                swap_devices(&mut mutant, a, b);
+            }
+            arm.inject(&mut ctx, mutant);
+        }
+        while !ctx.exhausted() {
+            arm.run(&mut ctx, 8);
+        }
+
+        let migration_secs = ctx
+            .best_plan
+            .as_ref()
+            .map(|p| mm.migration_time(topo, wf, job, &prev, p))
+            .unwrap_or(0.0);
+        let cache_hits = ctx.cache.as_ref().map(|c| c.hits).unwrap_or(0);
+        let iter_time = ctx
+            .best_plan
+            .as_ref()
+            .map(|p| CostModel::new(topo, wf, job).plan_cost(p).iter_time)
+            .unwrap_or(f64::INFINITY);
+        let out = ctx.outcome();
+        ReplanOutcome {
+            iter_time,
+            objective: out.cost,
+            migration_secs,
+            evals: out.evals,
+            warm: true,
+            cache_hits,
+            plan: out.plan,
+        }
+    }
+}
+
+/// Surviving shard placement of a base-id incumbent under a snapshot
+/// translation — the single source both the replay driver and the
+/// replanner charge migration from.
+pub fn prev_placement(
+    incumbent_base: &ExecutionPlan,
+    base_to_new: &BTreeMap<usize, usize>,
+) -> Vec<PrevTask> {
+    PrevTask::from_plan(incumbent_base, |d| base_to_new.get(&d).copied())
+}
+
+/// Translate a snapshot-space plan back into base ids so it can serve
+/// as the incumbent for the next epoch.
+pub fn plan_to_base(plan: &ExecutionPlan, snapshot_to_base: &[usize]) -> ExecutionPlan {
+    ExecutionPlan {
+        task_groups: plan.task_groups.clone(),
+        gpu_groups: plan
+            .gpu_groups
+            .iter()
+            .map(|g| g.iter().map(|&d| snapshot_to_base[d]).collect())
+            .collect(),
+        task_plans: plan
+            .task_plans
+            .iter()
+            .map(|tp| TaskPlan {
+                assignment: tp.assignment.iter().map(|&d| snapshot_to_base[d]).collect(),
+                ..tp.clone()
+            })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elastic::events::ClusterEvent;
+    use crate::elastic::fleet::FleetState;
+    use crate::topology::{build_testbed, Scenario, TestbedSpec};
+    use crate::workflow::{Algo, Mode, ModelSpec};
+
+    fn small_cfg() -> ReplanConfig {
+        ReplanConfig {
+            warm_budget: 60,
+            cold_budget: 120,
+            seed_mutants: 3,
+            ..ReplanConfig::default()
+        }
+    }
+
+    fn setup() -> (RlWorkflow, FleetState, JobConfig) {
+        (
+            RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_4b()),
+            FleetState::new(build_testbed(Scenario::MultiCountry, &TestbedSpec::default())),
+            JobConfig::tiny(),
+        )
+    }
+
+    #[test]
+    fn repair_survives_machine_loss() {
+        let (wf, mut fleet, job) = setup();
+        let (topo0, map0) = fleet.snapshot();
+        let mut rp = Replanner::new(1, small_cfg());
+        let cold = rp.cold_plan(&topo0, &wf, &job);
+        let plan0 = cold.plan.expect("initial plan");
+        let base = plan_to_base(&plan0, &map0);
+
+        fleet.apply(&ClusterEvent::MachinePreempt { machine: 1 });
+        let (topo1, map1) = fleet.snapshot();
+        let b2n = FleetState::base_to_snapshot(&map1);
+        let repaired = repair_plan(&base, &wf, &job, &topo1, &b2n, 9);
+        if let Some(p) = repaired {
+            p.validate(&wf, &topo1, &job).unwrap();
+        }
+    }
+
+    #[test]
+    fn warm_replan_yields_valid_plan_and_uses_cache() {
+        let (wf, mut fleet, job) = setup();
+        let (topo0, map0) = fleet.snapshot();
+        let mut rp = Replanner::new(5, small_cfg());
+        let cold = rp.cold_plan(&topo0, &wf, &job);
+        let base = plan_to_base(&cold.plan.expect("plan"), &map0);
+
+        fleet.apply(&ClusterEvent::MachinePreempt { machine: 2 });
+        fleet.apply(&ClusterEvent::LinkDegrade {
+            ra: 0,
+            rb: 1,
+            lat_factor: 2.0,
+            bw_factor: 0.4,
+        });
+        let (topo1, map1) = fleet.snapshot();
+        let b2n = FleetState::base_to_snapshot(&map1);
+        let out = rp.replan(&topo1, &wf, &job, &base, &b2n);
+        let plan = out.plan.expect("replanned plan");
+        plan.validate(&wf, &topo1, &job).unwrap();
+        assert!(out.iter_time.is_finite());
+        assert!(out.objective >= out.iter_time - 1e-9);
+        assert!(out.evals <= small_cfg().warm_budget + 2);
+        assert!(out.cache_hits > 0, "warm search should reuse task costs");
+    }
+
+    #[test]
+    fn objective_is_iter_time_plus_amortized_migration() {
+        let (wf, mut fleet, job) = setup();
+        let (topo0, map0) = fleet.snapshot();
+        let mut rp = Replanner::new(11, small_cfg());
+        let base = plan_to_base(&rp.cold_plan(&topo0, &wf, &job).plan.unwrap(), &map0);
+        fleet.apply(&ClusterEvent::MachinePreempt { machine: 3 });
+        let (topo1, map1) = fleet.snapshot();
+        let b2n = FleetState::base_to_snapshot(&map1);
+        let out = rp.replan(&topo1, &wf, &job, &base, &b2n);
+        assert!(out.plan.is_some());
+        let horizon = rp.cfg.horizon_iters;
+        let want = out.iter_time + out.migration_secs / horizon;
+        assert!(
+            (out.objective - want).abs() < 1e-9 * want.max(1.0),
+            "objective {} != iter {} + mig {}/{horizon}",
+            out.objective,
+            out.iter_time,
+            out.migration_secs
+        );
+    }
+
+    #[test]
+    fn replan_deterministic_for_seed() {
+        let (wf, mut fleet, job) = setup();
+        let (topo0, map0) = fleet.snapshot();
+        let mk = || Replanner::new(13, small_cfg());
+        let base = {
+            let mut rp = mk();
+            plan_to_base(&rp.cold_plan(&topo0, &wf, &job).plan.unwrap(), &map0)
+        };
+        fleet.apply(&ClusterEvent::MachinePreempt { machine: 1 });
+        let (topo1, map1) = fleet.snapshot();
+        let b2n = FleetState::base_to_snapshot(&map1);
+        let run = || {
+            let mut rp = mk();
+            let _ = rp.cold_plan(&topo0, &wf, &job); // advance episode ctr identically
+            rp.replan(&topo1, &wf, &job, &base, &b2n)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.plan, b.plan);
+        assert_eq!(a.objective, b.objective);
+        assert_eq!(a.migration_secs, b.migration_secs);
+        assert_eq!(a.evals, b.evals);
+    }
+}

@@ -1,0 +1,376 @@
+//! End-to-end dynamic-trace replay: plan → event → replan → resume,
+//! measured with the discrete-event simulator on the *current* fleet
+//! snapshot at every iteration.
+//!
+//! Three policies are compared:
+//! * **Static** — the incumbent is only *repaired* (forced device
+//!   drops), never re-searched; what a scheduler without elasticity
+//!   does. Migration pauses are charged for the forced moves.
+//! * **Warm** — event-driven replanning: warm-started EA under a
+//!   reduced budget with the migration-aware objective. Migration
+//!   pauses charged.
+//! * **Oracle** — an idealized upper bound: full cold-search budget at
+//!   every event and free, instant migration.
+//!
+//! Everything is seeded; a replay is a pure function of
+//! `(scenario, spec, wf, job, policy, cfg, seed)`.
+
+use super::events::{generate_trace, TraceConfig, TraceEvent};
+use super::fleet::FleetState;
+use super::replan::{plan_to_base, prev_placement, repair_plan, ReplanConfig, Replanner};
+use crate::balance::{self, BalanceConfig};
+use crate::plan::ExecutionPlan;
+use crate::simulator::{simulate_plan, NoiseModel, SimConfig};
+use crate::topology::{build_testbed, Scenario, TestbedSpec};
+use crate::workflow::{JobConfig, RlWorkflow};
+
+/// Replay policy under comparison.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    Static,
+    Warm,
+    Oracle,
+}
+
+impl Policy {
+    pub const ALL: [Policy; 3] = [Policy::Static, Policy::Warm, Policy::Oracle];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Policy::Static => "static",
+            Policy::Warm => "warm-replan",
+            Policy::Oracle => "oracle",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s.to_ascii_lowercase().as_str() {
+            "static" => Some(Policy::Static),
+            "warm" | "warm-replan" | "replan" => Some(Policy::Warm),
+            "oracle" => Some(Policy::Oracle),
+            _ => None,
+        }
+    }
+}
+
+/// Replay configuration.
+#[derive(Debug, Clone)]
+pub struct ReplayConfig {
+    /// Training iterations to replay.
+    pub iters: usize,
+    pub trace: TraceConfig,
+    pub replan: ReplanConfig,
+    /// DES iterations averaged per measured point (1 keeps replays
+    /// cheap and bit-deterministic).
+    pub sim_iters: usize,
+    pub noise: NoiseModel,
+    /// Apply the heterogeneity load balancer after every (re)plan.
+    pub balance: bool,
+}
+
+impl Default for ReplayConfig {
+    fn default() -> Self {
+        ReplayConfig {
+            iters: 24,
+            trace: TraceConfig::default(),
+            replan: ReplanConfig::default(),
+            sim_iters: 1,
+            noise: NoiseModel::default(),
+            balance: true,
+        }
+    }
+}
+
+/// One replayed iteration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IterRecord {
+    pub iter: usize,
+    /// Labels of the events that fired before this iteration.
+    pub events: Vec<String>,
+    pub replanned: bool,
+    /// Search evaluations spent at this iteration (0 when no event).
+    pub evals: usize,
+    /// One-off migration pause charged at this iteration (seconds).
+    pub migration_secs: f64,
+    /// Simulated duration of this training iteration (seconds).
+    pub iter_secs: f64,
+    /// Samples actually processed (0 when the fleet stalled with no
+    /// feasible plan).
+    pub samples: usize,
+    pub active_gpus: usize,
+}
+
+/// Full replay outcome for one policy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplayResult {
+    pub policy: Policy,
+    pub seed: u64,
+    pub records: Vec<IterRecord>,
+    /// Σ iteration time + Σ migration pauses (seconds).
+    pub total_secs: f64,
+    /// Samples actually processed (stalled iterations count zero).
+    pub samples: usize,
+    pub replans: usize,
+    pub total_evals: usize,
+}
+
+impl ReplayResult {
+    /// End-to-end throughput over the whole trace, samples/s.
+    pub fn throughput(&self) -> f64 {
+        self.samples as f64 / self.total_secs
+    }
+
+    /// Throughput restricted to iterations `>= from` (e.g. after the
+    /// first preemption), migration pauses included and stalled
+    /// iterations contributing time but no samples.
+    pub fn throughput_after(&self, from: usize) -> f64 {
+        let (mut secs, mut samples) = (0.0f64, 0usize);
+        for r in self.records.iter().filter(|r| r.iter >= from) {
+            secs += r.iter_secs + r.migration_secs;
+            samples += r.samples;
+        }
+        if secs > 0.0 {
+            samples as f64 / secs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// First iteration at which any event fires (`None` for a quiet trace).
+pub fn first_event_iter(trace: &[TraceEvent]) -> Option<usize> {
+    trace.iter().map(|e| e.at_iter).min()
+}
+
+/// Replay a dynamic trace end-to-end under one policy.
+pub fn replay(
+    scenario: Scenario,
+    spec: &TestbedSpec,
+    wf: &RlWorkflow,
+    job: &JobConfig,
+    policy: Policy,
+    cfg: &ReplayConfig,
+    seed: u64,
+) -> ReplayResult {
+    let base = build_testbed(scenario, spec);
+    let trace = generate_trace(&base, &cfg.trace, seed);
+    let mut fleet = FleetState::new(base);
+    let mut replanner = Replanner::new(seed, cfg.replan.clone());
+
+    // Initial plan on the full fleet (identical across policies: the
+    // replanner's episode counter starts equal).
+    let (mut topo, mut map) = fleet.snapshot();
+    let cold = replanner.cold_plan(&topo, wf, job);
+    let mut plan: Option<ExecutionPlan> = cold.plan.map(|p| {
+        if cfg.balance {
+            balance::apply(&p, wf, &topo, BalanceConfig::default())
+        } else {
+            p
+        }
+    });
+    let mut incumbent_base = plan.as_ref().map(|p| plan_to_base(p, &map));
+
+    let mut records = Vec::with_capacity(cfg.iters);
+    let mut total_secs = 0.0;
+    let mut replans = 0;
+    let mut total_evals = cold.evals;
+    let mut cursor = 0usize;
+
+    for iter in 0..cfg.iters {
+        // Fire due events.
+        let mut labels = Vec::new();
+        while cursor < trace.len() && trace[cursor].at_iter <= iter {
+            fleet.apply(&trace[cursor].event);
+            labels.push(trace[cursor].event.label());
+            cursor += 1;
+        }
+        let mut migration_secs = 0.0;
+        let mut evals = 0;
+        let mut replanned = false;
+        if !labels.is_empty() {
+            let (t, m) = fleet.snapshot();
+            topo = t;
+            map = m;
+            let b2n = FleetState::base_to_snapshot(&map);
+            let mm = cfg.replan.migration;
+            let new_plan = match (policy, incumbent_base.as_ref()) {
+                (Policy::Static, Some(inc)) => {
+                    // Repair only — no search. Migration is charged from
+                    // the same surviving-shard placement the replanner
+                    // uses (replan::prev_placement).
+                    let prev = prev_placement(inc, &b2n);
+                    let repaired = repair_plan(inc, wf, job, &topo, &b2n, seed ^ iter as u64);
+                    match repaired {
+                        Some(p) => {
+                            migration_secs = mm.migration_time(&topo, wf, job, &prev, &p);
+                            Some(p)
+                        }
+                        None => {
+                            // Cannot even repair: forced cold search —
+                            // the "static" system restarts from scratch.
+                            let out = replanner.cold_plan(&topo, wf, job);
+                            evals += out.evals;
+                            if let Some(p) = &out.plan {
+                                migration_secs = mm.migration_time(&topo, wf, job, &prev, p);
+                            }
+                            out.plan
+                        }
+                    }
+                }
+                (Policy::Warm, Some(inc)) => {
+                    replanned = true;
+                    let out = replanner.replan(&topo, wf, job, inc, &b2n);
+                    evals += out.evals;
+                    migration_secs = out.migration_secs;
+                    out.plan
+                }
+                (Policy::Oracle, _) | (_, None) => {
+                    replanned = true;
+                    let out = replanner.cold_plan(&topo, wf, job);
+                    evals += out.evals;
+                    // Oracle migrates for free; a policy with no
+                    // incumbent has nothing to move.
+                    out.plan
+                }
+            };
+            plan = new_plan.map(|p| {
+                if cfg.balance {
+                    balance::apply(&p, wf, &topo, BalanceConfig::default())
+                } else {
+                    p
+                }
+            });
+            incumbent_base = plan.as_ref().map(|p| plan_to_base(p, &map));
+            if replanned {
+                replans += 1;
+            }
+            total_evals += evals;
+        }
+
+        // Measure this iteration on the current snapshot.
+        let (iter_secs, iter_samples) = match &plan {
+            Some(p) => {
+                let sim = SimConfig {
+                    iters: cfg.sim_iters.max(1),
+                    seed: seed ^ (iter as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                    noise: cfg.noise,
+                };
+                (simulate_plan(&topo, wf, job, p, &sim).iter_time, job.total_samples())
+            }
+            // No feasible plan: the fleet stalls for a beat (charged as
+            // the previous iteration's duration, or a large constant at
+            // the start) and processes nothing.
+            None => (
+                records.last().map(|r: &IterRecord| r.iter_secs).unwrap_or(600.0),
+                0,
+            ),
+        };
+        total_secs += iter_secs + migration_secs;
+        records.push(IterRecord {
+            iter,
+            events: labels,
+            replanned,
+            evals,
+            migration_secs,
+            iter_secs,
+            samples: iter_samples,
+            active_gpus: topo.n(),
+        });
+    }
+
+    ReplayResult {
+        policy,
+        seed,
+        samples: records.iter().map(|r| r.samples).sum(),
+        records,
+        total_secs,
+        replans,
+        total_evals,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::{Algo, Mode, ModelSpec};
+
+    fn tiny_cfg() -> ReplayConfig {
+        ReplayConfig {
+            iters: 6,
+            trace: TraceConfig { horizon: 6, n_events: 2, ..TraceConfig::default() },
+            replan: ReplanConfig {
+                warm_budget: 40,
+                cold_budget: 80,
+                seed_mutants: 2,
+                ..ReplanConfig::default()
+            },
+            sim_iters: 1,
+            noise: NoiseModel::default(),
+            balance: true,
+        }
+    }
+
+    fn small_spec() -> TestbedSpec {
+        TestbedSpec {
+            machines: vec![
+                (crate::topology::GpuModel::A100, 1),
+                (crate::topology::GpuModel::L40S, 1),
+                (crate::topology::GpuModel::L4, 1),
+            ],
+            gpus_per_machine: 4,
+        }
+    }
+
+    #[test]
+    fn replay_runs_all_policies() {
+        let wf = RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_1b7());
+        let job = JobConfig::tiny();
+        for policy in Policy::ALL {
+            let r = replay(
+                Scenario::MultiCountry,
+                &small_spec(),
+                &wf,
+                &job,
+                policy,
+                &tiny_cfg(),
+                3,
+            );
+            assert_eq!(r.records.len(), 6);
+            assert!(r.total_secs > 0.0 && r.total_secs.is_finite(), "{policy:?}");
+            assert!(r.throughput() > 0.0);
+        }
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let wf = RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_1b7());
+        let job = JobConfig::tiny();
+        let a = replay(
+            Scenario::MultiRegionHybrid,
+            &small_spec(),
+            &wf,
+            &job,
+            Policy::Warm,
+            &tiny_cfg(),
+            9,
+        );
+        let b = replay(
+            Scenario::MultiRegionHybrid,
+            &small_spec(),
+            &wf,
+            &job,
+            Policy::Warm,
+            &tiny_cfg(),
+            9,
+        );
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in Policy::ALL {
+            assert_eq!(Policy::parse(p.name()), Some(p));
+        }
+        assert_eq!(Policy::parse("nope"), None);
+    }
+}

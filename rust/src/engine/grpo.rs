@@ -9,7 +9,7 @@ use super::tokenizer::Tokenizer;
 use super::workers::WorkerFleet;
 use crate::runtime::{HostTensor, Runtime};
 use crate::util::rng::Rng;
-use anyhow::Result;
+use crate::util::error::Result;
 use std::time::Instant;
 
 /// Trainer configuration.

@@ -4,7 +4,7 @@
 
 use crate::runtime::{HostTensor, Runtime};
 use crate::util::rng::Rng;
-use anyhow::Result;
+use crate::util::error::Result;
 
 /// Model parameters (+ optional optimizer state).
 pub struct Policy {

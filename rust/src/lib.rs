@@ -17,6 +17,16 @@
 //!   (Levels 1–5), the hybrid nested-SHA + evolutionary algorithm
 //!   (paper Algorithm 1), the exact ILP formulation, and the baselines
 //!   (verl-like, StreamRL-like, pure EA / DEAP-like, random);
+//! * **elastic cluster dynamics** ([`elastic`]): a seeded
+//!   [`elastic::ClusterEvent`] trace model (machine join/leave/preempt,
+//!   WAN degradation, stragglers) over a mutable fleet
+//!   ([`elastic::FleetState`]), event-driven replanning that
+//!   warm-starts the EA from the repaired incumbent under a reduced
+//!   budget with a migration-aware objective
+//!   ([`costmodel::MigrationModel`]) and per-task cost memoization
+//!   ([`costmodel::CostCache`]), and full dynamic-trace replay through
+//!   the DES (`hetrl replay --scenario <s1..s4> --seed N`, compared as
+//!   static vs warm-replan vs oracle in `benches/fig11_elastic.rs`);
 //! * a standalone **0-1 ILP solver** ([`solver`]): dense simplex LP
 //!   relaxation + branch & bound;
 //! * a **discrete-event cluster simulator** ([`simulator`]) standing in
@@ -30,8 +40,13 @@
 //! Offline-registry constraints mean the usual ecosystem crates are not
 //! available; [`util`] and [`testing`] provide the in-crate substrates
 //! (PRNG, JSON, CLI, logging, threadpool, bench harness, property-based
-//! testing).
+//! testing), [`log`] is an in-crate facade replacing the `log` crate,
+//! [`util::error`] replaces `anyhow`, and [`runtime::xla_stub`] stands
+//! in for the PJRT bindings (host-side literal ops are real; device
+//! compile/execute report unavailability until real bindings are wired
+//! back in).
 
+pub mod log;
 pub mod util;
 pub mod testing;
 pub mod topology;
@@ -41,6 +56,7 @@ pub mod costmodel;
 pub mod simulator;
 pub mod solver;
 pub mod scheduler;
+pub mod elastic;
 pub mod balance;
 pub mod profiler;
 pub mod metrics;

@@ -1,0 +1,215 @@
+//! Minimal `log`-crate facade (the offline registry has no `log`).
+//! Mirrors the subset the crate uses: the [`Log`] trait, level types,
+//! `set_boxed_logger` / `set_max_level` / `max_level`, and the
+//! `error!`..`trace!` macros, invoked as `crate::log::debug!(...)`.
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Log levels, most to least severe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 1,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+/// Level filter (a [`Level`] or `Off`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LevelFilter {
+    Off = 0,
+    Error,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl Level {
+    fn as_usize(self) -> usize {
+        self as usize
+    }
+}
+
+// Cross-type comparisons (`Level <= LevelFilter`), as in the log crate.
+impl PartialEq<LevelFilter> for Level {
+    fn eq(&self, other: &LevelFilter) -> bool {
+        *self as usize == *other as usize
+    }
+}
+
+impl PartialOrd<LevelFilter> for Level {
+    fn partial_cmp(&self, other: &LevelFilter) -> Option<std::cmp::Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+/// Metadata of a record (just the level; targets live on the record).
+#[derive(Debug, Clone, Copy)]
+pub struct Metadata {
+    level: Level,
+}
+
+impl Metadata {
+    pub fn level(&self) -> Level {
+        self.level
+    }
+}
+
+/// One log record: level + module path target + formatted arguments.
+pub struct Record<'a> {
+    level: Level,
+    target: &'a str,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    pub fn level(&self) -> Level {
+        self.level
+    }
+
+    pub fn target(&self) -> &str {
+        self.target
+    }
+
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+
+    pub fn metadata(&self) -> Metadata {
+        Metadata { level: self.level }
+    }
+}
+
+/// Logger backend interface.
+pub trait Log: Send + Sync {
+    fn enabled(&self, metadata: &Metadata) -> bool;
+    fn log(&self, record: &Record<'_>);
+    fn flush(&self);
+}
+
+static LOGGER: OnceLock<Box<dyn Log>> = OnceLock::new();
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(0); // Off until init
+
+/// Install the global logger; errors if one is already set.
+pub fn set_boxed_logger(logger: Box<dyn Log>) -> Result<(), ()> {
+    LOGGER.set(logger).map_err(|_| ())
+}
+
+/// Set the maximum enabled level.
+pub fn set_max_level(filter: LevelFilter) {
+    MAX_LEVEL.store(filter as usize, Ordering::Relaxed);
+}
+
+/// Current maximum enabled level.
+pub fn max_level() -> LevelFilter {
+    match MAX_LEVEL.load(Ordering::Relaxed) {
+        0 => LevelFilter::Off,
+        1 => LevelFilter::Error,
+        2 => LevelFilter::Warn,
+        3 => LevelFilter::Info,
+        4 => LevelFilter::Debug,
+        _ => LevelFilter::Trace,
+    }
+}
+
+/// Macro plumbing: dispatch one record to the installed logger.
+#[doc(hidden)]
+pub fn __log(level: Level, target: &str, args: fmt::Arguments<'_>) {
+    if level.as_usize() > MAX_LEVEL.load(Ordering::Relaxed) {
+        return;
+    }
+    if let Some(logger) = LOGGER.get() {
+        logger.log(&Record { level, target, args });
+    }
+}
+
+#[doc(hidden)]
+#[macro_export]
+macro_rules! __hetrl_log {
+    ($lvl:expr, $($arg:tt)+) => {
+        $crate::log::__log($lvl, module_path!(), format_args!($($arg)+))
+    };
+}
+
+#[doc(hidden)]
+#[macro_export]
+macro_rules! __hetrl_log_error {
+    ($($arg:tt)+) => { $crate::__hetrl_log!($crate::log::Level::Error, $($arg)+) };
+}
+
+#[doc(hidden)]
+#[macro_export]
+macro_rules! __hetrl_log_warn {
+    ($($arg:tt)+) => { $crate::__hetrl_log!($crate::log::Level::Warn, $($arg)+) };
+}
+
+#[doc(hidden)]
+#[macro_export]
+macro_rules! __hetrl_log_info {
+    ($($arg:tt)+) => { $crate::__hetrl_log!($crate::log::Level::Info, $($arg)+) };
+}
+
+#[doc(hidden)]
+#[macro_export]
+macro_rules! __hetrl_log_debug {
+    ($($arg:tt)+) => { $crate::__hetrl_log!($crate::log::Level::Debug, $($arg)+) };
+}
+
+#[doc(hidden)]
+#[macro_export]
+macro_rules! __hetrl_log_trace {
+    ($($arg:tt)+) => { $crate::__hetrl_log!($crate::log::Level::Trace, $($arg)+) };
+}
+
+pub use crate::__hetrl_log_debug as debug;
+pub use crate::__hetrl_log_error as error;
+pub use crate::__hetrl_log_info as info;
+pub use crate::__hetrl_log_trace as trace;
+pub use crate::__hetrl_log_warn as warn;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize as Counter;
+    use std::sync::Arc;
+
+    struct CountingLogger(Arc<Counter>);
+
+    impl Log for CountingLogger {
+        fn enabled(&self, metadata: &Metadata) -> bool {
+            metadata.level() <= Level::Info
+        }
+
+        fn log(&self, record: &Record<'_>) {
+            let _ = format!("{}", record.args());
+            self.0.fetch_add(1, Ordering::Relaxed);
+        }
+
+        fn flush(&self) {}
+    }
+
+    #[test]
+    fn filtering_and_dispatch() {
+        let count = Arc::new(Counter::new(0));
+        // The global logger may already be installed by another test
+        // (logging::init) — only assert when we won the race.
+        let ours = set_boxed_logger(Box::new(CountingLogger(Arc::clone(&count)))).is_ok();
+        set_max_level(LevelFilter::Info);
+        crate::log::info!("hello {}", 1);
+        crate::log::debug!("filtered out");
+        if ours {
+            assert_eq!(count.load(Ordering::Relaxed), 1);
+        }
+        assert_eq!(max_level(), LevelFilter::Info);
+    }
+
+    #[test]
+    fn level_order() {
+        assert!(Level::Error < Level::Trace);
+        assert!(LevelFilter::Off < LevelFilter::Error);
+    }
+}

@@ -10,6 +10,9 @@
 
 use hetrl::balance::{self, BalanceConfig};
 use hetrl::costmodel::CostModel;
+use hetrl::elastic::{
+    self, first_event_iter, generate_trace, Policy, ReplanConfig, ReplayConfig, TraceConfig,
+};
 use hetrl::engine::{GrpoConfig, GrpoTrainer, TaskDifficulty, WorkerFleet};
 use hetrl::profiler::{profile, ProfilerConfig};
 use hetrl::runtime::Runtime;
@@ -37,6 +40,7 @@ fn main() {
         Some("schedule") => cmd_schedule(&args, false),
         Some("simulate") => cmd_schedule(&args, true),
         Some("validate-cost-model") => cmd_validate(&args),
+        Some("replay") => cmd_replay(&args),
         Some("train") => cmd_train(&args),
         Some("info") => cmd_info(&args),
         _ => {
@@ -55,6 +59,7 @@ fn help() -> String {
             ("schedule", "search for an execution plan"),
             ("simulate", "schedule + discrete-event simulation"),
             ("validate-cost-model", "predicted vs simulated iteration time"),
+            ("replay", "dynamic trace: plan -> event -> replan -> resume"),
             ("train", "real GRPO training over artifacts/"),
             ("info", "artifact manifest summary"),
         ],
@@ -66,6 +71,11 @@ fn help() -> String {
             OptSpec { name: "scheduler", help: "sha-ea|ilp|verl|streamrl|deap|random", default: Some("sha-ea") },
             OptSpec { name: "budget", help: "search budget (cost-model evals)", default: Some("600") },
             OptSpec { name: "seed", help: "random seed", default: Some("0") },
+            OptSpec { name: "iters", help: "replay: iterations to replay", default: Some("24") },
+            OptSpec { name: "events", help: "replay: cluster events in the trace", default: Some("5") },
+            OptSpec { name: "policy", help: "replay: static|warm|oracle|all", default: Some("all") },
+            OptSpec { name: "warm-budget", help: "replay: evals per warm replan", default: Some("150") },
+            OptSpec { name: "tiny", help: "replay: scaled-down job (flag)", default: None },
             OptSpec { name: "steps", help: "train: number of GRPO steps", default: Some("100") },
             OptSpec { name: "artifacts", help: "artifacts directory", default: Some("artifacts") },
             OptSpec { name: "no-balance", help: "disable load balancing (flag)", default: None },
@@ -195,6 +205,101 @@ fn cmd_validate(args: &Args) -> i32 {
         fmt_secs(pred),
         fmt_secs(sim.iter_time)
     );
+    0
+}
+
+fn cmd_replay(args: &Args) -> i32 {
+    let (wf, _topo, mut job) = match parse_env(args) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    if args.flag("tiny") {
+        job = hetrl::workflow::JobConfig::tiny();
+    }
+    let Some(scenario) = Scenario::parse(&args.get_or("scenario", "country")) else {
+        eprintln!("bad --scenario");
+        return 2;
+    };
+    let seed = args.get_u64("seed", 0).unwrap_or(0);
+    let iters = args.get_usize("iters", 24).unwrap_or(24);
+    let n_events = args.get_usize("events", 5).unwrap_or(5);
+    let cold_budget = args.get_usize("budget", 600).unwrap_or(600);
+    let warm_budget = args.get_usize("warm-budget", 150).unwrap_or(150);
+    let policies: Vec<Policy> = match args.get_or("policy", "all").as_str() {
+        "all" => Policy::ALL.to_vec(),
+        other => match Policy::parse(other) {
+            Some(p) => vec![p],
+            None => {
+                eprintln!("bad --policy '{other}' (static|warm|oracle|all)");
+                return 2;
+            }
+        },
+    };
+    let spec = TestbedSpec::default();
+    let cfg = ReplayConfig {
+        iters,
+        trace: TraceConfig { horizon: iters, n_events, ..TraceConfig::default() },
+        replan: ReplanConfig { warm_budget, cold_budget, ..ReplanConfig::default() },
+        ..ReplayConfig::default()
+    };
+
+    // Print the (policy-independent) trace first.
+    let base = hetrl::topology::build_testbed(scenario, &spec);
+    let trace = generate_trace(&base, &cfg.trace, seed);
+    println!(
+        "replaying {} iterations of {} on {} ({} GPUs), seed {seed}, {} events:",
+        iters,
+        wf.name(),
+        scenario.name(),
+        base.n(),
+        trace.len()
+    );
+    for e in &trace {
+        println!("  iter {:>3}: {}", e.at_iter, e.event.label());
+    }
+    let post = first_event_iter(&trace).unwrap_or(0);
+
+    let mut table = hetrl::util::table::Table::new(
+        &format!("replay: {} / {} / seed {seed}", scenario.name(), wf.name()),
+        &[
+            "policy",
+            "total (s)",
+            "thpt (samp/s)",
+            "post-event thpt",
+            "replans",
+            "evals",
+            "migration (s)",
+        ],
+    );
+    for policy in policies {
+        let r = elastic::replay(scenario, &spec, &wf, &job, policy, &cfg, seed);
+        let mig: f64 = r.records.iter().map(|x| x.migration_secs).sum();
+        for rec in r.records.iter().filter(|rec| !rec.events.is_empty()) {
+            println!(
+                "  [{}] iter {:>3}: {} -> {} GPUs, {} evals, migration {}, iter {}",
+                policy.name(),
+                rec.iter,
+                rec.events.join(" + "),
+                rec.active_gpus,
+                rec.evals,
+                fmt_secs(rec.migration_secs),
+                fmt_secs(rec.iter_secs),
+            );
+        }
+        table.row(vec![
+            policy.name().to_string(),
+            format!("{:.1}", r.total_secs),
+            format!("{:.2}", r.throughput()),
+            format!("{:.2}", r.throughput_after(post)),
+            r.replans.to_string(),
+            r.total_evals.to_string(),
+            format!("{mig:.1}"),
+        ]);
+    }
+    table.print();
     0
 }
 

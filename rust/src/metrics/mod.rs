@@ -1,6 +1,6 @@
 //! Run records and result persistence: every bench writes its rows here
-//! (JSON + CSV under `results/`) so EXPERIMENTS.md can cite concrete
-//! files.
+//! (JSON under `bench_out/`, overridable via `HETRL_RESULTS`) so
+//! experiment write-ups can cite concrete files.
 
 use crate::util::json::Json;
 use std::io::Write;
@@ -42,7 +42,7 @@ impl RunRecord {
         ])
     }
 
-    /// Write `results/<experiment>.json` (creating the directory).
+    /// Write `<dir>/<experiment>.json` (creating the directory).
     pub fn save(&self, dir: &str) -> std::io::Result<PathBuf> {
         let dir = Path::new(dir);
         std::fs::create_dir_all(dir)?;
@@ -53,9 +53,10 @@ impl RunRecord {
     }
 }
 
-/// Environment-variable override for the results directory.
+/// Bench output directory: `HETRL_RESULTS` env override, else
+/// `bench_out/` (kept out of the way of source trees and git).
 pub fn results_dir() -> String {
-    std::env::var("HETRL_RESULTS").unwrap_or_else(|_| "results".to_string())
+    std::env::var("HETRL_RESULTS").unwrap_or_else(|_| "bench_out".to_string())
 }
 
 #[cfg(test)]

@@ -84,25 +84,50 @@ pub struct ExecutionPlan {
 }
 
 /// Plan validation failure.
-#[derive(Debug, Clone, thiserror::Error, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum PlanError {
-    #[error("task groups are not a partition of the workflow's tasks")]
     BadTaskGrouping,
-    #[error("gpu groups overlap or reference unknown devices")]
     BadGpuGrouping,
-    #[error("task {task}: tasklet count {tasklets} exceeds devices {devices} (C1)")]
     TooManyTasklets { task: usize, tasklets: usize, devices: usize },
-    #[error("task {task}: assignment uses device {device} outside its gpu group")]
     AssignmentOutsideGroup { task: usize, device: usize },
-    #[error("task {task}: device {device} assigned more than one tasklet of the task")]
     DuplicateDevice { task: usize, device: usize },
-    #[error("task {task}: layer split invalid")]
     BadLayerSplit { task: usize },
-    #[error("task {task}: dp shares invalid")]
     BadDpShares { task: usize },
-    #[error("device {device}: memory over capacity ({need_gib:.1} GiB > {cap_gib:.1} GiB) (C3)")]
     OutOfMemory { device: usize, need_gib: f64, cap_gib: f64 },
 }
+
+impl std::fmt::Display for PlanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlanError::BadTaskGrouping => {
+                write!(f, "task groups are not a partition of the workflow's tasks")
+            }
+            PlanError::BadGpuGrouping => {
+                write!(f, "gpu groups overlap or reference unknown devices")
+            }
+            PlanError::TooManyTasklets { task, tasklets, devices } => write!(
+                f,
+                "task {task}: tasklet count {tasklets} exceeds devices {devices} (C1)"
+            ),
+            PlanError::AssignmentOutsideGroup { task, device } => write!(
+                f,
+                "task {task}: assignment uses device {device} outside its gpu group"
+            ),
+            PlanError::DuplicateDevice { task, device } => write!(
+                f,
+                "task {task}: device {device} assigned more than one tasklet of the task"
+            ),
+            PlanError::BadLayerSplit { task } => write!(f, "task {task}: layer split invalid"),
+            PlanError::BadDpShares { task } => write!(f, "task {task}: dp shares invalid"),
+            PlanError::OutOfMemory { device, need_gib, cap_gib } => write!(
+                f,
+                "device {device}: memory over capacity ({need_gib:.1} GiB > {cap_gib:.1} GiB) (C3)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
 
 impl ExecutionPlan {
     /// Which task group a task belongs to.

@@ -3,7 +3,7 @@
 //! layout, model hyperparameters).
 
 use crate::util::json::Json;
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 

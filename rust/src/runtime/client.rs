@@ -7,7 +7,8 @@
 //! single tuple literal.
 
 use super::artifacts::{Dtype, Manifest, TensorSpec};
-use anyhow::{anyhow, bail, Context, Result};
+use super::xla_stub as xla;
+use crate::util::error::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
 
 /// A host-side tensor (row-major f32/i32/u32).
@@ -160,7 +161,7 @@ impl Runtime {
                 .with_context(|| format!("compiling '{name}'"))?;
             executables.insert(name.clone(), exe);
         }
-        log::info!(
+        crate::log::info!(
             "runtime loaded {} entry points from {} ({:.2}M params)",
             executables.len(),
             dir,

@@ -4,6 +4,7 @@
 
 pub mod artifacts;
 pub mod client;
+pub mod xla_stub;
 
 pub use artifacts::{Dtype, EntryPoint, Manifest, TensorSpec};
 pub use client::{DeviceTensors, HostTensor, Runtime};

@@ -1,0 +1,246 @@
+//! Stand-in for the `xla` (PJRT) bindings, which are not present in the
+//! offline build image. The *host-side* literal operations are real —
+//! shape/dtype bookkeeping, reshape, tuple access and round-tripping all
+//! work, so [`super::client::HostTensor`] conversion is fully functional
+//! without any XLA install. The *device-side* operations
+//! ([`PjRtClient::cpu`], compile, execute) return a descriptive error:
+//! wiring a real binding back in only requires deleting the
+//! `use super::xla_stub as xla;` alias in `client.rs`.
+
+use crate::util::error::{bail, Error, Result};
+
+/// Element types the artifact manifest uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    U32,
+}
+
+/// Raw storage behind a [`Literal`] (public only because the sealed
+/// [`NativeType`] trait mentions it; not part of the stable surface).
+#[doc(hidden)]
+#[derive(Debug, Clone, PartialEq)]
+pub enum Storage {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Host-side literal: typed buffer + dims, or a tuple of literals.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    storage: Storage,
+}
+
+/// Shape of an array literal.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Sealed conversion trait for the native element types.
+pub trait NativeType: Sized + Clone {
+    fn wrap(data: Vec<Self>) -> Storage;
+    fn unwrap(storage: &Storage) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<f32>) -> Storage {
+        Storage::F32(data)
+    }
+
+    fn unwrap(storage: &Storage) -> Option<Vec<f32>> {
+        match storage {
+            Storage::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<i32>) -> Storage {
+        Storage::I32(data)
+    }
+
+    fn unwrap(storage: &Storage) -> Option<Vec<i32>> {
+        match storage {
+            Storage::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for u32 {
+    fn wrap(data: Vec<u32>) -> Storage {
+        Storage::U32(data)
+    }
+
+    fn unwrap(storage: &Storage) -> Option<Vec<u32>> {
+        match storage {
+            Storage::U32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            dims: vec![data.len() as i64],
+            storage: T::wrap(data.to_vec()),
+        }
+    }
+
+    fn numel(&self) -> i64 {
+        match &self.storage {
+            Storage::F32(v) => v.len() as i64,
+            Storage::I32(v) => v.len() as i64,
+            Storage::U32(v) => v.len() as i64,
+            Storage::Tuple(_) => -1,
+        }
+    }
+
+    /// Reinterpret with new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if matches!(self.storage, Storage::Tuple(_)) {
+            bail!("cannot reshape a tuple literal");
+        }
+        if want != self.numel() {
+            bail!("reshape {:?} -> {:?}: element count mismatch", self.dims, dims);
+        }
+        Ok(Literal { dims: dims.to_vec(), storage: self.storage.clone() })
+    }
+
+    /// Array shape (error for tuples).
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        let ty = match &self.storage {
+            Storage::F32(_) => ElementType::F32,
+            Storage::I32(_) => ElementType::S32,
+            Storage::U32(_) => ElementType::U32,
+            Storage::Tuple(_) => bail!("tuple literal has no array shape"),
+        };
+        Ok(ArrayShape { dims: self.dims.clone(), ty })
+    }
+
+    /// Copy out the typed data.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.storage)
+            .ok_or_else(|| Error::msg("literal element type mismatch"))
+    }
+
+    /// Destructure a tuple literal.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.storage {
+            Storage::Tuple(parts) => Ok(parts.clone()),
+            _ => bail!("literal is not a tuple"),
+        }
+    }
+}
+
+const UNAVAILABLE: &str = "XLA/PJRT backend is not available in this build \
+(runtime::xla_stub); install the xla bindings and drop the stub alias to \
+enable real execution";
+
+/// Parsed HLO module (never constructible through the stub).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        bail!("{UNAVAILABLE}")
+    }
+}
+
+/// XLA computation wrapper.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device buffer handle returned by `execute`.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        bail!("{UNAVAILABLE}")
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        bail!("{UNAVAILABLE}")
+    }
+}
+
+/// PJRT client handle.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        let shape = r.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 2]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert!(l.to_tuple().is_err());
+    }
+
+    #[test]
+    fn device_side_fails_gracefully() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{err}").contains("not available"));
+        assert!(HloModuleProto::from_text_file("x").is_err());
+    }
+}

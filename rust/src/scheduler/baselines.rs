@@ -45,7 +45,7 @@ impl VerlScheduler {
             .unwrap_or(GpuModel::A100);
         let n = topo.n();
         let devices: Vec<Device> = (0..n)
-            .map(|id| Device { id, gpu: modal, machine: id / 8, zone: 0, region: 0 })
+            .map(|id| Device { id, gpu: modal, machine: id / 8, zone: 0, region: 0, speed: 1.0 })
             .collect();
         let mut alpha = vec![vec![0.0; n]; n];
         let mut beta = vec![vec![f64::INFINITY; n]; n];

@@ -93,6 +93,19 @@ impl EaArm {
         }
     }
 
+    /// Warm-start hook: evaluate an externally-built plan (e.g. the
+    /// repaired incumbent after a cluster event) and insert it into the
+    /// population so subsequent mutation rounds evolve from it. Returns
+    /// evaluations consumed.
+    pub fn inject(&mut self, ctx: &mut EvalCtx<'_>, plan: ExecutionPlan) -> usize {
+        self.offer(ctx, plan)
+    }
+
+    /// Number of genomes currently in the population.
+    pub fn population_len(&self) -> usize {
+        self.population.len()
+    }
+
     /// Evaluate (with Baldwinian local search) and insert into the
     /// population. Returns evaluations consumed.
     fn offer(&mut self, ctx: &mut EvalCtx<'_>, genotype: ExecutionPlan) -> usize {

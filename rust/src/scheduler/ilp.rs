@@ -379,18 +379,18 @@ impl Scheduler for IlpScheduler {
         })();
         if let Some(chosen) = &greedy_chosen {
             let plans = extract_plans(wf, topo, &waves, &classes, &options, &per_task, chosen);
-            log::debug!("ILP greedy: {} extracted plan variants", plans.len());
+            crate::log::debug!("ILP greedy: {} extracted plan variants", plans.len());
             for plan in plans {
                 let c = ctx.eval(&plan);
                 if !c.is_finite() {
-                    log::debug!(
+                    crate::log::debug!(
                         "ILP greedy variant invalid: {:?}",
                         plan.validate(wf, topo, job).err()
                     );
                 }
             }
         } else {
-            log::debug!("ILP greedy: no capacity-feasible choice");
+            crate::log::debug!("ILP greedy: no capacity-feasible choice");
         }
 
         // ---- 4. Solve exactly and evaluate the MILP's choice. ----
@@ -417,7 +417,7 @@ impl Scheduler for IlpScheduler {
         }
         let mut out = ctx.outcome();
         if !result.optimal {
-            log::warn!(
+            crate::log::warn!(
                 "ILP hit budget: bound {:.3}, incumbent {:.3}, {} nodes",
                 result.bound,
                 result.obj,
@@ -544,7 +544,7 @@ fn extract_plans(
                     }
                 }
                 if !placed {
-                    log::debug!("extract(reuse={reuse}): task {t} unplaceable");
+                    crate::log::debug!("extract(reuse={reuse}): task {t} unplaceable");
                     feasible = false;
                     break;
                 }

@@ -335,7 +335,7 @@ pub fn default_task_plans(
                     .iter()
                     .map(|&d| model_sum[d])
                     .fold(0.0f64, f64::max);
-                log::debug!(
+                crate::log::debug!(
                     "default_task_plans: cannot place task {t} ({}) on {} devices (max committed {:.1} GiB, cap min {:.1} GiB)",
                     wf.tasks[t].id.name(),
                     devs.len(),

@@ -99,6 +99,13 @@ pub struct EvalCtx<'a> {
     pub best_cost: f64,
     pub best_plan: Option<ExecutionPlan>,
     pub trace: Vec<TracePoint>,
+    /// Per-task cost memo (the elastic replanner turns this on; valid
+    /// only while the topology stays fixed).
+    pub cache: Option<crate::costmodel::CostCache>,
+    /// Additive objective term beyond iteration time — e.g. the
+    /// amortized migration cost of switching to a candidate plan.
+    /// Applied only to valid plans; `best_cost` includes it.
+    pub penalty: Option<Box<dyn Fn(&ExecutionPlan) -> f64 + 'a>>,
     started: Instant,
 }
 
@@ -119,6 +126,8 @@ impl<'a> EvalCtx<'a> {
             best_cost: f64::INFINITY,
             best_plan: None,
             trace: Vec::new(),
+            cache: None,
+            penalty: None,
             started: Instant::now(),
         }
     }
@@ -132,15 +141,24 @@ impl<'a> EvalCtx<'a> {
         self.started.elapsed().as_secs_f64()
     }
 
-    /// Evaluate a candidate plan: validity check + cost model. Returns
-    /// the cost (∞ for invalid plans). Updates incumbent and trace.
+    /// Evaluate a candidate plan: validity check + cost model (+ the
+    /// optional penalty term). Returns the objective (∞ for invalid
+    /// plans). Updates incumbent and trace.
     pub fn eval(&mut self, plan: &ExecutionPlan) -> f64 {
         self.evals += 1;
-        let cost = if plan.validate(self.wf, self.topo, self.job).is_ok() {
-            self.cm.plan_cost(plan).iter_time
+        let mut cost = if plan.validate(self.wf, self.topo, self.job).is_ok() {
+            match &mut self.cache {
+                Some(cache) => self.cm.plan_cost_cached(plan, cache).iter_time,
+                None => self.cm.plan_cost(plan).iter_time,
+            }
         } else {
             f64::INFINITY
         };
+        if cost.is_finite() {
+            if let Some(penalty) = &self.penalty {
+                cost += penalty(plan);
+            }
+        }
         if cost < self.best_cost {
             self.best_cost = cost;
             self.best_plan = Some(plan.clone());

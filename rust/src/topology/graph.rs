@@ -17,6 +17,11 @@ pub struct Device {
     pub zone: usize,
     /// Region index into the testbed's region list.
     pub region: usize,
+    /// Sustained-speed multiplier in (0, 1]; 1.0 for a healthy device.
+    /// The elastic layer ([`crate::elastic`]) lowers it for stragglers,
+    /// and both the cost model and the simulator see the effect through
+    /// [`Device::effective_flops`].
+    pub speed: f64,
 }
 
 impl Device {
@@ -30,7 +35,7 @@ impl Device {
     #[inline]
     pub fn effective_flops(&self) -> f64 {
         let s = self.spec();
-        s.fp16_flops * s.mfu
+        s.fp16_flops * s.mfu * self.speed
     }
 }
 
@@ -229,6 +234,7 @@ impl TopologyBuilder {
                     machine: m_idx,
                     zone: region, // one zone per region in the default builders
                     region,
+                    speed: 1.0,
                 });
             }
         }

@@ -1,0 +1,168 @@
+//! Minimal `anyhow`-compatible error substrate (the offline registry has
+//! no `anyhow`). Provides [`Error`], [`Result`], the [`anyhow!`] /
+//! [`bail!`] macros and a [`Context`] extension trait for `Result` and
+//! `Option`, covering exactly the surface the runtime/engine code uses.
+//!
+//! [`anyhow!`]: crate::anyhow
+//! [`bail!`]: crate::bail
+
+use std::fmt;
+
+/// A boxed, chain-printing error: a message plus an optional source
+/// message chain, rendered as `outer: inner: ...` by `Display` (both
+/// `{}` and `{:#}` print the full chain, like `anyhow`'s `{:#}`).
+#[derive(Debug, Clone)]
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build from a single message.
+    pub fn msg(message: impl fmt::Display) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context(mut self, message: impl fmt::Display) -> Error {
+        self.chain.insert(0, message.to_string());
+        self
+    }
+
+    /// The outermost message.
+    pub fn root(&self) -> &str {
+        self.chain.first().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e)
+    }
+}
+
+impl From<std::fmt::Error> for Error {
+    fn from(e: std::fmt::Error) -> Error {
+        Error::msg(e)
+    }
+}
+
+impl From<String> for Error {
+    fn from(s: String) -> Error {
+        Error { chain: vec![s] }
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Error {
+        Error { chain: vec![s.to_string()] }
+    }
+}
+
+impl From<crate::util::json::JsonError> for Error {
+    fn from(e: crate::util::json::JsonError) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// Crate-wide result type (the `anyhow::Result` stand-in).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow!`-style construction from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// `bail!`-style early return with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+// Allow `use crate::util::error::{anyhow, bail}` at call sites, keeping
+// the original `anyhow`-idiomatic imports intact.
+pub use crate::{anyhow, bail};
+
+/// `anyhow::Context` stand-in for `Result` and `Option`.
+pub trait Context<T> {
+    fn context(self, message: impl fmt::Display) -> Result<T>;
+    fn with_context<D: fmt::Display>(self, f: impl FnOnce() -> D) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, message: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(message))
+    }
+
+    fn with_context<D: fmt::Display>(self, f: impl FnOnce() -> D) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, message: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(message))
+    }
+
+    fn with_context<D: fmt::Display>(self, f: impl FnOnce() -> D) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("inner {}", 42)
+    }
+
+    #[test]
+    fn bail_and_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(format!("{e}"), "inner 42");
+        assert_eq!(format!("{e:#}"), "inner 42");
+    }
+
+    #[test]
+    fn context_chains() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer: inner 42");
+        let e = fails().with_context(|| format!("step {}", 3)).unwrap_err();
+        assert_eq!(format!("{e}"), "step 3: inner 42");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        let e = none.context("missing value").unwrap_err();
+        assert_eq!(e.root(), "missing value");
+        assert_eq!(Some(7).context("x").unwrap(), 7);
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn read() -> Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/here")?)
+        }
+        assert!(read().is_err());
+    }
+
+    #[test]
+    fn anyhow_macro_formats() {
+        let e = anyhow!("bad {} at {}", "thing", 9);
+        assert_eq!(e.root(), "bad thing at 9");
+    }
+}

@@ -1,7 +1,8 @@
-//! Minimal `log` backend writing to stderr with timestamps relative to
-//! process start. Controlled by `HETRL_LOG` (error|warn|info|debug|trace).
+//! Minimal logging backend writing to stderr with timestamps relative to
+//! process start, installed into the in-crate [`crate::log`] facade.
+//! Controlled by `HETRL_LOG` (error|warn|info|debug|trace).
 
-use log::{Level, LevelFilter, Metadata, Record};
+use crate::log::{self, Level, LevelFilter, Metadata, Record};
 use std::sync::Once;
 use std::time::Instant;
 
@@ -14,10 +15,7 @@ impl log::Log for StderrLogger {
         metadata.level() <= log::max_level()
     }
 
-    fn log(&self, record: &Record) {
-        if !self.enabled(record.metadata()) {
-            return;
-        }
+    fn log(&self, record: &Record<'_>) {
         let t = self.start.elapsed().as_secs_f64();
         let lvl = match record.level() {
             Level::Error => "ERROR",
@@ -58,6 +56,6 @@ mod tests {
     fn init_is_idempotent() {
         super::init();
         super::init();
-        log::info!("logging smoke test");
+        crate::log::info!("logging smoke test");
     }
 }

@@ -1,0 +1,186 @@
+//! Property-based tests for the elastic subsystem (via the in-crate
+//! `testing` framework):
+//!
+//! * replaying the same seed + event trace is bit-for-bit deterministic;
+//! * a replan (warm or repair-only) never violates plan constraints
+//!   C1–C3 against the post-event fleet snapshot;
+//! * event traces are internally consistent for every seed.
+
+use hetrl::elastic::{
+    generate_trace, plan_to_base, repair_plan, replay, ClusterEvent, FleetState, Policy,
+    ReplanConfig, ReplayConfig, Replanner, TraceConfig,
+};
+use hetrl::scheduler::ea::EaConfig;
+use hetrl::simulator::NoiseModel;
+use hetrl::testing::{check_seeded, Gen};
+use hetrl::topology::{build_testbed, GpuModel, Scenario, TestbedSpec};
+use hetrl::workflow::{Algo, JobConfig, Mode, ModelSpec, RlWorkflow};
+
+/// A 12-GPU, 3-machine testbed — big enough for real group structure,
+/// small enough for debug-mode property runs.
+fn small_spec() -> TestbedSpec {
+    TestbedSpec {
+        machines: vec![(GpuModel::A100, 1), (GpuModel::L40S, 1), (GpuModel::L4, 1)],
+        gpus_per_machine: 4,
+    }
+}
+
+fn small_replan_cfg() -> ReplanConfig {
+    ReplanConfig {
+        warm_budget: 40,
+        cold_budget: 160,
+        seed_mutants: 2,
+        ea: EaConfig { swap_samples: 40, ..EaConfig::default() },
+        ..ReplanConfig::default()
+    }
+}
+
+fn small_replay_cfg() -> ReplayConfig {
+    ReplayConfig {
+        iters: 6,
+        trace: TraceConfig { horizon: 6, n_events: 3, ..TraceConfig::default() },
+        replan: small_replan_cfg(),
+        sim_iters: 1,
+        noise: NoiseModel::default(),
+        balance: true,
+    }
+}
+
+#[test]
+fn prop_replay_deterministic_per_seed() {
+    let wf = RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_1b7());
+    let job = JobConfig::tiny();
+    check_seeded(
+        "replay(seed) == replay(seed), bit for bit",
+        4,
+        0xD15C0,
+        Gen::usize_range(0, 1000),
+        |&seed| {
+            let run = |policy| {
+                replay(
+                    Scenario::MultiCountry,
+                    &small_spec(),
+                    &wf,
+                    &job,
+                    policy,
+                    &small_replay_cfg(),
+                    seed as u64,
+                )
+            };
+            Policy::ALL.iter().all(|&p| {
+                let a = run(p);
+                let b = run(p);
+                a == b
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_replan_respects_constraints_c1_c3() {
+    let wf = RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_1b7());
+    let job = JobConfig::tiny();
+    let base = build_testbed(Scenario::MultiRegionHybrid, &small_spec());
+    check_seeded(
+        "warm replan after random events validates (C1-C3)",
+        8,
+        0xC1C3,
+        Gen::usize_range(0, 10_000),
+        |&seed| {
+            let seed = seed as u64;
+            let mut fleet = FleetState::new(base.clone());
+            let (topo0, map0) = fleet.snapshot();
+            let mut rp = Replanner::new(seed, small_replan_cfg());
+            let Some(plan0) = rp.cold_plan(&topo0, &wf, &job).plan else {
+                return false; // full fleet must always be schedulable
+            };
+            if plan0.validate(&wf, &topo0, &job).is_err() {
+                return false;
+            }
+            let incumbent = plan_to_base(&plan0, &map0);
+
+            // Apply a random slice of a generated trace.
+            let trace = generate_trace(
+                &base,
+                &TraceConfig { horizon: 8, n_events: 3, ..TraceConfig::default() },
+                seed,
+            );
+            for e in &trace {
+                fleet.apply(&e.event);
+            }
+            let (topo1, map1) = fleet.snapshot();
+            let b2n = FleetState::base_to_snapshot(&map1);
+
+            // Repair-only path.
+            if let Some(repaired) = repair_plan(&incumbent, &wf, &job, &topo1, &b2n, seed) {
+                if repaired.validate(&wf, &topo1, &job).is_err() {
+                    return false;
+                }
+            }
+            // Warm replan path.
+            let out = rp.replan(&topo1, &wf, &job, &incumbent, &b2n);
+            match out.plan {
+                Some(p) => p.validate(&wf, &topo1, &job).is_ok(),
+                // A feasible plan must exist: traces never drop below
+                // half the machines and the tiny job fits on one.
+                None => false,
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_trace_consistency() {
+    let base = build_testbed(Scenario::MultiContinent, &TestbedSpec::default());
+    check_seeded(
+        "traces: sorted, legal transitions, machine floor",
+        60,
+        0x7ACE,
+        Gen::usize_range(0, 100_000),
+        |&seed| {
+            let cfg = TraceConfig { horizon: 20, n_events: 10, ..TraceConfig::default() };
+            let trace = generate_trace(&base, &cfg, seed as u64);
+            if trace.len() != cfg.n_events {
+                return false;
+            }
+            // Sorted by iteration.
+            if trace.windows(2).any(|w| w[0].at_iter > w[1].at_iter) {
+                return false;
+            }
+            // Legal transitions + floor.
+            let mut active: Vec<bool> = vec![true; 8];
+            for e in &trace {
+                match e.event {
+                    ClusterEvent::MachinePreempt { machine }
+                    | ClusterEvent::MachineLeave { machine } => {
+                        if !active[machine] {
+                            return false; // departed twice
+                        }
+                        active[machine] = false;
+                    }
+                    ClusterEvent::MachineJoin { machine } => {
+                        if active[machine] {
+                            return false; // joined while active
+                        }
+                        active[machine] = true;
+                    }
+                    ClusterEvent::StragglerOnset { slowdown, .. } => {
+                        if !(0.0..=1.0).contains(&slowdown) {
+                            return false;
+                        }
+                    }
+                    ClusterEvent::LinkDegrade { lat_factor, bw_factor, .. } => {
+                        if lat_factor < 1.0 || !(0.0..=1.0).contains(&bw_factor) {
+                            return false;
+                        }
+                    }
+                    _ => {}
+                }
+                if active.iter().filter(|&&a| a).count() < 4 {
+                    return false; // below the 50% machine floor
+                }
+            }
+            true
+        },
+    );
+}
