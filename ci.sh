@@ -24,6 +24,12 @@ echo "== replay smoke (tiny trace, deterministic) =="
 ./target/release/hetrl replay --scenario country --seed 0 \
     --iters 6 --events 3 --budget 120 --warm-budget 60 --policy warm --tiny
 
+echo "== search-throughput smoke (parallel engine, 1 vs N threads) =="
+# fig5_search_throughput sweeps thread counts at a small budget and
+# exits non-zero if any N-thread run diverges from (in particular, finds
+# a worse plan than) the 1-thread run at the same seed.
+cargo bench --bench fig5_search_throughput
+
 if [[ "${1:-}" == "--bench" ]]; then
     echo "== fig11 elastic bench =="
     cargo bench --bench fig11_elastic

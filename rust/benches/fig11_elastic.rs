@@ -51,6 +51,8 @@ fn main() {
             "migration_secs",
             "active_gpus",
             "evals",
+            "cache_hits",
+            "cache_misses",
             "events",
         ],
     );
@@ -63,6 +65,7 @@ fn main() {
             "post-event thpt",
             "vs static",
             "evals",
+            "cache hit%",
             "migration (s)",
         ],
     );
@@ -87,6 +90,8 @@ fn main() {
                     Json::num(rec.migration_secs),
                     Json::num(rec.active_gpus as f64),
                     Json::num(rec.evals as f64),
+                    Json::num(rec.cache_hits as f64),
+                    Json::num(rec.cache_misses as f64),
                     Json::str(&rec.events.join("+")),
                 ]);
             }
@@ -106,6 +111,7 @@ fn main() {
                     "-".to_string()
                 },
                 r.total_evals.to_string(),
+                format!("{:.0}%", r.cache_hit_rate() * 100.0),
                 format!("{mig:.1}"),
             ]);
         }

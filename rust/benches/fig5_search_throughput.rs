@@ -1,0 +1,135 @@
+//! Figure 5b (new, beyond the paper) — scaling of the parallel
+//! plan-evaluation engine: SHA-EA search throughput (cost-model
+//! evals/sec) and time-to-incumbent-quality vs worker-thread count on
+//! the Multi-Country 64-GPU fleet, same seed and eval budget per run.
+//!
+//! This bench doubles as the CI determinism smoke: the engine's
+//! contract is that the same seed yields the **bit-identical best plan
+//! at any thread count**, so any divergence in best cost or plan across
+//! the thread sweep (in particular an N-thread run finding a *worse*
+//! plan than the 1-thread run) exits non-zero and fails `ci.sh`.
+//!
+//! Rows are persisted as a `RunRecord` under `bench_out/`.
+
+mod common;
+
+use hetrl::metrics::RunRecord;
+use hetrl::scheduler::{Budget, ScheduleOutcome, Scheduler, ShaEaScheduler};
+use hetrl::topology::{build_testbed, Scenario, TestbedSpec};
+use hetrl::util::json::Json;
+use hetrl::util::table::Table;
+use hetrl::workflow::{Algo, JobConfig, Mode, ModelSpec, RlWorkflow};
+
+/// Wall-clock at which the trace first comes within 5% of the final
+/// best — "time to incumbent quality".
+fn time_to_quality(out: &ScheduleOutcome) -> f64 {
+    let target = out.cost * 1.05;
+    out.trace
+        .iter()
+        .find(|p| p.best_cost <= target)
+        .map(|p| p.wall)
+        .unwrap_or(out.wall)
+}
+
+fn main() {
+    hetrl::util::logging::init();
+    let topo = build_testbed(Scenario::MultiCountry, &TestbedSpec::default());
+    let wf = RlWorkflow::new(Algo::Ppo, Mode::Sync, ModelSpec::qwen_8b());
+    let job = JobConfig::default();
+    let budget = if common::full() { 6000 } else { 1500 };
+    let seed = 2u64;
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let mut thread_counts: Vec<usize> = vec![1, 2, 4];
+    if cores > 4 {
+        thread_counts.push(cores);
+    }
+
+    let mut record = RunRecord::new(
+        "fig5_search_throughput",
+        &[
+            "threads",
+            "budget_evals",
+            "evals",
+            "wall_s",
+            "evals_per_s",
+            "best_iter_time_s",
+            "t_to_95pct_s",
+            "cache_hit_rate",
+        ],
+    );
+    let mut table = Table::new(
+        &format!(
+            "Figure 5b: parallel search throughput (Qwen-8B sync PPO, Multi-Country, \
+             budget {budget}, seed {seed})"
+        ),
+        &["threads", "wall (s)", "evals/s", "best iter (s)", "t→95% (s)", "cache hit%"],
+    );
+
+    let mut runs: Vec<(usize, ScheduleOutcome)> = Vec::new();
+    for &t in &thread_counts {
+        let mut sched = ShaEaScheduler::with_threads(seed, t);
+        let out = sched.schedule(&topo, &wf, &job, Budget::evals(budget));
+        let eps = if out.wall > 0.0 { out.evals as f64 / out.wall } else { 0.0 };
+        let lookups = out.cache_hits + out.cache_misses;
+        let hit_rate = if lookups > 0 {
+            out.cache_hits as f64 / lookups as f64
+        } else {
+            0.0
+        };
+        table.row(vec![
+            t.to_string(),
+            format!("{:.3}", out.wall),
+            format!("{eps:.0}"),
+            if out.cost.is_finite() { format!("{:.1}", out.cost) } else { "∞".into() },
+            format!("{:.3}", time_to_quality(&out)),
+            format!("{:.0}%", hit_rate * 100.0),
+        ]);
+        record.push(vec![
+            Json::num(t as f64),
+            Json::num(budget as f64),
+            Json::num(out.evals as f64),
+            Json::num(out.wall),
+            Json::num(eps),
+            Json::num(if out.cost.is_finite() { out.cost } else { -1.0 }),
+            Json::num(time_to_quality(&out)),
+            Json::num(hit_rate),
+        ]);
+        runs.push((t, out));
+    }
+    table.print();
+
+    // Determinism + quality gate (the CI smoke): every thread count
+    // must reproduce the 1-thread incumbent bit-for-bit.
+    let (_, base) = &runs[0];
+    let mut ok = true;
+    for (t, out) in &runs[1..] {
+        if out.cost.to_bits() != base.cost.to_bits() {
+            eprintln!(
+                "FAIL: {t}-thread best cost {} != 1-thread {} (seed {seed})",
+                out.cost, base.cost
+            );
+            ok = false;
+        }
+        if out.plan != base.plan {
+            eprintln!("FAIL: {t}-thread best plan differs from 1-thread (seed {seed})");
+            ok = false;
+        }
+        if out.evals != base.evals {
+            eprintln!(
+                "FAIL: {t}-thread spent {} evals != 1-thread {} (seed {seed})",
+                out.evals, base.evals
+            );
+            ok = false;
+        }
+    }
+    if let Some((_, four)) = runs.iter().find(|(t, _)| *t == 4) {
+        let speedup = (four.evals as f64 / four.wall) / (base.evals as f64 / base.wall);
+        println!("speedup @4 threads: {speedup:.2}x ({cores} cores available)");
+    }
+    if let Ok(p) = record.save(&hetrl::metrics::results_dir()) {
+        println!("rows saved to {}", p.display());
+    }
+    if !ok {
+        std::process::exit(1);
+    }
+}

@@ -1,17 +1,32 @@
-//! Memoization of per-task cost-model sub-results, used by the elastic
-//! replanner: across a replanning episode the topology is fixed, so the
-//! expensive [`super::task_cost::task_cost`] evaluation of a `TaskPlan`
-//! depends only on the task index and the plan fields. Warm-started
-//! searches mutate one task at a time, so most per-task results are
-//! reusable between candidate plans.
+//! Memoization of per-task cost-model sub-results. Within one search
+//! episode the topology/workflow/job are fixed, so the expensive
+//! [`super::task_cost::task_cost`] evaluation of a `TaskPlan` depends
+//! only on the task index and the plan fields. Searches mutate one task
+//! at a time, so most per-task results are reusable between candidate
+//! plans — the cache is now **always on** for every scheduler (a fresh
+//! one per [`crate::scheduler::EvalCtx`]), not just the elastic
+//! replanner.
+//!
+//! The cache is concurrent: entries live in `SHARDS` mutex-guarded
+//! shards selected by the top bits of the FNV key (the crate is
+//! dependency-free, so no lock-free map), letting the parallel
+//! evaluation engine's workers share warm results with little
+//! contention. Values are computed *outside* the shard lock; a racing
+//! duplicate computation is idempotent (the cost model is pure), so the
+//! hit/miss counters are telemetry, not a determinism surface.
 
 use super::task_cost::TaskCost;
 use crate::plan::TaskPlan;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of mutex-guarded shards (power of two; indexed by key prefix).
+const SHARDS: usize = 16;
 
 /// FNV-1a over the fields of a task plan that determine its cost.
 /// The topology, workflow and job are fixed for a cache's lifetime
-/// (a fresh [`CostCache`] is created per replanning episode).
+/// (a fresh [`CostCache`] is created per search/replanning episode).
 pub fn task_plan_key(task_idx: usize, tp: &TaskPlan) -> u64 {
     const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
     const PRIME: u64 = 0x0000_0100_0000_01B3;
@@ -38,48 +53,81 @@ pub fn task_plan_key(task_idx: usize, tp: &TaskPlan) -> u64 {
     h
 }
 
-/// Per-task cost memo with hit/miss telemetry.
-#[derive(Debug, Default)]
+/// Sharded concurrent per-task cost memo with hit/miss telemetry.
+/// All methods take `&self`; the cache is shared freely across the
+/// parallel engine's workers (e.g. behind an `Arc`).
+#[derive(Debug)]
 pub struct CostCache {
-    map: HashMap<u64, TaskCost>,
-    pub hits: usize,
-    pub misses: usize,
+    shards: Vec<Mutex<HashMap<u64, TaskCost>>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl Default for CostCache {
+    fn default() -> Self {
+        CostCache::new()
+    }
 }
 
 impl CostCache {
     pub fn new() -> CostCache {
-        CostCache::default()
+        CostCache {
+            shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+        }
+    }
+
+    /// Shard for a key: top `log2(SHARDS)` bits of the (well-mixed)
+    /// FNV hash, so `SHARDS` is the single tuning knob.
+    fn shard(&self, key: u64) -> &Mutex<HashMap<u64, TaskCost>> {
+        const _: () = assert!(SHARDS.is_power_of_two());
+        &self.shards[(key >> (64 - SHARDS.trailing_zeros())) as usize]
+    }
+
+    /// Per-task lookups that found a memoized result.
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Per-task lookups that had to run the cost model.
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
     }
 
     /// Entries currently memoized.
     pub fn len(&self) -> usize {
-        self.map.len()
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.map.is_empty()
+        self.len() == 0
     }
 
     /// Drop all entries (topology changed — results are stale).
-    pub fn clear(&mut self) {
-        self.map.clear();
+    pub fn clear(&self) {
+        for s in &self.shards {
+            s.lock().unwrap().clear();
+        }
     }
 
     /// Look up the cost for `(task_idx, tp)`, computing via `f` on miss.
+    /// `f` runs outside the shard lock; concurrent misses on the same
+    /// key may both compute (idempotent), last insert wins.
     pub fn get_or(
-        &mut self,
+        &self,
         task_idx: usize,
         tp: &TaskPlan,
         f: impl FnOnce() -> TaskCost,
     ) -> TaskCost {
         let key = task_plan_key(task_idx, tp);
-        if let Some(&c) = self.map.get(&key) {
-            self.hits += 1;
+        if let Some(&c) = self.shard(key).lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
             return c;
         }
-        self.misses += 1;
+        self.misses.fetch_add(1, Ordering::Relaxed);
         let c = f();
-        self.map.insert(key, c);
+        self.shard(key).lock().unwrap().insert(key, c);
         c
     }
 }
@@ -108,7 +156,7 @@ mod tests {
 
     #[test]
     fn cache_hits_after_first_eval() {
-        let mut cache = CostCache::new();
+        let cache = CostCache::new();
         let p = plan(vec![0, 1, 2, 3]);
         let mut calls = 0;
         for _ in 0..3 {
@@ -119,9 +167,38 @@ mod tests {
             assert_eq!(c.total, 42.0);
         }
         assert_eq!(calls, 1);
-        assert_eq!(cache.hits, 2);
-        assert_eq!(cache.misses, 1);
+        assert_eq!(cache.hits(), 2);
+        assert_eq!(cache.misses(), 1);
         cache.clear();
         assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn cache_shared_across_threads() {
+        use std::sync::Arc;
+        let cache = Arc::new(CostCache::new());
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let cache = Arc::clone(&cache);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..32usize {
+                    let p = plan(vec![i, i + 1, i + 2, i + 3]);
+                    let c = cache.get_or(i % 4, &p, || TaskCost {
+                        total: (i % 4) as f64 + 1.0,
+                        ..TaskCost::default()
+                    });
+                    assert_eq!(c.total, (i % 4) as f64 + 1.0, "thread {t}");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // 32 distinct (task, plan) keys exist; every lookup is counted.
+        // (Concurrent misses on the same key are legal, so no tight hit
+        // floor — only the totals and the entry count are exact.)
+        assert_eq!(cache.len(), 32);
+        assert_eq!(cache.hits() + cache.misses(), 4 * 32);
+        assert!(cache.misses() >= 32, "misses {}", cache.misses());
     }
 }

@@ -65,12 +65,13 @@ impl<'a> CostModel<'a> {
     }
 
     /// [`Self::plan_cost`] with per-task memoization (see
-    /// [`super::cache::CostCache`]); the warm-started replanner's hot
-    /// path — candidate plans share most task plans with the incumbent.
+    /// [`super::cache::CostCache`]); the schedulers' hot path — candidate
+    /// plans share most task plans with earlier candidates, and the
+    /// cache is sharded so the parallel engine's workers can share it.
     pub fn plan_cost_cached(
         &self,
         plan: &ExecutionPlan,
-        cache: &mut super::cache::CostCache,
+        cache: &super::cache::CostCache,
     ) -> PlanCost {
         let per_task: Vec<TaskCost> = self
             .wf
@@ -337,13 +338,13 @@ mod tests {
         let wf = RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_4b());
         let cm = CostModel::new(&topo, &wf, &job);
         let plan = plan_over(&wf, 64, 16);
-        let mut cache = super::super::cache::CostCache::new();
+        let cache = super::super::cache::CostCache::new();
         let a = cm.plan_cost(&plan);
-        let b = cm.plan_cost_cached(&plan, &mut cache);
-        let c = cm.plan_cost_cached(&plan, &mut cache);
+        let b = cm.plan_cost_cached(&plan, &cache);
+        let c = cm.plan_cost_cached(&plan, &cache);
         assert_eq!(a, b);
         assert_eq!(b, c);
-        assert_eq!(cache.misses, wf.n_tasks());
-        assert_eq!(cache.hits, wf.n_tasks());
+        assert_eq!(cache.misses(), wf.n_tasks());
+        assert_eq!(cache.hits(), wf.n_tasks());
     }
 }

@@ -12,10 +12,11 @@
 //!   events, snapshotted into the dense [`crate::topology::DeviceTopology`]
 //!   the schedulers consume (with id maps across epochs);
 //! * [`replan`] — [`replan::Replanner`]: event-driven *incremental*
-//!   re-search — repair the incumbent, warm-start the EA from it under
-//!   a reduced budget, memoize per-task cost-model sub-results
-//!   ([`crate::costmodel::CostCache`]), and optimize a migration-aware
-//!   objective (`iter_time + migration/horizon`, see
+//!   re-search — repair the incumbent, warm-start several parallel EA
+//!   arms from it under a reduced budget (on the
+//!   [`crate::scheduler::engine`] evaluation engine, sharing the
+//!   always-on [`crate::costmodel::CostCache`]), and optimize a
+//!   migration-aware objective (`iter_time + migration/horizon`, see
 //!   [`crate::costmodel::MigrationModel`]);
 //! * [`replay`] — end-to-end dynamic-trace replay on the DES
 //!   ([`crate::simulator`]): plan → event → replan → resume, comparing

@@ -1,8 +1,10 @@
 //! Event-driven replanning: repair the incumbent plan against the new
 //! fleet snapshot, warm-start the evolutionary search from it under a
-//! reduced budget, and score candidates with a migration-aware
-//! objective (`iter_time + migration_time / horizon`), reusing
-//! unchanged per-task cost-model sub-results through
+//! reduced budget (several independent warm arms run on the parallel
+//! evaluation engine — [`crate::scheduler::engine`]), and score
+//! candidates with a migration-aware objective
+//! (`iter_time + migration_time / horizon`), reusing unchanged per-task
+//! cost-model sub-results through the always-on
 //! [`crate::costmodel::CostCache`].
 
 use crate::costmodel::migration::PrevTask;
@@ -10,12 +12,14 @@ use crate::costmodel::{CostModel, MigrationModel};
 use crate::plan::parallel::uniform_layer_split;
 use crate::plan::{ExecutionPlan, ParallelStrategy, TaskPlan};
 use crate::scheduler::ea::{swap_devices, EaArm, EaConfig};
+use crate::scheduler::engine;
 use crate::scheduler::levels::{default_task_plans, strategy_feasible};
 use crate::scheduler::{Budget, EvalCtx, Scheduler, ShaEaScheduler};
 use crate::topology::DeviceTopology;
 use crate::util::rng::Rng;
 use crate::workflow::{JobConfig, RlWorkflow};
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 /// Replanning knobs.
 #[derive(Debug, Clone)]
@@ -26,9 +30,19 @@ pub struct ReplanConfig {
     pub cold_budget: usize,
     /// Iterations over which a migration is amortized in the objective.
     pub horizon_iters: f64,
-    /// Perturbed copies of the repaired incumbent injected into the
-    /// warm-start population.
+    /// Perturbed copies of the repaired incumbent injected into each
+    /// warm-start arm's population.
     pub seed_mutants: usize,
+    /// Independent warm-start arms sharing `warm_budget` (each seeded
+    /// with the repaired incumbent + its own mutants and RNG stream).
+    /// Fixed per config — NOT tied to `threads` — so the chosen plan is
+    /// identical at any thread count.
+    pub warm_arms: usize,
+    /// Worker threads for warm/cold search (0 = all available cores).
+    /// Defaults to 1: replays are bit-reproducible by default, and
+    /// cache hit/miss telemetry is exact; the CLI opts into parallelism
+    /// via `--threads`.
+    pub threads: usize,
     pub migration: MigrationModel,
     pub ea: EaConfig,
 }
@@ -40,6 +54,8 @@ impl Default for ReplanConfig {
             cold_budget: 600,
             horizon_iters: 8.0,
             seed_mutants: 6,
+            warm_arms: 2,
+            threads: 1,
             migration: MigrationModel::default(),
             ea: EaConfig::default(),
         }
@@ -60,8 +76,11 @@ pub struct ReplanOutcome {
     pub evals: usize,
     /// Whether the warm-started path produced the plan (vs cold search).
     pub warm: bool,
-    /// Per-task cost-cache hits during the episode.
+    /// Per-task cost-cache hits during the episode (approximate when
+    /// `ReplanConfig::threads` > 1 — racing workers may double-compute).
     pub cache_hits: usize,
+    /// Per-task cost-cache misses during the episode.
+    pub cache_misses: usize,
 }
 
 /// Translate a plan across id spaces and drop vanished devices.
@@ -217,7 +236,7 @@ impl Replanner {
         job: &JobConfig,
     ) -> ReplanOutcome {
         let seed = self.next_seed();
-        let mut sched = ShaEaScheduler::new(seed);
+        let mut sched = ShaEaScheduler::with_threads(seed, self.cfg.threads);
         let out = sched.schedule(topo, wf, job, Budget::evals(self.cfg.cold_budget));
         ReplanOutcome {
             iter_time: out.cost,
@@ -225,7 +244,8 @@ impl Replanner {
             migration_secs: 0.0,
             evals: out.evals,
             warm: false,
-            cache_hits: 0,
+            cache_hits: out.cache_hits,
+            cache_misses: out.cache_misses,
             plan: out.plan,
         }
     }
@@ -264,46 +284,68 @@ impl Replanner {
         let horizon = self.cfg.horizon_iters.max(1.0);
         let prev_for_penalty = prev.clone();
         let mut ctx = EvalCtx::new(topo, wf, job, Budget::evals(self.cfg.warm_budget));
-        ctx.cache = Some(crate::costmodel::CostCache::new());
-        ctx.penalty = Some(Box::new(move |plan: &ExecutionPlan| {
+        ctx.penalty = Some(Arc::new(move |plan: &ExecutionPlan| {
             mm.migration_time(topo, wf, job, &prev_for_penalty, plan) / horizon
         }));
 
-        // Warm arm: the incumbent's Level-1/2 structure, population
-        // seeded with the repaired plan and light perturbations of it.
+        // Warm arms: the incumbent's Level-1/2 structure, each arm's
+        // population seeded with the repaired plan plus its own light
+        // perturbations of it, each on its own worker/RNG stream. The
+        // arm count and per-arm quotas are fixed by the config, so the
+        // chosen plan is identical at any thread count.
         let grouping = repaired.task_groups.clone();
         let sizes: Vec<usize> = repaired.gpu_groups.iter().map(|g| g.len()).collect();
-        let mut arm = EaArm::new(grouping, sizes, self.cfg.ea.clone(), seed);
-        arm.inject(&mut ctx, repaired.clone());
-        let mut rng = Rng::new(seed ^ 0x3A57_11CE);
-        for _ in 0..self.cfg.seed_mutants {
-            if ctx.exhausted() {
-                break;
+        let n_arms = self.cfg.warm_arms.max(1);
+        let quotas = engine::split_quota(self.cfg.warm_budget, n_arms, 1);
+        let jobs: Vec<(u64, usize)> = (0..n_arms)
+            .map(|k| {
+                (seed.wrapping_add((k as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)), quotas[k])
+            })
+            .collect();
+        let threads = engine::resolve_threads(self.cfg.threads);
+        let ea_cfg = self.cfg.ea.clone();
+        let seed_mutants = self.cfg.seed_mutants;
+        engine::fan_out(&mut ctx, threads, jobs, |(arm_seed, quota), wctx| {
+            let mut arm = EaArm::new(grouping.clone(), sizes.clone(), ea_cfg.clone(), arm_seed);
+            let mut left = quota;
+            if left > 0 {
+                left = left.saturating_sub(arm.inject(wctx, repaired.clone()));
             }
-            let mut mutant = repaired.clone();
-            // Perturb: swap a random pair of devices across groups (or
-            // within one when the plan has a single group).
-            let all: Vec<usize> = mutant.gpu_groups.iter().flatten().copied().collect();
-            if all.len() >= 2 {
-                let a = all[rng.below(all.len())];
-                let mut b = all[rng.below(all.len())];
-                if a == b {
-                    b = all[(rng.below(all.len()) + 1) % all.len()];
+            let mut rng = Rng::new(arm_seed ^ 0x3A57_11CE);
+            for _ in 0..seed_mutants {
+                if left == 0 || wctx.exhausted() {
+                    break;
                 }
-                swap_devices(&mut mutant, a, b);
+                let mut mutant = repaired.clone();
+                // Perturb: swap a random pair of devices across groups
+                // (or within one when the plan has a single group).
+                let all: Vec<usize> = mutant.gpu_groups.iter().flatten().copied().collect();
+                if all.len() >= 2 {
+                    let a = all[rng.below(all.len())];
+                    let mut b = all[rng.below(all.len())];
+                    if a == b {
+                        b = all[(rng.below(all.len()) + 1) % all.len()];
+                    }
+                    swap_devices(&mut mutant, a, b);
+                }
+                left = left.saturating_sub(arm.inject(wctx, mutant));
             }
-            arm.inject(&mut ctx, mutant);
-        }
-        while !ctx.exhausted() {
-            arm.run(&mut ctx, 8);
-        }
+            while left > 0 && !wctx.exhausted() {
+                let spent = arm.run(wctx, left);
+                if spent == 0 {
+                    break; // dead arm: hand the rest of the quota back
+                }
+                left -= spent;
+            }
+        });
 
         let migration_secs = ctx
             .best_plan
             .as_ref()
             .map(|p| mm.migration_time(topo, wf, job, &prev, p))
             .unwrap_or(0.0);
-        let cache_hits = ctx.cache.as_ref().map(|c| c.hits).unwrap_or(0);
+        let cache_hits = ctx.cache.hits();
+        let cache_misses = ctx.cache.misses();
         let iter_time = ctx
             .best_plan
             .as_ref()
@@ -317,6 +359,7 @@ impl Replanner {
             evals: out.evals,
             warm: true,
             cache_hits,
+            cache_misses,
             plan: out.plan,
         }
     }
@@ -418,7 +461,9 @@ mod tests {
         plan.validate(&wf, &topo1, &job).unwrap();
         assert!(out.iter_time.is_finite());
         assert!(out.objective >= out.iter_time - 1e-9);
-        assert!(out.evals <= small_cfg().warm_budget + 2);
+        // Quota-based warm arms make the budget a hard cap (injections
+        // used to overrun it by up to 2 evals).
+        assert!(out.evals <= small_cfg().warm_budget, "overran: {}", out.evals);
         assert!(out.cache_hits > 0, "warm search should reuse task costs");
     }
 

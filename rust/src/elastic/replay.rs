@@ -90,6 +90,11 @@ pub struct IterRecord {
     pub replanned: bool,
     /// Search evaluations spent at this iteration (0 when no event).
     pub evals: usize,
+    /// Per-task cost-cache hits/misses of this iteration's search (0
+    /// when no event; exact at the default `ReplanConfig::threads` = 1,
+    /// approximate under concurrency).
+    pub cache_hits: usize,
+    pub cache_misses: usize,
     /// One-off migration pause charged at this iteration (seconds).
     pub migration_secs: f64,
     /// Simulated duration of this training iteration (seconds).
@@ -112,9 +117,23 @@ pub struct ReplayResult {
     pub samples: usize,
     pub replans: usize,
     pub total_evals: usize,
+    /// Cost-cache telemetry summed over every search in the replay
+    /// (initial cold plan included).
+    pub cache_hits: usize,
+    pub cache_misses: usize,
 }
 
 impl ReplayResult {
+    /// Fraction of per-task cost lookups served from the cache.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+
     /// End-to-end throughput over the whole trace, samples/s.
     pub fn throughput(&self) -> f64 {
         self.samples as f64 / self.total_secs
@@ -174,6 +193,8 @@ pub fn replay(
     let mut total_secs = 0.0;
     let mut replans = 0;
     let mut total_evals = cold.evals;
+    let mut cache_hits = cold.cache_hits;
+    let mut cache_misses = cold.cache_misses;
     let mut cursor = 0usize;
 
     for iter in 0..cfg.iters {
@@ -186,6 +207,8 @@ pub fn replay(
         }
         let mut migration_secs = 0.0;
         let mut evals = 0;
+        let mut iter_hits = 0;
+        let mut iter_misses = 0;
         let mut replanned = false;
         if !labels.is_empty() {
             let (t, m) = fleet.snapshot();
@@ -210,6 +233,8 @@ pub fn replay(
                             // the "static" system restarts from scratch.
                             let out = replanner.cold_plan(&topo, wf, job);
                             evals += out.evals;
+                            iter_hits += out.cache_hits;
+                            iter_misses += out.cache_misses;
                             if let Some(p) = &out.plan {
                                 migration_secs = mm.migration_time(&topo, wf, job, &prev, p);
                             }
@@ -221,6 +246,8 @@ pub fn replay(
                     replanned = true;
                     let out = replanner.replan(&topo, wf, job, inc, &b2n);
                     evals += out.evals;
+                    iter_hits += out.cache_hits;
+                    iter_misses += out.cache_misses;
                     migration_secs = out.migration_secs;
                     out.plan
                 }
@@ -228,6 +255,8 @@ pub fn replay(
                     replanned = true;
                     let out = replanner.cold_plan(&topo, wf, job);
                     evals += out.evals;
+                    iter_hits += out.cache_hits;
+                    iter_misses += out.cache_misses;
                     // Oracle migrates for free; a policy with no
                     // incumbent has nothing to move.
                     out.plan
@@ -245,6 +274,8 @@ pub fn replay(
                 replans += 1;
             }
             total_evals += evals;
+            cache_hits += iter_hits;
+            cache_misses += iter_misses;
         }
 
         // Measure this iteration on the current snapshot.
@@ -271,6 +302,8 @@ pub fn replay(
             events: labels,
             replanned,
             evals,
+            cache_hits: iter_hits,
+            cache_misses: iter_misses,
             migration_secs,
             iter_secs,
             samples: iter_samples,
@@ -286,6 +319,8 @@ pub fn replay(
         total_secs,
         replans,
         total_evals,
+        cache_hits,
+        cache_misses,
     }
 }
 

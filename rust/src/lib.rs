@@ -15,16 +15,21 @@
 //!   `Ψ^{gen,inf,train}` and end-to-end `C` for Sync/Async PPO/GRPO;
 //! * the **schedulers** ([`scheduler`]): the multi-level search framework
 //!   (Levels 1–5), the hybrid nested-SHA + evolutionary algorithm
-//!   (paper Algorithm 1), the exact ILP formulation, and the baselines
-//!   (verl-like, StreamRL-like, pure EA / DEAP-like, random);
+//!   (paper Algorithm 1) running on a **parallel plan-evaluation
+//!   engine** ([`scheduler::engine`]: scoped worker threads per SHA
+//!   rung, an atomic eval ledger with deterministic per-arm quotas, and
+//!   an always-on sharded per-task cost cache — same seed, bit-identical
+//!   best plan at any thread count), the exact ILP formulation, and the
+//!   baselines (verl-like, StreamRL-like, pure EA / DEAP-like, random);
 //! * **elastic cluster dynamics** ([`elastic`]): a seeded
 //!   [`elastic::ClusterEvent`] trace model (machine join/leave/preempt,
 //!   WAN degradation, stragglers) over a mutable fleet
 //!   ([`elastic::FleetState`]), event-driven replanning that
 //!   warm-starts the EA from the repaired incumbent under a reduced
 //!   budget with a migration-aware objective
-//!   ([`costmodel::MigrationModel`]) and per-task cost memoization
-//!   ([`costmodel::CostCache`]), and full dynamic-trace replay through
+//!   ([`costmodel::MigrationModel`]) across parallel warm-start arms,
+//!   reusing per-task costs through the always-on
+//!   [`costmodel::CostCache`], and full dynamic-trace replay through
 //!   the DES (`hetrl replay --scenario <s1..s4> --seed N`, compared as
 //!   static vs warm-replan vs oracle in `benches/fig11_elastic.rs`);
 //! * a standalone **0-1 ILP solver** ([`solver`]): dense simplex LP

@@ -70,6 +70,7 @@ fn help() -> String {
             OptSpec { name: "mode", help: "sync|async", default: Some("sync") },
             OptSpec { name: "scheduler", help: "sha-ea|ilp|verl|streamrl|deap|random", default: Some("sha-ea") },
             OptSpec { name: "budget", help: "search budget (cost-model evals)", default: Some("600") },
+            OptSpec { name: "threads", help: "search worker threads (0 = all cores)", default: Some("0") },
             OptSpec { name: "seed", help: "random seed", default: Some("0") },
             OptSpec { name: "iters", help: "replay: iterations to replay", default: Some("24") },
             OptSpec { name: "events", help: "replay: cluster events in the trace", default: Some("5") },
@@ -102,13 +103,17 @@ fn parse_env(args: &Args) -> Result<(RlWorkflow, hetrl::topology::DeviceTopology
     Ok((RlWorkflow::new(algo, mode, model), topo, JobConfig::default()))
 }
 
-fn make_scheduler(name: &str, seed: u64) -> Result<Box<dyn Scheduler>, String> {
+fn make_scheduler(name: &str, seed: u64, threads: usize) -> Result<Box<dyn Scheduler>, String> {
     Ok(match name {
-        "sha-ea" => Box::new(ShaEaScheduler::new(seed)),
+        "sha-ea" => Box::new(ShaEaScheduler::with_threads(seed, threads)),
         "ilp" => Box::new(IlpScheduler::new()),
         "verl" => Box::new(VerlScheduler::new(seed)),
         "streamrl" => Box::new(StreamRlScheduler::new(seed)),
-        "deap" => Box::new(PureEaScheduler::new(seed)),
+        "deap" => {
+            let mut s = PureEaScheduler::new(seed);
+            s.threads = threads;
+            Box::new(s)
+        }
         "random" => Box::new(RandomScheduler::new(seed)),
         other => return Err(format!("unknown scheduler '{other}'")),
     })
@@ -131,7 +136,8 @@ fn cmd_schedule(args: &Args, also_simulate: bool) -> i32 {
     };
     let seed = args.get_u64("seed", 0).unwrap_or(0);
     let budget = args.get_usize("budget", 600).unwrap_or(600);
-    let mut sched = match make_scheduler(&args.get_or("scheduler", "sha-ea"), seed) {
+    let threads = args.get_usize("threads", 0).unwrap_or(0);
+    let mut sched = match make_scheduler(&args.get_or("scheduler", "sha-ea"), seed, threads) {
         Ok(s) => s,
         Err(e) => {
             eprintln!("{e}");
@@ -154,10 +160,13 @@ fn cmd_schedule(args: &Args, also_simulate: bool) -> i32 {
     if !args.flag("no-balance") {
         plan = balance::apply(&plan, &wf, &topo, BalanceConfig::default());
     }
+    let lookups = out.cache_hits + out.cache_misses;
     println!(
-        "search: {} evals in {} -> predicted iteration {}",
+        "search: {} evals in {} ({} cache hits / {} lookups) -> predicted iteration {}",
         out.evals,
         fmt_secs(out.wall),
+        out.cache_hits,
+        lookups,
         fmt_secs(out.cost)
     );
     print!("{}", plan.describe(&wf, &topo));
@@ -191,7 +200,8 @@ fn cmd_validate(args: &Args) -> i32 {
     };
     let seed = args.get_u64("seed", 0).unwrap_or(0);
     let budget = args.get_usize("budget", 400).unwrap_or(400);
-    let mut sched = ShaEaScheduler::new(seed);
+    let threads = args.get_usize("threads", 0).unwrap_or(0);
+    let mut sched = ShaEaScheduler::with_threads(seed, threads);
     let out = sched.schedule(&topo, &wf, &job, Budget::timed(budget, 300.0));
     let Some(plan) = out.plan else {
         eprintln!("no plan");
@@ -228,6 +238,7 @@ fn cmd_replay(args: &Args) -> i32 {
     let n_events = args.get_usize("events", 5).unwrap_or(5);
     let cold_budget = args.get_usize("budget", 600).unwrap_or(600);
     let warm_budget = args.get_usize("warm-budget", 150).unwrap_or(150);
+    let threads = args.get_usize("threads", 0).unwrap_or(0);
     let policies: Vec<Policy> = match args.get_or("policy", "all").as_str() {
         "all" => Policy::ALL.to_vec(),
         other => match Policy::parse(other) {
@@ -242,7 +253,7 @@ fn cmd_replay(args: &Args) -> i32 {
     let cfg = ReplayConfig {
         iters,
         trace: TraceConfig { horizon: iters, n_events, ..TraceConfig::default() },
-        replan: ReplanConfig { warm_budget, cold_budget, ..ReplanConfig::default() },
+        replan: ReplanConfig { warm_budget, cold_budget, threads, ..ReplanConfig::default() },
         ..ReplayConfig::default()
     };
 
@@ -271,6 +282,7 @@ fn cmd_replay(args: &Args) -> i32 {
             "post-event thpt",
             "replans",
             "evals",
+            "cache hit%",
             "migration (s)",
         ],
     );
@@ -296,6 +308,7 @@ fn cmd_replay(args: &Args) -> i32 {
             format!("{:.2}", r.throughput_after(post)),
             r.replans.to_string(),
             r.total_evals.to_string(),
+            format!("{:.0}%", r.cache_hit_rate() * 100.0),
             format!("{mig:.1}"),
         ]);
     }

@@ -129,7 +129,7 @@ impl Scheduler for VerlScheduler {
                     // candidates are discarded, but *ranking* still uses
                     // the homogeneity-assuming model.
                     if plan.validate(wf, topo, job).is_err() {
-                        ctx.evals += 1;
+                        ctx.charge(1);
                         continue;
                     }
                     let fake_cost = fake_cm.plan_cost(&plan).iter_time;
@@ -299,7 +299,7 @@ impl Scheduler for RandomScheduler {
             let grouping = groupings[rng.below(groupings.len())].clone();
             let ggs = gpu_groupings(wf, job, topo, &grouping, 16);
             if ggs.is_empty() {
-                ctx.evals += 1;
+                ctx.charge(1);
                 continue;
             }
             let sizes = ggs[rng.below(ggs.len())].clone();
@@ -310,7 +310,7 @@ impl Scheduler for RandomScheduler {
                 let plan = assemble(&grouping, groups, plans);
                 ctx.eval(&plan);
             } else {
-                ctx.evals += 1;
+                ctx.charge(1);
             }
         }
         ctx.outcome()

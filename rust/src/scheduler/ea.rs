@@ -56,9 +56,20 @@ pub struct EaArm {
     rng: Rng,
     /// Best cost this arm has produced (for SHA's BestHalf).
     pub best: f64,
+    /// Consecutive failed random-init draws (resets on success).
+    init_failures: usize,
+    /// Random init gave up with a partial population; evolve what's there.
+    init_exhausted: bool,
+    /// The arm proved it cannot produce any feasible plan; [`Self::run`]
+    /// returns immediately, handing its quota back to the caller.
+    infeasible: bool,
 }
 
 impl EaArm {
+    /// Failed random-init draws in a row before the arm stops retrying
+    /// (and, with an empty population, is declared infeasible).
+    const MAX_INIT_FAILURES: usize = 8;
+
     pub fn new(grouping: TaskGrouping, sizes: Vec<usize>, cfg: EaConfig, seed: u64) -> Self {
         EaArm {
             grouping,
@@ -67,21 +78,49 @@ impl EaArm {
             population: Vec::new(),
             rng: Rng::new(seed),
             best: f64::INFINITY,
+            init_failures: 0,
+            init_exhausted: false,
+            infeasible: false,
         }
     }
 
-    /// Run `budget_evals` evaluations of this arm (or until ctx budget).
-    pub fn run(&mut self, ctx: &mut EvalCtx<'_>, budget_evals: usize) {
+    /// The arm was declared dead: no feasible plan after
+    /// [`Self::MAX_INIT_FAILURES`] consecutive init draws.
+    pub fn is_infeasible(&self) -> bool {
+        self.infeasible
+    }
+
+    /// Run up to `budget_evals` evaluations of this arm (or until the
+    /// shared ledger's budget/wall cap). Returns the evaluations
+    /// actually consumed; a dead arm stops early and returns its
+    /// remaining quota to the caller's accounting.
+    pub fn run(&mut self, ctx: &mut EvalCtx<'_>, budget_evals: usize) -> usize {
+        if self.infeasible {
+            return 0;
+        }
         let mut spent = 0;
         while spent < budget_evals && !ctx.exhausted() {
-            if self.population.len() < self.cfg.population {
-                if let Some(plan) = self.random_plan(ctx) {
-                    spent += self.offer(ctx, plan);
-                } else {
-                    // This arm cannot produce feasible plans.
-                    self.best = self.best.min(f64::INFINITY);
-                    spent += 1;
-                    ctx.evals += 1;
+            if self.population.len() < self.cfg.population && !self.init_exhausted {
+                match self.random_plan(ctx) {
+                    Some(plan) => {
+                        self.init_failures = 0;
+                        spent += self.offer(ctx, plan);
+                    }
+                    None => {
+                        // An infeasible draw still burns one eval.
+                        self.init_failures += 1;
+                        spent += 1;
+                        ctx.charge(1);
+                        if self.init_failures >= Self::MAX_INIT_FAILURES {
+                            if self.population.is_empty() {
+                                // Dead arm: nothing to evolve — stop
+                                // burning the budget on hopeless retries.
+                                self.infeasible = true;
+                                return spent;
+                            }
+                            self.init_exhausted = true;
+                        }
+                    }
                 }
                 continue;
             }
@@ -91,6 +130,7 @@ impl EaArm {
             self.mutate(ctx, &mut child);
             spent += self.offer(ctx, child);
         }
+        spent
     }
 
     /// Warm-start hook: evaluate an externally-built plan (e.g. the
@@ -370,10 +410,14 @@ pub fn swap_devices(plan: &mut ExecutionPlan, a: usize, b: usize) {
 
 /// The pure-EA baseline (DEAP-like, §6 "Pure EA"): evolves full plans —
 /// including the Level-1/2 decisions — with generic operators only, no
-/// SHA pruning and no Baldwinian local search.
+/// SHA pruning and no Baldwinian local search. Runs its arms on the
+/// parallel evaluation engine (round-robin rungs, deterministic quota
+/// split — see [`super::engine`]).
 pub struct PureEaScheduler {
     pub seed: u64,
     pub cfg: EaConfig,
+    /// Worker threads per rung (0 = all available cores).
+    pub threads: usize,
 }
 
 impl PureEaScheduler {
@@ -381,6 +425,7 @@ impl PureEaScheduler {
         PureEaScheduler {
             seed,
             cfg: EaConfig { vanilla: true, population: 24, ..EaConfig::default() },
+            threads: 0,
         }
     }
 }
@@ -397,6 +442,7 @@ impl Scheduler for PureEaScheduler {
         job: &JobConfig,
         budget: Budget,
     ) -> ScheduleOutcome {
+        let threads = super::engine::resolve_threads(self.threads);
         let mut ctx = EvalCtx::new(topo, wf, job, budget);
         let mut rng = Rng::new(self.seed);
         let groupings = super::levels::set_partitions(wf.n_tasks());
@@ -417,14 +463,41 @@ impl Scheduler for PureEaScheduler {
         if arms.is_empty() {
             return ctx.outcome();
         }
-        // Round-robin without pruning.
+        // Round-robin without pruning: every arm gets a fixed chunk per
+        // rung, capped in arm order by the remaining budget.
         let chunk = 16;
         while !ctx.exhausted() {
-            for arm in arms.iter_mut() {
-                arm.run(&mut ctx, chunk);
-                if ctx.exhausted() {
-                    break;
-                }
+            let mut left = ctx.ledger.remaining();
+            if left == 0 {
+                break;
+            }
+            let tasks: Vec<super::engine::ArmTask> = arms
+                .drain(..)
+                .enumerate()
+                .map(|(i, arm)| {
+                    let quota = chunk.min(left);
+                    left -= quota;
+                    super::engine::ArmTask { key: (0, i), arm, quota }
+                })
+                .collect();
+            let runs = super::engine::run_rung(&mut ctx, tasks, threads);
+            let mut round_spent = 0;
+            arms = runs
+                .into_iter()
+                .filter_map(|r| {
+                    round_spent += r.spent;
+                    // With no halving to prune it, a dead arm would keep
+                    // absorbing quota it cannot spend — drop it so its
+                    // share flows to the live arms next round.
+                    if r.arm.is_infeasible() {
+                        None
+                    } else {
+                        Some(r.arm)
+                    }
+                })
+                .collect();
+            if arms.is_empty() || round_spent == 0 {
+                break; // every arm dead or starved — nothing will change
             }
         }
         ctx.outcome()
@@ -494,7 +567,8 @@ mod tests {
         let mut s = PureEaScheduler::new(11);
         let out = s.schedule(&topo, &wf, &job, Budget::evals(120));
         assert!(out.cost.is_finite());
-        assert!(out.evals <= 125);
+        // Quota-based rungs can never overrun the eval budget.
+        assert!(out.evals <= 120, "budget overrun: {}", out.evals);
         out.plan.unwrap().validate(&wf, &topo, &job).unwrap();
     }
 }

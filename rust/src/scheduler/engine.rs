@@ -1,0 +1,177 @@
+//! The parallel plan-evaluation engine: deterministic fan-out/fan-in of
+//! search work over scoped worker threads.
+//!
+//! Building blocks (see the [`super`] module docs for the determinism
+//! contract):
+//!
+//! * [`resolve_threads`] — maps a config value (0 = auto) to a worker
+//!   count;
+//! * [`split_quota`] — deterministic per-arm eval quotas from a
+//!   remaining budget (sum never exceeds it);
+//! * [`fan_out`] — run jobs on worker [`EvalCtx`]s in parallel and
+//!   merge their incumbents/traces back **in job order**;
+//! * [`run_rung`] — one SHA/EA rung: each [`EaArm`] runs its quota on
+//!   its own worker, arms and spends return in arm order.
+//!
+//! Worker results merge with strict-improvement (`<`) comparisons, so a
+//! tie between two arms always resolves to the lower arm index — the
+//! same winner a sequential pass over the arms would pick.
+
+use super::ea::EaArm;
+use super::{EvalCtx, TracePoint};
+use crate::plan::ExecutionPlan;
+use crate::util::threadpool::scoped_map;
+
+/// Resolve a configured thread count: `0` means "all available cores".
+pub fn resolve_threads(cfg: usize) -> usize {
+    if cfg > 0 {
+        cfg
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}
+
+/// Split `remaining` evaluations across `n_arms` arms that have
+/// `rounds_left` halving rounds ahead of them: every arm targets
+/// `remaining / (n_arms * rounds_left)` (Algorithm 1's `b_m`, computed
+/// from the *remaining* rather than the total budget), floored at one
+/// eval, assigned greedily in arm order so the quotas never sum past
+/// `remaining`. Arms past the point of exhaustion get zero.
+pub fn split_quota(remaining: usize, n_arms: usize, rounds_left: usize) -> Vec<usize> {
+    if n_arms == 0 {
+        return Vec::new();
+    }
+    let per = (remaining / (n_arms * rounds_left.max(1))).max(1);
+    let mut left = remaining;
+    (0..n_arms)
+        .map(|_| {
+            let q = per.min(left);
+            left -= q;
+            q
+        })
+        .collect()
+}
+
+/// What one worker context produced during a rung.
+pub struct WorkerOutcome {
+    pub spent: usize,
+    pub best_cost: f64,
+    pub best_plan: Option<ExecutionPlan>,
+    pub trace: Vec<TracePoint>,
+}
+
+impl WorkerOutcome {
+    pub fn capture(w: EvalCtx<'_>) -> WorkerOutcome {
+        WorkerOutcome {
+            spent: w.evals,
+            best_cost: w.best_cost,
+            best_plan: w.best_plan,
+            trace: w.trace,
+        }
+    }
+}
+
+/// Merge one worker's outcome into the parent context. Worker traces
+/// are strict improvements over the parent's incumbent *at rung start*;
+/// filtering against the running merged best keeps the combined trace
+/// monotone, and because a worker's trace is itself decreasing, any
+/// accepted point implies its final point is accepted — so the plan
+/// hand-off below is exactly the plan of the last accepted point.
+fn merge(ctx: &mut EvalCtx<'_>, wo: WorkerOutcome) {
+    ctx.evals += wo.spent;
+    let mut improved = false;
+    for tp in wo.trace {
+        if tp.best_cost < ctx.best_cost {
+            ctx.best_cost = tp.best_cost;
+            ctx.trace.push(tp);
+            improved = true;
+        }
+    }
+    if improved {
+        ctx.best_plan = wo.best_plan;
+    }
+}
+
+/// Run `jobs` on up to `threads` scoped workers, each with its own
+/// worker [`EvalCtx`], and merge every worker's incumbent/trace into
+/// `ctx` **in job order** (not completion order). Returns the jobs'
+/// results, also in job order.
+pub fn fan_out<'a, T, R, F>(
+    ctx: &mut EvalCtx<'a>,
+    threads: usize,
+    jobs: Vec<T>,
+    f: F,
+) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T, &mut EvalCtx<'a>) -> R + Sync,
+{
+    let parent: &EvalCtx<'a> = ctx;
+    let outs: Vec<(R, WorkerOutcome)> = scoped_map(threads, jobs, |job| {
+        let mut w = parent.worker();
+        let r = f(job, &mut w);
+        (r, WorkerOutcome::capture(w))
+    });
+    let mut results = Vec::with_capacity(outs.len());
+    for (r, wo) in outs {
+        merge(ctx, wo);
+        results.push(r);
+    }
+    results
+}
+
+/// One arm's work unit in a rung: run `quota` evaluations.
+pub struct ArmTask {
+    /// (outer, inner) identity — carried through so callers can route
+    /// results back; also the deterministic merge order.
+    pub key: (usize, usize),
+    pub arm: EaArm,
+    pub quota: usize,
+}
+
+/// One arm's rung result: the arm (with its evolved population) and the
+/// evaluations it actually consumed (≤ quota; an infeasible arm hands
+/// the rest of its quota back to the caller's accounting).
+pub struct ArmRun {
+    pub key: (usize, usize),
+    pub arm: EaArm,
+    pub spent: usize,
+}
+
+/// Run one rung: every task's arm on its own worker, merged in arm
+/// order. Tasks must be pre-sorted by `key` (callers build them that
+/// way); results come back in the same order.
+pub fn run_rung(ctx: &mut EvalCtx<'_>, tasks: Vec<ArmTask>, threads: usize) -> Vec<ArmRun> {
+    fan_out(ctx, threads, tasks, |task, w| {
+        let ArmTask { key, mut arm, quota } = task;
+        let spent = arm.run(w, quota);
+        ArmRun { key, arm, spent }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_quota_respects_remaining() {
+        for (rem, n, rounds) in [(400usize, 15usize, 4usize), (6, 12, 4), (0, 3, 2), (5, 2, 1)] {
+            let qs = split_quota(rem, n, rounds);
+            assert_eq!(qs.len(), n);
+            assert!(qs.iter().sum::<usize>() <= rem, "{rem} {n} {rounds}: {qs:?}");
+        }
+        // Even split when the budget divides cleanly.
+        assert_eq!(split_quota(400, 4, 1), vec![100; 4]);
+        // Starved arms get zero, in arm order.
+        assert_eq!(split_quota(2, 4, 1), vec![1, 1, 0, 0]);
+        assert!(split_quota(0, 4, 2).iter().all(|&q| q == 0));
+    }
+
+    #[test]
+    fn split_quota_matches_algorithm1_first_round() {
+        // b_m = B / (|TG| * ceil(log2 |TG|)) on an untouched budget.
+        let qs = split_quota(600, 15, 4);
+        assert!(qs.iter().all(|&q| q == 600 / (15 * 4)));
+    }
+}

@@ -159,7 +159,7 @@ impl Scheduler for IlpScheduler {
                         assignment: assignment.clone(),
                     };
                     let cost = task_cost(topo, task, job, &tp).total;
-                    ctx.evals += 1;
+                    ctx.charge(1);
                     let mut counts = vec![0usize; n_classes];
                     counts[ci] = s.degree();
                     options.push(Option_ {
@@ -212,7 +212,7 @@ impl Scheduler for IlpScheduler {
                             assignment: assignment.clone(),
                         };
                         let cost = task_cost(topo, task, job, &tp).total;
-                        ctx.evals += 1;
+                        ctx.charge(1);
                         let mut counts = vec![0usize; n_classes];
                         counts[a] = da.len();
                         counts[b] = s.degree() - da.len();

@@ -7,22 +7,62 @@
 //! * [`ea`] — evolutionary low-level plan generation with the TFLOPS
 //!   upgrade mutation and the Baldwinian swap local search (§3.4).
 //! * [`sha`] — the nested successive-halving hybrid scheduler
-//!   (Algorithm 1).
+//!   (Algorithm 1), run on the parallel evaluation engine.
+//! * [`engine`] — the parallel plan-evaluation engine (below).
 //! * [`ilp`] — the exact ILP formulation solved with the in-crate
 //!   simplex + branch & bound (§3.5).
 //! * [`baselines`] — verl-like, StreamRL-like, pure-EA (DEAP-like) and
 //!   random-search baselines used across the evaluation.
+//!
+//! # Parallel evaluation engine
+//!
+//! Candidate-plan evaluation is the schedulers' hot path, and SHA rungs
+//! are embarrassingly parallel: every arm in a rung evolves
+//! independently until the next halving barrier. The engine therefore
+//! splits the old monolithic evaluation context in two:
+//!
+//! * a **shared view** — `topo`/`wf`/`job`, the [`costmodel::CostModel`]
+//!   (all immutable borrows), one atomic [`EvalLedger`] charging
+//!   [`Budget::evals`], and one always-on sharded
+//!   [`costmodel::CostCache`] reused by every worker;
+//! * **per-worker scratch** — an [`EvalCtx`] clone
+//!   ([`EvalCtx::worker`]) holding its own incumbent, trace and local
+//!   eval count. Each arm keeps its own seeded RNG stream.
+//!
+//! Rungs run on scoped threads
+//! ([`crate::util::threadpool::scoped_map`]); results merge at the rung
+//! barrier **in arm-index order**, never completion order.
+//!
+//! ## Determinism contract
+//!
+//! With a pure eval budget (no wall cap triggering), the same seed
+//! yields the **bit-identical best plan, best cost and eval count at
+//! any thread count**. This holds because (a) per-arm eval quotas are
+//! derived deterministically from the ledger's remaining budget at each
+//! barrier (never from completion order), (b) quotas per rung sum to at
+//! most the remaining budget, so the global cap cannot cut an arm off
+//! mid-rung, and (c) the barrier reduction is ordered by arm index with
+//! strict-improvement tie-breaks. Trace `wall`/`evals` stamps and cache
+//! hit/miss counters are telemetry and may vary across runs when
+//! threads > 1; `plan`, `cost` and `evals` in [`ScheduleOutcome`] do
+//! not.
+//!
+//! [`costmodel::CostModel`]: crate::costmodel::CostModel
+//! [`costmodel::CostCache`]: crate::costmodel::CostCache
 
 pub mod levels;
 pub mod ea;
+pub mod engine;
 pub mod sha;
 pub mod ilp;
 pub mod baselines;
 
-use crate::costmodel::CostModel;
+use crate::costmodel::{CostCache, CostModel};
 use crate::plan::ExecutionPlan;
 use crate::topology::DeviceTopology;
 use crate::workflow::{JobConfig, RlWorkflow};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Search budget: cost-model evaluations (deterministic unit used by the
@@ -61,6 +101,10 @@ pub struct ScheduleOutcome {
     pub evals: usize,
     pub wall: f64,
     pub trace: Vec<TracePoint>,
+    /// Per-task cost-cache telemetry for the run (approximate under
+    /// concurrency: racing workers may double-compute a key).
+    pub cache_hits: usize,
+    pub cache_misses: usize,
 }
 
 impl ScheduleOutcome {
@@ -71,6 +115,8 @@ impl ScheduleOutcome {
             evals: 0,
             wall: 0.0,
             trace: Vec::new(),
+            cache_hits: 0,
+            cache_misses: 0,
         }
     }
 }
@@ -87,26 +133,76 @@ pub trait Scheduler {
     ) -> ScheduleOutcome;
 }
 
-/// Shared evaluation context: counts cost-model evaluations, tracks the
-/// incumbent and the search trace, and enforces the budget.
+/// Atomic evaluation ledger shared by all workers of one search run:
+/// the single source of truth for budget exhaustion. Quota assignment
+/// at rung barriers guarantees the cap is never exceeded (see the
+/// module docs); the ledger's counter is how the outcome reports total
+/// evals and how wall-clock exhaustion is observed mid-rung.
+#[derive(Debug)]
+pub struct EvalLedger {
+    cap: usize,
+    wall_secs: f64,
+    spent: AtomicUsize,
+    started: Instant,
+}
+
+impl EvalLedger {
+    pub fn new(budget: Budget) -> EvalLedger {
+        EvalLedger {
+            cap: budget.evals,
+            wall_secs: budget.wall_secs,
+            spent: AtomicUsize::new(0),
+            started: Instant::now(),
+        }
+    }
+
+    /// Charge `n` evaluations; returns the new total.
+    pub fn charge(&self, n: usize) -> usize {
+        self.spent.fetch_add(n, Ordering::Relaxed) + n
+    }
+
+    pub fn spent(&self) -> usize {
+        self.spent.load(Ordering::Relaxed)
+    }
+
+    /// Evaluations left under the cap (0 when exhausted).
+    pub fn remaining(&self) -> usize {
+        self.cap.saturating_sub(self.spent())
+    }
+
+    pub fn wall(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    pub fn exhausted(&self) -> bool {
+        self.spent() >= self.cap || self.wall() >= self.wall_secs
+    }
+}
+
+/// Evaluation context: the immutable shared view (`cm`/`wf`/`topo`/
+/// `job`), the shared atomic [`EvalLedger`] + [`CostCache`], and this
+/// worker's private scratch (incumbent, trace, local eval count).
+/// [`EvalCtx::worker`] clones share the view and the ledger/cache but
+/// get fresh scratch, so rung workers never contend on search state.
 pub struct EvalCtx<'a> {
     pub cm: CostModel<'a>,
     pub wf: &'a RlWorkflow,
     pub topo: &'a DeviceTopology,
     pub job: &'a JobConfig,
     pub budget: Budget,
+    /// Shared across all workers of this search run.
+    pub ledger: Arc<EvalLedger>,
+    /// Always-on sharded per-task cost memo, shared across workers.
+    pub cache: Arc<CostCache>,
+    /// Additive objective term beyond iteration time — e.g. the
+    /// amortized migration cost of switching to a candidate plan.
+    /// Applied only to valid plans; `best_cost` includes it.
+    pub penalty: Option<Arc<dyn Fn(&ExecutionPlan) -> f64 + Send + Sync + 'a>>,
+    /// Evaluations charged through *this* context (per-worker).
     pub evals: usize,
     pub best_cost: f64,
     pub best_plan: Option<ExecutionPlan>,
     pub trace: Vec<TracePoint>,
-    /// Per-task cost memo (the elastic replanner turns this on; valid
-    /// only while the topology stays fixed).
-    pub cache: Option<crate::costmodel::CostCache>,
-    /// Additive objective term beyond iteration time — e.g. the
-    /// amortized migration cost of switching to a candidate plan.
-    /// Applied only to valid plans; `best_cost` includes it.
-    pub penalty: Option<Box<dyn Fn(&ExecutionPlan) -> f64 + 'a>>,
-    started: Instant,
 }
 
 impl<'a> EvalCtx<'a> {
@@ -122,41 +218,65 @@ impl<'a> EvalCtx<'a> {
             topo,
             job,
             budget,
+            ledger: Arc::new(EvalLedger::new(budget)),
+            cache: Arc::new(CostCache::new()),
+            penalty: None,
             evals: 0,
             best_cost: f64::INFINITY,
             best_plan: None,
             trace: Vec::new(),
-            cache: None,
-            penalty: None,
-            started: Instant::now(),
+        }
+    }
+
+    /// A worker context for one rung: shares the view, ledger, cache and
+    /// penalty; starts from this context's incumbent *cost* (so its
+    /// trace records only global improvements) with fresh scratch.
+    pub fn worker(&self) -> EvalCtx<'a> {
+        EvalCtx {
+            cm: CostModel::new(self.topo, self.wf, self.job),
+            wf: self.wf,
+            topo: self.topo,
+            job: self.job,
+            budget: self.budget,
+            ledger: Arc::clone(&self.ledger),
+            cache: Arc::clone(&self.cache),
+            penalty: self.penalty.clone(),
+            evals: 0,
+            best_cost: self.best_cost,
+            best_plan: None,
+            trace: Vec::new(),
         }
     }
 
     pub fn exhausted(&self) -> bool {
-        self.evals >= self.budget.evals
-            || self.started.elapsed().as_secs_f64() >= self.budget.wall_secs
+        self.ledger.exhausted()
     }
 
     pub fn wall(&self) -> f64 {
-        self.started.elapsed().as_secs_f64()
+        self.ledger.wall()
+    }
+
+    /// Charge `n` evaluations to the shared ledger (and this worker's
+    /// local count) without scoring a plan — used for infeasible
+    /// candidate draws so they still consume budget.
+    pub fn charge(&mut self, n: usize) {
+        self.ledger.charge(n);
+        self.evals += n;
     }
 
     /// Evaluate a candidate plan: validity check + cost model (+ the
     /// optional penalty term). Returns the objective (∞ for invalid
-    /// plans). Updates incumbent and trace.
+    /// plans). Updates this worker's incumbent and trace.
     pub fn eval(&mut self, plan: &ExecutionPlan) -> f64 {
-        self.evals += 1;
+        self.charge(1);
         let mut cost = if plan.validate(self.wf, self.topo, self.job).is_ok() {
-            match &mut self.cache {
-                Some(cache) => self.cm.plan_cost_cached(plan, cache).iter_time,
-                None => self.cm.plan_cost(plan).iter_time,
-            }
+            self.cm.plan_cost_cached(plan, &self.cache).iter_time
         } else {
             f64::INFINITY
         };
         if cost.is_finite() {
             if let Some(penalty) = &self.penalty {
-                cost += penalty(plan);
+                cost += (**penalty)(plan);
             }
         }
         if cost < self.best_cost {
@@ -164,7 +284,7 @@ impl<'a> EvalCtx<'a> {
             self.best_plan = Some(plan.clone());
             self.trace.push(TracePoint {
                 wall: self.wall(),
-                evals: self.evals,
+                evals: self.ledger.spent(),
                 best_cost: cost,
             });
         }
@@ -175,14 +295,17 @@ impl<'a> EvalCtx<'a> {
         ScheduleOutcome {
             plan: self.best_plan,
             cost: self.best_cost,
-            evals: self.evals,
-            wall: self.started.elapsed().as_secs_f64(),
+            evals: self.ledger.spent(),
+            wall: self.ledger.wall(),
             trace: self.trace,
+            cache_hits: self.cache.hits(),
+            cache_misses: self.cache.misses(),
         }
     }
 }
 
 pub use baselines::{RandomScheduler, StreamRlScheduler, VerlScheduler};
 pub use ea::PureEaScheduler;
+pub use engine::resolve_threads;
 pub use ilp::IlpScheduler;
 pub use sha::ShaEaScheduler;

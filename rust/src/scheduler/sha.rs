@@ -1,12 +1,24 @@
-//! The hybrid SHA-EA scheduler — paper Algorithm 1.
+//! The hybrid SHA-EA scheduler — paper Algorithm 1, run on the parallel
+//! evaluation engine.
 //!
 //! Nested successive halving: Level-1 task groupings are the outer arms,
 //! Level-2 GPU groupings the inner arms; each (outer, inner) pair owns an
 //! evolutionary population ([`EaArm`]) that generates and evaluates
 //! low-level plans. Budgets are measured in cost-model evaluations (the
 //! deterministic unit); wall-clock caps still apply through [`EvalCtx`].
+//!
+//! Parallel schedule: the outer arms' inner-SHA ladders advance in
+//! lockstep — at every global step, each still-active outer arm
+//! contributes its alive inner arms as one task each, the whole batch
+//! runs on the engine's scoped workers, and halving happens at the
+//! barrier. Per-arm quotas derive from the *remaining* budget at each
+//! barrier (`b_m = remaining / (|alive| * rounds_left)`), assigned in
+//! arm order, so `Budget::evals` is a hard cap rather than the old
+//! soft target, and the same seed produces the bit-identical best plan
+//! at any thread count (see the [`super`] module docs).
 
 use super::ea::{EaArm, EaConfig};
+use super::engine::{self, ArmTask};
 use super::levels::{gpu_groupings, set_partitions};
 use super::{Budget, EvalCtx, ScheduleOutcome, Scheduler};
 use crate::topology::DeviceTopology;
@@ -19,11 +31,19 @@ pub struct ShaConfig {
     /// Cap on Level-2 arms per task grouping (quantized enumeration).
     pub max_gpu_groupings: usize,
     pub seed: u64,
+    /// Worker threads per rung (0 = all available cores). Any value
+    /// yields the same plan for the same seed.
+    pub threads: usize,
 }
 
 impl Default for ShaConfig {
     fn default() -> Self {
-        ShaConfig { ea: EaConfig::default(), max_gpu_groupings: 12, seed: 0x5EED }
+        ShaConfig {
+            ea: EaConfig::default(),
+            max_gpu_groupings: 12,
+            seed: 0x5EED,
+            threads: 0,
+        }
     }
 }
 
@@ -36,12 +56,24 @@ impl ShaEaScheduler {
     pub fn new(seed: u64) -> Self {
         ShaEaScheduler { cfg: ShaConfig { seed, ..ShaConfig::default() } }
     }
+
+    /// [`Self::new`] with an explicit worker-thread count (0 = auto).
+    pub fn with_threads(seed: u64, threads: usize) -> Self {
+        ShaEaScheduler { cfg: ShaConfig { seed, threads, ..ShaConfig::default() } }
+    }
 }
 
 /// One outer arm: a task grouping with its surviving inner arms.
 struct OuterArm {
     inner: Vec<EaArm>,
     best: f64,
+}
+
+/// Lockstep inner-SHA state for one outer arm during an outer rung.
+struct InnerSha {
+    alive: Vec<EaArm>,
+    rounds_left: usize,
+    budget_left: usize,
 }
 
 impl Scheduler for ShaEaScheduler {
@@ -56,6 +88,7 @@ impl Scheduler for ShaEaScheduler {
         job: &JobConfig,
         budget: Budget,
     ) -> ScheduleOutcome {
+        let threads = engine::resolve_threads(self.cfg.threads);
         let mut ctx = EvalCtx::new(topo, wf, job, budget);
         let mut seed = self.cfg.seed;
         let mut next_seed = || {
@@ -85,18 +118,15 @@ impl Scheduler for ShaEaScheduler {
 
         // Line 14–33: outer SHA over task groupings.
         let mut alive: Vec<OuterArm> = outers;
-        for _m in 0..outer_rounds {
+        for m in 0..outer_rounds {
             if ctx.exhausted() || alive.is_empty() {
                 break;
             }
-            // b_m = B / (|TG_m| * ceil(log2 |TG|))
-            let b_m = (ctx.budget.evals / (alive.len() * outer_rounds)).max(4);
-            for outer in alive.iter_mut() {
-                if ctx.exhausted() {
-                    break;
-                }
-                run_inner_sha(&mut ctx, outer, b_m);
-            }
+            // b_m from the budget still unspent at this barrier —
+            // derived in arm order, so rungs can never overrun the cap.
+            let quotas =
+                engine::split_quota(ctx.ledger.remaining(), alive.len(), outer_rounds - m);
+            run_outer_rung(&mut ctx, &mut alive, &quotas, threads);
             // Line 31: keep the best half of task groupings.
             alive = best_half(alive, |o| o.best);
         }
@@ -104,38 +134,68 @@ impl Scheduler for ShaEaScheduler {
     }
 }
 
-/// Inner SHA over the GPU groupings of one task grouping
-/// (Algorithm 1 lines 17–29).
-fn run_inner_sha(ctx: &mut EvalCtx<'_>, outer: &mut OuterArm, b_m: usize) {
-    let n_gg = outer.inner.len();
-    if n_gg == 0 {
-        return;
-    }
-    let inner_rounds = (n_gg as f64).log2().ceil().max(1.0) as usize;
-    // Move populations out so survivors (and their EA state) persist.
-    let mut alive: Vec<EaArm> = std::mem::take(&mut outer.inner);
-    for _n in 0..inner_rounds {
-        if ctx.exhausted() || alive.is_empty() {
+/// One outer rung: the inner SHA of every alive outer arm (Algorithm 1
+/// lines 17–29), advanced in lockstep so all inner arms of all outer
+/// arms in the same inner round form one parallel batch. Inner quotas
+/// re-derive from each outer arm's remaining rung budget at every step
+/// (`b_{m,n}`), and an arm that under-spends (e.g. proved infeasible)
+/// hands the difference to its siblings at the next step.
+fn run_outer_rung(
+    ctx: &mut EvalCtx<'_>,
+    outers: &mut [OuterArm],
+    quotas: &[usize],
+    threads: usize,
+) {
+    let mut states: Vec<InnerSha> = outers
+        .iter_mut()
+        .zip(quotas)
+        .map(|(o, &q)| {
+            let alive = std::mem::take(&mut o.inner);
+            let rounds = (alive.len() as f64).log2().ceil().max(1.0) as usize;
+            InnerSha { alive, rounds_left: rounds, budget_left: q }
+        })
+        .collect();
+
+    loop {
+        if ctx.exhausted() {
             break;
         }
-        // b_{m,n} = b_m / (|GG_n| * ceil(log2 |GG|))
-        let b_mn = (b_m / (alive.len() * inner_rounds)).max(2);
-        for arm in alive.iter_mut() {
-            if ctx.exhausted() {
-                break;
+        // Collect this step's batch across all outer arms.
+        let mut tasks: Vec<ArmTask> = Vec::new();
+        let mut ran: Vec<usize> = Vec::new();
+        for (oi, st) in states.iter_mut().enumerate() {
+            if st.rounds_left == 0 || st.budget_left == 0 || st.alive.is_empty() {
+                continue;
             }
-            // Lines 21–25: EA generates and scores b_{m,n} plans.
-            arm.run(ctx, b_mn);
+            ran.push(oi);
+            let qs = engine::split_quota(st.budget_left, st.alive.len(), st.rounds_left);
+            for (ii, arm) in st.alive.drain(..).enumerate() {
+                tasks.push(ArmTask { key: (oi, ii), arm, quota: qs[ii] });
+            }
         }
-        alive = best_half(alive, |a| a.best);
+        if tasks.is_empty() {
+            break;
+        }
+        // Lines 21–25: every arm's EA generates and scores its quota,
+        // one arm per worker; barrier + in-order merge at return.
+        let runs = engine::run_rung(ctx, tasks, threads);
+        for r in runs {
+            let st = &mut states[r.key.0];
+            st.budget_left = st.budget_left.saturating_sub(r.spent);
+            st.alive.push(r.arm);
+        }
+        for &oi in &ran {
+            let st = &mut states[oi];
+            st.rounds_left -= 1;
+            st.alive = best_half(std::mem::take(&mut st.alive), |a| a.best);
+        }
     }
-    outer.best = alive
-        .iter()
-        .map(|a| a.best)
-        .fold(f64::INFINITY, f64::min)
-        .min(outer.best);
+
     // Line 29: retain the surviving (best-half) GPU groupings.
-    outer.inner = alive;
+    for (o, st) in outers.iter_mut().zip(states) {
+        o.best = st.alive.iter().map(|a| a.best).fold(o.best, f64::min);
+        o.inner = st.alive;
+    }
 }
 
 /// Keep the better half (ties broken stably by original index).
@@ -186,9 +246,22 @@ mod tests {
         let mut s = ShaEaScheduler::new(1);
         let out = s.schedule(&topo, &wf, &job, Budget::evals(400));
         assert!(out.cost.is_finite(), "no plan found");
-        assert!(out.evals <= 450, "budget overrun: {}", out.evals);
+        // Remaining-budget quotas make the eval budget a hard cap (the
+        // old total-budget `b_m` overran it by ~12%).
+        assert!(out.evals <= 400, "budget overrun: {}", out.evals);
         out.plan.unwrap().validate(&wf, &topo, &job).unwrap();
         assert!(!out.trace.is_empty());
+    }
+
+    #[test]
+    fn sha_uses_cost_cache() {
+        let (wf, topo, job) = setup(Scenario::SingleRegion);
+        // Enough budget that surviving arms fill their populations and
+        // reach the mutation phase, where offspring share most task
+        // plans with their parents (the cache's hit case).
+        let out = ShaEaScheduler::new(1).schedule(&topo, &wf, &job, Budget::evals(600));
+        assert!(out.cache_misses > 0, "cache never consulted");
+        assert!(out.cache_hits > 0, "mutated candidates should reuse task costs");
     }
 
     #[test]

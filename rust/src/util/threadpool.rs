@@ -117,6 +117,49 @@ where
     pool.map(items, f)
 }
 
+/// [`parallel_map`] over *borrowed* state: maps `f` across `items` on up
+/// to `threads` scoped workers (`std::thread::scope`), preserving input
+/// order in the result. Unlike [`ThreadPool`], closures may borrow from
+/// the caller's stack (no `'static` bound) — this is what the scheduler's
+/// parallel evaluation engine runs its rungs on. Items are pulled from a
+/// shared queue, so uneven per-item work self-balances. Falls back to an
+/// inline sequential map (bit-identical results) for `threads <= 1` or a
+/// single item.
+pub fn scoped_map<T, R, F>(threads: usize, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    if threads <= 1 || items.len() <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let n = items.len();
+    let queue: Mutex<Vec<(usize, T)>> = Mutex::new(items.into_iter().enumerate().rev().collect());
+    let slots: Mutex<Vec<Option<R>>> = Mutex::new((0..n).map(|_| None).collect());
+    let f = &f;
+    std::thread::scope(|s| {
+        for _ in 0..threads.min(n) {
+            s.spawn(|| loop {
+                let item = queue.lock().unwrap().pop();
+                match item {
+                    Some((i, t)) => {
+                        let r = f(t);
+                        slots.lock().unwrap()[i] = Some(r);
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+    slots
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|s| s.expect("scoped_map: missing result"))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -155,5 +198,22 @@ mod tests {
     fn parallel_map_sequential_fallback() {
         let out = parallel_map(1, vec![1, 2, 3], |x| x * x);
         assert_eq!(out, vec![1, 4, 9]);
+    }
+
+    #[test]
+    fn scoped_map_borrows_and_preserves_order() {
+        let offset = 10usize; // borrowed, not 'static
+        let items: Vec<usize> = (0..64).collect();
+        let seq = scoped_map(1, items.clone(), |x| x + offset);
+        let par = scoped_map(4, items, |x| x + offset);
+        assert_eq!(seq, par);
+        assert_eq!(par[0], 10);
+        assert_eq!(par[63], 73);
+    }
+
+    #[test]
+    fn scoped_map_single_item_inline() {
+        let out = scoped_map(8, vec![5], |x: usize| x * 2);
+        assert_eq!(out, vec![10]);
     }
 }

@@ -1,0 +1,123 @@
+//! Properties of the parallel plan-evaluation engine:
+//!
+//! * **determinism across thread counts** — the same seed produces the
+//!   bit-identical best cost, best plan and eval count at 1, 2 and 8
+//!   worker threads (the engine's core contract: quotas are derived at
+//!   barriers and merges are ordered by arm index, so the schedule of
+//!   evaluated candidates never depends on thread interleaving);
+//! * **hard budget cap** — parallel runs never exceed `Budget::evals`
+//!   (per-rung quotas sum to at most the remaining budget);
+//! * the always-on cost cache changes nothing: the reported best cost
+//!   equals a fresh, uncached cost-model evaluation of the best plan;
+//! * the warm replanner picks the identical plan at any thread count.
+
+use hetrl::costmodel::CostModel;
+use hetrl::elastic::{plan_to_base, ClusterEvent, FleetState, ReplanConfig, Replanner};
+use hetrl::scheduler::{Budget, PureEaScheduler, ScheduleOutcome, Scheduler, ShaEaScheduler};
+use hetrl::topology::{build_testbed, Scenario, TestbedSpec};
+use hetrl::workflow::{Algo, JobConfig, Mode, ModelSpec, RlWorkflow};
+
+fn env(scenario: Scenario) -> (RlWorkflow, hetrl::topology::DeviceTopology, JobConfig) {
+    (
+        RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_4b()),
+        build_testbed(scenario, &TestbedSpec::default()),
+        JobConfig::default(),
+    )
+}
+
+fn sha(seed: u64, threads: usize, budget: usize, scenario: Scenario) -> ScheduleOutcome {
+    let (wf, topo, job) = env(scenario);
+    ShaEaScheduler::with_threads(seed, threads).schedule(&topo, &wf, &job, Budget::evals(budget))
+}
+
+#[test]
+fn sha_bit_identical_across_thread_counts() {
+    for seed in [1u64, 7] {
+        let base = sha(seed, 1, 300, Scenario::MultiCountry);
+        assert!(base.cost.is_finite(), "seed {seed}: no plan at 1 thread");
+        for threads in [2usize, 8] {
+            let out = sha(seed, threads, 300, Scenario::MultiCountry);
+            assert_eq!(
+                out.cost.to_bits(),
+                base.cost.to_bits(),
+                "seed {seed}: best cost at {threads} threads ({}) != 1 thread ({})",
+                out.cost,
+                base.cost
+            );
+            assert_eq!(
+                out.plan, base.plan,
+                "seed {seed}: best plan differs at {threads} threads"
+            );
+            assert_eq!(
+                out.evals, base.evals,
+                "seed {seed}: eval count differs at {threads} threads"
+            );
+        }
+    }
+}
+
+#[test]
+fn parallel_runs_never_exceed_budget() {
+    for threads in [1usize, 2, 8] {
+        for budget in [50usize, 400] {
+            let out = sha(3, threads, budget, Scenario::SingleRegion);
+            assert!(
+                out.evals <= budget,
+                "{threads} threads overran budget {budget}: {}",
+                out.evals
+            );
+        }
+    }
+    let (wf, topo, job) = env(Scenario::SingleRegion);
+    let mut ea = PureEaScheduler::new(5);
+    ea.threads = 4;
+    let out = ea.schedule(&topo, &wf, &job, Budget::evals(150));
+    assert!(out.evals <= 150, "pure EA overran: {}", out.evals);
+}
+
+#[test]
+fn cached_best_cost_matches_fresh_evaluation() {
+    let out = sha(11, 4, 250, Scenario::MultiRegionHybrid);
+    let (wf, topo, job) = env(Scenario::MultiRegionHybrid);
+    let plan = out.plan.expect("plan");
+    let fresh = CostModel::new(&topo, &wf, &job).plan_cost(&plan).iter_time;
+    assert_eq!(
+        fresh.to_bits(),
+        out.cost.to_bits(),
+        "cache must be transparent: fresh {fresh} vs reported {}",
+        out.cost
+    );
+    assert!(out.cache_misses > 0);
+}
+
+#[test]
+fn warm_replan_identical_across_thread_counts() {
+    let wf = RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_4b());
+    let job = JobConfig::tiny();
+    let run = |threads: usize| {
+        let mut fleet = FleetState::new(build_testbed(
+            Scenario::MultiCountry,
+            &TestbedSpec::default(),
+        ));
+        let cfg = ReplanConfig {
+            warm_budget: 80,
+            cold_budget: 150,
+            seed_mutants: 3,
+            threads,
+            ..ReplanConfig::default()
+        };
+        let mut rp = Replanner::new(21, cfg);
+        let (topo0, map0) = fleet.snapshot();
+        let base = plan_to_base(&rp.cold_plan(&topo0, &wf, &job).plan.expect("cold"), &map0);
+        fleet.apply(&ClusterEvent::MachinePreempt { machine: 2 });
+        let (topo1, map1) = fleet.snapshot();
+        let b2n = FleetState::base_to_snapshot(&map1);
+        rp.replan(&topo1, &wf, &job, &base, &b2n)
+    };
+    let a = run(1);
+    let b = run(4);
+    assert_eq!(a.plan, b.plan, "warm replan plan differs across thread counts");
+    assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+    assert_eq!(a.evals, b.evals);
+    assert_eq!(a.migration_secs.to_bits(), b.migration_secs.to_bits());
+}
