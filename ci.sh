@@ -4,6 +4,14 @@
 #   ./ci.sh          fast checks (tier-1 + replay smoke)
 #   ./ci.sh --bench  also runs the fig11 elastic bench (reduced budgets)
 #
+# The test suite runs twice. HETRL_TEST_THREADS=n replaces the
+# determinism tests' thread matrix with {1, n} (testing::fixtures):
+# the =1 pass pins that everything passes with a purely sequential
+# engine (no cross-thread comparisons at all), the =8 pass adds the
+# 1-vs-8 determinism comparisons (prop_anytime,
+# prop_scheduler_parallel). The second pass costs a full re-run; drop
+# the =1 pass if CI minutes ever matter more than the sequential pin.
+#
 # Bench/RunRecord output lands in rust/bench_out/ (HETRL_RESULTS overrides).
 set -euo pipefail
 cd "$(dirname "$0")/rust"
@@ -17,12 +25,20 @@ fi
 echo "== cargo build --release =="
 cargo build --release
 
-echo "== cargo test -q =="
-cargo test -q
+echo "== cargo test -q (HETRL_TEST_THREADS=1) =="
+HETRL_TEST_THREADS=1 cargo test -q
+
+echo "== cargo test -q (HETRL_TEST_THREADS=8) =="
+HETRL_TEST_THREADS=8 cargo test -q
 
 echo "== replay smoke (tiny trace, deterministic) =="
 ./target/release/hetrl replay --scenario country --seed 0 \
     --iters 6 --events 3 --budget 120 --warm-budget 60 --policy warm --tiny
+
+echo "== replay smoke (anytime background search) =="
+./target/release/hetrl replay --scenario country --seed 0 \
+    --iters 6 --events 3 --budget 120 --warm-budget 60 \
+    --anytime-rate 4 --policy anytime --tiny
 
 echo "== search-throughput smoke (parallel engine, 1 vs N threads) =="
 # fig5_search_throughput sweeps thread counts at a small budget and

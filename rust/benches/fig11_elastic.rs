@@ -5,14 +5,18 @@
 //! * static        — incumbent plan repaired only, never re-searched;
 //! * warm-replan   — event-driven warm-started search, migration-aware
 //!                   objective, reduced budget;
+//! * anytime       — warm-replan plus the background anytime search
+//!                   between events (sim-time eval allowance), merged
+//!                   migration-aware at each barrier;
 //! * oracle        — full-budget re-search with free instant migration
 //!                   (upper bound).
 //!
 //! Expected shape: after the first preemption, warm-replan recovers
 //! most of the oracle's throughput while static — stuck with a plan
-//! shaped for the departed fleet — trails; warm-replan spends a small
-//! fraction of the oracle's search evaluations. Rows are persisted as a
-//! `RunRecord` under `bench_out/`.
+//! shaped for the departed fleet — trails; anytime closes more of the
+//! remaining gap using only spare cycles; warm-replan spends a small
+//! fraction of the oracle's search evaluations. Rows are persisted as
+//! a `RunRecord` under `bench_out/`.
 
 mod common;
 
@@ -51,6 +55,8 @@ fn main() {
             "migration_secs",
             "active_gpus",
             "evals",
+            "anytime_evals",
+            "anytime_cost",
             "cache_hits",
             "cache_misses",
             "events",
@@ -65,6 +71,7 @@ fn main() {
             "post-event thpt",
             "vs static",
             "evals",
+            "bg evals",
             "cache hit%",
             "migration (s)",
         ],
@@ -90,6 +97,9 @@ fn main() {
                     Json::num(rec.migration_secs),
                     Json::num(rec.active_gpus as f64),
                     Json::num(rec.evals as f64),
+                    Json::num(rec.anytime_evals as f64),
+                    // JSON has no ∞; -1 marks "no incumbent / not anytime".
+                    Json::num(if rec.anytime_cost.is_finite() { rec.anytime_cost } else { -1.0 }),
                     Json::num(rec.cache_hits as f64),
                     Json::num(rec.cache_misses as f64),
                     Json::str(&rec.events.join("+")),
@@ -111,6 +121,7 @@ fn main() {
                     "-".to_string()
                 },
                 r.total_evals.to_string(),
+                r.anytime_evals.to_string(),
                 format!("{:.0}%", r.cache_hit_rate() * 100.0),
                 format!("{mig:.1}"),
             ]);

@@ -13,6 +13,13 @@
 //! parallelization (new pp/tp or layer split) pays for the internal
 //! reshard it really causes.
 //!
+//! Transfers contend on *both* ends: a destination's fetches serialize
+//! on its ingress NIC, and concurrent fetches from one source share
+//! that source's egress bandwidth — source selection is greedy
+//! least-loaded, so replicated shards fan out across their holders.
+//! The migration finishes when the busiest NIC (send or receive side)
+//! drains.
+//!
 //! The elastic replanner adds `migration_time / horizon` to the search
 //! objective so a marginally-faster plan that moves terabytes across a
 //! WAN loses to a slightly-slower plan that stays put.
@@ -125,16 +132,24 @@ impl MigrationModel {
     /// `plan` (both in `topo`'s id space). Per destination shard:
     ///
     /// * a device that already holds the identical shard — free;
-    /// * else fetched from the nearest device holding that shard
-    ///   (`α + bytes/β` over the *current* link state);
+    /// * else fetched from a device holding that shard, chosen
+    ///   greedily by *loaded* completion time — concurrent fetches
+    ///   from one source serialize on its egress NIC, so the best
+    ///   source minimizes `egress_load + α + bytes/β` over the
+    ///   *current* link state, not just the nearest link;
     /// * else (shard shape changed / no shard holder survived) fetched
-    ///   from the nearest holder of *any* of the task's state, which
-    ///   can re-shard on the fly;
-    /// * else restored from the checkpoint store.
+    ///   the same way from a holder of *any* of the task's state,
+    ///   which can re-shard on the fly — or resharded locally at HBM
+    ///   speed when the destination itself holds some of the task's
+    ///   state (no NIC involved);
+    /// * else restored from the checkpoint store, whose egress
+    ///   serializes like any other source.
     ///
-    /// Fetches to one destination serialize on its NIC; destinations
+    /// Fetches to one destination serialize on its ingress NIC and
+    /// fetches from one source on its egress NIC; distinct devices
     /// proceed in parallel, so the cost is the worst per-device total
-    /// plus a fixed setup term.
+    /// (receive or send side, whichever is the bottleneck) plus a
+    /// fixed setup term.
     pub fn migration_time(
         &self,
         topo: &DeviceTopology,
@@ -144,7 +159,10 @@ impl MigrationModel {
         plan: &ExecutionPlan,
     ) -> f64 {
         static EMPTY: PrevTask = PrevTask { shards: Vec::new(), holders: Vec::new() };
-        let mut per_dev = vec![0.0f64; topo.n()];
+        let n = topo.n();
+        let mut per_dev = vec![0.0f64; n];
+        // Egress load per source NIC; slot `n` is the checkpoint store.
+        let mut per_src = vec![0.0f64; n + 1];
         for (t, tp) in plan.task_plans.iter().enumerate() {
             let task = &wf.tasks[t];
             let s = tp.strategy;
@@ -166,12 +184,22 @@ impl MigrationModel {
                 } else {
                     prev_t.holders.as_slice()
                 };
-                // Remote fetch from the nearest (other) source device.
-                let remote = sources
-                    .iter()
-                    .filter(|&&src| src != d)
-                    .map(|&src| topo.xfer_time(src, d, bytes))
-                    .fold(f64::INFINITY, f64::min);
+                // Remote fetch: pick the source minimizing loaded
+                // completion time (its egress queue + this transfer),
+                // so replicated shards spread across their holders
+                // instead of hammering the first one.
+                let mut remote_src: Option<usize> = None;
+                let mut remote_loaded = f64::INFINITY;
+                let mut remote_raw = f64::INFINITY;
+                for &src in sources.iter().filter(|&&src| src != d) {
+                    let raw = topo.xfer_time(src, d, bytes);
+                    let loaded = per_src[src] + raw;
+                    if loaded < remote_loaded {
+                        remote_loaded = loaded;
+                        remote_raw = raw;
+                        remote_src = Some(src);
+                    }
+                }
                 // A device that holds *some* state of the task can
                 // re-shard locally at HBM speed (never free: the shard
                 // shape changed or it would have matched above).
@@ -180,15 +208,27 @@ impl MigrationModel {
                 } else {
                     f64::INFINITY
                 };
-                let fetch = if remote.is_finite() || local.is_finite() {
-                    remote.min(local)
-                } else {
-                    bytes / self.ckpt_bw
-                };
-                per_dev[d] += fetch;
+                match remote_src {
+                    _ if local.is_finite() && local <= remote_loaded => {
+                        per_dev[d] += local; // HBM reshard: no NIC used
+                    }
+                    Some(src) => {
+                        per_src[src] += remote_raw;
+                        per_dev[d] += remote_raw;
+                    }
+                    None => {
+                        // No live holder anywhere: checkpoint restore,
+                        // serialized on the store's egress bandwidth.
+                        let fetch = bytes / self.ckpt_bw;
+                        per_src[n] += fetch;
+                        per_dev[d] += fetch;
+                    }
+                }
             }
         }
-        let worst = per_dev.iter().cloned().fold(0.0f64, f64::max);
+        let worst_recv = per_dev.iter().cloned().fold(0.0f64, f64::max);
+        let worst_send = per_src.iter().cloned().fold(0.0f64, f64::max);
+        let worst = worst_recv.max(worst_send);
         if worst > 0.0 {
             worst + self.setup_secs
         } else {
@@ -286,6 +326,74 @@ mod tests {
             mm.migration_time(&topo, &wf, &job, &identity_prev(&old), &swapped),
             0.0
         );
+    }
+
+    /// Build a per-task plan where task 0 uses `s0`/`devs0` and every
+    /// other task t sits alone on device `8 + t` (machine 1) — so only
+    /// task 0 contributes migration cost between two such plans.
+    fn isolating_plan(wf: &RlWorkflow, s0: ParallelStrategy, devs0: Vec<usize>) -> ExecutionPlan {
+        let mut task_plans = Vec::new();
+        for (t, task) in wf.tasks.iter().enumerate() {
+            if t == 0 {
+                task_plans.push(TaskPlan::uniform(s0, task.model.nl, devs0.clone()));
+            } else {
+                task_plans.push(TaskPlan::uniform(
+                    ParallelStrategy::new(1, 1, 1),
+                    task.model.nl,
+                    vec![8 + t],
+                ));
+            }
+        }
+        ExecutionPlan {
+            task_groups: vec![(0..wf.n_tasks()).collect()],
+            gpu_groups: vec![(0..64).collect()],
+            task_plans,
+        }
+    }
+
+    #[test]
+    fn contended_source_serializes_egress() {
+        // Single region: all cross-machine links identical, so transfer
+        // times are equal and only contention differentiates the cases.
+        let (wf, topo, job) = setup(Scenario::SingleRegion);
+        let mm = MigrationModel::default();
+
+        // Baseline: one destination (device 40, machine 5) fetches the
+        // full-model shard from its single holder (device 0).
+        let single_prev =
+            identity_prev(&isolating_plan(&wf, ParallelStrategy::new(1, 1, 1), vec![0]));
+        let single_new = isolating_plan(&wf, ParallelStrategy::new(1, 1, 1), vec![40]);
+        let single = mm.migration_time(&topo, &wf, &job, &single_prev, &single_new);
+        assert!(single > mm.setup_secs, "baseline fetch must cost: {single}");
+        let one_fetch = single - mm.setup_secs;
+
+        // Contended: four DP replicas (devices 40..44) all need the
+        // same shard, held only by device 0 — its egress serializes
+        // the four transfers, so the cost is ~4x one fetch.
+        let contended_new = isolating_plan(&wf, ParallelStrategy::new(4, 1, 1), vec![40, 41, 42, 43]);
+        let contended = mm.migration_time(&topo, &wf, &job, &single_prev, &contended_new);
+        let contended_fetch = contended - mm.setup_secs;
+        assert!(
+            contended_fetch > 3.5 * one_fetch && contended_fetch < 4.5 * one_fetch,
+            "4 fetches from one source must serialize: {contended_fetch} vs 4x{one_fetch}"
+        );
+
+        // Uncontended: the shard is replicated on devices 0..4 (four
+        // old DP replicas); the greedy least-loaded pick spreads the
+        // four fetches across the four holders, so the cost stays at
+        // ~one fetch.
+        let spread_prev = identity_prev(&isolating_plan(
+            &wf,
+            ParallelStrategy::new(4, 1, 1),
+            vec![0, 1, 2, 3],
+        ));
+        let spread = mm.migration_time(&topo, &wf, &job, &spread_prev, &contended_new);
+        let spread_fetch = spread - mm.setup_secs;
+        assert!(
+            spread_fetch < 1.5 * one_fetch,
+            "replicated holders must spread the load: {spread_fetch} vs {one_fetch}"
+        );
+        assert!(contended > spread, "contention must cost more than spreading");
     }
 
     #[test]

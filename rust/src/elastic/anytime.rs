@@ -1,0 +1,380 @@
+//! Anytime background search: keep improving the plan *between*
+//! cluster events instead of only reacting at them.
+//!
+//! The event-driven [`super::replan::Replanner`] closes part of the
+//! static→oracle gap, but its search stops when the barrier clears —
+//! during the (often long) quiet stretches between events the scheduler
+//! sits idle while the fleet keeps executing a possibly mediocre plan.
+//! This module models the asynchronous-RL insight (overlap optimization
+//! with execution) applied to plan search itself:
+//!
+//! * **Allowance, not wall-clock** — "spare controller cycles" are an
+//!   eval allowance accrued per *simulated* second of training
+//!   ([`AnytimeConfig::evals_per_sim_sec`], capped per step by
+//!   [`AnytimeConfig::max_step_evals`]). The budget is charged through
+//!   the engine's shared [`crate::scheduler::EvalLedger`] in sim-time
+//!   units, never wall-clock, so a replay remains a pure function of
+//!   `(scenario, spec, wf, job, policy, cfg, seed)` and the determinism
+//!   contract (same seed ⇒ bit-identical replay at any thread count)
+//!   extends to the background search.
+//! * **Persistent warm arms** — at every event barrier the service is
+//!   [`AnytimeSearch::reseed`]ed from the post-event plan: a fixed
+//!   number of [`EaArm`]s is rebuilt around the plan's Level-1/2
+//!   structure, their populations seeded with the plan plus per-arm
+//!   [`perturbations`]. Between events the arms' populations persist
+//!   and keep evolving, one [`AnytimeSearch::step`] per replayed
+//!   iteration on the scoped-worker engine
+//!   ([`crate::scheduler::engine::run_seeded_rung`]).
+//! * **Migration-aware objective** — candidates are scored as
+//!   `iter_time + migration_time(running → candidate) / horizon`
+//!   against the *currently executing* plan, so the background search
+//!   cannot chase marginally-faster plans that would cost terabytes of
+//!   resharding to adopt. The incumbent only ever improves within an
+//!   inter-event window (monotone non-increasing objective).
+//! * **Barrier merge** — at the next event the replay hands the
+//!   incumbent (translated to base ids) to
+//!   [`super::replan::Replanner::replan_with_anytime`], which runs the
+//!   ordinary warm replan unchanged and adopts the anytime incumbent
+//!   only if its migration-aware objective against the post-event
+//!   fleet is strictly better. Unspent allowance is forfeited at the
+//!   barrier (the controller is busy replanning).
+//!
+//! Exposed as `hetrl replay --policy anytime` (and inside
+//! `--policy all`), compared in `benches/fig11_elastic.rs`, and
+//! property-tested in `tests/prop_anytime.rs`.
+
+use super::replan::ReplanConfig;
+use crate::costmodel::{CostCache, PrevTask};
+use crate::plan::ExecutionPlan;
+use crate::scheduler::ea::{perturbations, EaArm};
+use crate::scheduler::engine::{self, SeededArmTask};
+use crate::scheduler::{Budget, EvalCtx};
+use crate::topology::DeviceTopology;
+use crate::workflow::{JobConfig, RlWorkflow};
+use std::sync::Arc;
+
+/// Anytime background-search knobs (nested in
+/// [`super::replan::ReplanConfig`]).
+#[derive(Debug, Clone, Copy)]
+pub struct AnytimeConfig {
+    /// Cost-model evaluations the controller can afford per *simulated*
+    /// second of training — the spare-cycle allowance. Accounted in
+    /// sim-time so replays stay deterministic.
+    pub evals_per_sim_sec: f64,
+    /// Hard cap on evaluations spent in one between-event step.
+    pub max_step_evals: usize,
+    /// Independent background arms (each on its own RNG stream and,
+    /// when `ReplanConfig::threads` > 1, its own worker).
+    pub arms: usize,
+    /// Perturbed copies of the incumbent seeded per arm at reseed.
+    pub seed_mutants: usize,
+}
+
+impl Default for AnytimeConfig {
+    fn default() -> Self {
+        AnytimeConfig {
+            evals_per_sim_sec: 0.5,
+            max_step_evals: 64,
+            arms: 2,
+            seed_mutants: 3,
+        }
+    }
+}
+
+/// What one background step did.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AnytimeStep {
+    /// Evaluations actually spent (≤ the accrued allowance and
+    /// ≤ [`AnytimeConfig::max_step_evals`]).
+    pub evals: usize,
+    /// Cost-cache telemetry for the step (exact at 1 worker thread).
+    pub cache_hits: usize,
+    pub cache_misses: usize,
+    /// Incumbent objective after the step: `iter_time` + amortized
+    /// migration from the running plan (∞ when no incumbent exists).
+    pub incumbent_cost: f64,
+}
+
+impl AnytimeStep {
+    fn idle(incumbent_cost: f64) -> AnytimeStep {
+        AnytimeStep { evals: 0, cache_hits: 0, cache_misses: 0, incumbent_cost }
+    }
+}
+
+/// The background anytime-search service owned by a `Policy::Anytime`
+/// replay. All plans live in the *snapshot* id space of the current
+/// epoch; the replay driver translates across epochs at barriers.
+pub struct AnytimeSearch {
+    cfg: ReplanConfig,
+    seed: u64,
+    /// Bumped at every [`Self::reseed`] (event barrier).
+    epochs: u64,
+    /// Fractional eval allowance accrued but not yet spent this epoch.
+    carry: f64,
+    /// Lifetime allowance ever accrued (telemetry; `spent ≤ accrued`).
+    accrued: f64,
+    spent: usize,
+    /// Background arms with persistent populations (current epoch).
+    arms: Vec<EaArm>,
+    /// Per-arm seed plans still to inject (drained across subsequent
+    /// steps as each arm's quota affords, so a starved arm keeps its
+    /// warm-start seeds until the allowance catches up).
+    pending: Vec<Vec<ExecutionPlan>>,
+    /// The plan the fleet is executing this epoch, and its shard view
+    /// (identity translation — same snapshot space).
+    running: Option<ExecutionPlan>,
+    prev: Vec<PrevTask>,
+    incumbent: Option<ExecutionPlan>,
+    incumbent_cost: f64,
+    /// Per-epoch cost memo shared across steps (cleared at reseed:
+    /// a new snapshot invalidates every cached per-task cost).
+    cache: Arc<CostCache>,
+}
+
+impl AnytimeSearch {
+    pub fn new(seed: u64, cfg: ReplanConfig) -> AnytimeSearch {
+        AnytimeSearch {
+            cfg,
+            seed,
+            epochs: 0,
+            carry: 0.0,
+            accrued: 0.0,
+            spent: 0,
+            arms: Vec::new(),
+            pending: Vec::new(),
+            running: None,
+            prev: Vec::new(),
+            incumbent: None,
+            incumbent_cost: f64::INFINITY,
+            cache: Arc::new(CostCache::new()),
+        }
+    }
+
+    /// Current incumbent (snapshot space) and its objective.
+    pub fn incumbent(&self) -> Option<(&ExecutionPlan, f64)> {
+        self.incumbent.as_ref().map(|p| (p, self.incumbent_cost))
+    }
+
+    /// Background evaluations spent over the service's lifetime.
+    pub fn spent(&self) -> usize {
+        self.spent
+    }
+
+    /// Allowance ever accrued (`spent() ≤ accrued()` always holds).
+    pub fn accrued(&self) -> f64 {
+        self.accrued
+    }
+
+    pub fn epochs(&self) -> u64 {
+        self.epochs
+    }
+
+    /// Start a new epoch at an event barrier: the chosen post-event
+    /// plan (with `iter_time` its predicted pure iteration time)
+    /// becomes both the running plan and the incumbent, the arms are
+    /// rebuilt around its structure, the per-epoch cache is dropped and
+    /// the unspent allowance is forfeited.
+    pub fn reseed(&mut self, plan: Option<&ExecutionPlan>, iter_time: f64) {
+        self.epochs += 1;
+        self.carry = 0.0;
+        self.cache = Arc::new(CostCache::new());
+        self.arms.clear();
+        self.pending.clear();
+        self.running = plan.cloned();
+        self.incumbent = plan.cloned();
+        self.incumbent_cost = if plan.is_some() { iter_time } else { f64::INFINITY };
+        let Some(plan) = plan else {
+            self.prev = Vec::new();
+            return;
+        };
+        self.prev = PrevTask::from_plan(plan, Some);
+        let grouping = plan.task_groups.clone();
+        let sizes: Vec<usize> = plan.gpu_groups.iter().map(|g| g.len()).collect();
+        for k in 0..self.cfg.anytime.arms.max(1) {
+            let arm_seed = self
+                .seed
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(self.epochs.wrapping_mul(1442695040888963407))
+                .wrapping_add((k as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            self.arms.push(EaArm::new(
+                grouping.clone(),
+                sizes.clone(),
+                self.cfg.ea.clone(),
+                arm_seed,
+            ));
+            let mut seeds = vec![plan.clone()];
+            seeds.extend(perturbations(plan, self.cfg.anytime.seed_mutants, arm_seed));
+            self.pending.push(seeds);
+        }
+    }
+
+    /// Credit `sim_secs` of simulated training time to the allowance.
+    pub fn accrue(&mut self, sim_secs: f64) {
+        if sim_secs.is_finite() && sim_secs > 0.0 {
+            let evals = sim_secs * self.cfg.anytime.evals_per_sim_sec;
+            self.carry += evals;
+            self.accrued += evals;
+        }
+    }
+
+    /// Spend the accrued allowance improving the incumbent on the
+    /// current snapshot. One call per quiet replayed iteration; the
+    /// fan-out/merge runs on the parallel engine with per-arm quotas
+    /// from [`engine::split_quota`], so the outcome is bit-identical at
+    /// any thread count.
+    pub fn step(
+        &mut self,
+        topo: &DeviceTopology,
+        wf: &RlWorkflow,
+        job: &JobConfig,
+    ) -> AnytimeStep {
+        let quota = (self.carry as usize).min(self.cfg.anytime.max_step_evals);
+        if quota == 0 || self.arms.is_empty() || self.running.is_none() {
+            return AnytimeStep::idle(self.incumbent_cost);
+        }
+        let mut ctx = EvalCtx::new(topo, wf, job, Budget::evals(quota));
+        ctx.cache = Arc::clone(&self.cache);
+        // Only strict improvements over the incumbent count.
+        ctx.best_cost = self.incumbent_cost;
+        let mm = self.cfg.migration;
+        let horizon = self.cfg.horizon_iters.max(1.0);
+        let prev = self.prev.clone();
+        ctx.penalty = Some(Arc::new(move |p: &ExecutionPlan| {
+            mm.migration_time(topo, wf, job, &prev, p) / horizon
+        }));
+        let hits0 = ctx.cache.hits();
+        let misses0 = ctx.cache.misses();
+
+        let quotas = engine::split_quota(quota, self.arms.len(), 1);
+        let threads = engine::resolve_threads(self.cfg.threads);
+        let arms = std::mem::take(&mut self.arms);
+        let mut pending = std::mem::take(&mut self.pending);
+        pending.resize_with(arms.len(), Vec::new);
+        // Hand each arm only the seeds its quota can inject this step;
+        // the rest stay pending so a starved arm still warm-starts once
+        // the allowance catches up (quotas are budget-derived, so this
+        // split is deterministic at any thread count).
+        let mut kept: Vec<Vec<ExecutionPlan>> = Vec::with_capacity(arms.len());
+        let tasks: Vec<SeededArmTask> = arms
+            .into_iter()
+            .zip(pending)
+            .enumerate()
+            .map(|(k, (arm, mut seeds))| {
+                let rest = seeds.split_off(quotas[k].min(seeds.len()));
+                kept.push(rest);
+                SeededArmTask { key: (0, k), arm, quota: quotas[k], seeds }
+            })
+            .collect();
+        let runs = engine::run_seeded_rung(&mut ctx, tasks, threads);
+        self.arms = runs.into_iter().map(|r| r.arm).collect();
+        self.pending = kept;
+
+        let step_spent = ctx.ledger.spent();
+        self.carry -= step_spent as f64;
+        self.spent += step_spent;
+        if ctx.best_cost < self.incumbent_cost {
+            if let Some(p) = ctx.best_plan.take() {
+                self.incumbent_cost = ctx.best_cost;
+                self.incumbent = Some(p);
+            }
+        }
+        AnytimeStep {
+            evals: step_spent,
+            cache_hits: ctx.cache.hits().saturating_sub(hits0),
+            cache_misses: ctx.cache.misses().saturating_sub(misses0),
+            incumbent_cost: self.incumbent_cost,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::CostModel;
+    use crate::elastic::replan::Replanner;
+    use crate::testing::fixtures;
+    use crate::workflow::JobConfig;
+
+    fn service(threads: usize) -> (AnytimeSearch, crate::workflow::RlWorkflow, DeviceTopology, JobConfig)
+    {
+        let wf = fixtures::tiny_wf();
+        let job = JobConfig::tiny();
+        let topo = fixtures::small_topo(crate::topology::Scenario::MultiCountry);
+        let mut cfg = fixtures::small_replan_cfg();
+        cfg.threads = threads;
+        cfg.anytime =
+            AnytimeConfig { evals_per_sim_sec: 1.0, max_step_evals: 24, arms: 2, seed_mutants: 2 };
+        let mut rp = Replanner::new(3, cfg.clone());
+        let plan = rp.cold_plan(&topo, &wf, &job).plan.expect("cold plan");
+        let iter_time = CostModel::new(&topo, &wf, &job).plan_cost(&plan).iter_time;
+        let mut svc = AnytimeSearch::new(7, cfg);
+        svc.reseed(Some(&plan), iter_time);
+        (svc, wf, topo, job)
+    }
+
+    #[test]
+    fn allowance_caps_spending() {
+        let (mut svc, wf, topo, job) = service(1);
+        // Nothing accrued: the step must idle.
+        let st = svc.step(&topo, &wf, &job);
+        assert_eq!(st.evals, 0);
+        svc.accrue(5.0); // 5 evals at 1 eval/sim-sec
+        let st = svc.step(&topo, &wf, &job);
+        assert!(st.evals <= 5, "overspent: {}", st.evals);
+        assert!(svc.spent() as f64 <= svc.accrued() + 1e-9);
+        // A huge accrual is clamped by the per-step cap.
+        svc.accrue(1e6);
+        let st = svc.step(&topo, &wf, &job);
+        assert!(st.evals <= 24, "step cap violated: {}", st.evals);
+    }
+
+    #[test]
+    fn incumbent_objective_monotone_within_epoch() {
+        let (mut svc, wf, topo, job) = service(1);
+        let mut prev = f64::INFINITY;
+        for _ in 0..6 {
+            svc.accrue(12.0);
+            let st = svc.step(&topo, &wf, &job);
+            assert!(
+                st.incumbent_cost <= prev,
+                "incumbent regressed: {} after {}",
+                st.incumbent_cost,
+                prev
+            );
+            assert!(st.incumbent_cost.is_finite());
+            prev = st.incumbent_cost;
+        }
+        assert!(svc.spent() > 0, "background search never ran");
+    }
+
+    #[test]
+    fn reseed_forfeits_allowance_and_restarts() {
+        let (mut svc, wf, topo, job) = service(1);
+        svc.accrue(50.0);
+        let running = svc.incumbent().unwrap().0.clone();
+        svc.reseed(Some(&running), 42.0);
+        assert_eq!(svc.epochs(), 2);
+        // Carry was forfeited: an immediate step has nothing to spend.
+        let st = svc.step(&topo, &wf, &job);
+        assert_eq!(st.evals, 0);
+        assert_eq!(st.incumbent_cost, 42.0);
+    }
+
+    #[test]
+    fn step_deterministic_across_thread_counts() {
+        let run = |threads: usize| {
+            let (mut svc, wf, topo, job) = service(threads);
+            let mut trail = Vec::new();
+            for _ in 0..4 {
+                svc.accrue(10.0);
+                let st = svc.step(&topo, &wf, &job);
+                trail.push((st.evals, st.incumbent_cost.to_bits()));
+            }
+            (trail, svc.incumbent().map(|(p, c)| (p.clone(), c.to_bits())))
+        };
+        let a = run(1);
+        let b = run(4);
+        assert_eq!(a.0, b.0, "step telemetry diverged across thread counts");
+        assert_eq!(a.1, b.1, "incumbent diverged across thread counts");
+    }
+}

@@ -18,16 +18,24 @@
 //!   always-on [`crate::costmodel::CostCache`]), and optimize a
 //!   migration-aware objective (`iter_time + migration/horizon`, see
 //!   [`crate::costmodel::MigrationModel`]);
+//! * [`anytime`] — [`anytime::AnytimeSearch`]: the *anytime* background
+//!   search that keeps improving an incumbent **between** events under
+//!   a rate-limited, sim-time-accounted eval allowance ("spare
+//!   controller cycles"), merging migration-aware at each event
+//!   barrier so the replanner's warm arms start from the best plan
+//!   known, not just the aged incumbent;
 //! * [`replay`] — end-to-end dynamic-trace replay on the DES
 //!   ([`crate::simulator`]): plan → event → replan → resume, comparing
-//!   static / warm-replan / oracle policies (`hetrl replay`,
+//!   static / warm-replan / anytime / oracle policies (`hetrl replay`,
 //!   `benches/fig11_elastic.rs`).
 
+pub mod anytime;
 pub mod events;
 pub mod fleet;
 pub mod replan;
 pub mod replay;
 
+pub use anytime::{AnytimeConfig, AnytimeSearch, AnytimeStep};
 pub use events::{generate_trace, ClusterEvent, TraceConfig, TraceEvent};
 pub use fleet::FleetState;
 pub use replan::{

@@ -7,12 +7,13 @@
 //! cost-model sub-results through the always-on
 //! [`crate::costmodel::CostCache`].
 
+use super::anytime::AnytimeConfig;
 use crate::costmodel::migration::PrevTask;
 use crate::costmodel::{CostModel, MigrationModel};
 use crate::plan::parallel::uniform_layer_split;
 use crate::plan::{ExecutionPlan, ParallelStrategy, TaskPlan};
-use crate::scheduler::ea::{swap_devices, EaArm, EaConfig};
-use crate::scheduler::engine;
+use crate::scheduler::ea::{perturbations, EaArm, EaConfig};
+use crate::scheduler::engine::{self, SeededArmTask};
 use crate::scheduler::levels::{default_task_plans, strategy_feasible};
 use crate::scheduler::{Budget, EvalCtx, Scheduler, ShaEaScheduler};
 use crate::topology::DeviceTopology;
@@ -45,6 +46,9 @@ pub struct ReplanConfig {
     pub threads: usize,
     pub migration: MigrationModel,
     pub ea: EaConfig,
+    /// Anytime background-search knobs (used by `Policy::Anytime`
+    /// replays via [`super::anytime::AnytimeSearch`]; inert otherwise).
+    pub anytime: AnytimeConfig,
 }
 
 impl Default for ReplanConfig {
@@ -58,6 +62,7 @@ impl Default for ReplanConfig {
             threads: 1,
             migration: MigrationModel::default(),
             ea: EaConfig::default(),
+            anytime: AnytimeConfig::default(),
         }
     }
 }
@@ -297,47 +302,27 @@ impl Replanner {
         let sizes: Vec<usize> = repaired.gpu_groups.iter().map(|g| g.len()).collect();
         let n_arms = self.cfg.warm_arms.max(1);
         let quotas = engine::split_quota(self.cfg.warm_budget, n_arms, 1);
-        let jobs: Vec<(u64, usize)> = (0..n_arms)
+        let threads = engine::resolve_threads(self.cfg.threads);
+        let tasks: Vec<SeededArmTask> = (0..n_arms)
             .map(|k| {
-                (seed.wrapping_add((k as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)), quotas[k])
+                let arm_seed =
+                    seed.wrapping_add((k as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                let mut seeds = vec![repaired.clone()];
+                seeds.extend(perturbations(&repaired, self.cfg.seed_mutants, arm_seed));
+                SeededArmTask {
+                    key: (0, k),
+                    arm: EaArm::new(
+                        grouping.clone(),
+                        sizes.clone(),
+                        self.cfg.ea.clone(),
+                        arm_seed,
+                    ),
+                    quota: quotas[k],
+                    seeds,
+                }
             })
             .collect();
-        let threads = engine::resolve_threads(self.cfg.threads);
-        let ea_cfg = self.cfg.ea.clone();
-        let seed_mutants = self.cfg.seed_mutants;
-        engine::fan_out(&mut ctx, threads, jobs, |(arm_seed, quota), wctx| {
-            let mut arm = EaArm::new(grouping.clone(), sizes.clone(), ea_cfg.clone(), arm_seed);
-            let mut left = quota;
-            if left > 0 {
-                left = left.saturating_sub(arm.inject(wctx, repaired.clone()));
-            }
-            let mut rng = Rng::new(arm_seed ^ 0x3A57_11CE);
-            for _ in 0..seed_mutants {
-                if left == 0 || wctx.exhausted() {
-                    break;
-                }
-                let mut mutant = repaired.clone();
-                // Perturb: swap a random pair of devices across groups
-                // (or within one when the plan has a single group).
-                let all: Vec<usize> = mutant.gpu_groups.iter().flatten().copied().collect();
-                if all.len() >= 2 {
-                    let a = all[rng.below(all.len())];
-                    let mut b = all[rng.below(all.len())];
-                    if a == b {
-                        b = all[(rng.below(all.len()) + 1) % all.len()];
-                    }
-                    swap_devices(&mut mutant, a, b);
-                }
-                left = left.saturating_sub(arm.inject(wctx, mutant));
-            }
-            while left > 0 && !wctx.exhausted() {
-                let spent = arm.run(wctx, left);
-                if spent == 0 {
-                    break; // dead arm: hand the rest of the quota back
-                }
-                left -= spent;
-            }
-        });
+        engine::run_seeded_rung(&mut ctx, tasks, threads);
 
         let migration_secs = ctx
             .best_plan
@@ -362,6 +347,50 @@ impl Replanner {
             cache_misses,
             plan: out.plan,
         }
+    }
+
+    /// [`Self::replan`] plus the anytime merge at an event barrier: the
+    /// warm replan runs *exactly* as it would without a background
+    /// service (same arms, same RNG streams, same budget), then the
+    /// anytime incumbent — repaired against the post-event snapshot and
+    /// re-costed with the migration-aware objective from the *actual*
+    /// surviving placement — replaces the result iff strictly better.
+    /// With equal pre-event state the anytime policy is therefore never
+    /// worse than the warm policy at a barrier.
+    pub fn replan_with_anytime(
+        &mut self,
+        topo: &DeviceTopology,
+        wf: &RlWorkflow,
+        job: &JobConfig,
+        incumbent_base: &ExecutionPlan,
+        anytime_base: Option<&ExecutionPlan>,
+        base_to_new: &BTreeMap<usize, usize>,
+    ) -> ReplanOutcome {
+        let mut out = self.replan(topo, wf, job, incumbent_base, base_to_new);
+        let Some(any) = anytime_base else { return out };
+        let merge_seed = self.seed ^ self.episodes.wrapping_mul(0xA11F_1ED5);
+        let Some(candidate) = repair_plan(any, wf, job, topo, base_to_new, merge_seed) else {
+            return out;
+        };
+        if candidate.validate(wf, topo, job).is_err() {
+            return out;
+        }
+        let iter_time = CostModel::new(topo, wf, job).plan_cost(&candidate).iter_time;
+        if !iter_time.is_finite() {
+            return out;
+        }
+        let prev = prev_placement(incumbent_base, base_to_new);
+        let migration_secs =
+            self.cfg.migration.migration_time(topo, wf, job, &prev, &candidate);
+        let objective = iter_time + migration_secs / self.cfg.horizon_iters.max(1.0);
+        out.evals += 1; // the barrier comparison charges one evaluation
+        if objective < out.objective {
+            out.plan = Some(candidate);
+            out.iter_time = iter_time;
+            out.migration_secs = migration_secs;
+            out.objective = objective;
+        }
+        out
     }
 }
 
@@ -487,6 +516,47 @@ mod tests {
             out.iter_time,
             out.migration_secs
         );
+    }
+
+    #[test]
+    fn anytime_merge_never_worse_than_plain_warm_replan() {
+        let (wf, mut fleet, job) = setup();
+        let (topo0, map0) = fleet.snapshot();
+        let mk = || Replanner::new(23, small_cfg());
+        let base = {
+            let mut rp = mk();
+            plan_to_base(&rp.cold_plan(&topo0, &wf, &job).plan.unwrap(), &map0)
+        };
+        fleet.apply(&ClusterEvent::MachinePreempt { machine: 2 });
+        let (topo1, map1) = fleet.snapshot();
+        let b2n = FleetState::base_to_snapshot(&map1);
+        let warm = {
+            let mut rp = mk();
+            let _ = rp.cold_plan(&topo0, &wf, &job); // same episode counter
+            rp.replan(&topo1, &wf, &job, &base, &b2n)
+        };
+        // Hint = the aged incumbent itself: the merge must charge one
+        // comparison eval and never pick a worse objective.
+        let merged = {
+            let mut rp = mk();
+            let _ = rp.cold_plan(&topo0, &wf, &job);
+            rp.replan_with_anytime(&topo1, &wf, &job, &base, Some(&base), &b2n)
+        };
+        assert!(
+            merged.objective <= warm.objective + 1e-12,
+            "merge regressed: {} vs {}",
+            merged.objective,
+            warm.objective
+        );
+        // The comparison eval is charged only when the hint survives
+        // repair; either way the count never drops below plain warm.
+        assert!(
+            merged.evals == warm.evals || merged.evals == warm.evals + 1,
+            "evals {} vs warm {}",
+            merged.evals,
+            warm.evals
+        );
+        merged.plan.expect("plan").validate(&wf, &topo1, &job).unwrap();
     }
 
     #[test]

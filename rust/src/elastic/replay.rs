@@ -2,26 +2,34 @@
 //! measured with the discrete-event simulator on the *current* fleet
 //! snapshot at every iteration.
 //!
-//! Three policies are compared:
+//! Four policies are compared:
 //! * **Static** — the incumbent is only *repaired* (forced device
 //!   drops), never re-searched; what a scheduler without elasticity
 //!   does. Migration pauses are charged for the forced moves.
 //! * **Warm** — event-driven replanning: warm-started EA under a
 //!   reduced budget with the migration-aware objective. Migration
 //!   pauses charged.
+//! * **Anytime** — warm replanning *plus* the background anytime
+//!   search ([`super::anytime`]): between events, spare controller
+//!   cycles (an eval allowance accrued per simulated second) keep
+//!   improving an incumbent that is merged — migration-aware — into
+//!   the next event's replan. Migration pauses charged.
 //! * **Oracle** — an idealized upper bound: full cold-search budget at
 //!   every event and free, instant migration.
 //!
 //! Everything is seeded; a replay is a pure function of
-//! `(scenario, spec, wf, job, policy, cfg, seed)`.
+//! `(scenario, spec, wf, job, policy, cfg, seed)` — including the
+//! anytime policy, whose background budget is accounted in sim-time.
 
+use super::anytime::AnytimeSearch;
 use super::events::{generate_trace, TraceConfig, TraceEvent};
 use super::fleet::FleetState;
 use super::replan::{plan_to_base, prev_placement, repair_plan, ReplanConfig, Replanner};
 use crate::balance::{self, BalanceConfig};
+use crate::costmodel::CostModel;
 use crate::plan::ExecutionPlan;
 use crate::simulator::{simulate_plan, NoiseModel, SimConfig};
-use crate::topology::{build_testbed, Scenario, TestbedSpec};
+use crate::topology::{build_testbed, DeviceTopology, Scenario, TestbedSpec};
 use crate::workflow::{JobConfig, RlWorkflow};
 
 /// Replay policy under comparison.
@@ -29,16 +37,19 @@ use crate::workflow::{JobConfig, RlWorkflow};
 pub enum Policy {
     Static,
     Warm,
+    Anytime,
     Oracle,
 }
 
 impl Policy {
-    pub const ALL: [Policy; 3] = [Policy::Static, Policy::Warm, Policy::Oracle];
+    pub const ALL: [Policy; 4] =
+        [Policy::Static, Policy::Warm, Policy::Anytime, Policy::Oracle];
 
     pub fn name(self) -> &'static str {
         match self {
             Policy::Static => "static",
             Policy::Warm => "warm-replan",
+            Policy::Anytime => "anytime",
             Policy::Oracle => "oracle",
         }
     }
@@ -47,6 +58,7 @@ impl Policy {
         match s.to_ascii_lowercase().as_str() {
             "static" => Some(Policy::Static),
             "warm" | "warm-replan" | "replan" => Some(Policy::Warm),
+            "anytime" | "background" => Some(Policy::Anytime),
             "oracle" => Some(Policy::Oracle),
             _ => None,
         }
@@ -90,9 +102,11 @@ pub struct IterRecord {
     pub replanned: bool,
     /// Search evaluations spent at this iteration (0 when no event).
     pub evals: usize,
-    /// Per-task cost-cache hits/misses of this iteration's search (0
-    /// when no event; exact at the default `ReplanConfig::threads` = 1,
-    /// approximate under concurrency).
+    /// Per-task cost-cache hits/misses of this iteration's searches —
+    /// the event-driven replan plus, under the anytime policy, the
+    /// background step (so nonzero on quiet iterations there; 0 on
+    /// quiet iterations otherwise). Exact at the default
+    /// `ReplanConfig::threads` = 1, approximate under concurrency.
     pub cache_hits: usize,
     pub cache_misses: usize,
     /// One-off migration pause charged at this iteration (seconds).
@@ -103,6 +117,13 @@ pub struct IterRecord {
     /// feasible plan).
     pub samples: usize,
     pub active_gpus: usize,
+    /// Background anytime-search evaluations spent during this
+    /// iteration (sim-time allowance; 0 for non-anytime policies).
+    pub anytime_evals: usize,
+    /// Anytime incumbent objective after this iteration (∞ for
+    /// non-anytime policies or when no incumbent exists). Monotone
+    /// non-increasing between events; resets at each barrier.
+    pub anytime_cost: f64,
 }
 
 /// Full replay outcome for one policy.
@@ -117,13 +138,28 @@ pub struct ReplayResult {
     pub samples: usize,
     pub replans: usize,
     pub total_evals: usize,
+    /// Background anytime-search evaluations over the whole replay
+    /// (0 for non-anytime policies; not counted in `total_evals` —
+    /// they are spare sim-time cycles, not event-search budget).
+    pub anytime_evals: usize,
     /// Cost-cache telemetry summed over every search in the replay
-    /// (initial cold plan included).
+    /// (initial cold plan and anytime background steps included).
     pub cache_hits: usize,
     pub cache_misses: usize,
 }
 
 impl ReplayResult {
+    /// Mean per-iteration cost of the replay: iteration time plus
+    /// migration pauses, seconds — the CLI's "mean iter (s)" column
+    /// (`static ≥ warm ≥ anytime ≥ oracle` is the expected ordering).
+    pub fn mean_iter_secs(&self) -> f64 {
+        if self.records.is_empty() {
+            0.0
+        } else {
+            self.total_secs / self.records.len() as f64
+        }
+    }
+
     /// Fraction of per-task cost lookups served from the cache.
     pub fn cache_hit_rate(&self) -> f64 {
         let total = self.cache_hits + self.cache_misses;
@@ -161,6 +197,25 @@ pub fn first_event_iter(trace: &[TraceEvent]) -> Option<usize> {
     trace.iter().map(|e| e.at_iter).min()
 }
 
+/// Reseed the background service (when present) on a fresh epoch: the
+/// given plan becomes its running plan + incumbent, costed at its pure
+/// predicted iteration time — the single convention both the initial
+/// cold plan and every event barrier use.
+fn reseed_anytime(
+    anytime: &mut Option<AnytimeSearch>,
+    topo: &DeviceTopology,
+    wf: &RlWorkflow,
+    job: &JobConfig,
+    plan: Option<&ExecutionPlan>,
+) {
+    if let Some(a) = anytime.as_mut() {
+        let cost = plan
+            .map(|p| CostModel::new(topo, wf, job).plan_cost(p).iter_time)
+            .unwrap_or(f64::INFINITY);
+        a.reseed(plan, cost);
+    }
+}
+
 /// Replay a dynamic trace end-to-end under one policy.
 pub fn replay(
     scenario: Scenario,
@@ -175,6 +230,14 @@ pub fn replay(
     let trace = generate_trace(&base, &cfg.trace, seed);
     let mut fleet = FleetState::new(base);
     let mut replanner = Replanner::new(seed, cfg.replan.clone());
+    // The background service exists only under the anytime policy; its
+    // allowance is accounted in sim-time, so the replay stays a pure
+    // function of its inputs.
+    let mut anytime = if policy == Policy::Anytime {
+        Some(AnytimeSearch::new(seed ^ 0xA11C_E5EA, cfg.replan.clone()))
+    } else {
+        None
+    };
 
     // Initial plan on the full fleet (identical across policies: the
     // replanner's episode counter starts equal).
@@ -188,11 +251,13 @@ pub fn replay(
         }
     });
     let mut incumbent_base = plan.as_ref().map(|p| plan_to_base(p, &map));
+    reseed_anytime(&mut anytime, &topo, wf, job, plan.as_ref());
 
     let mut records = Vec::with_capacity(cfg.iters);
     let mut total_secs = 0.0;
     let mut replans = 0;
     let mut total_evals = cold.evals;
+    let mut total_anytime_evals = 0usize;
     let mut cache_hits = cold.cache_hits;
     let mut cache_misses = cold.cache_misses;
     let mut cursor = 0usize;
@@ -211,6 +276,12 @@ pub fn replay(
         let mut iter_misses = 0;
         let mut replanned = false;
         if !labels.is_empty() {
+            // The anytime incumbent lives in the *pre-event* snapshot
+            // space; translate it to base ids with the old map before
+            // the snapshot is replaced.
+            let anytime_base = anytime
+                .as_ref()
+                .and_then(|a| a.incumbent().map(|(p, _)| plan_to_base(p, &map)));
             let (t, m) = fleet.snapshot();
             topo = t;
             map = m;
@@ -251,6 +322,25 @@ pub fn replay(
                     migration_secs = out.migration_secs;
                     out.plan
                 }
+                (Policy::Anytime, Some(inc)) => {
+                    // Barrier merge: the ordinary warm replan, then the
+                    // background incumbent adopted iff strictly better
+                    // under the migration-aware objective.
+                    replanned = true;
+                    let out = replanner.replan_with_anytime(
+                        &topo,
+                        wf,
+                        job,
+                        inc,
+                        anytime_base.as_ref(),
+                        &b2n,
+                    );
+                    evals += out.evals;
+                    iter_hits += out.cache_hits;
+                    iter_misses += out.cache_misses;
+                    migration_secs = out.migration_secs;
+                    out.plan
+                }
                 (Policy::Oracle, _) | (_, None) => {
                     replanned = true;
                     let out = replanner.cold_plan(&topo, wf, job);
@@ -273,9 +363,9 @@ pub fn replay(
             if replanned {
                 replans += 1;
             }
-            total_evals += evals;
-            cache_hits += iter_hits;
-            cache_misses += iter_misses;
+            // New epoch for the background service: unspent allowance
+            // is forfeited while the controller replans.
+            reseed_anytime(&mut anytime, &topo, wf, job, plan.as_ref());
         }
 
         // Measure this iteration on the current snapshot.
@@ -297,6 +387,25 @@ pub fn replay(
             ),
         };
         total_secs += iter_secs + migration_secs;
+
+        // Spare controller cycles: credit this iteration's simulated
+        // duration to the background allowance and run one anytime
+        // step on the current snapshot.
+        let mut anytime_evals = 0;
+        let mut anytime_cost = f64::INFINITY;
+        if let Some(a) = anytime.as_mut() {
+            a.accrue(iter_secs);
+            let st = a.step(&topo, wf, job);
+            anytime_evals = st.evals;
+            anytime_cost = st.incumbent_cost;
+            iter_hits += st.cache_hits;
+            iter_misses += st.cache_misses;
+        }
+        total_evals += evals;
+        total_anytime_evals += anytime_evals;
+        cache_hits += iter_hits;
+        cache_misses += iter_misses;
+
         records.push(IterRecord {
             iter,
             events: labels,
@@ -308,6 +417,8 @@ pub fn replay(
             iter_secs,
             samples: iter_samples,
             active_gpus: topo.n(),
+            anytime_evals,
+            anytime_cost,
         });
     }
 
@@ -319,6 +430,7 @@ pub fn replay(
         total_secs,
         replans,
         total_evals,
+        anytime_evals: total_anytime_evals,
         cache_hits,
         cache_misses,
     }
@@ -327,6 +439,7 @@ pub fn replay(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::testing::fixtures;
     use crate::workflow::{Algo, Mode, ModelSpec};
 
     fn tiny_cfg() -> ReplayConfig {
@@ -346,14 +459,7 @@ mod tests {
     }
 
     fn small_spec() -> TestbedSpec {
-        TestbedSpec {
-            machines: vec![
-                (crate::topology::GpuModel::A100, 1),
-                (crate::topology::GpuModel::L40S, 1),
-                (crate::topology::GpuModel::L4, 1),
-            ],
-            gpus_per_machine: 4,
-        }
+        fixtures::small_spec()
     }
 
     #[test]
@@ -373,6 +479,29 @@ mod tests {
             assert_eq!(r.records.len(), 6);
             assert!(r.total_secs > 0.0 && r.total_secs.is_finite(), "{policy:?}");
             assert!(r.throughput() > 0.0);
+            if policy != Policy::Anytime {
+                assert_eq!(r.anytime_evals, 0, "{policy:?} ran background search");
+            }
+        }
+    }
+
+    #[test]
+    fn anytime_replay_runs_background_search() {
+        let wf = RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_1b7());
+        let job = JobConfig::tiny();
+        let mut cfg = tiny_cfg();
+        // Generous allowance so the background search visibly runs even
+        // on a tiny trace.
+        cfg.replan.anytime.evals_per_sim_sec = 8.0;
+        cfg.replan.anytime.max_step_evals = 16;
+        let r = replay(Scenario::MultiCountry, &small_spec(), &wf, &job, Policy::Anytime, &cfg, 5);
+        assert!(r.anytime_evals > 0, "no background evals spent");
+        assert_eq!(
+            r.anytime_evals,
+            r.records.iter().map(|x| x.anytime_evals).sum::<usize>()
+        );
+        for rec in &r.records {
+            assert!(rec.anytime_evals <= cfg.replan.anytime.max_step_evals);
         }
     }
 

@@ -27,11 +27,15 @@
 //!   ([`elastic::FleetState`]), event-driven replanning that
 //!   warm-starts the EA from the repaired incumbent under a reduced
 //!   budget with a migration-aware objective
-//!   ([`costmodel::MigrationModel`]) across parallel warm-start arms,
-//!   reusing per-task costs through the always-on
-//!   [`costmodel::CostCache`], and full dynamic-trace replay through
-//!   the DES (`hetrl replay --scenario <s1..s4> --seed N`, compared as
-//!   static vs warm-replan vs oracle in `benches/fig11_elastic.rs`);
+//!   ([`costmodel::MigrationModel`], now with source-NIC egress
+//!   contention) across parallel warm-start arms, reusing per-task
+//!   costs through the always-on [`costmodel::CostCache`], an
+//!   **anytime background search** ([`elastic::anytime`]) that keeps
+//!   improving the plan *between* events under a sim-time-accounted
+//!   eval allowance and merges migration-aware at each barrier, and
+//!   full dynamic-trace replay through the DES (`hetrl replay
+//!   --scenario <s1..s4> --seed N`, compared as static vs warm-replan
+//!   vs anytime vs oracle in `benches/fig11_elastic.rs`);
 //! * a standalone **0-1 ILP solver** ([`solver`]): dense simplex LP
 //!   relaxation + branch & bound;
 //! * a **discrete-event cluster simulator** ([`simulator`]) standing in
@@ -45,7 +49,8 @@
 //! Offline-registry constraints mean the usual ecosystem crates are not
 //! available; [`util`] and [`testing`] provide the in-crate substrates
 //! (PRNG, JSON, CLI, logging, threadpool, bench harness, property-based
-//! testing), [`log`] is an in-crate facade replacing the `log` crate,
+//! testing, and the shared [`testing::fixtures`] builders every test
+//! suite uses), [`log`] is an in-crate facade replacing the `log` crate,
 //! [`util::error`] replaces `anyhow`, and [`runtime::xla_stub`] stands
 //! in for the PJRT bindings (host-side literal ops are real; device
 //! compile/execute report unavailability until real bindings are wired

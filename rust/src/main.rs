@@ -74,8 +74,9 @@ fn help() -> String {
             OptSpec { name: "seed", help: "random seed", default: Some("0") },
             OptSpec { name: "iters", help: "replay: iterations to replay", default: Some("24") },
             OptSpec { name: "events", help: "replay: cluster events in the trace", default: Some("5") },
-            OptSpec { name: "policy", help: "replay: static|warm|oracle|all", default: Some("all") },
+            OptSpec { name: "policy", help: "replay: static|warm|anytime|oracle|all", default: Some("all") },
             OptSpec { name: "warm-budget", help: "replay: evals per warm replan", default: Some("150") },
+            OptSpec { name: "anytime-rate", help: "replay: background evals per simulated second", default: Some("0.5") },
             OptSpec { name: "tiny", help: "replay: scaled-down job (flag)", default: None },
             OptSpec { name: "steps", help: "train: number of GRPO steps", default: Some("100") },
             OptSpec { name: "artifacts", help: "artifacts directory", default: Some("artifacts") },
@@ -238,22 +239,25 @@ fn cmd_replay(args: &Args) -> i32 {
     let n_events = args.get_usize("events", 5).unwrap_or(5);
     let cold_budget = args.get_usize("budget", 600).unwrap_or(600);
     let warm_budget = args.get_usize("warm-budget", 150).unwrap_or(150);
+    let anytime_rate = args.get_f64("anytime-rate", 0.5).unwrap_or(0.5);
     let threads = args.get_usize("threads", 0).unwrap_or(0);
     let policies: Vec<Policy> = match args.get_or("policy", "all").as_str() {
         "all" => Policy::ALL.to_vec(),
         other => match Policy::parse(other) {
             Some(p) => vec![p],
             None => {
-                eprintln!("bad --policy '{other}' (static|warm|oracle|all)");
+                eprintln!("bad --policy '{other}' (static|warm|anytime|oracle|all)");
                 return 2;
             }
         },
     };
     let spec = TestbedSpec::default();
+    let mut replan = ReplanConfig { warm_budget, cold_budget, threads, ..ReplanConfig::default() };
+    replan.anytime.evals_per_sim_sec = anytime_rate;
     let cfg = ReplayConfig {
         iters,
         trace: TraceConfig { horizon: iters, n_events, ..TraceConfig::default() },
-        replan: ReplanConfig { warm_budget, cold_budget, threads, ..ReplanConfig::default() },
+        replan,
         ..ReplayConfig::default()
     };
 
@@ -278,10 +282,12 @@ fn cmd_replay(args: &Args) -> i32 {
         &[
             "policy",
             "total (s)",
+            "mean iter (s)",
             "thpt (samp/s)",
             "post-event thpt",
             "replans",
             "evals",
+            "bg evals",
             "cache hit%",
             "migration (s)",
         ],
@@ -304,10 +310,12 @@ fn cmd_replay(args: &Args) -> i32 {
         table.row(vec![
             policy.name().to_string(),
             format!("{:.1}", r.total_secs),
+            format!("{:.2}", r.mean_iter_secs()),
             format!("{:.2}", r.throughput()),
             format!("{:.2}", r.throughput_after(post)),
             r.replans.to_string(),
             r.total_evals.to_string(),
+            r.anytime_evals.to_string(),
             format!("{:.0}%", r.cache_hit_rate() * 100.0),
             format!("{mig:.1}"),
         ]);

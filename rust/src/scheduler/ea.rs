@@ -380,6 +380,31 @@ impl EaArm {
     }
 }
 
+/// Light perturbations of a seed plan for warm-started populations:
+/// each copy swaps one random device pair (cross-group when the plan
+/// has several groups, within the group otherwise). Deterministic in
+/// `(plan, count, seed)` — the shared helper behind the replanner's
+/// warm arms and the elastic anytime background search, so both seed
+/// their populations identically for the same arm seed.
+pub fn perturbations(plan: &ExecutionPlan, count: usize, seed: u64) -> Vec<ExecutionPlan> {
+    let mut rng = Rng::new(seed ^ 0x3A57_11CE);
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let mut mutant = plan.clone();
+        let all: Vec<usize> = mutant.gpu_groups.iter().flatten().copied().collect();
+        if all.len() >= 2 {
+            let a = all[rng.below(all.len())];
+            let mut b = all[rng.below(all.len())];
+            if a == b {
+                b = all[(rng.below(all.len()) + 1) % all.len()];
+            }
+            swap_devices(&mut mutant, a, b);
+        }
+        out.push(mutant);
+    }
+    out
+}
+
 /// Swap group membership of devices `a` and `b` and rewrite all task
 /// assignments accordingly. Works whether or not the devices are in
 /// different groups.
@@ -559,6 +584,29 @@ mod tests {
         let b = plan.gpu_groups[1][0];
         swap_devices(&mut plan, a, b);
         plan.validate(&wf, &topo, &job).unwrap();
+    }
+
+    #[test]
+    fn perturbations_deterministic_and_preserve_device_set() {
+        let (wf, topo, job) = setup();
+        let mut ctx = EvalCtx::new(&topo, &wf, &job, Budget::evals(20));
+        let grouping: TaskGrouping = vec![vec![0, 1], vec![2, 3]];
+        let mut arm = EaArm::new(grouping, vec![32, 32], EaConfig::default(), 17);
+        arm.run(&mut ctx, 20);
+        let plan = ctx.best_plan.clone().expect("plan");
+        let a = perturbations(&plan, 3, 99);
+        let b = perturbations(&plan, 3, 99);
+        assert_eq!(a, b, "same seed must produce identical mutants");
+        assert_eq!(a.len(), 3);
+        let devset = |p: &ExecutionPlan| {
+            let mut v: Vec<usize> = p.gpu_groups.iter().flatten().copied().collect();
+            v.sort_unstable();
+            v
+        };
+        for m in &a {
+            // A device swap rearranges groups but never invents devices.
+            assert_eq!(devset(m), devset(&plan));
+        }
     }
 
     #[test]

@@ -11,7 +11,10 @@
 //! * [`fan_out`] — run jobs on worker [`EvalCtx`]s in parallel and
 //!   merge their incumbents/traces back **in job order**;
 //! * [`run_rung`] — one SHA/EA rung: each [`EaArm`] runs its quota on
-//!   its own worker, arms and spends return in arm order.
+//!   its own worker, arms and spends return in arm order;
+//! * [`run_seeded_rung`] — the warm-start variant: each arm first
+//!   injects its seed plans (budget-charged), then evolves — the unit
+//!   shared by the elastic replanner and the anytime background search.
 //!
 //! Worker results merge with strict-improvement (`<`) comparisons, so a
 //! tie between two arms always resolves to the lower arm index — the
@@ -147,6 +150,46 @@ pub fn run_rung(ctx: &mut EvalCtx<'_>, tasks: Vec<ArmTask>, threads: usize) -> V
         let ArmTask { key, mut arm, quota } = task;
         let spent = arm.run(w, quota);
         ArmRun { key, arm, spent }
+    })
+}
+
+/// An [`ArmTask`] with warm-start seeds: plans injected into the arm's
+/// population (in order, each charged one evaluation against the quota)
+/// before the evolutionary loop runs. The unit of work shared by the
+/// elastic replanner's warm arms and the anytime background search.
+pub struct SeededArmTask {
+    pub key: (usize, usize),
+    pub arm: EaArm,
+    pub quota: usize,
+    pub seeds: Vec<ExecutionPlan>,
+}
+
+/// [`run_rung`] for seeded arms: inject every seed the quota affords,
+/// then evolve with the remainder. Merge order and budget accounting
+/// are identical to [`run_rung`] — an arm that dies early hands its
+/// unspent quota back through `spent`.
+pub fn run_seeded_rung(
+    ctx: &mut EvalCtx<'_>,
+    tasks: Vec<SeededArmTask>,
+    threads: usize,
+) -> Vec<ArmRun> {
+    fan_out(ctx, threads, tasks, |task, w| {
+        let SeededArmTask { key, mut arm, quota, seeds } = task;
+        let mut left = quota;
+        for plan in seeds {
+            if left == 0 || w.exhausted() {
+                break;
+            }
+            left = left.saturating_sub(arm.inject(w, plan));
+        }
+        while left > 0 && !w.exhausted() {
+            let spent = arm.run(w, left);
+            if spent == 0 {
+                break; // dead arm: hand the rest of the quota back
+            }
+            left -= spent;
+        }
+        ArmRun { key, arm, spent: quota - left }
     })
 }
 

@@ -31,7 +31,10 @@
 //!
 //! Rungs run on scoped threads
 //! ([`crate::util::threadpool::scoped_map`]); results merge at the rung
-//! barrier **in arm-index order**, never completion order.
+//! barrier **in arm-index order**, never completion order. Beyond SHA,
+//! the engine is the substrate for the elastic replanner's warm arms
+//! and the anytime background search that runs between cluster events
+//! ([`crate::elastic::anytime`]).
 //!
 //! ## Determinism contract
 //!

@@ -15,7 +15,10 @@
 //! barrier (`b_m = remaining / (|alive| * rounds_left)`), assigned in
 //! arm order, so `Budget::evals` is a hard cap rather than the old
 //! soft target, and the same seed produces the bit-identical best plan
-//! at any thread count (see the [`super`] module docs).
+//! at any thread count (see the [`super`] module docs). The same rung
+//! machinery (in its seeded form, [`super::engine::run_seeded_rung`])
+//! is what the elastic replanner's warm arms and the anytime
+//! background search ([`crate::elastic::anytime`]) run on.
 
 use super::ea::{EaArm, EaConfig};
 use super::engine::{self, ArmTask};

@@ -1,0 +1,185 @@
+//! Shared, seeded test fixtures for the integration/property suites.
+//!
+//! Every `tests/*.rs` file used to hand-roll its own topologies,
+//! workflows, replan configs and random-plan generators; the copies
+//! drifted and each new suite re-invented them. This module is the
+//! single source: deterministic builders over the public crate API,
+//! usable from `tests/`, benches and in-crate unit tests alike.
+//!
+//! Conventions:
+//! * the **full testbed** helpers ([`env`]/[`env_with`]) build the
+//!   paper's 64-GPU fleet with `JobConfig::default()`;
+//! * the **small testbed** helpers ([`small_spec`]/[`small_topo`] and
+//!   the `small_*_cfg` configs) build a 12-GPU, 3-machine fleet with
+//!   reduced search budgets — big enough for real group structure,
+//!   small enough for debug-mode property runs;
+//! * [`test_threads`] is the worker-thread matrix the determinism
+//!   tests sweep; `HETRL_TEST_THREADS=n` replaces it with `{1, n}`,
+//!   which is how `ci.sh` splits the suite into a fast sequential
+//!   pass (`=1`) and a 1-vs-8 cross-thread determinism pass (`=8`).
+
+use crate::elastic::{ReplanConfig, ReplayConfig, TraceConfig};
+use crate::plan::ExecutionPlan;
+use crate::scheduler::ea::EaConfig;
+use crate::scheduler::levels::{
+    assemble, assign_devices, default_task_plans, gpu_groupings, set_partitions,
+};
+use crate::simulator::NoiseModel;
+use crate::topology::{build_testbed, DeviceTopology, GpuModel, Scenario, TestbedSpec};
+use crate::util::rng::Rng;
+use crate::workflow::{Algo, JobConfig, Mode, ModelSpec, RlWorkflow};
+
+/// Default full-testbed environment: Qwen-4B sync GRPO on the paper's
+/// 64-GPU fleet with the default job.
+pub fn env(scenario: Scenario) -> (RlWorkflow, DeviceTopology, JobConfig) {
+    env_with(scenario, Algo::Grpo, Mode::Sync, ModelSpec::qwen_4b())
+}
+
+/// [`env`] with explicit algorithm/mode/model.
+pub fn env_with(
+    scenario: Scenario,
+    algo: Algo,
+    mode: Mode,
+    model: ModelSpec,
+) -> (RlWorkflow, DeviceTopology, JobConfig) {
+    (
+        RlWorkflow::new(algo, mode, model),
+        build_testbed(scenario, &TestbedSpec::default()),
+        JobConfig::default(),
+    )
+}
+
+/// The small workflow paired with [`small_spec`]: Qwen-1.7B sync GRPO
+/// (use `JobConfig::tiny()` alongside it).
+pub fn tiny_wf() -> RlWorkflow {
+    RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_1b7())
+}
+
+/// A 12-GPU, 3-machine testbed — big enough for real group structure,
+/// small enough for debug-mode property runs.
+pub fn small_spec() -> TestbedSpec {
+    TestbedSpec {
+        machines: vec![(GpuModel::A100, 1), (GpuModel::L40S, 1), (GpuModel::L4, 1)],
+        gpus_per_machine: 4,
+    }
+}
+
+/// [`small_spec`] materialized for a scenario.
+pub fn small_topo(scenario: Scenario) -> DeviceTopology {
+    build_testbed(scenario, &small_spec())
+}
+
+/// Reduced-budget replanning config matching [`small_spec`].
+pub fn small_replan_cfg() -> ReplanConfig {
+    ReplanConfig {
+        warm_budget: 40,
+        cold_budget: 160,
+        seed_mutants: 2,
+        ea: EaConfig { swap_samples: 40, ..EaConfig::default() },
+        ..ReplanConfig::default()
+    }
+}
+
+/// Short dynamic-replay config (6 iterations, 3 events) over
+/// [`small_replan_cfg`].
+pub fn small_replay_cfg() -> ReplayConfig {
+    ReplayConfig {
+        iters: 6,
+        trace: TraceConfig { horizon: 6, n_events: 3, ..TraceConfig::default() },
+        replan: small_replan_cfg(),
+        sim_iters: 1,
+        noise: NoiseModel::default(),
+        balance: true,
+    }
+}
+
+/// Generate a random valid plan through the Level-1..5 machinery
+/// (`None` when ten seeded attempts all fail).
+pub fn random_plan(
+    wf: &RlWorkflow,
+    topo: &DeviceTopology,
+    job: &JobConfig,
+    seed: u64,
+) -> Option<ExecutionPlan> {
+    let mut rng = Rng::new(seed);
+    let groupings = set_partitions(wf.n_tasks());
+    for _ in 0..10 {
+        let tg = groupings[rng.below(groupings.len())].clone();
+        let ggs = gpu_groupings(wf, job, topo, &tg, 8);
+        if ggs.is_empty() {
+            continue;
+        }
+        let sizes = ggs[rng.below(ggs.len())].clone();
+        let groups = assign_devices(wf, &tg, &sizes, topo, &mut rng);
+        if let Some(plans) = default_task_plans(wf, job, topo, &tg, &groups, &mut rng, true) {
+            let plan = assemble(&tg, groups, plans);
+            if plan.validate(wf, topo, job).is_ok() {
+                return Some(plan);
+            }
+        }
+    }
+    None
+}
+
+/// Load the AOT-artifact runtime, or `None` (with a skip notice) when
+/// `artifacts/` is absent — the gate every runtime-backed integration
+/// test shares.
+pub fn artifacts_runtime() -> Option<crate::runtime::Runtime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(crate::runtime::Runtime::load("artifacts").expect("runtime load"))
+}
+
+/// Worker-thread counts the determinism tests compare. By default the
+/// canonical `{1, 2, 8}`. When `HETRL_TEST_THREADS=n` is set it
+/// *replaces* the sweep with `{1, n}` (just `{1}` for `n = 1`): the
+/// 1-thread run is always present as the comparison baseline, and the
+/// two `ci.sh` passes become genuinely different — a fast
+/// sequential-only suite at `=1`, and a 1-vs-8 cross-thread
+/// determinism suite at `=8`.
+pub fn test_threads() -> Vec<usize> {
+    if let Some(n) = std::env::var("HETRL_TEST_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n > 0)
+    {
+        return if n == 1 { vec![1] } else { vec![1, n] };
+    }
+    vec![1, 2, 8]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_testbed_shape() {
+        assert_eq!(small_spec().total_gpus(), 12);
+        let topo = small_topo(Scenario::MultiCountry);
+        assert_eq!(topo.n(), 12);
+    }
+
+    #[test]
+    fn random_plan_validates() {
+        let (wf, topo, job) = env(Scenario::MultiCountry);
+        let mut found = 0;
+        for seed in 0..20u64 {
+            if let Some(p) = random_plan(&wf, &topo, &job, seed) {
+                p.validate(&wf, &topo, &job).unwrap();
+                found += 1;
+            }
+        }
+        assert!(found > 0, "no valid random plan in 20 seeds");
+    }
+
+    #[test]
+    fn test_threads_always_has_baseline() {
+        // The 1-thread baseline is always present, whatever the env
+        // override says (tests compare N-thread runs against it).
+        let t = test_threads();
+        assert!(t.contains(&1));
+        assert!(!t.is_empty());
+    }
+}

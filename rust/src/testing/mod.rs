@@ -1,6 +1,8 @@
 //! Property-based testing mini-framework (proptest is unavailable
 //! offline). Provides composable generators over a seeded [`Rng`] and a
-//! `check` runner with linear shrinking for failures.
+//! `check` runner with linear shrinking for failures, plus the shared
+//! deterministic fixture builders ([`fixtures`]) every `tests/*.rs`
+//! suite builds its environments from.
 //!
 //! Usage (`no_run`: doctest binaries lack the xla rpath in this image):
 //! ```no_run
@@ -8,6 +10,8 @@
 //! check("add commutes", 100, Gen::pair(Gen::usize_range(0, 100), Gen::usize_range(0, 100)),
 //!       |&(a, b)| a + b == b + a);
 //! ```
+
+pub mod fixtures;
 
 use crate::util::rng::Rng;
 use std::fmt::Debug;

@@ -3,13 +3,10 @@
 
 use hetrl::engine::{GrpoConfig, GrpoTrainer, TaskDifficulty, WorkerFleet};
 use hetrl::runtime::Runtime;
+use hetrl::testing::fixtures;
 
 fn runtime() -> Option<Runtime> {
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
-        eprintln!("skipping: run `make artifacts` first");
-        return None;
-    }
-    Some(Runtime::load("artifacts").expect("runtime load"))
+    fixtures::artifacts_runtime()
 }
 
 #[test]

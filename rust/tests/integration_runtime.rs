@@ -2,13 +2,10 @@
 //! only when `artifacts/` exists (`make artifacts`).
 
 use hetrl::runtime::{HostTensor, Runtime};
+use hetrl::testing::fixtures;
 
 fn runtime() -> Option<Runtime> {
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
-        eprintln!("skipping: run `make artifacts` first");
-        return None;
-    }
-    Some(Runtime::load("artifacts").expect("runtime load"))
+    fixtures::artifacts_runtime()
 }
 
 #[test]

@@ -6,7 +6,8 @@ use hetrl::scheduler::{
     Budget, PureEaScheduler, RandomScheduler, Scheduler, ShaEaScheduler, StreamRlScheduler,
     VerlScheduler,
 };
-use hetrl::topology::{build_testbed, Scenario, TestbedSpec};
+use hetrl::testing::fixtures;
+use hetrl::topology::Scenario;
 use hetrl::workflow::{Algo, JobConfig, Mode, ModelSpec, RlWorkflow};
 
 fn env(
@@ -14,11 +15,7 @@ fn env(
     algo: Algo,
     mode: Mode,
 ) -> (RlWorkflow, hetrl::topology::DeviceTopology, JobConfig) {
-    (
-        RlWorkflow::new(algo, mode, ModelSpec::qwen_4b()),
-        build_testbed(scenario, &TestbedSpec::default()),
-        JobConfig::default(),
-    )
+    fixtures::env_with(scenario, algo, mode, ModelSpec::qwen_4b())
 }
 
 #[test]

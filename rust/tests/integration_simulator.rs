@@ -2,46 +2,27 @@
 
 use hetrl::balance::{self, BalanceConfig};
 use hetrl::costmodel::CostModel;
-use hetrl::scheduler::levels::{
-    assemble, assign_devices, default_task_plans, gpu_groupings, set_partitions,
-};
 use hetrl::scheduler::{Budget, Scheduler, ShaEaScheduler};
 use hetrl::simulator::{simulate_plan, NoiseModel, SimConfig};
-use hetrl::topology::{build_testbed, Scenario, TestbedSpec};
-use hetrl::util::rng::Rng;
-use hetrl::workflow::{Algo, JobConfig, Mode, ModelSpec, RlWorkflow};
+use hetrl::testing::fixtures;
+use hetrl::topology::Scenario;
+use hetrl::workflow::{Algo, JobConfig, Mode, ModelSpec};
 
 #[test]
 fn cost_model_ranks_like_simulator() {
     // Over a set of random valid plans, cost-model and simulator
     // orderings must correlate strongly — this is the property that
     // makes cost-model-driven search meaningful.
-    let topo = build_testbed(Scenario::MultiCountry, &TestbedSpec::default());
-    let wf = RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_4b());
-    let job = JobConfig::default();
+    let (wf, topo, job) = fixtures::env(Scenario::MultiCountry);
     let cm = CostModel::new(&topo, &wf, &job);
-    let mut rng = Rng::new(17);
-    let groupings = set_partitions(wf.n_tasks());
     let mut pred = Vec::new();
     let mut meas = Vec::new();
     let mut tries = 0;
-    while pred.len() < 8 && tries < 80 {
+    while pred.len() < 10 && tries < 100 {
         tries += 1;
-        let tg = groupings[rng.below(groupings.len())].clone();
-        let ggs = gpu_groupings(&wf, &job, &topo, &tg, 8);
-        if ggs.is_empty() {
-            continue;
-        }
-        let sizes = ggs[rng.below(ggs.len())].clone();
-        let groups = assign_devices(&wf, &tg, &sizes, &topo, &mut rng);
-        let Some(plans) = default_task_plans(&wf, &job, &topo, &tg, &groups, &mut rng, true)
-        else {
+        let Some(plan) = fixtures::random_plan(&wf, &topo, &job, 1700 + tries as u64) else {
             continue;
         };
-        let plan = assemble(&tg, groups, plans);
-        if plan.validate(&wf, &topo, &job).is_err() {
-            continue;
-        }
         pred.push(cm.plan_cost(&plan).iter_time);
         let cfg = SimConfig { iters: 2, seed: 9, noise: NoiseModel::default() };
         meas.push(simulate_plan(&topo, &wf, &job, &plan, &cfg).iter_time);
@@ -56,9 +37,8 @@ fn cost_model_ranks_like_simulator() {
 
 #[test]
 fn balancing_does_not_hurt_simulation() {
-    let topo = build_testbed(Scenario::MultiRegionHybrid, &TestbedSpec::default());
-    let wf = RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_8b());
-    let job = JobConfig::default();
+    let (wf, topo, job) =
+        fixtures::env_with(Scenario::MultiRegionHybrid, Algo::Grpo, Mode::Sync, ModelSpec::qwen_8b());
     let out = ShaEaScheduler::new(7).schedule(&topo, &wf, &job, Budget::timed(400, 40.0));
     let plan = out.plan.unwrap();
     let balanced = balance::apply(&plan, &wf, &topo, BalanceConfig::default());
@@ -71,15 +51,13 @@ fn balancing_does_not_hurt_simulation() {
 #[test]
 fn scenario_ordering_preserved_in_simulation() {
     // The same plan gets slower as the network gets more heterogeneous.
-    let wf = RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_4b());
+    let (wf, topo1, _) = fixtures::env(Scenario::SingleRegion);
     let job = JobConfig::tiny();
-    let spec = TestbedSpec::default();
-    let topo1 = build_testbed(Scenario::SingleRegion, &spec);
     let out = ShaEaScheduler::new(1).schedule(&topo1, &wf, &job, Budget::timed(150, 20.0));
     let plan = out.plan.unwrap();
     let cfg = SimConfig { iters: 2, seed: 2, noise: NoiseModel::off() };
     let t1 = simulate_plan(&topo1, &wf, &job, &plan, &cfg).iter_time;
-    let topo4 = build_testbed(Scenario::MultiContinent, &spec);
+    let (_, topo4, _) = fixtures::env(Scenario::MultiContinent);
     if plan.validate(&wf, &topo4, &job).is_ok() {
         let t4 = simulate_plan(&topo4, &wf, &job, &plan, &cfg).iter_time;
         assert!(t4 >= t1 * 0.99, "WAN should not be faster: {t4} vs {t1}");
@@ -88,10 +66,10 @@ fn scenario_ordering_preserved_in_simulation() {
 
 #[test]
 fn utilization_sane_across_scenarios() {
-    let wf = RlWorkflow::new(Algo::Ppo, Mode::Sync, ModelSpec::qwen_4b());
-    let job = JobConfig::tiny();
     for scenario in [Scenario::SingleRegion, Scenario::MultiCountry] {
-        let topo = build_testbed(scenario, &TestbedSpec::default());
+        let (wf, topo, _) =
+            fixtures::env_with(scenario, Algo::Ppo, Mode::Sync, ModelSpec::qwen_4b());
+        let job = JobConfig::tiny();
         let out = ShaEaScheduler::new(5).schedule(&topo, &wf, &job, Budget::timed(200, 30.0));
         let plan = out.plan.unwrap();
         let r = simulate_plan(&topo, &wf, &job, &plan, &SimConfig::default());

@@ -1,0 +1,235 @@
+//! Properties of the anytime background search (`hetrl replay
+//! --policy anytime`):
+//!
+//! * **bit-determinism across thread counts** — the anytime budget is
+//!   accounted in sim-time through the shared eval ledger and arms
+//!   merge in index order, so the deterministic projection of a replay
+//!   (plans, costs, eval counts, incumbent objectives) is identical at
+//!   1, 2 and 8 worker threads for the same seed;
+//! * **monotone incumbent** — within each inter-event window the
+//!   anytime incumbent's objective is non-increasing (it resets when a
+//!   barrier reseeds the service);
+//! * **ledger cap** — background evaluations never exceed the sim-time
+//!   allowance (`evals_per_sim_sec × Σ iter_secs`) and each step stays
+//!   under `max_step_evals`;
+//! * **never worse than warm** — on every scenario/seed pair tested,
+//!   the anytime replay's total cost is no worse than the warm
+//!   policy's. The barrier merge guarantees the anytime objective is
+//!   ≤ warm's under equal pre-event state; once trajectories diverge
+//!   the dominance is empirical, so the per-pair check carries a small
+//!   simulation-noise tolerance and the aggregate a tight one.
+
+use hetrl::elastic::{replay, AnytimeConfig, Policy, ReplayConfig, ReplayResult, TraceConfig};
+use hetrl::testing::fixtures;
+use hetrl::topology::Scenario;
+use hetrl::workflow::JobConfig;
+
+fn anytime_cfg(threads: usize) -> ReplayConfig {
+    let mut cfg = fixtures::small_replay_cfg();
+    cfg.iters = 8;
+    cfg.trace = TraceConfig { horizon: 8, n_events: 2, ..TraceConfig::default() };
+    cfg.replan.threads = threads;
+    // Align the amortization horizon with the iterations actually
+    // remaining in the short trace, so the migration-aware objective
+    // tracks the realized replay cost.
+    cfg.replan.horizon_iters = 4.0;
+    cfg.replan.anytime = AnytimeConfig {
+        evals_per_sim_sec: 8.0,
+        max_step_evals: 32,
+        arms: 2,
+        seed_mutants: 2,
+    };
+    cfg
+}
+
+/// The deterministic projection of a replay: everything except the
+/// cache hit/miss telemetry, which is approximate when threads > 1.
+#[allow(clippy::type_complexity)]
+fn fingerprint(
+    r: &ReplayResult,
+) -> Vec<(usize, Vec<String>, bool, usize, usize, u64, u64, usize, usize, u64)> {
+    r.records
+        .iter()
+        .map(|x| {
+            (
+                x.iter,
+                x.events.clone(),
+                x.replanned,
+                x.evals,
+                x.anytime_evals,
+                x.migration_secs.to_bits(),
+                x.iter_secs.to_bits(),
+                x.samples,
+                x.active_gpus,
+                x.anytime_cost.to_bits(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn anytime_replay_bit_identical_across_thread_counts() {
+    let wf = fixtures::tiny_wf();
+    let job = JobConfig::tiny();
+    for seed in [1u64, 5, 11] {
+        let base = replay(
+            Scenario::MultiCountry,
+            &fixtures::small_spec(),
+            &wf,
+            &job,
+            Policy::Anytime,
+            &anytime_cfg(1),
+            seed,
+        );
+        assert!(base.total_secs.is_finite() && base.total_secs > 0.0);
+        for threads in fixtures::test_threads().into_iter().filter(|&t| t != 1) {
+            let out = replay(
+                Scenario::MultiCountry,
+                &fixtures::small_spec(),
+                &wf,
+                &job,
+                Policy::Anytime,
+                &anytime_cfg(threads),
+                seed,
+            );
+            assert_eq!(
+                fingerprint(&out),
+                fingerprint(&base),
+                "seed {seed}: anytime replay diverged at {threads} threads"
+            );
+            assert_eq!(out.total_secs.to_bits(), base.total_secs.to_bits());
+            assert_eq!(out.total_evals, base.total_evals);
+            assert_eq!(out.anytime_evals, base.anytime_evals);
+        }
+    }
+}
+
+#[test]
+fn anytime_incumbent_monotone_between_events() {
+    let wf = fixtures::tiny_wf();
+    let job = JobConfig::tiny();
+    for seed in [3u64, 9] {
+        let r = replay(
+            Scenario::MultiCountry,
+            &fixtures::small_spec(),
+            &wf,
+            &job,
+            Policy::Anytime,
+            &anytime_cfg(1),
+            seed,
+        );
+        let mut prev = f64::INFINITY;
+        for rec in &r.records {
+            if !rec.events.is_empty() {
+                // Barrier: the service reseeds from the merged plan.
+                prev = f64::INFINITY;
+            }
+            assert!(
+                rec.anytime_cost <= prev,
+                "seed {seed}, iter {}: incumbent regressed {} -> {}",
+                rec.iter,
+                prev,
+                rec.anytime_cost
+            );
+            prev = rec.anytime_cost;
+        }
+    }
+}
+
+#[test]
+fn anytime_evals_never_exceed_ledger_allowance() {
+    let wf = fixtures::tiny_wf();
+    let job = JobConfig::tiny();
+    for seed in [2u64, 7] {
+        let cfg = anytime_cfg(1);
+        let r = replay(
+            Scenario::MultiCountry,
+            &fixtures::small_spec(),
+            &wf,
+            &job,
+            Policy::Anytime,
+            &cfg,
+            seed,
+        );
+        let rate = cfg.replan.anytime.evals_per_sim_sec;
+        let cap = cfg.replan.anytime.max_step_evals;
+        let mut sim_secs = 0.0;
+        let mut background = 0usize;
+        for rec in &r.records {
+            assert!(
+                rec.anytime_evals <= cap,
+                "seed {seed}, iter {}: step overran the cap: {}",
+                rec.iter,
+                rec.anytime_evals
+            );
+            sim_secs += rec.iter_secs;
+            background += rec.anytime_evals;
+        }
+        assert_eq!(background, r.anytime_evals);
+        assert!(
+            (background as f64) <= sim_secs * rate + 1e-9,
+            "seed {seed}: {background} background evals exceed the \
+             sim-time allowance {:.1}",
+            sim_secs * rate
+        );
+        assert!(background > 0, "seed {seed}: background search never ran");
+    }
+}
+
+#[test]
+fn anytime_replay_cost_no_worse_than_warm() {
+    let wf = fixtures::tiny_wf();
+    let job = JobConfig::tiny();
+    let pairs = [
+        (Scenario::MultiCountry, 7u64),
+        (Scenario::MultiCountry, 13),
+        (Scenario::MultiRegionHybrid, 3),
+        (Scenario::MultiRegionHybrid, 5),
+    ];
+    let mut total_any = 0.0;
+    let mut total_warm = 0.0;
+    for (scenario, seed) in pairs {
+        let warm = replay(
+            scenario,
+            &fixtures::small_spec(),
+            &wf,
+            &job,
+            Policy::Warm,
+            &anytime_cfg(1),
+            seed,
+        );
+        let any = replay(
+            scenario,
+            &fixtures::small_spec(),
+            &wf,
+            &job,
+            Policy::Anytime,
+            &anytime_cfg(1),
+            seed,
+        );
+        // Per pair: the barrier merge never picks a worse objective,
+        // but simulated totals can wobble once trajectories diverge —
+        // allow a small tolerance.
+        assert!(
+            any.total_secs <= warm.total_secs * 1.05 + 1e-9,
+            "{} seed {seed}: anytime {:.2}s worse than warm {:.2}s",
+            scenario.name(),
+            any.total_secs,
+            warm.total_secs
+        );
+        total_any += any.total_secs;
+        total_warm += warm.total_secs;
+    }
+    assert!(
+        total_any <= total_warm * 1.01 + 1e-9,
+        "aggregate: anytime {total_any:.2}s vs warm {total_warm:.2}s"
+    );
+}
+
+#[test]
+fn anytime_policy_parses_and_is_listed() {
+    assert_eq!(Policy::parse("anytime"), Some(Policy::Anytime));
+    assert_eq!(Policy::parse(Policy::Anytime.name()), Some(Policy::Anytime));
+    assert_eq!(Policy::ALL.len(), 4);
+    assert!(Policy::ALL.contains(&Policy::Anytime));
+}

@@ -8,47 +8,16 @@
 
 use hetrl::elastic::{
     generate_trace, plan_to_base, repair_plan, replay, ClusterEvent, FleetState, Policy,
-    ReplanConfig, ReplayConfig, Replanner, TraceConfig,
+    Replanner, TraceConfig,
 };
-use hetrl::scheduler::ea::EaConfig;
-use hetrl::simulator::NoiseModel;
+use hetrl::testing::fixtures::{small_replan_cfg, small_replay_cfg, small_spec, tiny_wf};
 use hetrl::testing::{check_seeded, Gen};
-use hetrl::topology::{build_testbed, GpuModel, Scenario, TestbedSpec};
-use hetrl::workflow::{Algo, JobConfig, Mode, ModelSpec, RlWorkflow};
-
-/// A 12-GPU, 3-machine testbed — big enough for real group structure,
-/// small enough for debug-mode property runs.
-fn small_spec() -> TestbedSpec {
-    TestbedSpec {
-        machines: vec![(GpuModel::A100, 1), (GpuModel::L40S, 1), (GpuModel::L4, 1)],
-        gpus_per_machine: 4,
-    }
-}
-
-fn small_replan_cfg() -> ReplanConfig {
-    ReplanConfig {
-        warm_budget: 40,
-        cold_budget: 160,
-        seed_mutants: 2,
-        ea: EaConfig { swap_samples: 40, ..EaConfig::default() },
-        ..ReplanConfig::default()
-    }
-}
-
-fn small_replay_cfg() -> ReplayConfig {
-    ReplayConfig {
-        iters: 6,
-        trace: TraceConfig { horizon: 6, n_events: 3, ..TraceConfig::default() },
-        replan: small_replan_cfg(),
-        sim_iters: 1,
-        noise: NoiseModel::default(),
-        balance: true,
-    }
-}
+use hetrl::topology::{build_testbed, Scenario, TestbedSpec};
+use hetrl::workflow::JobConfig;
 
 #[test]
 fn prop_replay_deterministic_per_seed() {
-    let wf = RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_1b7());
+    let wf = tiny_wf();
     let job = JobConfig::tiny();
     check_seeded(
         "replay(seed) == replay(seed), bit for bit",
@@ -78,7 +47,7 @@ fn prop_replay_deterministic_per_seed() {
 
 #[test]
 fn prop_replan_respects_constraints_c1_c3() {
-    let wf = RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_1b7());
+    let wf = tiny_wf();
     let job = JobConfig::tiny();
     let base = build_testbed(Scenario::MultiRegionHybrid, &small_spec());
     check_seeded(

@@ -6,49 +6,16 @@
 use hetrl::costmodel::{ring_minmax, CostModel};
 use hetrl::plan::parallel::uniform_layer_split;
 use hetrl::scheduler::ea::swap_devices;
-use hetrl::scheduler::levels::{
-    assemble, assign_devices, default_task_plans, gpu_groupings, set_partitions,
-};
 use hetrl::scheduler::{Budget, Scheduler, ShaEaScheduler};
 use hetrl::solver::{solve_milp, BnbConfig, Cmp, Lp};
+use hetrl::testing::fixtures::{self, random_plan};
 use hetrl::testing::{check_seeded, Gen};
-use hetrl::topology::{build_testbed, DeviceTopology, Scenario, TestbedSpec};
+use hetrl::topology::{DeviceTopology, Scenario};
 use hetrl::util::rng::Rng;
-use hetrl::workflow::{Algo, JobConfig, Mode, ModelSpec, RlWorkflow};
+use hetrl::workflow::{JobConfig, RlWorkflow};
 
 fn env() -> (RlWorkflow, DeviceTopology, JobConfig) {
-    (
-        RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_4b()),
-        build_testbed(Scenario::MultiCountry, &TestbedSpec::default()),
-        JobConfig::default(),
-    )
-}
-
-/// Generate a random valid plan (None when generation fails).
-fn random_plan(
-    wf: &RlWorkflow,
-    topo: &DeviceTopology,
-    job: &JobConfig,
-    seed: u64,
-) -> Option<hetrl::plan::ExecutionPlan> {
-    let mut rng = Rng::new(seed);
-    let groupings = set_partitions(wf.n_tasks());
-    for _ in 0..10 {
-        let tg = groupings[rng.below(groupings.len())].clone();
-        let ggs = gpu_groupings(wf, job, topo, &tg, 8);
-        if ggs.is_empty() {
-            continue;
-        }
-        let sizes = ggs[rng.below(ggs.len())].clone();
-        let groups = assign_devices(wf, &tg, &sizes, topo, &mut rng);
-        if let Some(plans) = default_task_plans(wf, job, topo, &tg, &groups, &mut rng, true) {
-            let plan = assemble(&tg, groups, plans);
-            if plan.validate(wf, topo, job).is_ok() {
-                return Some(plan);
-            }
-        }
-    }
-    None
+    fixtures::env(Scenario::MultiCountry)
 }
 
 #[test]

@@ -14,15 +14,12 @@
 use hetrl::costmodel::CostModel;
 use hetrl::elastic::{plan_to_base, ClusterEvent, FleetState, ReplanConfig, Replanner};
 use hetrl::scheduler::{Budget, PureEaScheduler, ScheduleOutcome, Scheduler, ShaEaScheduler};
+use hetrl::testing::fixtures;
 use hetrl::topology::{build_testbed, Scenario, TestbedSpec};
-use hetrl::workflow::{Algo, JobConfig, Mode, ModelSpec, RlWorkflow};
+use hetrl::workflow::{JobConfig, RlWorkflow};
 
 fn env(scenario: Scenario) -> (RlWorkflow, hetrl::topology::DeviceTopology, JobConfig) {
-    (
-        RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_4b()),
-        build_testbed(scenario, &TestbedSpec::default()),
-        JobConfig::default(),
-    )
+    fixtures::env(scenario)
 }
 
 fn sha(seed: u64, threads: usize, budget: usize, scenario: Scenario) -> ScheduleOutcome {
@@ -35,7 +32,7 @@ fn sha_bit_identical_across_thread_counts() {
     for seed in [1u64, 7] {
         let base = sha(seed, 1, 300, Scenario::MultiCountry);
         assert!(base.cost.is_finite(), "seed {seed}: no plan at 1 thread");
-        for threads in [2usize, 8] {
+        for threads in fixtures::test_threads().into_iter().filter(|&t| t != 1) {
             let out = sha(seed, threads, 300, Scenario::MultiCountry);
             assert_eq!(
                 out.cost.to_bits(),
@@ -92,7 +89,7 @@ fn cached_best_cost_matches_fresh_evaluation() {
 
 #[test]
 fn warm_replan_identical_across_thread_counts() {
-    let wf = RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_4b());
+    let (wf, _, _) = fixtures::env(Scenario::MultiCountry);
     let job = JobConfig::tiny();
     let run = |threads: usize| {
         let mut fleet = FleetState::new(build_testbed(
