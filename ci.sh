@@ -25,6 +25,11 @@ fi
 echo "== cargo build --release =="
 cargo build --release
 
+echo "== cargo doc (rustdoc gate: warnings are errors) =="
+# Broken intra-doc links, bad HTML in doc comments etc. fail the build;
+# README/ARCHITECTURE point at the rendered API docs, so keep them clean.
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
 echo "== cargo test -q (HETRL_TEST_THREADS=1) =="
 HETRL_TEST_THREADS=1 cargo test -q
 
@@ -39,6 +44,11 @@ echo "== replay smoke (anytime background search) =="
 ./target/release/hetrl replay --scenario country --seed 0 \
     --iters 6 --events 3 --budget 120 --warm-budget 60 \
     --anytime-rate 4 --policy anytime --tiny
+
+echo "== replay smoke (predictive preemption, forced notice) =="
+./target/release/hetrl replay --scenario country --seed 0 \
+    --iters 6 --events 3 --budget 120 --warm-budget 60 \
+    --anytime-rate 4 --notice-secs 100000 --policy preempt --tiny
 
 echo "== search-throughput smoke (parallel engine, 1 vs N threads) =="
 # fig5_search_throughput sweeps thread counts at a small budget and

@@ -1,7 +1,7 @@
 //! Shared helpers for the figure/table benches. Every bench prints the
 //! same rows/series the paper reports and persists a `RunRecord` under
-//! `results/`. Budgets scale down by default; set `HETRL_BENCH_FULL=1`
-//! for the full sweeps.
+//! `bench_out/` (`HETRL_RESULTS` overrides). Budgets scale down by
+//! default; set `HETRL_BENCH_FULL=1` for the full sweeps.
 
 #![allow(dead_code)]
 

@@ -1,6 +1,8 @@
 //! Figure 11 (new, beyond the paper) — elastic cluster dynamics: replay
 //! a seeded event trace (with a guaranteed spot preemption) through the
-//! full stack under three policies and compare simulated throughput:
+//! full stack under five policies and compare simulated throughput.
+//! Policies run and are recorded in the fixed `Policy::ALL` order, and
+//! every JSON row names its policy explicitly (the `policy` column):
 //!
 //! * static        — incumbent plan repaired only, never re-searched;
 //! * warm-replan   — event-driven warm-started search, migration-aware
@@ -8,15 +10,20 @@
 //! * anytime       — warm-replan plus the background anytime search
 //!                   between events (sim-time eval allowance), merged
 //!                   migration-aware at each barrier;
+//! * preempt       — anytime plus predictive preemption: noticed
+//!                   machine losses pre-warm a hypothesis incumbent on
+//!                   the post-event fleet (allowance split between the
+//!                   two incumbents; `hypothesis_evals` column);
 //! * oracle        — full-budget re-search with free instant migration
 //!                   (upper bound).
 //!
 //! Expected shape: after the first preemption, warm-replan recovers
 //! most of the oracle's throughput while static — stuck with a plan
 //! shaped for the departed fleet — trails; anytime closes more of the
-//! remaining gap using only spare cycles; warm-replan spends a small
-//! fraction of the oracle's search evaluations. Rows are persisted as
-//! a `RunRecord` under `bench_out/`.
+//! remaining gap using only spare cycles, and preempt closes it
+//! earlier still by planning through the forecast loss; warm-replan
+//! spends a small fraction of the oracle's search evaluations. Rows
+//! are persisted as a `RunRecord` under `bench_out/`.
 
 mod common;
 
@@ -56,6 +63,7 @@ fn main() {
             "active_gpus",
             "evals",
             "anytime_evals",
+            "hypothesis_evals",
             "anytime_cost",
             "cache_hits",
             "cache_misses",
@@ -72,6 +80,7 @@ fn main() {
             "vs static",
             "evals",
             "bg evals",
+            "hyp evals",
             "cache hit%",
             "migration (s)",
         ],
@@ -98,6 +107,7 @@ fn main() {
                     Json::num(rec.active_gpus as f64),
                     Json::num(rec.evals as f64),
                     Json::num(rec.anytime_evals as f64),
+                    Json::num(rec.hypothesis_evals as f64),
                     // JSON has no ∞; -1 marks "no incumbent / not anytime".
                     Json::num(if rec.anytime_cost.is_finite() { rec.anytime_cost } else { -1.0 }),
                     Json::num(rec.cache_hits as f64),
@@ -122,6 +132,7 @@ fn main() {
                 },
                 r.total_evals.to_string(),
                 r.anytime_evals.to_string(),
+                r.hypothesis_evals.to_string(),
                 format!("{:.0}%", r.cache_hit_rate() * 100.0),
                 format!("{mig:.1}"),
             ]);

@@ -1,5 +1,6 @@
 //! Anytime background search: keep improving the plan *between*
-//! cluster events instead of only reacting at them.
+//! cluster events instead of only reacting at them — and, with advance
+//! notice, search *through* them.
 //!
 //! The event-driven [`super::replan::Replanner`] closes part of the
 //! static→oracle gap, but its search stops when the barrier clears —
@@ -31,17 +32,30 @@
 //!   cannot chase marginally-faster plans that would cost terabytes of
 //!   resharding to adopt. The incumbent only ever improves within an
 //!   inter-event window (monotone non-increasing objective).
+//! * **Predictive preemption (the hypothesis incumbent)** — when an
+//!   upcoming machine-loss event carries advance notice
+//!   ([`super::events::TraceEvent::notice_secs`]), the replay driver
+//!   [`AnytimeSearch::prime_hypothesis`]s a **second incumbent**
+//!   searched against the *post-event fleet hypothesis*
+//!   ([`super::fleet::FleetState::apply_hypothetical`]). Each step's
+//!   allowance is then split deterministically between the two
+//!   incumbents ([`crate::scheduler::engine::split_allowance`]:
+//!   primary-biased halves that sum exactly to the step quota), so the
+//!   barrier merge can start from a plan already shaped for the fleet
+//!   about to exist, not the one that just died.
 //! * **Barrier merge** — at the next event the replay hands the
-//!   incumbent (translated to base ids) to
+//!   incumbent(s) (translated to base ids) to
 //!   [`super::replan::Replanner::replan_with_anytime`], which runs the
-//!   ordinary warm replan unchanged and adopts the anytime incumbent
-//!   only if its migration-aware objective against the post-event
-//!   fleet is strictly better. Unspent allowance is forfeited at the
-//!   barrier (the controller is busy replanning).
+//!   ordinary warm replan unchanged and adopts the anytime incumbent —
+//!   and, when the predicted event actually fired, the pre-warmed
+//!   hypothesis plan — only if its migration-aware objective against
+//!   the post-event fleet is strictly better. Unspent allowance is
+//!   forfeited at the barrier (the controller is busy replanning).
 //!
-//! Exposed as `hetrl replay --policy anytime` (and inside
-//! `--policy all`), compared in `benches/fig11_elastic.rs`, and
-//! property-tested in `tests/prop_anytime.rs`.
+//! Exposed as `hetrl replay --policy anytime` and `--policy preempt`
+//! (both inside `--policy all`), compared in `benches/fig11_elastic.rs`,
+//! and property-tested in `tests/prop_anytime.rs` /
+//! `tests/prop_preempt.rs`.
 
 use super::replan::ReplanConfig;
 use crate::costmodel::{CostCache, PrevTask};
@@ -55,13 +69,28 @@ use std::sync::Arc;
 
 /// Anytime background-search knobs (nested in
 /// [`super::replan::ReplanConfig`]).
+///
+/// # Example
+///
+/// ```
+/// use hetrl::elastic::{AnytimeConfig, ReplanConfig};
+///
+/// // Double the spare-cycle allowance, keep every other default.
+/// let cfg = ReplanConfig {
+///     anytime: AnytimeConfig { evals_per_sim_sec: 1.0, ..AnytimeConfig::default() },
+///     ..ReplanConfig::default()
+/// };
+/// assert_eq!(cfg.anytime.evals_per_sim_sec, 1.0);
+/// assert!(cfg.anytime.max_step_evals > 0);
+/// ```
 #[derive(Debug, Clone, Copy)]
 pub struct AnytimeConfig {
     /// Cost-model evaluations the controller can afford per *simulated*
     /// second of training — the spare-cycle allowance. Accounted in
     /// sim-time so replays stay deterministic.
     pub evals_per_sim_sec: f64,
-    /// Hard cap on evaluations spent in one between-event step.
+    /// Hard cap on evaluations spent in one between-event step (the
+    /// primary and hypothesis incumbents *combined*).
     pub max_step_evals: usize,
     /// Independent background arms (each on its own RNG stream and,
     /// when `ReplanConfig::threads` > 1, its own worker).
@@ -84,26 +113,44 @@ impl Default for AnytimeConfig {
 /// What one background step did.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct AnytimeStep {
-    /// Evaluations actually spent (≤ the accrued allowance and
+    /// Evaluations spent on the primary incumbent this step
+    /// (`evals + hypothesis_evals` ≤ the accrued allowance and
     /// ≤ [`AnytimeConfig::max_step_evals`]).
     pub evals: usize,
-    /// Cost-cache telemetry for the step (exact at 1 worker thread).
+    /// Evaluations spent on the post-event hypothesis incumbent this
+    /// step (0 unless a noticed machine loss is pending).
+    pub hypothesis_evals: usize,
+    /// Cost-cache hits for the step (exact at 1 worker thread).
     pub cache_hits: usize,
+    /// Cost-cache misses for the step (exact at 1 worker thread).
     pub cache_misses: usize,
-    /// Incumbent objective after the step: `iter_time` + amortized
-    /// migration from the running plan (∞ when no incumbent exists).
+    /// Primary incumbent objective after the step: `iter_time` +
+    /// amortized migration from the running plan (∞ when no incumbent
+    /// exists).
     pub incumbent_cost: f64,
+    /// Hypothesis incumbent objective after the step (∞ when no
+    /// hypothesis is primed).
+    pub hypothesis_cost: f64,
 }
 
 impl AnytimeStep {
-    fn idle(incumbent_cost: f64) -> AnytimeStep {
-        AnytimeStep { evals: 0, cache_hits: 0, cache_misses: 0, incumbent_cost }
+    fn idle(incumbent_cost: f64, hypothesis_cost: f64) -> AnytimeStep {
+        AnytimeStep {
+            evals: 0,
+            hypothesis_evals: 0,
+            cache_hits: 0,
+            cache_misses: 0,
+            incumbent_cost,
+            hypothesis_cost,
+        }
     }
 }
 
 /// The background anytime-search service owned by a `Policy::Anytime`
-/// replay. All plans live in the *snapshot* id space of the current
-/// epoch; the replay driver translates across epochs at barriers.
+/// or `Policy::Preempt` replay. The primary incumbent lives in the
+/// *snapshot* id space of the current epoch; the hypothesis incumbent
+/// lives in the id space of the *hypothetical post-event* snapshot. The
+/// replay driver translates both across epochs at barriers.
 pub struct AnytimeSearch {
     cfg: ReplanConfig,
     seed: u64,
@@ -129,9 +176,123 @@ pub struct AnytimeSearch {
     /// Per-epoch cost memo shared across steps (cleared at reseed:
     /// a new snapshot invalidates every cached per-task cost).
     cache: Arc<CostCache>,
+    /// Identity of the predicted event the hypothesis targets (the
+    /// replay driver's trace index); `None` = no hypothesis primed.
+    hyp_key: Option<u64>,
+    /// Hypothesis arms, evolving against the post-event snapshot.
+    hyp_arms: Vec<EaArm>,
+    hyp_pending: Vec<Vec<ExecutionPlan>>,
+    /// Surviving placement of the running plan under the hypothetical
+    /// snapshot — what the hypothesis objective charges migration from.
+    hyp_prev: Vec<PrevTask>,
+    hyp_incumbent: Option<ExecutionPlan>,
+    hyp_cost: f64,
+    /// Hypothesis cost memo: keyed to the hypothetical snapshot, so it
+    /// is dropped whenever the predicted event changes.
+    hyp_cache: Arc<CostCache>,
+}
+
+/// Run one seeded rung of `arms` under `quota` evaluations against
+/// `topo`, migration-penalized from `prev`, improving `incumbent` /
+/// `incumbent_cost` in place (strict improvements only). The shared
+/// unit under both the primary and the hypothesis incumbent; per-arm
+/// quotas come from [`engine::split_quota`], so the outcome is
+/// bit-identical at any thread count. Returns
+/// `(spent, cache_hits, cache_misses)`.
+#[allow(clippy::too_many_arguments)]
+fn evolve_incumbent(
+    cfg: &ReplanConfig,
+    topo: &DeviceTopology,
+    wf: &RlWorkflow,
+    job: &JobConfig,
+    quota: usize,
+    arms: &mut Vec<EaArm>,
+    pending: &mut Vec<Vec<ExecutionPlan>>,
+    prev: &[PrevTask],
+    cache: &Arc<CostCache>,
+    incumbent: &mut Option<ExecutionPlan>,
+    incumbent_cost: &mut f64,
+) -> (usize, usize, usize) {
+    if quota == 0 || arms.is_empty() {
+        return (0, 0, 0);
+    }
+    let mut ctx = EvalCtx::new(topo, wf, job, Budget::evals(quota));
+    ctx.cache = Arc::clone(cache);
+    // Only strict improvements over the incumbent count.
+    ctx.best_cost = *incumbent_cost;
+    let mm = cfg.migration;
+    let horizon = cfg.horizon_iters.max(1.0);
+    let prev_cl = prev.to_vec();
+    ctx.penalty = Some(Arc::new(move |p: &ExecutionPlan| {
+        mm.migration_time(topo, wf, job, &prev_cl, p) / horizon
+    }));
+    let hits0 = ctx.cache.hits();
+    let misses0 = ctx.cache.misses();
+
+    let quotas = engine::split_quota(quota, arms.len(), 1);
+    let threads = engine::resolve_threads(cfg.threads);
+    let taken = std::mem::take(arms);
+    let mut pend = std::mem::take(pending);
+    pend.resize_with(taken.len(), Vec::new);
+    // Hand each arm only the seeds its quota can inject this step; the
+    // rest stay pending so a starved arm still warm-starts once the
+    // allowance catches up (quotas are budget-derived, so this split is
+    // deterministic at any thread count).
+    let mut kept: Vec<Vec<ExecutionPlan>> = Vec::with_capacity(taken.len());
+    let tasks: Vec<SeededArmTask> = taken
+        .into_iter()
+        .zip(pend)
+        .enumerate()
+        .map(|(k, (arm, mut seeds))| {
+            let rest = seeds.split_off(quotas[k].min(seeds.len()));
+            kept.push(rest);
+            SeededArmTask { key: (0, k), arm, quota: quotas[k], seeds }
+        })
+        .collect();
+    let runs = engine::run_seeded_rung(&mut ctx, tasks, threads);
+    *arms = runs.into_iter().map(|r| r.arm).collect();
+    *pending = kept;
+
+    let spent = ctx.ledger.spent();
+    if ctx.best_cost < *incumbent_cost {
+        if let Some(p) = ctx.best_plan.take() {
+            *incumbent_cost = ctx.best_cost;
+            *incumbent = Some(p);
+        }
+    }
+    (
+        spent,
+        ctx.cache.hits().saturating_sub(hits0),
+        ctx.cache.misses().saturating_sub(misses0),
+    )
+}
+
+/// Build a fresh set of background arms around `plan`'s Level-1/2
+/// structure, each arm's pending list seeded with the plan plus its
+/// own perturbations. `arm_seed` maps the arm index to its RNG stream
+/// — the only thing that differs between the primary and hypothesis
+/// arm sets.
+fn build_arms(
+    cfg: &ReplanConfig,
+    plan: &ExecutionPlan,
+    arm_seed: impl Fn(u64) -> u64,
+) -> (Vec<EaArm>, Vec<Vec<ExecutionPlan>>) {
+    let grouping = plan.task_groups.clone();
+    let sizes: Vec<usize> = plan.gpu_groups.iter().map(|g| g.len()).collect();
+    let mut arms = Vec::new();
+    let mut pending = Vec::new();
+    for k in 0..cfg.anytime.arms.max(1) {
+        let seed = arm_seed(k as u64);
+        arms.push(EaArm::new(grouping.clone(), sizes.clone(), cfg.ea.clone(), seed));
+        let mut seeds = vec![plan.clone()];
+        seeds.extend(perturbations(plan, cfg.anytime.seed_mutants, seed));
+        pending.push(seeds);
+    }
+    (arms, pending)
 }
 
 impl AnytimeSearch {
+    /// Create an idle service; [`Self::reseed`] arms it.
     pub fn new(seed: u64, cfg: ReplanConfig) -> AnytimeSearch {
         AnytimeSearch {
             cfg,
@@ -147,15 +308,35 @@ impl AnytimeSearch {
             incumbent: None,
             incumbent_cost: f64::INFINITY,
             cache: Arc::new(CostCache::new()),
+            hyp_key: None,
+            hyp_arms: Vec::new(),
+            hyp_pending: Vec::new(),
+            hyp_prev: Vec::new(),
+            hyp_incumbent: None,
+            hyp_cost: f64::INFINITY,
+            hyp_cache: Arc::new(CostCache::new()),
         }
     }
 
-    /// Current incumbent (snapshot space) and its objective.
+    /// Current primary incumbent (snapshot space) and its objective.
     pub fn incumbent(&self) -> Option<(&ExecutionPlan, f64)> {
         self.incumbent.as_ref().map(|p| (p, self.incumbent_cost))
     }
 
-    /// Background evaluations spent over the service's lifetime.
+    /// Current hypothesis incumbent (in the *hypothetical post-event*
+    /// snapshot space) and its objective, when one is primed.
+    pub fn hypothesis(&self) -> Option<(&ExecutionPlan, f64)> {
+        self.hyp_incumbent.as_ref().map(|p| (p, self.hyp_cost))
+    }
+
+    /// Identity of the predicted event the current hypothesis targets
+    /// (`None` = no hypothesis primed).
+    pub fn hypothesis_key(&self) -> Option<u64> {
+        self.hyp_key
+    }
+
+    /// Background evaluations spent over the service's lifetime
+    /// (primary and hypothesis combined).
     pub fn spent(&self) -> usize {
         self.spent
     }
@@ -165,6 +346,7 @@ impl AnytimeSearch {
         self.accrued
     }
 
+    /// Epochs this service has seen (one per [`Self::reseed`]).
     pub fn epochs(&self) -> u64 {
         self.epochs
     }
@@ -172,8 +354,10 @@ impl AnytimeSearch {
     /// Start a new epoch at an event barrier: the chosen post-event
     /// plan (with `iter_time` its predicted pure iteration time)
     /// becomes both the running plan and the incumbent, the arms are
-    /// rebuilt around its structure, the per-epoch cache is dropped and
-    /// the unspent allowance is forfeited.
+    /// rebuilt around its structure, the per-epoch cache is dropped,
+    /// the unspent allowance is forfeited and any hypothesis is
+    /// discarded (the fleet it anticipated no longer matches; the
+    /// driver re-primes if the notice is still live).
     pub fn reseed(&mut self, plan: Option<&ExecutionPlan>, iter_time: f64) {
         self.epochs += 1;
         self.carry = 0.0;
@@ -183,29 +367,74 @@ impl AnytimeSearch {
         self.running = plan.cloned();
         self.incumbent = plan.cloned();
         self.incumbent_cost = if plan.is_some() { iter_time } else { f64::INFINITY };
+        self.clear_hypothesis();
         let Some(plan) = plan else {
             self.prev = Vec::new();
             return;
         };
         self.prev = PrevTask::from_plan(plan, Some);
-        let grouping = plan.task_groups.clone();
-        let sizes: Vec<usize> = plan.gpu_groups.iter().map(|g| g.len()).collect();
-        for k in 0..self.cfg.anytime.arms.max(1) {
-            let arm_seed = self
-                .seed
-                .wrapping_mul(6364136223846793005)
-                .wrapping_add(self.epochs.wrapping_mul(1442695040888963407))
-                .wrapping_add((k as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
-            self.arms.push(EaArm::new(
-                grouping.clone(),
-                sizes.clone(),
-                self.cfg.ea.clone(),
-                arm_seed,
-            ));
-            let mut seeds = vec![plan.clone()];
-            seeds.extend(perturbations(plan, self.cfg.anytime.seed_mutants, arm_seed));
-            self.pending.push(seeds);
+        let (seed, epochs) = (self.seed, self.epochs);
+        let (arms, pending) = build_arms(&self.cfg, plan, |k| {
+            seed.wrapping_mul(6364136223846793005)
+                .wrapping_add(epochs.wrapping_mul(1442695040888963407))
+                .wrapping_add(k.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        });
+        self.arms = arms;
+        self.pending = pending;
+    }
+
+    /// Arm the hypothesis incumbent for a predicted machine-loss event.
+    ///
+    /// `key` identifies the predicted event (the replay driver uses the
+    /// trace index); re-priming with the same key is a no-op, so the
+    /// hypothesis population keeps evolving across quiet iterations.
+    /// `seed_plan` is the running plan repaired into the *hypothetical
+    /// post-event* snapshot space (`None` when repair is impossible —
+    /// the hypothesis then stays inert for this key), `objective` its
+    /// full migration-aware objective on the hypothetical fleet, and
+    /// `prev` the running plan's surviving placement there (what the
+    /// hypothesis search charges migration from).
+    pub fn prime_hypothesis(
+        &mut self,
+        key: u64,
+        seed_plan: Option<&ExecutionPlan>,
+        objective: f64,
+        prev: Vec<PrevTask>,
+    ) {
+        if self.hyp_key == Some(key) {
+            return;
         }
+        self.clear_hypothesis();
+        self.hyp_key = Some(key);
+        let Some(plan) = seed_plan else { return };
+        self.hyp_prev = prev;
+        self.hyp_incumbent = Some(plan.clone());
+        self.hyp_cost = objective;
+        // A distinct RNG stream per (service seed, predicted event,
+        // arm) — disjoint from the primary arms' streams.
+        let seed = self.seed;
+        let (arms, pending) = build_arms(&self.cfg, plan, |k| {
+            (seed ^ 0x48E5_0C7A_9B1D_F00D)
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(key.wrapping_mul(0x2545_F491_4F6C_DD1D))
+                .wrapping_add(k.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        });
+        self.hyp_arms = arms;
+        self.hyp_pending = pending;
+    }
+
+    /// Drop the hypothesis incumbent. [`Self::reseed`] calls this at
+    /// every event barrier (the predicted fleet no longer matches);
+    /// public for drivers with different notice semantics than the
+    /// replay's latched window.
+    pub fn clear_hypothesis(&mut self) {
+        self.hyp_key = None;
+        self.hyp_arms.clear();
+        self.hyp_pending.clear();
+        self.hyp_prev = Vec::new();
+        self.hyp_incumbent = None;
+        self.hyp_cost = f64::INFINITY;
+        self.hyp_cache = Arc::new(CostCache::new());
     }
 
     /// Credit `sim_secs` of simulated training time to the allowance.
@@ -217,72 +446,71 @@ impl AnytimeSearch {
         }
     }
 
-    /// Spend the accrued allowance improving the incumbent on the
-    /// current snapshot. One call per quiet replayed iteration; the
-    /// fan-out/merge runs on the parallel engine with per-arm quotas
-    /// from [`engine::split_quota`], so the outcome is bit-identical at
-    /// any thread count.
+    /// Spend the accrued allowance improving the incumbent(s). One call
+    /// per quiet replayed iteration; the fan-out/merge runs on the
+    /// parallel engine with per-arm quotas from [`engine::split_quota`],
+    /// so the outcome is bit-identical at any thread count.
+    ///
+    /// With `hypothesis` set to the hypothetical post-event topology
+    /// (and a hypothesis primed via [`Self::prime_hypothesis`]), the
+    /// step's quota is split between the two incumbents by
+    /// [`engine::split_allowance`]; otherwise the primary incumbent
+    /// keeps the whole quota and the call behaves exactly as it did
+    /// before predictive preemption existed.
     pub fn step(
         &mut self,
         topo: &DeviceTopology,
         wf: &RlWorkflow,
         job: &JobConfig,
+        hypothesis: Option<&DeviceTopology>,
     ) -> AnytimeStep {
         let quota = (self.carry as usize).min(self.cfg.anytime.max_step_evals);
         if quota == 0 || self.arms.is_empty() || self.running.is_none() {
-            return AnytimeStep::idle(self.incumbent_cost);
+            return AnytimeStep::idle(self.incumbent_cost, self.hyp_cost);
         }
-        let mut ctx = EvalCtx::new(topo, wf, job, Budget::evals(quota));
-        ctx.cache = Arc::clone(&self.cache);
-        // Only strict improvements over the incumbent count.
-        ctx.best_cost = self.incumbent_cost;
-        let mm = self.cfg.migration;
-        let horizon = self.cfg.horizon_iters.max(1.0);
-        let prev = self.prev.clone();
-        ctx.penalty = Some(Arc::new(move |p: &ExecutionPlan| {
-            mm.migration_time(topo, wf, job, &prev, p) / horizon
-        }));
-        let hits0 = ctx.cache.hits();
-        let misses0 = ctx.cache.misses();
+        let hyp_active = hypothesis.is_some() && !self.hyp_arms.is_empty();
+        let (primary_quota, hyp_quota) = engine::split_allowance(quota, hyp_active);
 
-        let quotas = engine::split_quota(quota, self.arms.len(), 1);
-        let threads = engine::resolve_threads(self.cfg.threads);
-        let arms = std::mem::take(&mut self.arms);
-        let mut pending = std::mem::take(&mut self.pending);
-        pending.resize_with(arms.len(), Vec::new);
-        // Hand each arm only the seeds its quota can inject this step;
-        // the rest stay pending so a starved arm still warm-starts once
-        // the allowance catches up (quotas are budget-derived, so this
-        // split is deterministic at any thread count).
-        let mut kept: Vec<Vec<ExecutionPlan>> = Vec::with_capacity(arms.len());
-        let tasks: Vec<SeededArmTask> = arms
-            .into_iter()
-            .zip(pending)
-            .enumerate()
-            .map(|(k, (arm, mut seeds))| {
-                let rest = seeds.split_off(quotas[k].min(seeds.len()));
-                kept.push(rest);
-                SeededArmTask { key: (0, k), arm, quota: quotas[k], seeds }
-            })
-            .collect();
-        let runs = engine::run_seeded_rung(&mut ctx, tasks, threads);
-        self.arms = runs.into_iter().map(|r| r.arm).collect();
-        self.pending = kept;
+        let (spent, hits, misses) = evolve_incumbent(
+            &self.cfg,
+            topo,
+            wf,
+            job,
+            primary_quota,
+            &mut self.arms,
+            &mut self.pending,
+            &self.prev,
+            &self.cache,
+            &mut self.incumbent,
+            &mut self.incumbent_cost,
+        );
+        let (hyp_spent, hyp_hits, hyp_misses) = match hypothesis {
+            Some(hyp_topo) if hyp_active => evolve_incumbent(
+                &self.cfg,
+                hyp_topo,
+                wf,
+                job,
+                hyp_quota,
+                &mut self.hyp_arms,
+                &mut self.hyp_pending,
+                &self.hyp_prev,
+                &self.hyp_cache,
+                &mut self.hyp_incumbent,
+                &mut self.hyp_cost,
+            ),
+            _ => (0, 0, 0),
+        };
 
-        let step_spent = ctx.ledger.spent();
-        self.carry -= step_spent as f64;
-        self.spent += step_spent;
-        if ctx.best_cost < self.incumbent_cost {
-            if let Some(p) = ctx.best_plan.take() {
-                self.incumbent_cost = ctx.best_cost;
-                self.incumbent = Some(p);
-            }
-        }
+        let total = spent + hyp_spent;
+        self.carry -= total as f64;
+        self.spent += total;
         AnytimeStep {
-            evals: step_spent,
-            cache_hits: ctx.cache.hits().saturating_sub(hits0),
-            cache_misses: ctx.cache.misses().saturating_sub(misses0),
+            evals: spent,
+            hypothesis_evals: hyp_spent,
+            cache_hits: hits + hyp_hits,
+            cache_misses: misses + hyp_misses,
             incumbent_cost: self.incumbent_cost,
+            hypothesis_cost: self.hyp_cost,
         }
     }
 }
@@ -291,7 +519,9 @@ impl AnytimeSearch {
 mod tests {
     use super::*;
     use crate::costmodel::CostModel;
-    use crate::elastic::replan::Replanner;
+    use crate::elastic::events::ClusterEvent;
+    use crate::elastic::fleet::FleetState;
+    use crate::elastic::replan::{prev_placement, repair_plan, plan_to_base, Replanner};
     use crate::testing::fixtures;
     use crate::workflow::JobConfig;
 
@@ -316,15 +546,15 @@ mod tests {
     fn allowance_caps_spending() {
         let (mut svc, wf, topo, job) = service(1);
         // Nothing accrued: the step must idle.
-        let st = svc.step(&topo, &wf, &job);
+        let st = svc.step(&topo, &wf, &job, None);
         assert_eq!(st.evals, 0);
         svc.accrue(5.0); // 5 evals at 1 eval/sim-sec
-        let st = svc.step(&topo, &wf, &job);
+        let st = svc.step(&topo, &wf, &job, None);
         assert!(st.evals <= 5, "overspent: {}", st.evals);
         assert!(svc.spent() as f64 <= svc.accrued() + 1e-9);
         // A huge accrual is clamped by the per-step cap.
         svc.accrue(1e6);
-        let st = svc.step(&topo, &wf, &job);
+        let st = svc.step(&topo, &wf, &job, None);
         assert!(st.evals <= 24, "step cap violated: {}", st.evals);
     }
 
@@ -334,7 +564,7 @@ mod tests {
         let mut prev = f64::INFINITY;
         for _ in 0..6 {
             svc.accrue(12.0);
-            let st = svc.step(&topo, &wf, &job);
+            let st = svc.step(&topo, &wf, &job, None);
             assert!(
                 st.incumbent_cost <= prev,
                 "incumbent regressed: {} after {}",
@@ -355,7 +585,7 @@ mod tests {
         svc.reseed(Some(&running), 42.0);
         assert_eq!(svc.epochs(), 2);
         // Carry was forfeited: an immediate step has nothing to spend.
-        let st = svc.step(&topo, &wf, &job);
+        let st = svc.step(&topo, &wf, &job, None);
         assert_eq!(st.evals, 0);
         assert_eq!(st.incumbent_cost, 42.0);
     }
@@ -367,7 +597,7 @@ mod tests {
             let mut trail = Vec::new();
             for _ in 0..4 {
                 svc.accrue(10.0);
-                let st = svc.step(&topo, &wf, &job);
+                let st = svc.step(&topo, &wf, &job, None);
                 trail.push((st.evals, st.incumbent_cost.to_bits()));
             }
             (trail, svc.incumbent().map(|(p, c)| (p.clone(), c.to_bits())))
@@ -376,5 +606,111 @@ mod tests {
         let b = run(4);
         assert_eq!(a.0, b.0, "step telemetry diverged across thread counts");
         assert_eq!(a.1, b.1, "incumbent diverged across thread counts");
+    }
+
+    /// Prime a hypothesis against "a machine is about to vanish" for a
+    /// service whose fleet is still whole, picking the first machine
+    /// whose loss the running plan survives via repair. Returns the
+    /// hypothetical snapshot topology alongside the service.
+    fn service_with_hypothesis(
+        threads: usize,
+    ) -> (AnytimeSearch, crate::workflow::RlWorkflow, DeviceTopology, DeviceTopology, JobConfig)
+    {
+        let (mut svc, wf, topo, job) = service(threads);
+        let fleet = FleetState::new(fixtures::small_topo(crate::topology::Scenario::MultiCountry));
+        let (_, map) = fleet.snapshot();
+        let running_base = plan_to_base(svc.incumbent().unwrap().0, &map);
+        for machine in 0..3 {
+            let hypo = fleet.apply_hypothetical(&ClusterEvent::MachinePreempt { machine });
+            let (hyp_topo, hyp_map) = hypo.snapshot();
+            let hb2n = FleetState::base_to_snapshot(&hyp_map);
+            let Some(seed_plan) = repair_plan(&running_base, &wf, &job, &hyp_topo, &hb2n, 99)
+            else {
+                continue;
+            };
+            let prev = prev_placement(&running_base, &hb2n);
+            let mm = svc.cfg.migration;
+            let horizon = svc.cfg.horizon_iters.max(1.0);
+            let objective = CostModel::new(&hyp_topo, &wf, &job).plan_cost(&seed_plan).iter_time
+                + mm.migration_time(&hyp_topo, &wf, &job, &prev, &seed_plan) / horizon;
+            svc.prime_hypothesis(machine as u64, Some(&seed_plan), objective, prev);
+            return (svc, wf, topo, hyp_topo, job);
+        }
+        panic!("no machine loss the running plan survives via repair");
+    }
+
+    #[test]
+    fn hypothesis_splits_allowance_and_stays_monotone() {
+        let (mut svc, wf, topo, hyp_topo, job) = service_with_hypothesis(1);
+        let key = svc.hypothesis_key().expect("hypothesis primed");
+        let mut prev_hyp = svc.hypothesis().map(|(_, c)| c).unwrap_or(f64::INFINITY);
+        let mut hyp_total = 0usize;
+        for _ in 0..4 {
+            svc.accrue(20.0);
+            let st = svc.step(&topo, &wf, &job, Some(&hyp_topo));
+            // The split never exceeds the step cap, and the hypothesis
+            // quota is the smaller half of it.
+            assert!(st.evals + st.hypothesis_evals <= 24, "cap: {st:?}");
+            assert!(st.hypothesis_evals <= 12, "hypothesis over half-cap: {st:?}");
+            assert!(
+                st.hypothesis_cost <= prev_hyp,
+                "hypothesis regressed: {} after {}",
+                st.hypothesis_cost,
+                prev_hyp
+            );
+            prev_hyp = st.hypothesis_cost;
+            hyp_total += st.hypothesis_evals;
+        }
+        assert!(hyp_total > 0, "hypothesis search never ran");
+        // Re-priming with the same key keeps the evolved hypothesis.
+        let before = svc.hypothesis().map(|(_, c)| c.to_bits());
+        svc.prime_hypothesis(key, None, f64::INFINITY, Vec::new());
+        assert_eq!(svc.hypothesis().map(|(_, c)| c.to_bits()), before);
+    }
+
+    #[test]
+    fn clear_and_reseed_drop_hypothesis() {
+        let (mut svc, wf, topo, hyp_topo, job) = service_with_hypothesis(1);
+        svc.accrue(20.0);
+        svc.step(&topo, &wf, &job, Some(&hyp_topo));
+        svc.clear_hypothesis();
+        assert_eq!(svc.hypothesis_key(), None);
+        assert!(svc.hypothesis().is_none());
+        // Without a primed hypothesis the step ignores the hypothetical
+        // topology entirely.
+        svc.accrue(20.0);
+        let st = svc.step(&topo, &wf, &job, Some(&hyp_topo));
+        assert_eq!(st.hypothesis_evals, 0);
+        // A barrier reseed also discards any primed hypothesis.
+        let (mut svc2, wf2, topo2, hyp_topo2, job2) = service_with_hypothesis(1);
+        let running = svc2.incumbent().unwrap().0.clone();
+        svc2.reseed(Some(&running), 1.0);
+        assert_eq!(svc2.hypothesis_key(), None);
+        svc2.accrue(20.0);
+        let st2 = svc2.step(&topo2, &wf2, &job2, Some(&hyp_topo2));
+        assert_eq!(st2.hypothesis_evals, 0);
+    }
+
+    #[test]
+    fn hypothesis_step_deterministic_across_thread_counts() {
+        let run = |threads: usize| {
+            let (mut svc, wf, topo, hyp_topo, job) = service_with_hypothesis(threads);
+            let mut trail = Vec::new();
+            for _ in 0..3 {
+                svc.accrue(16.0);
+                let st = svc.step(&topo, &wf, &job, Some(&hyp_topo));
+                trail.push((
+                    st.evals,
+                    st.hypothesis_evals,
+                    st.incumbent_cost.to_bits(),
+                    st.hypothesis_cost.to_bits(),
+                ));
+            }
+            (trail, svc.hypothesis().map(|(p, c)| (p.clone(), c.to_bits())))
+        };
+        let a = run(1);
+        let b = run(4);
+        assert_eq!(a.0, b.0, "hypothesis telemetry diverged across thread counts");
+        assert_eq!(a.1, b.1, "hypothesis incumbent diverged across thread counts");
     }
 }

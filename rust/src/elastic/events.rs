@@ -6,6 +6,16 @@
 //! Traces are ordered by iteration index; the generator is a pure
 //! function of `(base topology, config, seed)` so a replay is exactly
 //! reproducible.
+//!
+//! Machine-loss events may carry an **advance notice window**
+//! ([`TraceEvent::notice_secs`]): real spot fleets emit termination
+//! warnings (e.g. the 2-minute AWS spot notice) and graceful drains are
+//! announced minutes ahead. The generator draws realistic notice for
+//! preempt/leave events; [`TraceConfig::notice_override`] pins it to a
+//! fixed value (or disables it) without changing the event sequence, so
+//! the same seed yields the same fleet dynamics with or without notice.
+//! The `preempt` replay policy ([`super::replay::Policy::Preempt`])
+//! uses the notice to pre-warm a plan for the post-event fleet.
 
 use crate::topology::DeviceTopology;
 use crate::util::rng::Rng;
@@ -33,6 +43,16 @@ pub enum ClusterEvent {
 }
 
 impl ClusterEvent {
+    /// Whether this is a machine-loss event (preempt or graceful
+    /// leave) — the only kind that can carry advance notice and the
+    /// only kind predictive preemption anticipates.
+    pub fn is_machine_loss(&self) -> bool {
+        matches!(
+            self,
+            ClusterEvent::MachinePreempt { .. } | ClusterEvent::MachineLeave { .. }
+        )
+    }
+
     /// Compact display label for timelines and run records.
     pub fn label(&self) -> String {
         match self {
@@ -54,8 +74,30 @@ impl ClusterEvent {
 /// An event stamped with the training iteration *before* which it fires.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TraceEvent {
+    /// The event fires before iteration `at_iter` starts.
     pub at_iter: usize,
+    /// The cluster change itself.
     pub event: ClusterEvent,
+    /// Advance notice, in simulated seconds, that the scheduler receives
+    /// before the event lands (`None` = the event strikes unannounced).
+    /// Only machine-loss events (preempt/leave) ever carry notice.
+    pub notice_secs: Option<f64>,
+}
+
+impl TraceEvent {
+    /// [`ClusterEvent::label`] with the notice window appended when one
+    /// is present, e.g. `preempt(m3) [notice 90s]`.
+    pub fn label(&self) -> String {
+        match self.notice_secs {
+            Some(n) => format!("{} [notice {n:.0}s]", self.event.label()),
+            None => self.event.label(),
+        }
+    }
+
+    /// [`ClusterEvent::is_machine_loss`] of the carried event.
+    pub fn is_machine_loss(&self) -> bool {
+        self.event.is_machine_loss()
+    }
 }
 
 /// Trace-generation knobs.
@@ -70,6 +112,13 @@ pub struct TraceConfig {
     pub min_active_frac: f64,
     /// Guarantee at least one machine preemption (the fig11 scenario).
     pub force_preempt: bool,
+    /// Pin the notice window of every machine-loss event instead of
+    /// drawing realistic values: `Some(n)` with `n > 0` gives every
+    /// preempt/leave exactly `n` seconds of notice, `Some(0.0)` (or any
+    /// non-positive value) strips all notice, `None` (default) lets the
+    /// generator draw. The override is applied *after* generation, so
+    /// the event sequence for a seed is identical whatever it is set to.
+    pub notice_override: Option<f64>,
 }
 
 impl Default for TraceConfig {
@@ -79,6 +128,7 @@ impl Default for TraceConfig {
             n_events: 5,
             min_active_frac: 0.5,
             force_preempt: true,
+            notice_override: None,
         }
     }
 }
@@ -105,11 +155,29 @@ fn region_pairs(topo: &DeviceTopology) -> Vec<(usize, usize)> {
     pairs
 }
 
+/// Realistic advance notice for a machine-loss event: spot preemptions
+/// get the short spot-warning window (30–120 s) — except for a quarter
+/// of them, which strike unannounced — while graceful drains are
+/// announced well ahead (2–10 min).
+fn draw_notice(rng: &mut Rng, preempt: bool) -> Option<f64> {
+    if preempt {
+        if rng.chance(0.25) {
+            None
+        } else {
+            Some(30.0 + 90.0 * rng.f64())
+        }
+    } else {
+        Some(120.0 + 480.0 * rng.f64())
+    }
+}
+
 /// Generate a deterministic event trace for `topo`. Same `(topo, cfg,
 /// seed)` → identical trace, bit for bit. Generated events are mutually
 /// consistent: only active machines leave, only departed machines
 /// rejoin, only healthy devices become stragglers, and the active
-/// machine count never drops below `min_active_frac`.
+/// machine count never drops below `min_active_frac`. Machine-loss
+/// events carry drawn (or [`TraceConfig::notice_override`]-pinned)
+/// advance-notice windows.
 pub fn generate_trace(topo: &DeviceTopology, cfg: &TraceConfig, seed: u64) -> Vec<TraceEvent> {
     let mut rng = Rng::new(seed ^ 0xE1A5_71C0_FFEE);
     let machines = machine_ids(topo);
@@ -131,7 +199,7 @@ pub fn generate_trace(topo: &DeviceTopology, cfg: &TraceConfig, seed: u64) -> Ve
     for (k, &at_iter) in iters.iter().enumerate() {
         // The first event is a preemption when forced (and legal).
         let force_now = cfg.force_preempt && k == 0 && active.len() > floor;
-        let event = loop {
+        let (event, drawn_notice) = loop {
             let roll = if force_now { 0 } else { rng.below(100) };
             match roll {
                 // 0..35: machine loss (preempt or graceful).
@@ -142,11 +210,16 @@ pub fn generate_trace(topo: &DeviceTopology, cfg: &TraceConfig, seed: u64) -> Ve
                     let m = *rng.choice(&active);
                     active.retain(|&x| x != m);
                     departed.push(m);
-                    break if force_now || rng.chance(0.7) {
-                        ClusterEvent::MachinePreempt { machine: m }
-                    } else {
-                        ClusterEvent::MachineLeave { machine: m }
-                    };
+                    let preempt = force_now || rng.chance(0.7);
+                    let notice = draw_notice(&mut rng, preempt);
+                    break (
+                        if preempt {
+                            ClusterEvent::MachinePreempt { machine: m }
+                        } else {
+                            ClusterEvent::MachineLeave { machine: m }
+                        },
+                        notice,
+                    );
                 }
                 // 35..50: rejoin.
                 r if r < 50 => {
@@ -156,7 +229,7 @@ pub fn generate_trace(topo: &DeviceTopology, cfg: &TraceConfig, seed: u64) -> Ve
                     let m = *rng.choice(&departed);
                     departed.retain(|&x| x != m);
                     active.push(m);
-                    break ClusterEvent::MachineJoin { machine: m };
+                    break (ClusterEvent::MachineJoin { machine: m }, None);
                 }
                 // 50..75: WAN bandwidth/latency shift.
                 r if r < 75 => {
@@ -166,22 +239,25 @@ pub fn generate_trace(topo: &DeviceTopology, cfg: &TraceConfig, seed: u64) -> Ve
                     let &(ra, rb) = rng.choice(&pairs);
                     if degraded.contains(&(ra, rb)) {
                         degraded.retain(|&p| p != (ra, rb));
-                        break ClusterEvent::LinkRestore { ra, rb };
+                        break (ClusterEvent::LinkRestore { ra, rb }, None);
                     }
                     degraded.push((ra, rb));
-                    break ClusterEvent::LinkDegrade {
-                        ra,
-                        rb,
-                        lat_factor: 1.0 + 3.0 * rng.f64(),
-                        bw_factor: 0.15 + 0.5 * rng.f64(),
-                    };
+                    break (
+                        ClusterEvent::LinkDegrade {
+                            ra,
+                            rb,
+                            lat_factor: 1.0 + 3.0 * rng.f64(),
+                            bw_factor: 0.15 + 0.5 * rng.f64(),
+                        },
+                        None,
+                    );
                 }
                 // 75..100: straggler onset/clear.
                 _ => {
                     if !stragglers.is_empty() && rng.chance(0.4) {
                         let d = *rng.choice(&stragglers);
                         stragglers.retain(|&x| x != d);
-                        break ClusterEvent::StragglerClear { device: d };
+                        break (ClusterEvent::StragglerClear { device: d }, None);
                     }
                     // Pick a device on an active machine.
                     let candidates: Vec<usize> = topo
@@ -195,14 +271,25 @@ pub fn generate_trace(topo: &DeviceTopology, cfg: &TraceConfig, seed: u64) -> Ve
                     }
                     let d = *rng.choice(&candidates);
                     stragglers.push(d);
-                    break ClusterEvent::StragglerOnset {
-                        device: d,
-                        slowdown: 0.25 + 0.5 * rng.f64(),
-                    };
+                    break (
+                        ClusterEvent::StragglerOnset {
+                            device: d,
+                            slowdown: 0.25 + 0.5 * rng.f64(),
+                        },
+                        None,
+                    );
                 }
             }
         };
-        out.push(TraceEvent { at_iter, event });
+        // The override replaces drawn notice without touching the RNG
+        // stream, so the event sequence is identical either way.
+        let notice_secs = match (event.is_machine_loss(), cfg.notice_override) {
+            (false, _) => None,
+            (true, None) => drawn_notice,
+            (true, Some(n)) if n > 0.0 => Some(n),
+            (true, Some(_)) => None,
+        };
+        out.push(TraceEvent { at_iter, event, notice_secs });
     }
     out
 }
@@ -274,6 +361,49 @@ mod tests {
                 min_seen = min_seen.min(active);
             }
             assert!(min_seen >= 4, "seed {seed}: dropped to {min_seen} machines");
+        }
+    }
+
+    #[test]
+    fn notice_only_on_machine_loss_events() {
+        let t = topo();
+        let cfg = TraceConfig { n_events: 24, ..TraceConfig::default() };
+        for seed in 0..8 {
+            for e in generate_trace(&t, &cfg, seed) {
+                if !e.is_machine_loss() {
+                    assert_eq!(e.notice_secs, None, "non-loss event with notice: {}", e.label());
+                } else if let Some(n) = e.notice_secs {
+                    assert!(n > 0.0 && n <= 600.0, "implausible notice {n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn notice_override_pins_without_changing_events() {
+        let t = topo();
+        let base_cfg = TraceConfig { n_events: 12, ..TraceConfig::default() };
+        for seed in 0..6 {
+            let drawn = generate_trace(&t, &base_cfg, seed);
+            let pinned = generate_trace(
+                &t,
+                &TraceConfig { notice_override: Some(45.0), ..base_cfg.clone() },
+                seed,
+            );
+            let none = generate_trace(
+                &t,
+                &TraceConfig { notice_override: Some(0.0), ..base_cfg.clone() },
+                seed,
+            );
+            assert_eq!(drawn.len(), pinned.len());
+            for ((d, p), z) in drawn.iter().zip(&pinned).zip(&none) {
+                // Same events, same order — only the notice differs.
+                assert_eq!(d.event, p.event);
+                assert_eq!(d.at_iter, p.at_iter);
+                assert_eq!(d.event, z.event);
+                assert_eq!(p.notice_secs, p.is_machine_loss().then_some(45.0));
+                assert_eq!(z.notice_secs, None);
+            }
         }
     }
 

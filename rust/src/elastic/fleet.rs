@@ -26,6 +26,8 @@ pub struct FleetState {
 }
 
 impl FleetState {
+    /// A fully healthy fleet over `base`: every machine active, every
+    /// device at full speed, every link at its base rate.
     pub fn new(base: DeviceTopology) -> FleetState {
         let n_machines = base.devices.iter().map(|d| d.machine + 1).max().unwrap_or(0);
         let n = base.n();
@@ -87,6 +89,17 @@ impl FleetState {
             }
         }
         self.epoch += 1;
+    }
+
+    /// The *post-event fleet hypothesis*: a copy of this fleet with
+    /// `event` applied, leaving `self` untouched. Predictive preemption
+    /// ([`super::replay::Policy::Preempt`]) snapshots the hypothesis to
+    /// pre-warm a plan for the fleet about to exist while the current
+    /// fleet keeps executing.
+    pub fn apply_hypothetical(&self, event: &ClusterEvent) -> FleetState {
+        let mut hypo = self.clone();
+        hypo.apply(event);
+        hypo
     }
 
     /// Base device ids currently active.
@@ -198,6 +211,23 @@ mod tests {
         f.apply(&ClusterEvent::LinkRestore { ra: 1, rb: 0 });
         let (t2, _) = f.snapshot();
         assert_eq!(t2.lat(cross.0, cross.1), t0.lat(cross.0, cross.1));
+    }
+
+    #[test]
+    fn hypothetical_apply_leaves_fleet_untouched() {
+        let f = fleet();
+        let epoch0 = f.epoch();
+        let hypo = f.apply_hypothetical(&ClusterEvent::MachinePreempt { machine: 3 });
+        // The hypothesis sees the shrunken fleet...
+        assert_eq!(hypo.snapshot().0.n(), 56);
+        assert_eq!(hypo.epoch(), epoch0 + 1);
+        // ...while the real fleet is unchanged.
+        assert_eq!(f.snapshot().0.n(), 64);
+        assert_eq!(f.epoch(), epoch0);
+        // Applying the event for real matches the hypothesis snapshot.
+        let mut real = fleet();
+        real.apply(&ClusterEvent::MachinePreempt { machine: 3 });
+        assert_eq!(real.snapshot().1, hypo.snapshot().1);
     }
 
     #[test]

@@ -7,7 +7,10 @@
 //!
 //! * [`events`] — the [`events::ClusterEvent`] model (GPU machine
 //!   join/leave/preempt, per-link bandwidth/latency shifts, straggler
-//!   onset) and a deterministic, seeded trace generator;
+//!   onset) and a deterministic, seeded trace generator; machine-loss
+//!   events carry realistic advance-notice windows
+//!   ([`events::TraceEvent::notice_secs`]) that predictive preemption
+//!   exploits;
 //! * [`fleet`] — [`fleet::FleetState`]: the base topology plus applied
 //!   events, snapshotted into the dense [`crate::topology::DeviceTopology`]
 //!   the schedulers consume (with id maps across epochs);
@@ -23,11 +26,16 @@
 //!   a rate-limited, sim-time-accounted eval allowance ("spare
 //!   controller cycles"), merging migration-aware at each event
 //!   barrier so the replanner's warm arms start from the best plan
-//!   known, not just the aged incumbent;
+//!   known, not just the aged incumbent; with a noticed machine loss
+//!   pending it additionally maintains a **hypothesis incumbent**
+//!   searched against the post-event fleet
+//!   ([`fleet::FleetState::apply_hypothetical`]), the allowance split
+//!   deterministically between the two
+//!   ([`crate::scheduler::engine::split_allowance`]);
 //! * [`replay`] — end-to-end dynamic-trace replay on the DES
 //!   ([`crate::simulator`]): plan → event → replan → resume, comparing
-//!   static / warm-replan / anytime / oracle policies (`hetrl replay`,
-//!   `benches/fig11_elastic.rs`).
+//!   static / warm-replan / anytime / preempt / oracle policies
+//!   (`hetrl replay`, `benches/fig11_elastic.rs`).
 
 pub mod anytime;
 pub mod events;

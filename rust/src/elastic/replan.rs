@@ -23,6 +23,18 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 
 /// Replanning knobs.
+///
+/// # Example
+///
+/// ```
+/// use hetrl::elastic::ReplanConfig;
+///
+/// // A reduced-budget config for a small testbed; everything else
+/// // keeps its default.
+/// let cfg = ReplanConfig { warm_budget: 60, cold_budget: 120, ..ReplanConfig::default() };
+/// assert!(cfg.warm_budget < cfg.cold_budget);
+/// assert_eq!(cfg.threads, 1); // replays are sequential by default
+/// ```
 #[derive(Debug, Clone)]
 pub struct ReplanConfig {
     /// Cost-model evaluations for an event-driven (warm) replan.
@@ -78,6 +90,8 @@ pub struct ReplanOutcome {
     pub migration_secs: f64,
     /// Objective the search minimized (iter_time + amortized migration).
     pub objective: f64,
+    /// Cost-model evaluations the episode charged (hard-capped by the
+    /// configured budget; barrier-merge comparisons add one per hint).
     pub evals: usize,
     /// Whether the warm-started path produced the plan (vs cold search).
     pub warm: bool,
@@ -215,12 +229,16 @@ pub fn fallback_task_plan(
 /// Event-driven replanner: owns the warm-start policy and seeds.
 #[derive(Debug, Clone)]
 pub struct Replanner {
+    /// Replanning knobs (budgets, arms, migration model, threads).
     pub cfg: ReplanConfig,
     seed: u64,
     episodes: u64,
 }
 
 impl Replanner {
+    /// A replanner whose episode seeds all derive from `seed` (each
+    /// [`Self::cold_plan`]/[`Self::replan`] episode advances a counter,
+    /// so repeated episodes differ deterministically).
     pub fn new(seed: u64, cfg: ReplanConfig) -> Replanner {
         Replanner { cfg, seed, episodes: 0 }
     }
@@ -349,14 +367,18 @@ impl Replanner {
         }
     }
 
-    /// [`Self::replan`] plus the anytime merge at an event barrier: the
-    /// warm replan runs *exactly* as it would without a background
-    /// service (same arms, same RNG streams, same budget), then the
-    /// anytime incumbent — repaired against the post-event snapshot and
+    /// [`Self::replan`] plus the **barrier merge** at an event barrier:
+    /// the warm replan runs *exactly* as it would without a background
+    /// service (same arms, same RNG streams, same budget), then each
+    /// hint — the anytime incumbent first, the predictive-preemption
+    /// hypothesis plan second (pass `None` when the predicted event did
+    /// not actually fire) — is repaired against the post-event snapshot,
     /// re-costed with the migration-aware objective from the *actual*
-    /// surviving placement — replaces the result iff strictly better.
-    /// With equal pre-event state the anytime policy is therefore never
-    /// worse than the warm policy at a barrier.
+    /// surviving placement, and adopted iff strictly better than the
+    /// best merged so far. Each surviving hint charges one comparison
+    /// evaluation. With equal pre-event state the anytime and preempt
+    /// policies are therefore never worse than the warm policy at a
+    /// barrier.
     pub fn replan_with_anytime(
         &mut self,
         topo: &DeviceTopology,
@@ -364,31 +386,44 @@ impl Replanner {
         job: &JobConfig,
         incumbent_base: &ExecutionPlan,
         anytime_base: Option<&ExecutionPlan>,
+        hypothesis_base: Option<&ExecutionPlan>,
         base_to_new: &BTreeMap<usize, usize>,
     ) -> ReplanOutcome {
         let mut out = self.replan(topo, wf, job, incumbent_base, base_to_new);
-        let Some(any) = anytime_base else { return out };
-        let merge_seed = self.seed ^ self.episodes.wrapping_mul(0xA11F_1ED5);
-        let Some(candidate) = repair_plan(any, wf, job, topo, base_to_new, merge_seed) else {
-            return out;
-        };
-        if candidate.validate(wf, topo, job).is_err() {
-            return out;
-        }
-        let iter_time = CostModel::new(topo, wf, job).plan_cost(&candidate).iter_time;
-        if !iter_time.is_finite() {
+        if anytime_base.is_none() && hypothesis_base.is_none() {
             return out;
         }
         let prev = prev_placement(incumbent_base, base_to_new);
-        let migration_secs =
-            self.cfg.migration.migration_time(topo, wf, job, &prev, &candidate);
-        let objective = iter_time + migration_secs / self.cfg.horizon_iters.max(1.0);
-        out.evals += 1; // the barrier comparison charges one evaluation
-        if objective < out.objective {
-            out.plan = Some(candidate);
-            out.iter_time = iter_time;
-            out.migration_secs = migration_secs;
-            out.objective = objective;
+        let horizon = self.cfg.horizon_iters.max(1.0);
+        // Fixed merge order: anytime incumbent, then hypothesis plan —
+        // with strict-improvement adoption the order only breaks exact
+        // ties, resolving them toward the longer-lived incumbent.
+        for (slot, hint) in [anytime_base, hypothesis_base].into_iter().enumerate() {
+            let Some(hint) = hint else { continue };
+            let merge_seed = self.seed
+                ^ self.episodes.wrapping_mul(0xA11F_1ED5)
+                ^ (slot as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            let Some(candidate) = repair_plan(hint, wf, job, topo, base_to_new, merge_seed)
+            else {
+                continue;
+            };
+            if candidate.validate(wf, topo, job).is_err() {
+                continue;
+            }
+            let iter_time = CostModel::new(topo, wf, job).plan_cost(&candidate).iter_time;
+            if !iter_time.is_finite() {
+                continue;
+            }
+            let migration_secs =
+                self.cfg.migration.migration_time(topo, wf, job, &prev, &candidate);
+            let objective = iter_time + migration_secs / horizon;
+            out.evals += 1; // the barrier comparison charges one evaluation
+            if objective < out.objective {
+                out.plan = Some(candidate);
+                out.iter_time = iter_time;
+                out.migration_secs = migration_secs;
+                out.objective = objective;
+            }
         }
         out
     }
@@ -540,7 +575,7 @@ mod tests {
         let merged = {
             let mut rp = mk();
             let _ = rp.cold_plan(&topo0, &wf, &job);
-            rp.replan_with_anytime(&topo1, &wf, &job, &base, Some(&base), &b2n)
+            rp.replan_with_anytime(&topo1, &wf, &job, &base, Some(&base), None, &b2n)
         };
         assert!(
             merged.objective <= warm.objective + 1e-12,
@@ -557,6 +592,45 @@ mod tests {
             warm.evals
         );
         merged.plan.expect("plan").validate(&wf, &topo1, &job).unwrap();
+    }
+
+    #[test]
+    fn three_way_merge_never_worse_and_charges_per_hint() {
+        let (wf, mut fleet, job) = setup();
+        let (topo0, map0) = fleet.snapshot();
+        let mk = || Replanner::new(31, small_cfg());
+        let base = {
+            let mut rp = mk();
+            plan_to_base(&rp.cold_plan(&topo0, &wf, &job).plan.unwrap(), &map0)
+        };
+        fleet.apply(&ClusterEvent::MachinePreempt { machine: 4 });
+        let (topo1, map1) = fleet.snapshot();
+        let b2n = FleetState::base_to_snapshot(&map1);
+        let two_way = {
+            let mut rp = mk();
+            let _ = rp.cold_plan(&topo0, &wf, &job);
+            rp.replan_with_anytime(&topo1, &wf, &job, &base, Some(&base), None, &b2n)
+        };
+        // Adding a hypothesis hint can only charge more comparison
+        // evals and can never pick a worse objective.
+        let three_way = {
+            let mut rp = mk();
+            let _ = rp.cold_plan(&topo0, &wf, &job);
+            rp.replan_with_anytime(&topo1, &wf, &job, &base, Some(&base), Some(&base), &b2n)
+        };
+        assert!(
+            three_way.objective <= two_way.objective + 1e-12,
+            "hypothesis hint regressed the merge: {} vs {}",
+            three_way.objective,
+            two_way.objective
+        );
+        assert!(
+            three_way.evals >= two_way.evals && three_way.evals <= two_way.evals + 1,
+            "evals {} vs {}",
+            three_way.evals,
+            two_way.evals
+        );
+        three_way.plan.expect("plan").validate(&wf, &topo1, &job).unwrap();
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //! measured with the discrete-event simulator on the *current* fleet
 //! snapshot at every iteration.
 //!
-//! Four policies are compared:
+//! Five policies are compared (in the fixed [`Policy::ALL`] order):
 //! * **Static** — the incumbent is only *repaired* (forced device
 //!   drops), never re-searched; what a scheduler without elasticity
 //!   does. Migration pauses are charged for the forced moves.
@@ -14,12 +14,25 @@
 //!   cycles (an eval allowance accrued per simulated second) keep
 //!   improving an incumbent that is merged — migration-aware — into
 //!   the next event's replan. Migration pauses charged.
+//! * **Preempt** — the anytime policy *plus predictive preemption*:
+//!   when an upcoming machine-loss event carries advance notice
+//!   ([`super::events::TraceEvent::notice_secs`]) that covers the
+//!   estimated time until it fires, the background allowance is split
+//!   between the primary incumbent and a second incumbent searched
+//!   against the *post-event fleet hypothesis*
+//!   ([`super::fleet::FleetState::apply_hypothetical`]). At the
+//!   barrier where the predicted event actually fires, the pre-warmed
+//!   hypothesis plan joins the merge and is adopted iff strictly
+//!   better — so the policy plans *through* forecast churn instead of
+//!   merely reacting to it, and on zero-notice traces it degenerates
+//!   bit-identically to the anytime policy.
 //! * **Oracle** — an idealized upper bound: full cold-search budget at
 //!   every event and free, instant migration.
 //!
 //! Everything is seeded; a replay is a pure function of
 //! `(scenario, spec, wf, job, policy, cfg, seed)` — including the
-//! anytime policy, whose background budget is accounted in sim-time.
+//! anytime/preempt policies, whose background budget is accounted in
+//! sim-time.
 
 use super::anytime::AnytimeSearch;
 use super::events::{generate_trace, TraceConfig, TraceEvent};
@@ -32,36 +45,60 @@ use crate::simulator::{simulate_plan, NoiseModel, SimConfig};
 use crate::topology::{build_testbed, DeviceTopology, Scenario, TestbedSpec};
 use crate::workflow::{JobConfig, RlWorkflow};
 
-/// Replay policy under comparison.
+/// Replay policy under comparison (see the module docs for semantics).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Policy {
+    /// Repair-only incumbent; no re-search after events.
     Static,
+    /// Event-driven warm replanning.
     Warm,
+    /// Warm replanning + background anytime search between events.
     Anytime,
+    /// Anytime + predictive preemption on noticed machine losses.
+    Preempt,
+    /// Full-budget re-search with free, instant migration (upper bound).
     Oracle,
 }
 
 impl Policy {
-    pub const ALL: [Policy; 4] =
-        [Policy::Static, Policy::Warm, Policy::Anytime, Policy::Oracle];
+    /// Every policy, in the **fixed documented order** the CLI's
+    /// `--policy all` prints and `benches/fig11_elastic.rs` records:
+    /// `static`, `warm-replan`, `anytime`, `preempt`, `oracle` —
+    /// reactive sophistication ascending, the oracle bound last.
+    pub const ALL: [Policy; 5] = [
+        Policy::Static,
+        Policy::Warm,
+        Policy::Anytime,
+        Policy::Preempt,
+        Policy::Oracle,
+    ];
 
+    /// Stable display name (also accepted by [`Policy::parse`]).
     pub fn name(self) -> &'static str {
         match self {
             Policy::Static => "static",
             Policy::Warm => "warm-replan",
             Policy::Anytime => "anytime",
+            Policy::Preempt => "preempt",
             Policy::Oracle => "oracle",
         }
     }
 
+    /// Parse a CLI policy name (case-insensitive, with aliases).
     pub fn parse(s: &str) -> Option<Policy> {
         match s.to_ascii_lowercase().as_str() {
             "static" => Some(Policy::Static),
             "warm" | "warm-replan" | "replan" => Some(Policy::Warm),
             "anytime" | "background" => Some(Policy::Anytime),
+            "preempt" | "predictive" | "notice" => Some(Policy::Preempt),
             "oracle" => Some(Policy::Oracle),
             _ => None,
         }
+    }
+
+    /// Whether the policy owns a background [`AnytimeSearch`] service.
+    pub fn runs_background(self) -> bool {
+        matches!(self, Policy::Anytime | Policy::Preempt)
     }
 }
 
@@ -70,11 +107,15 @@ impl Policy {
 pub struct ReplayConfig {
     /// Training iterations to replay.
     pub iters: usize,
+    /// Trace-generation knobs (horizon, event count, notice override).
     pub trace: TraceConfig,
+    /// Replanning knobs shared by every policy (budgets, migration
+    /// model, anytime allowance, worker threads).
     pub replan: ReplanConfig,
     /// DES iterations averaged per measured point (1 keeps replays
     /// cheap and bit-deterministic).
     pub sim_iters: usize,
+    /// Simulator noise model applied to each measured iteration.
     pub noise: NoiseModel,
     /// Apply the heterogeneity load balancer after every (re)plan.
     pub balance: bool,
@@ -96,18 +137,21 @@ impl Default for ReplayConfig {
 /// One replayed iteration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct IterRecord {
+    /// Iteration index within the replay (`0..ReplayConfig::iters`).
     pub iter: usize,
     /// Labels of the events that fired before this iteration.
     pub events: Vec<String>,
+    /// Whether a (warm or cold) re-search ran at this iteration.
     pub replanned: bool,
     /// Search evaluations spent at this iteration (0 when no event).
     pub evals: usize,
-    /// Per-task cost-cache hits/misses of this iteration's searches —
-    /// the event-driven replan plus, under the anytime policy, the
-    /// background step (so nonzero on quiet iterations there; 0 on
-    /// quiet iterations otherwise). Exact at the default
+    /// Per-task cost-cache hits of this iteration's searches — the
+    /// event-driven replan plus, under the background policies, the
+    /// anytime step (so nonzero on quiet iterations there; 0 on quiet
+    /// iterations otherwise). Exact at the default
     /// `ReplanConfig::threads` = 1, approximate under concurrency.
     pub cache_hits: usize,
+    /// Per-task cost-cache misses (same scope as `cache_hits`).
     pub cache_misses: usize,
     /// One-off migration pause charged at this iteration (seconds).
     pub migration_secs: f64,
@@ -116,12 +160,20 @@ pub struct IterRecord {
     /// Samples actually processed (0 when the fleet stalled with no
     /// feasible plan).
     pub samples: usize,
+    /// GPUs in the active fleet snapshot at this iteration.
     pub active_gpus: usize,
-    /// Background anytime-search evaluations spent during this
-    /// iteration (sim-time allowance; 0 for non-anytime policies).
+    /// Background anytime-search evaluations spent on the *primary*
+    /// incumbent during this iteration (sim-time allowance; 0 for
+    /// non-background policies).
     pub anytime_evals: usize,
+    /// Background evaluations spent on the *post-event hypothesis*
+    /// incumbent during this iteration (predictive preemption; nonzero
+    /// only under `Policy::Preempt` while a noticed machine loss is
+    /// pending). `anytime_evals + hypothesis_evals` stays within the
+    /// sim-time allowance and the per-step cap.
+    pub hypothesis_evals: usize,
     /// Anytime incumbent objective after this iteration (∞ for
-    /// non-anytime policies or when no incumbent exists). Monotone
+    /// non-background policies or when no incumbent exists). Monotone
     /// non-increasing between events; resets at each barrier.
     pub anytime_cost: f64,
 }
@@ -129,22 +181,34 @@ pub struct IterRecord {
 /// Full replay outcome for one policy.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ReplayResult {
+    /// The policy this replay ran under.
     pub policy: Policy,
+    /// Seed the trace, searches and simulator all derive from.
     pub seed: u64,
+    /// Per-iteration telemetry, one record per replayed iteration.
     pub records: Vec<IterRecord>,
     /// Σ iteration time + Σ migration pauses (seconds).
     pub total_secs: f64,
     /// Samples actually processed (stalled iterations count zero).
     pub samples: usize,
+    /// Event barriers at which a re-search (warm or cold) ran.
     pub replans: usize,
+    /// Event-search evaluations over the whole replay (initial cold
+    /// plan + every barrier episode; background evals excluded).
     pub total_evals: usize,
-    /// Background anytime-search evaluations over the whole replay
-    /// (0 for non-anytime policies; not counted in `total_evals` —
-    /// they are spare sim-time cycles, not event-search budget).
+    /// Background anytime-search evaluations spent on the primary
+    /// incumbent over the whole replay (0 for non-background policies;
+    /// not counted in `total_evals` — they are spare sim-time cycles,
+    /// not event-search budget).
     pub anytime_evals: usize,
-    /// Cost-cache telemetry summed over every search in the replay
-    /// (initial cold plan and anytime background steps included).
+    /// Background evaluations spent on the post-event hypothesis
+    /// incumbent over the whole replay (predictive preemption; 0 for
+    /// every policy but `Policy::Preempt`).
+    pub hypothesis_evals: usize,
+    /// Cost-cache hits summed over every search in the replay (initial
+    /// cold plan and background steps included).
     pub cache_hits: usize,
+    /// Cost-cache misses (same scope as `cache_hits`).
     pub cache_misses: usize,
 }
 
@@ -197,6 +261,30 @@ pub fn first_event_iter(trace: &[TraceEvent]) -> Option<usize> {
     trace.iter().map(|e| e.at_iter).min()
 }
 
+/// Index into `trace` of the next unfired machine-loss event whose
+/// advance notice covers the estimated time until it fires. With the
+/// event landing before iteration `at_iter` and the replay having just
+/// measured iteration `iter` at `iter_secs` simulated seconds,
+/// `at_iter - (iter + 1)` full iterations remain — each estimated at
+/// `iter_secs`. Only the *nearest* upcoming loss is ever predicted
+/// (forecasting past it would compound speculation); `None` when that
+/// loss carries no notice or its window has not opened yet.
+fn next_noticed_loss(
+    trace: &[TraceEvent],
+    cursor: usize,
+    iter: usize,
+    iter_secs: f64,
+) -> Option<usize> {
+    let (idx, ev) = trace
+        .iter()
+        .enumerate()
+        .skip(cursor)
+        .find(|(_, e)| e.is_machine_loss())?;
+    let notice = ev.notice_secs?;
+    let remaining = ev.at_iter.saturating_sub(iter + 1) as f64 * iter_secs.max(0.0);
+    (remaining <= notice).then_some(idx)
+}
+
 /// Reseed the background service (when present) on a fresh epoch: the
 /// given plan becomes its running plan + incumbent, costed at its pure
 /// predicted iteration time — the single convention both the initial
@@ -230,14 +318,20 @@ pub fn replay(
     let trace = generate_trace(&base, &cfg.trace, seed);
     let mut fleet = FleetState::new(base);
     let mut replanner = Replanner::new(seed, cfg.replan.clone());
-    // The background service exists only under the anytime policy; its
-    // allowance is accounted in sim-time, so the replay stays a pure
-    // function of its inputs.
-    let mut anytime = if policy == Policy::Anytime {
+    // The background service exists only under the anytime/preempt
+    // policies; its allowance is accounted in sim-time, so the replay
+    // stays a pure function of its inputs. Both policies share the
+    // service seed — on a zero-notice trace the preempt policy is
+    // bit-identical to the anytime policy.
+    let mut anytime = if policy.runs_background() {
         Some(AnytimeSearch::new(seed ^ 0xA11C_E5EA, cfg.replan.clone()))
     } else {
         None
     };
+    // The predicted-event state of the preempt policy: the hypothetical
+    // post-event snapshot (topology + snapshot→base map) and the trace
+    // index of the noticed loss it anticipates.
+    let mut hypo: Option<(DeviceTopology, Vec<usize>, usize)> = None;
 
     // Initial plan on the full fleet (identical across policies: the
     // replanner's episode counter starts equal).
@@ -258,16 +352,18 @@ pub fn replay(
     let mut replans = 0;
     let mut total_evals = cold.evals;
     let mut total_anytime_evals = 0usize;
+    let mut total_hypothesis_evals = 0usize;
     let mut cache_hits = cold.cache_hits;
     let mut cache_misses = cold.cache_misses;
     let mut cursor = 0usize;
 
     for iter in 0..cfg.iters {
         // Fire due events.
+        let fired_from = cursor;
         let mut labels = Vec::new();
         while cursor < trace.len() && trace[cursor].at_iter <= iter {
             fleet.apply(&trace[cursor].event);
-            labels.push(trace[cursor].event.label());
+            labels.push(trace[cursor].label());
             cursor += 1;
         }
         let mut migration_secs = 0.0;
@@ -282,6 +378,19 @@ pub fn replay(
             let anytime_base = anytime
                 .as_ref()
                 .and_then(|a| a.incumbent().map(|(p, _)| plan_to_base(p, &map)));
+            // The hypothesis incumbent lives in the *hypothetical
+            // post-event* snapshot space; it joins the barrier merge
+            // only when the event it predicted is among those that just
+            // fired (otherwise it was shaped for a fleet that never
+            // materialized and is discarded).
+            let hypothesis_base = match (&anytime, &hypo) {
+                (Some(a), Some((_, hyp_map, idx)))
+                    if (fired_from..cursor).contains(idx) =>
+                {
+                    a.hypothesis().map(|(p, _)| plan_to_base(p, hyp_map))
+                }
+                _ => None,
+            };
             let (t, m) = fleet.snapshot();
             topo = t;
             map = m;
@@ -322,10 +431,13 @@ pub fn replay(
                     migration_secs = out.migration_secs;
                     out.plan
                 }
-                (Policy::Anytime, Some(inc)) => {
+                (Policy::Anytime | Policy::Preempt, Some(inc)) => {
                     // Barrier merge: the ordinary warm replan, then the
-                    // background incumbent adopted iff strictly better
-                    // under the migration-aware objective.
+                    // background incumbent — and, under the preempt
+                    // policy, the pre-warmed hypothesis plan when its
+                    // predicted event actually fired — adopted iff
+                    // strictly better under the migration-aware
+                    // objective.
                     replanned = true;
                     let out = replanner.replan_with_anytime(
                         &topo,
@@ -333,6 +445,7 @@ pub fn replay(
                         job,
                         inc,
                         anytime_base.as_ref(),
+                        hypothesis_base.as_ref(),
                         &b2n,
                     );
                     evals += out.evals;
@@ -364,8 +477,12 @@ pub fn replay(
                 replans += 1;
             }
             // New epoch for the background service: unspent allowance
-            // is forfeited while the controller replans.
+            // is forfeited while the controller replans, and any
+            // hypothesis is stale (the fleet just changed) — the notice
+            // scan below re-primes it against the new fleet if the
+            // predicted event is still upcoming.
             reseed_anytime(&mut anytime, &topo, wf, job, plan.as_ref());
+            hypo = None;
         }
 
         // Measure this iteration on the current snapshot.
@@ -388,21 +505,78 @@ pub fn replay(
         };
         total_secs += iter_secs + migration_secs;
 
+        // Predictive preemption: when the nearest upcoming machine
+        // loss carries notice that covers the estimated time until it
+        // fires, snapshot the post-event fleet hypothesis and prime the
+        // second incumbent against it. Everything here is derived from
+        // replay state (trace, fleet, measured sim-time), never
+        // wall-clock, so the policy keeps the determinism contract.
+        if policy == Policy::Preempt {
+            // The notice latches: once received it is never retracted
+            // (a real spot warning does not un-happen), so a noisy
+            // iteration measurement cannot re-close the window and
+            // discard the evolved hypothesis. Within an epoch the
+            // nearest unfired loss is fixed; barriers reset the latch.
+            if hypo.is_none() {
+                if let Some(idx) = next_noticed_loss(&trace, cursor, iter, iter_secs) {
+                    let hyp_fleet = fleet.apply_hypothetical(&trace[idx].event);
+                    let (ht, hm) = hyp_fleet.snapshot();
+                    hypo = Some((ht, hm, idx));
+                }
+            }
+            if let (Some(a), Some((ht, hm, idx))) = (anytime.as_mut(), hypo.as_ref()) {
+                if a.hypothesis_key() != Some(*idx as u64) {
+                    let hb2n = FleetState::base_to_snapshot(hm);
+                    let mm = cfg.replan.migration;
+                    let horizon = cfg.replan.horizon_iters.max(1.0);
+                    let prev = incumbent_base
+                        .as_ref()
+                        .map(|inc| prev_placement(inc, &hb2n))
+                        .unwrap_or_default();
+                    // Seed: the running plan repaired into the
+                    // hypothetical snapshot, costed migration-aware
+                    // from its own surviving placement there.
+                    let seed_plan = incumbent_base.as_ref().and_then(|inc| {
+                        repair_plan(
+                            inc,
+                            wf,
+                            job,
+                            ht,
+                            &hb2n,
+                            seed ^ (*idx as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                        )
+                    });
+                    let objective = seed_plan
+                        .as_ref()
+                        .map(|p| {
+                            CostModel::new(ht, wf, job).plan_cost(p).iter_time
+                                + mm.migration_time(ht, wf, job, &prev, p) / horizon
+                        })
+                        .unwrap_or(f64::INFINITY);
+                    a.prime_hypothesis(*idx as u64, seed_plan.as_ref(), objective, prev);
+                }
+            }
+        }
+
         // Spare controller cycles: credit this iteration's simulated
         // duration to the background allowance and run one anytime
-        // step on the current snapshot.
+        // step on the current snapshot (split with the hypothesis
+        // snapshot when predictive preemption has one pending).
         let mut anytime_evals = 0;
+        let mut hypothesis_evals = 0;
         let mut anytime_cost = f64::INFINITY;
         if let Some(a) = anytime.as_mut() {
             a.accrue(iter_secs);
-            let st = a.step(&topo, wf, job);
+            let st = a.step(&topo, wf, job, hypo.as_ref().map(|(t, _, _)| t));
             anytime_evals = st.evals;
+            hypothesis_evals = st.hypothesis_evals;
             anytime_cost = st.incumbent_cost;
             iter_hits += st.cache_hits;
             iter_misses += st.cache_misses;
         }
         total_evals += evals;
         total_anytime_evals += anytime_evals;
+        total_hypothesis_evals += hypothesis_evals;
         cache_hits += iter_hits;
         cache_misses += iter_misses;
 
@@ -418,6 +592,7 @@ pub fn replay(
             samples: iter_samples,
             active_gpus: topo.n(),
             anytime_evals,
+            hypothesis_evals,
             anytime_cost,
         });
     }
@@ -431,6 +606,7 @@ pub fn replay(
         replans,
         total_evals,
         anytime_evals: total_anytime_evals,
+        hypothesis_evals: total_hypothesis_evals,
         cache_hits,
         cache_misses,
     }
@@ -479,8 +655,11 @@ mod tests {
             assert_eq!(r.records.len(), 6);
             assert!(r.total_secs > 0.0 && r.total_secs.is_finite(), "{policy:?}");
             assert!(r.throughput() > 0.0);
-            if policy != Policy::Anytime {
+            if !policy.runs_background() {
                 assert_eq!(r.anytime_evals, 0, "{policy:?} ran background search");
+            }
+            if policy != Policy::Preempt {
+                assert_eq!(r.hypothesis_evals, 0, "{policy:?} ran hypothesis search");
             }
         }
     }
@@ -536,5 +715,17 @@ mod tests {
             assert_eq!(Policy::parse(p.name()), Some(p));
         }
         assert_eq!(Policy::parse("nope"), None);
+    }
+
+    #[test]
+    fn policy_all_is_the_documented_order() {
+        // `--policy all` and fig11 rows rely on this exact order.
+        assert_eq!(
+            Policy::ALL.map(Policy::name),
+            ["static", "warm-replan", "anytime", "preempt", "oracle"]
+        );
+        assert!(Policy::Preempt.runs_background());
+        assert!(Policy::Anytime.runs_background());
+        assert!(!Policy::Warm.runs_background());
     }
 }

@@ -32,10 +32,13 @@
 //!   costs through the always-on [`costmodel::CostCache`], an
 //!   **anytime background search** ([`elastic::anytime`]) that keeps
 //!   improving the plan *between* events under a sim-time-accounted
-//!   eval allowance and merges migration-aware at each barrier, and
-//!   full dynamic-trace replay through the DES (`hetrl replay
+//!   eval allowance and merges migration-aware at each barrier,
+//!   **predictive preemption** (noticed machine losses pre-warm a
+//!   second incumbent against the post-event fleet hypothesis, the
+//!   allowance split deterministically between the two), and full
+//!   dynamic-trace replay through the DES (`hetrl replay
 //!   --scenario <s1..s4> --seed N`, compared as static vs warm-replan
-//!   vs anytime vs oracle in `benches/fig11_elastic.rs`);
+//!   vs anytime vs preempt vs oracle in `benches/fig11_elastic.rs`);
 //! * a standalone **0-1 ILP solver** ([`solver`]): dense simplex LP
 //!   relaxation + branch & bound;
 //! * a **discrete-event cluster simulator** ([`simulator`]) standing in

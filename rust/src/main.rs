@@ -74,9 +74,10 @@ fn help() -> String {
             OptSpec { name: "seed", help: "random seed", default: Some("0") },
             OptSpec { name: "iters", help: "replay: iterations to replay", default: Some("24") },
             OptSpec { name: "events", help: "replay: cluster events in the trace", default: Some("5") },
-            OptSpec { name: "policy", help: "replay: static|warm|anytime|oracle|all", default: Some("all") },
+            OptSpec { name: "policy", help: "replay: static|warm|anytime|preempt|oracle|all", default: Some("all") },
             OptSpec { name: "warm-budget", help: "replay: evals per warm replan", default: Some("150") },
             OptSpec { name: "anytime-rate", help: "replay: background evals per simulated second", default: Some("0.5") },
+            OptSpec { name: "notice-secs", help: "replay: pin machine-loss advance notice (0 = none; default: realistic drawn notice)", default: None },
             OptSpec { name: "tiny", help: "replay: scaled-down job (flag)", default: None },
             OptSpec { name: "steps", help: "train: number of GRPO steps", default: Some("100") },
             OptSpec { name: "artifacts", help: "artifacts directory", default: Some("artifacts") },
@@ -241,12 +242,24 @@ fn cmd_replay(args: &Args) -> i32 {
     let warm_budget = args.get_usize("warm-budget", 150).unwrap_or(150);
     let anytime_rate = args.get_f64("anytime-rate", 0.5).unwrap_or(0.5);
     let threads = args.get_usize("threads", 0).unwrap_or(0);
+    // `--policy all` runs every policy in the fixed documented order
+    // (Policy::ALL): static, warm-replan, anytime, preempt, oracle.
     let policies: Vec<Policy> = match args.get_or("policy", "all").as_str() {
         "all" => Policy::ALL.to_vec(),
         other => match Policy::parse(other) {
             Some(p) => vec![p],
             None => {
-                eprintln!("bad --policy '{other}' (static|warm|anytime|oracle|all)");
+                eprintln!("bad --policy '{other}' (static|warm|anytime|preempt|oracle|all)");
+                return 2;
+            }
+        },
+    };
+    let notice_override = match args.get("notice-secs") {
+        None => None,
+        Some(_) => match args.get_f64("notice-secs", 0.0) {
+            Ok(v) => Some(v),
+            Err(e) => {
+                eprintln!("{e}");
                 return 2;
             }
         },
@@ -256,7 +269,7 @@ fn cmd_replay(args: &Args) -> i32 {
     replan.anytime.evals_per_sim_sec = anytime_rate;
     let cfg = ReplayConfig {
         iters,
-        trace: TraceConfig { horizon: iters, n_events, ..TraceConfig::default() },
+        trace: TraceConfig { horizon: iters, n_events, notice_override, ..TraceConfig::default() },
         replan,
         ..ReplayConfig::default()
     };
@@ -273,7 +286,7 @@ fn cmd_replay(args: &Args) -> i32 {
         trace.len()
     );
     for e in &trace {
-        println!("  iter {:>3}: {}", e.at_iter, e.event.label());
+        println!("  iter {:>3}: {}", e.at_iter, e.label());
     }
     let post = first_event_iter(&trace).unwrap_or(0);
 
@@ -288,6 +301,7 @@ fn cmd_replay(args: &Args) -> i32 {
             "replans",
             "evals",
             "bg evals",
+            "hyp evals",
             "cache hit%",
             "migration (s)",
         ],
@@ -316,6 +330,7 @@ fn cmd_replay(args: &Args) -> i32 {
             r.replans.to_string(),
             r.total_evals.to_string(),
             r.anytime_evals.to_string(),
+            r.hypothesis_evals.to_string(),
             format!("{:.0}%", r.cache_hit_rate() * 100.0),
             format!("{mig:.1}"),
         ]);

@@ -85,7 +85,7 @@ impl EaArm {
     }
 
     /// The arm was declared dead: no feasible plan after
-    /// [`Self::MAX_INIT_FAILURES`] consecutive init draws.
+    /// `MAX_INIT_FAILURES` consecutive init draws.
     pub fn is_infeasible(&self) -> bool {
         self.infeasible
     }

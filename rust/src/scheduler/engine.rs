@@ -8,6 +8,9 @@
 //!   count;
 //! * [`split_quota`] — deterministic per-arm eval quotas from a
 //!   remaining budget (sum never exceeds it);
+//! * [`split_allowance`] — deterministic split of an anytime step's
+//!   allowance between the primary incumbent and a pending post-event
+//!   hypothesis incumbent (predictive preemption);
 //! * [`fan_out`] — run jobs on worker [`EvalCtx`]s in parallel and
 //!   merge their incumbents/traces back **in job order**;
 //! * [`run_rung`] — one SHA/EA rung: each [`EaArm`] runs its quota on
@@ -55,15 +58,38 @@ pub fn split_quota(remaining: usize, n_arms: usize, rounds_left: usize) -> Vec<u
         .collect()
 }
 
+/// Split one anytime step's eval allowance between the **primary**
+/// incumbent (searched against the current fleet) and a pending
+/// **post-event hypothesis** incumbent (searched against the fleet a
+/// noticed machine loss is about to produce — see
+/// [`crate::elastic::anytime::AnytimeSearch`]). Returns
+/// `(primary, hypothesis)`; the halves always sum to exactly `quota`,
+/// the primary gets the odd eval, and without a pending hypothesis the
+/// primary keeps everything — a pure function of its arguments, so the
+/// split is identical at any thread count.
+pub fn split_allowance(quota: usize, hypothesis_pending: bool) -> (usize, usize) {
+    if !hypothesis_pending {
+        return (quota, 0);
+    }
+    let hyp = quota / 2;
+    (quota - hyp, hyp)
+}
+
 /// What one worker context produced during a rung.
 pub struct WorkerOutcome {
+    /// Evaluations this worker charged to the shared ledger.
     pub spent: usize,
+    /// Best objective the worker saw (including the parent incumbent's
+    /// cost it started from).
     pub best_cost: f64,
+    /// The plan behind `best_cost`, when the worker improved on it.
     pub best_plan: Option<ExecutionPlan>,
+    /// Strict-improvement trace points, in discovery order.
     pub trace: Vec<TracePoint>,
 }
 
 impl WorkerOutcome {
+    /// Extract the outcome of a finished worker context.
     pub fn capture(w: EvalCtx<'_>) -> WorkerOutcome {
         WorkerOutcome {
             spent: w.evals,
@@ -129,7 +155,9 @@ pub struct ArmTask {
     /// (outer, inner) identity — carried through so callers can route
     /// results back; also the deterministic merge order.
     pub key: (usize, usize),
+    /// The arm (with its population) to evolve.
     pub arm: EaArm,
+    /// Evaluations this arm may spend in the rung.
     pub quota: usize,
 }
 
@@ -137,8 +165,11 @@ pub struct ArmTask {
 /// evaluations it actually consumed (≤ quota; an infeasible arm hands
 /// the rest of its quota back to the caller's accounting).
 pub struct ArmRun {
+    /// The task's identity, unchanged.
     pub key: (usize, usize),
+    /// The arm with its evolved population.
     pub arm: EaArm,
+    /// Evaluations actually consumed (≤ the task's quota).
     pub spent: usize,
 }
 
@@ -156,11 +187,16 @@ pub fn run_rung(ctx: &mut EvalCtx<'_>, tasks: Vec<ArmTask>, threads: usize) -> V
 /// An [`ArmTask`] with warm-start seeds: plans injected into the arm's
 /// population (in order, each charged one evaluation against the quota)
 /// before the evolutionary loop runs. The unit of work shared by the
-/// elastic replanner's warm arms and the anytime background search.
+/// elastic replanner's warm arms and the anytime background search
+/// (both the primary and the hypothesis incumbent).
 pub struct SeededArmTask {
+    /// (outer, inner) identity; the deterministic merge order.
     pub key: (usize, usize),
+    /// The arm to seed and evolve.
     pub arm: EaArm,
+    /// Evaluations this arm may spend (injections included).
     pub quota: usize,
+    /// Warm-start plans to inject before evolving, in order.
     pub seeds: Vec<ExecutionPlan>,
 }
 
@@ -216,5 +252,21 @@ mod tests {
         // b_m = B / (|TG| * ceil(log2 |TG|)) on an untouched budget.
         let qs = split_quota(600, 15, 4);
         assert!(qs.iter().all(|&q| q == 600 / (15 * 4)));
+    }
+
+    #[test]
+    fn split_allowance_exact_and_primary_biased() {
+        for quota in 0..40usize {
+            // No hypothesis: the primary keeps the whole allowance.
+            assert_eq!(split_allowance(quota, false), (quota, 0));
+            // Hypothesis pending: halves sum exactly, primary gets the
+            // odd eval, hypothesis never exceeds the primary.
+            let (p, h) = split_allowance(quota, true);
+            assert_eq!(p + h, quota);
+            assert!(p >= h);
+            assert!(p - h <= 1);
+        }
+        assert_eq!(split_allowance(1, true), (1, 0));
+        assert_eq!(split_allowance(32, true), (16, 16));
     }
 }

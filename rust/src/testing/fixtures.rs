@@ -93,6 +93,30 @@ pub fn small_replay_cfg() -> ReplayConfig {
     }
 }
 
+/// Replay config for the background-search property suites
+/// (`tests/prop_anytime.rs`, `tests/prop_preempt.rs`): the small
+/// testbed budgets over an 8-iteration, 2-event trace with a generous
+/// sim-time allowance so the background (and, under `--policy preempt`,
+/// hypothesis) search visibly runs. Callers pin
+/// `trace.notice_override` to force or strip advance notice.
+pub fn background_replay_cfg(threads: usize) -> ReplayConfig {
+    let mut cfg = small_replay_cfg();
+    cfg.iters = 8;
+    cfg.trace = TraceConfig { horizon: 8, n_events: 2, ..TraceConfig::default() };
+    cfg.replan.threads = threads;
+    // Align the amortization horizon with the iterations actually
+    // remaining in the short trace, so the migration-aware objective
+    // tracks the realized replay cost.
+    cfg.replan.horizon_iters = 4.0;
+    cfg.replan.anytime = crate::elastic::AnytimeConfig {
+        evals_per_sim_sec: 8.0,
+        max_step_evals: 32,
+        arms: 2,
+        seed_mutants: 2,
+    };
+    cfg
+}
+
 /// Generate a random valid plan through the Level-1..5 machinery
 /// (`None` when ten seeded attempts all fail).
 pub fn random_plan(

@@ -19,27 +19,13 @@
 //!   the dominance is empirical, so the per-pair check carries a small
 //!   simulation-noise tolerance and the aggregate a tight one.
 
-use hetrl::elastic::{replay, AnytimeConfig, Policy, ReplayConfig, ReplayResult, TraceConfig};
+use hetrl::elastic::{replay, Policy, ReplayConfig, ReplayResult};
 use hetrl::testing::fixtures;
 use hetrl::topology::Scenario;
 use hetrl::workflow::JobConfig;
 
 fn anytime_cfg(threads: usize) -> ReplayConfig {
-    let mut cfg = fixtures::small_replay_cfg();
-    cfg.iters = 8;
-    cfg.trace = TraceConfig { horizon: 8, n_events: 2, ..TraceConfig::default() };
-    cfg.replan.threads = threads;
-    // Align the amortization horizon with the iterations actually
-    // remaining in the short trace, so the migration-aware objective
-    // tracks the realized replay cost.
-    cfg.replan.horizon_iters = 4.0;
-    cfg.replan.anytime = AnytimeConfig {
-        evals_per_sim_sec: 8.0,
-        max_step_evals: 32,
-        arms: 2,
-        seed_mutants: 2,
-    };
-    cfg
+    fixtures::background_replay_cfg(threads)
 }
 
 /// The deterministic projection of a replay: everything except the
@@ -230,6 +216,6 @@ fn anytime_replay_cost_no_worse_than_warm() {
 fn anytime_policy_parses_and_is_listed() {
     assert_eq!(Policy::parse("anytime"), Some(Policy::Anytime));
     assert_eq!(Policy::parse(Policy::Anytime.name()), Some(Policy::Anytime));
-    assert_eq!(Policy::ALL.len(), 4);
+    assert_eq!(Policy::ALL.len(), 5);
     assert!(Policy::ALL.contains(&Policy::Anytime));
 }

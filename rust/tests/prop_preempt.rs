@@ -1,0 +1,260 @@
+//! Properties of predictive preemption (`hetrl replay --policy
+//! preempt`):
+//!
+//! * **bit-determinism across thread counts** — the hypothesis search
+//!   runs on the same engine as the primary incumbent, its allowance
+//!   half is a pure function of the step quota
+//!   (`engine::split_allowance`) and arms merge in index order, so the
+//!   deterministic projection of a preempt replay is identical at 1, 2
+//!   and 8 worker threads for the same seed;
+//! * **no worse than anytime on noticed traces** — the three-way
+//!   barrier merge only ever *adds* a candidate over the anytime
+//!   policy's merge, so with advance notice the preempt replay's total
+//!   cost tracks the anytime policy's. Once trajectories diverge the
+//!   dominance is empirical (the hypothesis half starves the primary
+//!   incumbent slightly), so the per-pair check carries a small
+//!   simulation-noise tolerance and the aggregate a tighter one;
+//! * **zero-notice degeneracy** — with all notice stripped
+//!   (`TraceConfig::notice_override = Some(0.0)`) no hypothesis is
+//!   ever primed and the preempt policy replays **bit-identically** to
+//!   the anytime policy (same service seed, same allowance, same
+//!   merge);
+//! * **allowance split cap** — primary + hypothesis background evals
+//!   together never exceed the sim-time allowance
+//!   (`evals_per_sim_sec × Σ iter_secs`) or the per-step cap — the
+//!   hypothesis spends the warm incumbent's spare cycles, never new
+//!   budget.
+
+use hetrl::elastic::{replay, Policy, ReplayConfig, ReplayResult};
+use hetrl::testing::fixtures;
+use hetrl::topology::Scenario;
+use hetrl::workflow::JobConfig;
+
+/// The background suite config with the notice window pinned:
+/// `Some(n)` gives every machine-loss event exactly `n` seconds of
+/// notice, `Some(0.0)` strips notice entirely.
+fn preempt_cfg(threads: usize, notice: Option<f64>) -> ReplayConfig {
+    let mut cfg = fixtures::background_replay_cfg(threads);
+    cfg.trace.notice_override = notice;
+    cfg
+}
+
+/// A notice window so large it covers any simulated lead time — every
+/// machine loss in the trace is forecast from iteration 0.
+const FULL_NOTICE: Option<f64> = Some(1e9);
+
+/// The deterministic projection of a replay: everything except the
+/// cache hit/miss telemetry, which is approximate when threads > 1.
+#[allow(clippy::type_complexity)]
+fn fingerprint(
+    r: &ReplayResult,
+) -> Vec<(usize, Vec<String>, bool, usize, usize, usize, u64, u64, usize, usize, u64)> {
+    r.records
+        .iter()
+        .map(|x| {
+            (
+                x.iter,
+                x.events.clone(),
+                x.replanned,
+                x.evals,
+                x.anytime_evals,
+                x.hypothesis_evals,
+                x.migration_secs.to_bits(),
+                x.iter_secs.to_bits(),
+                x.samples,
+                x.active_gpus,
+                x.anytime_cost.to_bits(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn preempt_replay_bit_identical_across_thread_counts() {
+    let wf = fixtures::tiny_wf();
+    let job = JobConfig::tiny();
+    for seed in [1u64, 5, 11] {
+        let base = replay(
+            Scenario::MultiCountry,
+            &fixtures::small_spec(),
+            &wf,
+            &job,
+            Policy::Preempt,
+            &preempt_cfg(1, FULL_NOTICE),
+            seed,
+        );
+        assert!(base.total_secs.is_finite() && base.total_secs > 0.0);
+        for threads in fixtures::test_threads().into_iter().filter(|&t| t != 1) {
+            let out = replay(
+                Scenario::MultiCountry,
+                &fixtures::small_spec(),
+                &wf,
+                &job,
+                Policy::Preempt,
+                &preempt_cfg(threads, FULL_NOTICE),
+                seed,
+            );
+            assert_eq!(
+                fingerprint(&out),
+                fingerprint(&base),
+                "seed {seed}: preempt replay diverged at {threads} threads"
+            );
+            assert_eq!(out.total_secs.to_bits(), base.total_secs.to_bits());
+            assert_eq!(out.total_evals, base.total_evals);
+            assert_eq!(out.anytime_evals, base.anytime_evals);
+            assert_eq!(out.hypothesis_evals, base.hypothesis_evals);
+        }
+    }
+}
+
+#[test]
+fn preempt_cost_no_worse_than_anytime_with_notice() {
+    let wf = fixtures::tiny_wf();
+    let job = JobConfig::tiny();
+    let pairs = [
+        (Scenario::MultiCountry, 7u64),
+        (Scenario::MultiCountry, 13),
+        (Scenario::MultiRegionHybrid, 3),
+        (Scenario::MultiRegionHybrid, 5),
+    ];
+    let mut total_pre = 0.0;
+    let mut total_any = 0.0;
+    for (scenario, seed) in pairs {
+        let any = replay(
+            scenario,
+            &fixtures::small_spec(),
+            &wf,
+            &job,
+            Policy::Anytime,
+            &preempt_cfg(1, FULL_NOTICE),
+            seed,
+        );
+        let pre = replay(
+            scenario,
+            &fixtures::small_spec(),
+            &wf,
+            &job,
+            Policy::Preempt,
+            &preempt_cfg(1, FULL_NOTICE),
+            seed,
+        );
+        // Per pair: the barrier merge never picks a worse objective
+        // than anytime's candidates, but simulated totals can wobble
+        // once trajectories diverge — allow a small tolerance.
+        assert!(
+            pre.total_secs <= any.total_secs * 1.05 + 1e-9,
+            "{} seed {seed}: preempt {:.2}s worse than anytime {:.2}s",
+            scenario.name(),
+            pre.total_secs,
+            any.total_secs
+        );
+        total_pre += pre.total_secs;
+        total_any += any.total_secs;
+    }
+    assert!(
+        total_pre <= total_any * 1.02 + 1e-9,
+        "aggregate: preempt {total_pre:.2}s vs anytime {total_any:.2}s"
+    );
+}
+
+#[test]
+fn zero_notice_degenerates_to_anytime_bit_identically() {
+    let wf = fixtures::tiny_wf();
+    let job = JobConfig::tiny();
+    for seed in [2u64, 9, 17] {
+        let any = replay(
+            Scenario::MultiCountry,
+            &fixtures::small_spec(),
+            &wf,
+            &job,
+            Policy::Anytime,
+            &preempt_cfg(1, Some(0.0)),
+            seed,
+        );
+        let pre = replay(
+            Scenario::MultiCountry,
+            &fixtures::small_spec(),
+            &wf,
+            &job,
+            Policy::Preempt,
+            &preempt_cfg(1, Some(0.0)),
+            seed,
+        );
+        assert_eq!(
+            fingerprint(&pre),
+            fingerprint(&any),
+            "seed {seed}: zero-notice preempt diverged from anytime"
+        );
+        assert_eq!(pre.total_secs.to_bits(), any.total_secs.to_bits());
+        assert_eq!(pre.total_evals, any.total_evals);
+        assert_eq!(pre.anytime_evals, any.anytime_evals);
+        assert_eq!(pre.hypothesis_evals, 0, "hypothesis ran without notice");
+    }
+}
+
+#[test]
+fn allowance_split_never_exceeds_sim_time_budget() {
+    let wf = fixtures::tiny_wf();
+    let job = JobConfig::tiny();
+    let mut hypothesis_total = 0usize;
+    for seed in [2u64, 7, 12] {
+        let cfg = preempt_cfg(1, FULL_NOTICE);
+        let r = replay(
+            Scenario::MultiCountry,
+            &fixtures::small_spec(),
+            &wf,
+            &job,
+            Policy::Preempt,
+            &cfg,
+            seed,
+        );
+        let rate = cfg.replan.anytime.evals_per_sim_sec;
+        let cap = cfg.replan.anytime.max_step_evals;
+        let mut sim_secs = 0.0;
+        let mut background = 0usize;
+        for rec in &r.records {
+            assert!(
+                rec.anytime_evals + rec.hypothesis_evals <= cap,
+                "seed {seed}, iter {}: split overran the step cap: {} + {}",
+                rec.iter,
+                rec.anytime_evals,
+                rec.hypothesis_evals
+            );
+            // The hypothesis quota is the primary-biased half of the
+            // step quota, so its spend can never exceed half the cap.
+            assert!(
+                rec.hypothesis_evals <= cap / 2,
+                "seed {seed}, iter {}: hypothesis spent {} > half-cap {}",
+                rec.iter,
+                rec.hypothesis_evals,
+                cap / 2
+            );
+            sim_secs += rec.iter_secs;
+            background += rec.anytime_evals + rec.hypothesis_evals;
+        }
+        assert_eq!(r.anytime_evals + r.hypothesis_evals, background);
+        assert!(
+            (background as f64) <= sim_secs * rate + 1e-9,
+            "seed {seed}: {background} background evals exceed the \
+             sim-time allowance {:.1}",
+            sim_secs * rate
+        );
+        assert!(r.anytime_evals > 0, "seed {seed}: background search never ran");
+        hypothesis_total += r.hypothesis_evals;
+    }
+    // With every loss fully noticed, the hypothesis search must have
+    // run somewhere across the seeds.
+    assert!(hypothesis_total > 0, "hypothesis search never ran on any seed");
+}
+
+#[test]
+fn preempt_policy_parses_and_is_listed() {
+    assert_eq!(Policy::parse("preempt"), Some(Policy::Preempt));
+    assert_eq!(Policy::parse("predictive"), Some(Policy::Preempt));
+    assert_eq!(Policy::parse(Policy::Preempt.name()), Some(Policy::Preempt));
+    assert_eq!(
+        Policy::ALL.map(Policy::name),
+        ["static", "warm-replan", "anytime", "preempt", "oracle"],
+        "the documented --policy all order"
+    );
+}
