@@ -25,6 +25,19 @@ fi
 echo "== cargo build --release =="
 cargo build --release
 
+echo "== hetrl lint (detlint determinism/concurrency gate) =="
+# Zero-dep static analysis: wall-clock, hash-order, NaN-unsafe
+# comparators, ambient nondeterminism, unaudited atomics/locks, stale
+# allow directives. Nonzero exit on any finding.
+./target/release/hetrl lint
+
+if cargo clippy --version >/dev/null 2>&1; then
+    echo "== cargo clippy --all-targets (warnings are errors) =="
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "ci.sh: clippy not installed; skipping." >&2
+fi
+
 echo "== cargo doc (rustdoc gate: warnings are errors) =="
 # Broken intra-doc links, bad HTML in doc comments etc. fail the build;
 # README/ARCHITECTURE point at the rendered API docs, so keep them clean.

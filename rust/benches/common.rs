@@ -14,6 +14,7 @@ use hetrl::topology::DeviceTopology;
 use hetrl::workflow::{Algo, JobConfig, Mode, ModelSpec, RlWorkflow};
 
 pub fn full() -> bool {
+    // detlint:allow(D4): bench sweep-size toggle — affects how much is measured, not any measured result
     std::env::var("HETRL_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
 }
 

@@ -38,7 +38,7 @@ fn main() {
     let job = JobConfig::default();
     let budget = if common::full() { 6000 } else { 1500 };
     let seed = 2u64;
-    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let cores = hetrl::scheduler::resolve_threads(0);
     let mut thread_counts: Vec<usize> = vec![1, 2, 4];
     if cores > 4 {
         thread_counts.push(cores);

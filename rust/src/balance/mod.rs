@@ -122,7 +122,7 @@ pub fn balanced_layer_split(nl: usize, pp: usize, speeds: &[f64]) -> Vec<usize> 
         .enumerate()
         .map(|(j, x)| (x - x.floor(), j))
         .collect();
-    rema.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+    rema.sort_by(|a, b| crate::util::ford::cmp_f64(b.0, a.0).then(a.1.cmp(&b.1)));
     let mut k = 0;
     while assigned < nl {
         split[rema[k % pp].1] += 1;

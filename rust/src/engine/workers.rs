@@ -106,10 +106,7 @@ impl WorkerFleet {
         order.sort_by_key(|&i| std::cmp::Reverse(lengths[i]));
         let mut group_order: Vec<usize> = (0..self.groups.len()).collect();
         group_order.sort_by(|&a, &b| {
-            self.groups[b]
-                .speed
-                .partial_cmp(&self.groups[a].speed)
-                .unwrap()
+            crate::util::ford::cmp_f64(self.groups[b].speed, self.groups[a].speed)
         });
         let mut out = vec![0usize; n];
         let mut g_iter = group_order.into_iter();

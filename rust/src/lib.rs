@@ -58,8 +58,17 @@
 //! in for the PJRT bindings (host-side literal ops are real; device
 //! compile/execute report unavailability until real bindings are wired
 //! back in).
+//!
+//! The determinism contract is *enforced*, not just documented: the
+//! in-crate [`lint`] module (`hetrl lint`, a hard CI gate) statically
+//! rejects wall-clock reads, hash-ordered collections, NaN-unsafe float
+//! comparators, ambient nondeterminism, and unaudited atomics/locks —
+//! see `docs/ARCHITECTURE.md` for the rule table and inventories.
+
+#![forbid(unsafe_code)]
 
 pub mod log;
+pub mod lint;
 pub mod util;
 pub mod testing;
 pub mod topology;

@@ -1,0 +1,154 @@
+//! Inline suppression directives for `detlint`.
+//!
+//! A finding is suppressed by a **plain** line comment of the form
+//! (shown here with the marker split so this doc example is not itself
+//! a directive): `det`‑`lint:allow(D2): keyed lookups only`.
+//!
+//! * A *trailing* directive (code before it on the same line)
+//!   suppresses findings of that rule on its own line.
+//! * A *standalone* directive (alone on its line) suppresses findings
+//!   on the **next line that contains code** — blank lines and further
+//!   comments in between are fine, so directives stack.
+//! * Directives are machine-checked: a directive whose rule id is
+//!   unknown, whose reason is empty, or whose targeted line has no
+//!   finding of that rule is itself an `A0` error. Stale suppressions
+//!   can be stripped mechanically with `hetrl lint --fix-allow`.
+//!
+//! Only plain `//` comments carry directives — doc comments (`///`,
+//! `//!`) and block comments never do, so rustdoc can show the syntax
+//! verbatim without registering a directive.
+
+use super::lexer::Lexed;
+use super::report::Finding;
+use super::rules::Rule;
+
+/// The directive marker inside a plain line comment.
+const MARKER: &str = "detlint:allow(";
+
+/// One parsed directive.
+#[derive(Debug)]
+pub struct Directive {
+    /// Line the comment sits on.
+    pub line: u32,
+    /// Line whose findings it suppresses (same line for trailing
+    /// directives, next code line for standalone ones; `None` when no
+    /// code follows — always unused).
+    pub target: Option<u32>,
+    pub rule: Rule,
+}
+
+/// Parse all directives in a lexed file. Malformed directives become
+/// `A0` findings immediately.
+pub fn parse(path: &str, lx: &Lexed) -> (Vec<Directive>, Vec<Finding>) {
+    let mut dirs = Vec::new();
+    let mut bad = Vec::new();
+    for c in &lx.comments {
+        if !c.plain_line {
+            continue;
+        }
+        let body = c.text.trim_start();
+        if !body.starts_with(MARKER) {
+            continue;
+        }
+        let rest = &body[MARKER.len()..];
+        let malformed = |msg: &str| Finding {
+            file: path.to_string(),
+            line: c.line,
+            rule: Rule::A0,
+            msg: format!("malformed detlint:allow — {msg}; expected `detlint:allow(D<n>): reason`"),
+            fixable: false,
+        };
+        let Some(close) = rest.find(')') else {
+            bad.push(malformed("missing `)`"));
+            continue;
+        };
+        let Some(rule) = Rule::parse_allowable(rest[..close].trim()) else {
+            bad.push(malformed(&format!("unknown rule `{}`", rest[..close].trim())));
+            continue;
+        };
+        let after = rest[close + 1..].trim_start();
+        let reason = after.strip_prefix(':').map(str::trim).unwrap_or("");
+        if reason.is_empty() {
+            bad.push(malformed("empty reason"));
+            continue;
+        }
+        let target = if c.has_code_before {
+            Some(c.line)
+        } else {
+            // First code token strictly after the directive's line.
+            lx.tokens.iter().find(|t| t.line > c.line).map(|t| t.line)
+        };
+        dirs.push(Directive { line: c.line, target, rule });
+    }
+    (dirs, bad)
+}
+
+/// Apply directives to raw rule findings: matching findings are
+/// dropped; directives that suppressed nothing become `A0` findings
+/// (marked fixable, so `--fix-allow` can strip the stale comment).
+pub fn apply(path: &str, dirs: &[Directive], findings: Vec<Finding>) -> Vec<Finding> {
+    let mut used = vec![false; dirs.len()];
+    let mut out = Vec::new();
+    'findings: for f in findings {
+        for (di, d) in dirs.iter().enumerate() {
+            if d.rule == f.rule && d.target == Some(f.line) {
+                used[di] = true;
+                continue 'findings;
+            }
+        }
+        out.push(f);
+    }
+    for (di, d) in dirs.iter().enumerate() {
+        if !used[di] {
+            out.push(Finding {
+                file: path.to_string(),
+                line: d.line,
+                rule: Rule::A0,
+                msg: format!(
+                    "unused detlint:allow({}) — the targeted line has no {} finding",
+                    d.rule.id(),
+                    d.rule.id()
+                ),
+                fixable: true,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::lexer::lex;
+
+    fn parse_src(src: &str) -> (Vec<Directive>, Vec<Finding>) {
+        parse("src/x.rs", &lex(src))
+    }
+
+    #[test]
+    fn trailing_and_standalone_targets() {
+        let src = "let a = 1; // detlint:allow(D2): keyed only\n\n// detlint:allow(D1): telemetry\n\nlet b = 2;\n";
+        let (dirs, bad) = parse_src(src);
+        assert!(bad.is_empty(), "{bad:?}");
+        assert_eq!(dirs.len(), 2);
+        assert_eq!(dirs[0].target, Some(1));
+        assert_eq!(dirs[1].target, Some(5), "standalone skips blank lines");
+    }
+
+    #[test]
+    fn doc_comments_never_carry_directives() {
+        let src = "/// detlint:allow(D1): example\n//! detlint:allow(D2): example\nlet a = 1;\n";
+        let (dirs, bad) = parse_src(src);
+        assert!(dirs.is_empty());
+        assert!(bad.is_empty());
+    }
+
+    #[test]
+    fn malformed_directives_are_a0() {
+        let src = "// detlint:allow(D9): nope\n// detlint:allow(D1)\n// detlint:allow(D1):   \n";
+        let (dirs, bad) = parse_src(src);
+        assert!(dirs.is_empty());
+        assert_eq!(bad.len(), 3, "{bad:?}");
+        assert!(bad.iter().all(|f| f.rule == Rule::A0));
+    }
+}

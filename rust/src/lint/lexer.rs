@@ -1,0 +1,380 @@
+//! A small hand-rolled Rust token scanner for `detlint`.
+//!
+//! This is deliberately **not** a parser: the crate is zero-dep (no
+//! `syn`), and the determinism rules only need a token stream that is
+//! reliably *comment- and string-aware* — a banned identifier inside a
+//! string literal or a doc comment must never fire a rule, and an
+//! allow directive inside a string must never suppress one.
+//!
+//! The scanner understands: line comments (plain `//` vs doc `///` /
+//! `//!`), nested block comments, string literals with escapes, raw and
+//! byte strings (`r"…"`, `r#"…"#`, `b"…"`, `br#"…"#`), char and byte
+//! literals, lifetimes vs char literals, raw identifiers (`r#type`),
+//! identifiers, numbers and single-character punctuation. Multi-char
+//! operators are left as single punct tokens; rules match sequences
+//! (e.g. `Ordering` `:` `:` `Relaxed`).
+
+/// What a code token is. Literal payloads are irrelevant to the rules,
+/// so strings/chars collapse into [`TokKind::Literal`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Punct,
+    /// String, raw string, byte string, char or byte literal.
+    Literal,
+    Num,
+    Lifetime,
+}
+
+/// One code token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub line: u32,
+    pub text: String,
+    pub kind: TokKind,
+}
+
+/// One comment (line or block) with its 1-based starting line.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub line: u32,
+    /// Comment body without the `//` / `/* */` delimiters.
+    pub text: String,
+    /// A plain `//` line comment (not `///`, `//!` or a block comment).
+    /// Allow directives are only honored in plain line comments, so doc
+    /// examples can show the syntax without registering directives.
+    pub plain_line: bool,
+    /// Whether a code token precedes the comment on its own line — a
+    /// trailing comment targets its own line, a standalone one the next
+    /// code line.
+    pub has_code_before: bool,
+}
+
+/// Lexed view of one source file.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub comments: Vec<Comment>,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Scan `src` into tokens and comments. Never fails: unterminated
+/// constructs simply run to end of input (the lint is best-effort on
+/// files rustc would reject anyway).
+pub fn lex(src: &str) -> Lexed {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    let mut line_has_code = false;
+
+    macro_rules! push_tok {
+        ($line:expr, $text:expr, $kind:expr) => {{
+            out.tokens.push(Token { line: $line, text: $text, kind: $kind });
+            line_has_code = true;
+        }};
+    }
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            line_has_code = false;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment.
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let doc = matches!(chars.get(i + 2), Some('/') | Some('!'));
+            i += 2;
+            let start = i;
+            while i < n && chars[i] != '\n' {
+                i += 1;
+            }
+            out.comments.push(Comment {
+                line,
+                text: chars[start..i].iter().collect(),
+                plain_line: !doc,
+                has_code_before: line_has_code,
+            });
+            continue;
+        }
+        // Block comment (nested).
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let start_line = line;
+            let had_code = line_has_code;
+            i += 2;
+            let start = i;
+            let mut depth = 1usize;
+            while i < n && depth > 0 {
+                if chars[i] == '\n' {
+                    line += 1;
+                    line_has_code = false;
+                    i += 1;
+                } else if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            let end = if depth == 0 { i - 2 } else { i };
+            out.comments.push(Comment {
+                line: start_line,
+                text: chars[start..end].iter().collect(),
+                plain_line: false,
+                has_code_before: had_code,
+            });
+            continue;
+        }
+        // String literal.
+        if c == '"' {
+            let start_line = line;
+            i += 1;
+            while i < n {
+                match chars[i] {
+                    '\\' => i += 2,
+                    '"' => {
+                        i += 1;
+                        break;
+                    }
+                    '\n' => {
+                        line += 1;
+                        i += 1;
+                    }
+                    _ => i += 1,
+                }
+            }
+            push_tok!(start_line, String::from("\"…\""), TokKind::Literal);
+            continue;
+        }
+        // Lifetime or char literal.
+        if c == '\'' {
+            let next_is_ident = i + 1 < n && is_ident_continue(chars[i + 1]);
+            let closes = chars.get(i + 2) == Some(&'\'');
+            if next_is_ident && !closes {
+                // Lifetime: 'a, 'static — no closing quote.
+                let start = i + 1;
+                i += 1;
+                while i < n && is_ident_continue(chars[i]) {
+                    i += 1;
+                }
+                let text: String = chars[start..i].iter().collect();
+                push_tok!(line, text, TokKind::Lifetime);
+            } else {
+                // Char literal: 'x', '\n', '\u{1F600}'.
+                i += 1;
+                while i < n {
+                    match chars[i] {
+                        '\\' => i += 2,
+                        '\'' => {
+                            i += 1;
+                            break;
+                        }
+                        '\n' => {
+                            line += 1;
+                            i += 1;
+                        }
+                        _ => i += 1,
+                    }
+                }
+                push_tok!(line, String::from("'…'"), TokKind::Literal);
+            }
+            continue;
+        }
+        // Identifier — with raw-string / byte-string / raw-ident prefixes.
+        if is_ident_start(c) {
+            let start = i;
+            while i < n && is_ident_continue(chars[i]) {
+                i += 1;
+            }
+            let ident: String = chars[start..i].iter().collect();
+            let nextc = chars.get(i).copied();
+            let string_prefix = matches!(ident.as_str(), "r" | "b" | "br");
+            if string_prefix && (nextc == Some('"') || nextc == Some('#')) {
+                // Count '#'s; a raw identifier (r#type) has ident chars
+                // after the '#' instead of a quote.
+                let mut hashes = 0usize;
+                while chars.get(i + hashes) == Some(&'#') {
+                    hashes += 1;
+                }
+                if ident == "r"
+                    && hashes == 1
+                    && chars.get(i + 1).map(|&c| is_ident_start(c)).unwrap_or(false)
+                {
+                    // Raw identifier: r#match.
+                    i += 1;
+                    let rstart = i;
+                    while i < n && is_ident_continue(chars[i]) {
+                        i += 1;
+                    }
+                    let text: String = chars[rstart..i].iter().collect();
+                    push_tok!(line, text, TokKind::Ident);
+                    continue;
+                }
+                if chars.get(i + hashes) == Some(&'"') {
+                    // Raw (byte) string: scan to `"` + `hashes` '#'s.
+                    let start_line = line;
+                    i += hashes + 1;
+                    while i < n {
+                        if chars[i] == '\n' {
+                            line += 1;
+                            i += 1;
+                        } else if chars[i] == '"'
+                            && (0..hashes).all(|k| chars.get(i + 1 + k) == Some(&'#'))
+                        {
+                            i += 1 + hashes;
+                            break;
+                        } else {
+                            i += 1;
+                        }
+                    }
+                    push_tok!(start_line, String::from("r\"…\""), TokKind::Literal);
+                    continue;
+                }
+                // `b` / `br` followed by lone '#'s: fall through as ident.
+            }
+            if ident == "b" && nextc == Some('\'') {
+                // Byte literal: b'x'.
+                i += 1;
+                while i < n {
+                    match chars[i] {
+                        '\\' => i += 2,
+                        '\'' => {
+                            i += 1;
+                            break;
+                        }
+                        _ => i += 1,
+                    }
+                }
+                push_tok!(line, String::from("b'…'"), TokKind::Literal);
+                continue;
+            }
+            push_tok!(line, ident, TokKind::Ident);
+            continue;
+        }
+        // Number: digits, then idents/underscores, plus a dot followed
+        // by a digit (1.5, 0xff, 1_000, 1e9).
+        if c.is_ascii_digit() {
+            let start = i;
+            while i < n
+                && (is_ident_continue(chars[i])
+                    || (chars[i] == '.'
+                        && chars.get(i + 1).map(|c| c.is_ascii_digit()).unwrap_or(false)))
+            {
+                i += 1;
+            }
+            let text: String = chars[start..i].iter().collect();
+            push_tok!(line, text, TokKind::Num);
+            continue;
+        }
+        // Single-character punctuation.
+        push_tok!(line, c.to_string(), TokKind::Punct);
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_hide_tokens() {
+        let src = r##"
+let a = "Instant::now()"; // Instant in a comment
+/* block Instant */ let b = r#"SystemTime"#;
+let c = 'I'; let d = b"bytes";
+"##;
+        let ids = idents(src);
+        assert_eq!(ids, vec!["let", "a", "let", "b", "let", "c", "let", "d"]);
+    }
+
+    #[test]
+    fn comments_are_captured_with_kind_and_position() {
+        let src = "let x = 1; // trailing\n// standalone\n/// doc\nlet y = 2;\n";
+        let lx = lex(src);
+        assert_eq!(lx.comments.len(), 3);
+        assert!(lx.comments[0].has_code_before && lx.comments[0].plain_line);
+        assert_eq!(lx.comments[0].line, 1);
+        assert!(!lx.comments[1].has_code_before && lx.comments[1].plain_line);
+        assert_eq!(lx.comments[1].line, 2);
+        assert!(!lx.comments[2].plain_line, "doc comments are not plain");
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let src = "fn f<'a>(x: &'a str) { let c = 'a'; let s = 'static; }";
+        let lx = lex(src);
+        let lifetimes: Vec<_> = lx
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Lifetime)
+            .map(|t| t.text.clone())
+            .collect();
+        assert_eq!(lifetimes, vec!["a", "a", "static"]);
+        assert_eq!(
+            lx.tokens.iter().filter(|t| t.kind == TokKind::Literal).count(),
+            1,
+            "exactly the 'a' char literal"
+        );
+    }
+
+    #[test]
+    fn nested_block_comments_and_lines() {
+        let src = "/* outer /* inner */ still */ let x = 1;\nlet y = 2;";
+        let lx = lex(src);
+        assert_eq!(lx.comments.len(), 1);
+        let ids = idents(src);
+        assert_eq!(ids, vec!["let", "x", "let", "y"]);
+        assert_eq!(lx.tokens.last().unwrap().line, 2);
+    }
+
+    #[test]
+    fn raw_identifier_is_an_ident() {
+        assert_eq!(idents("let r#type = 1;"), vec!["let", "type"]);
+    }
+
+    #[test]
+    fn numbers_do_not_eat_ranges() {
+        let lx = lex("for i in 0..10 { let f = 1.5e3; }");
+        let nums: Vec<_> = lx
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Num)
+            .map(|t| t.text.clone())
+            .collect();
+        assert_eq!(nums, vec!["0", "10", "1.5e3"]);
+    }
+
+    #[test]
+    fn multiline_raw_string_tracks_lines() {
+        let src = "let s = r#\"a\nb\nc\"#;\nlet t = 1;";
+        let lx = lex(src);
+        assert_eq!(lx.tokens.last().unwrap().line, 4);
+    }
+}

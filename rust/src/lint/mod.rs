@@ -1,0 +1,186 @@
+//! `detlint` — the crate's zero-dependency determinism & concurrency
+//! static-analysis pass, run in CI as `hetrl lint`.
+//!
+//! The engine's contract is that a schedule search is **bit-identical**
+//! for a given seed at any thread count. That property is easy to lose
+//! to a stray wall-clock read, a `HashMap` iteration, or a NaN-unsafe
+//! comparator — bugs that survive code review because each one looks
+//! innocuous. `detlint` makes the contract mechanical:
+//!
+//! | rule | enforces |
+//! |------|----------|
+//! | `D1` | no wall-clock (`Instant`/`SystemTime`) outside telemetry modules |
+//! | `D2` | no `HashMap`/`HashSet` whose iteration order could feed ordered logic |
+//! | `D3` | no NaN-unsafe float ordering — use `util::ford::cmp_f64` |
+//! | `D4` | no ambient nondeterminism (parallelism probes, env reads, thread ids) outside sanctioned modules |
+//! | `D5` | `Ordering::Relaxed` / `Mutex` sites must match the audited inventory; lock nesting must be declared |
+//! | `A0` | every allow directive must be well-formed and suppress a real finding |
+//!
+//! The pass is **lexical**, built on a hand-rolled comment- and
+//! string-aware scanner ([`lexer`]) — no `syn`, no new dependencies.
+//! Intentional exceptions are suppressed inline (see [`allow`]) with a
+//! mandatory reason, and stale suppressions are themselves errors that
+//! `hetrl lint --fix-allow` can strip mechanically. Diagnostics render
+//! in a stable sorted order ([`report`]) with a nonzero exit code, so
+//! the `ci.sh` gate and snapshot tests are deterministic too.
+
+pub mod allow;
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+pub use report::{Finding, Report};
+pub use rules::{Rule, LOCK_ORDER, RULES};
+
+/// Lint one source text under its display path: lex, run the D-rules,
+/// then resolve allow directives (suppressions consume findings; unused
+/// or malformed directives surface as `A0`).
+pub fn check_source(path: &str, src: &str) -> Vec<Finding> {
+    let lx = lexer::lex(src);
+    let raw = rules::check(path, &lx);
+    let (dirs, mut malformed) = allow::parse(path, &lx);
+    let mut out = allow::apply(path, &dirs, raw);
+    out.append(&mut malformed);
+    out
+}
+
+/// Normalize a path for display and allowlist matching: forward
+/// slashes, no leading `./`.
+fn display_path(p: &Path) -> String {
+    let s = p.to_string_lossy().replace('\\', "/");
+    s.strip_prefix("./").unwrap_or(&s).to_string()
+}
+
+/// Collect every `.rs` file under `root` (or `root` itself if it is a
+/// file), sorted by path so the scan order — and therefore finding
+/// order before the final sort — is stable.
+fn collect_rs(root: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    if root.is_file() {
+        if root.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(root.to_path_buf());
+        }
+        return Ok(());
+    }
+    let mut entries: Vec<PathBuf> =
+        fs::read_dir(root)?.map(|e| e.map(|e| e.path())).collect::<io::Result<_>>()?;
+    entries.sort();
+    for e in entries {
+        if e.is_dir() {
+            collect_rs(&e, out)?;
+        } else if e.extension().map(|x| x == "rs").unwrap_or(false) {
+            out.push(e);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under the given paths (files or directories)
+/// and return the finalized report.
+pub fn run_paths(paths: &[PathBuf]) -> io::Result<Report> {
+    let mut files = Vec::new();
+    for p in paths {
+        collect_rs(p, &mut files)?;
+    }
+    files.sort();
+    files.dedup();
+    let mut rep = Report::default();
+    for f in &files {
+        let src = fs::read_to_string(f)?;
+        rep.findings.extend(check_source(&display_path(f), &src));
+        rep.files_scanned += 1;
+    }
+    rep.finalize();
+    Ok(rep)
+}
+
+/// If `line` ends in an allow directive comment, return it with the
+/// comment stripped (trailing whitespace trimmed).
+fn strip_trailing_directive(line: &str) -> Option<String> {
+    let mut at = None;
+    for (i, _) in line.match_indices("//") {
+        if line[i + 2..].trim_start().starts_with("detlint:allow(") {
+            at = Some(i);
+        }
+    }
+    at.map(|i| line[..i].trim_end().to_string())
+}
+
+/// Mechanically remove unused allow directives (the `A0 … unused`
+/// findings, which are the only fixable rule) from the files under
+/// `paths`. Returns the number of directives removed. Malformed
+/// directives and real rule findings are *not* touched — those need a
+/// human.
+pub fn fix_unused_allows(paths: &[PathBuf]) -> io::Result<usize> {
+    let rep = run_paths(paths)?;
+    let mut fixed = 0usize;
+    // Group fixable findings by file; edit each file once, bottom-up so
+    // line numbers stay valid while lines are removed.
+    let mut by_file: Vec<(&str, Vec<u32>)> = Vec::new();
+    for f in rep.findings.iter().filter(|f| f.fixable) {
+        match by_file.iter_mut().find(|(p, _)| *p == f.file) {
+            Some((_, lines)) => lines.push(f.line),
+            None => by_file.push((&f.file, vec![f.line])),
+        }
+    }
+    for (path, mut lines) in by_file {
+        let src = fs::read_to_string(path)?;
+        let mut rows: Vec<String> = src.lines().map(str::to_string).collect();
+        lines.sort_unstable();
+        lines.dedup();
+        for &ln in lines.iter().rev() {
+            let idx = ln as usize - 1;
+            if idx >= rows.len() {
+                continue;
+            }
+            match strip_trailing_directive(&rows[idx]) {
+                Some(stripped) if !stripped.is_empty() => rows[idx] = stripped,
+                Some(_) => {
+                    rows.remove(idx);
+                }
+                None => continue,
+            }
+            fixed += 1;
+        }
+        let mut text = rows.join("\n");
+        if src.ends_with('\n') {
+            text.push('\n');
+        }
+        fs::write(path, text)?;
+    }
+    Ok(fixed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_source_suppresses_with_allow_and_flags_unused() {
+        let dirty = "use std::collections::HashMap;\n";
+        assert_eq!(check_source("src/x.rs", dirty).len(), 1);
+        let allowed = "use std::collections::HashMap; // detlint:allow(D2): keyed lookups only\n";
+        assert!(check_source("src/x.rs", allowed).is_empty());
+        let stale = "let a = 1; // detlint:allow(D2): nothing here\n";
+        let f = check_source("src/x.rs", stale);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, Rule::A0);
+        assert!(f[0].fixable);
+    }
+
+    #[test]
+    fn strip_trailing_directive_handles_both_shapes() {
+        assert_eq!(
+            strip_trailing_directive("let x = 1; // detlint:allow(D2): reason"),
+            Some("let x = 1;".to_string())
+        );
+        assert_eq!(
+            strip_trailing_directive("    // detlint:allow(D1): reason"),
+            Some("".to_string())
+        );
+        assert_eq!(strip_trailing_directive("let x = 1; // plain comment"), None);
+    }
+}

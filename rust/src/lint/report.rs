@@ -1,0 +1,109 @@
+//! Diagnostic collection and rendering for `detlint`.
+//!
+//! Output is pinned byte-for-byte by `tests/lint_selfcheck.rs`: one
+//! `file:line rule message` line per finding, sorted by
+//! `(file, line, rule, message)` and deduplicated, so CI diffs and
+//! snapshot tests are stable across thread counts and walk order.
+
+use super::rules::Rule;
+
+/// One diagnostic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Normalized display path (forward slashes).
+    pub file: String,
+    /// 1-based source line.
+    pub line: u32,
+    pub rule: Rule,
+    pub msg: String,
+    /// Whether `hetrl lint --fix-allow` can mechanically repair this
+    /// finding (currently: unused allow directives only).
+    pub fixable: bool,
+}
+
+impl Finding {
+    /// The rendered diagnostic line.
+    pub fn render(&self) -> String {
+        format!("{}:{} {} {}", self.file, self.line, self.rule.id(), self.msg)
+    }
+}
+
+/// All findings for one lint run.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+}
+
+impl Report {
+    /// Stable order: `(file, line, rule, message)`, duplicates removed.
+    pub fn finalize(&mut self) {
+        self.findings
+            .sort_by(|a, b| {
+                a.file
+                    .cmp(&b.file)
+                    .then(a.line.cmp(&b.line))
+                    .then(a.rule.cmp(&b.rule))
+                    .then(a.msg.cmp(&b.msg))
+            });
+        self.findings.dedup();
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Render the full report (call [`Report::finalize`] first). Clean
+    /// runs render a one-line all-clear; dirty runs render one line per
+    /// finding plus a trailing count.
+    pub fn render(&self) -> String {
+        if self.is_clean() {
+            return format!("detlint: {} files, no findings\n", self.files_scanned);
+        }
+        let mut s = String::new();
+        for f in &self.findings {
+            s.push_str(&f.render());
+            s.push('\n');
+        }
+        s.push_str(&format!(
+            "detlint: {} finding{} in {} files\n",
+            self.findings.len(),
+            if self.findings.len() == 1 { "" } else { "s" },
+            self.files_scanned
+        ));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f(file: &str, line: u32, rule: Rule, msg: &str) -> Finding {
+        Finding { file: file.to_string(), line, rule, msg: msg.to_string(), fixable: false }
+    }
+
+    #[test]
+    fn finalize_sorts_and_dedups() {
+        let mut r = Report::default();
+        r.findings.push(f("b.rs", 2, Rule::D2, "x"));
+        r.findings.push(f("a.rs", 9, Rule::D1, "y"));
+        r.findings.push(f("a.rs", 9, Rule::D1, "y"));
+        r.findings.push(f("a.rs", 3, Rule::D5, "z"));
+        r.files_scanned = 2;
+        r.finalize();
+        let lines: Vec<String> = r.findings.iter().map(Finding::render).collect();
+        assert_eq!(lines, vec!["a.rs:3 D5 z", "a.rs:9 D1 y", "b.rs:2 D2 x"]);
+        assert!(r.render().ends_with("detlint: 3 findings in 2 files\n"));
+    }
+
+    #[test]
+    fn clean_report_renders_all_clear() {
+        let mut r = Report::default();
+        r.files_scanned = 7;
+        r.finalize();
+        assert!(r.is_clean());
+        assert_eq!(r.render(), "detlint: 7 files, no findings\n");
+    }
+}

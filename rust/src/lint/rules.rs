@@ -1,0 +1,324 @@
+//! The `detlint` rule registry and the D1–D5 rule implementations.
+//!
+//! Every rule is lexical: it scans the token stream of one file (the
+//! [`super::lexer`] output, so strings and comments are already out of
+//! the way) against a pinned, in-source inventory of audited sites.
+//! The rules deliberately over-approximate — a flagged site is either
+//! fixed, moved into an allowlisted module, or suppressed with an
+//! inline allow comment (see [`super::allow`]) whose reason is part of
+//! the diff under review.
+
+use super::lexer::{Lexed, TokKind, Token};
+use super::report::Finding;
+
+/// Rule identifiers. `A0` is the allow-hygiene meta rule (unused or
+/// malformed allow directives); it cannot itself be suppressed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    D1,
+    D2,
+    D3,
+    D4,
+    D5,
+    A0,
+}
+
+impl Rule {
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::D1 => "D1",
+            Rule::D2 => "D2",
+            Rule::D3 => "D3",
+            Rule::D4 => "D4",
+            Rule::D5 => "D5",
+            Rule::A0 => "A0",
+        }
+    }
+
+    /// Parse a rule id as written in an allow directive. `A0` is not
+    /// suppressible, so it does not parse here.
+    pub fn parse_allowable(s: &str) -> Option<Rule> {
+        match s {
+            "D1" => Some(Rule::D1),
+            "D2" => Some(Rule::D2),
+            "D3" => Some(Rule::D3),
+            "D4" => Some(Rule::D4),
+            "D5" => Some(Rule::D5),
+            _ => None,
+        }
+    }
+}
+
+/// The rule registry: id + one-line summary, as printed by
+/// `hetrl lint --rules` and mirrored in `docs/ARCHITECTURE.md`.
+pub const RULES: &[(Rule, &str)] = &[
+    (Rule::D1, "no wall-clock (Instant/SystemTime) outside telemetry modules (util/logging, util/benchkit, engine/grpo)"),
+    (Rule::D2, "no HashMap/HashSet — hash iteration order can feed ordered logic; use BTreeMap/BTreeSet or sort-after-collect"),
+    (Rule::D3, "no NaN-unsafe float ordering (.partial_cmp(..).unwrap()); use util::ford::cmp_f64"),
+    (Rule::D4, "no ambient nondeterminism (available_parallelism, thread::current, RandomState, env reads) outside engine::resolve_threads / testing::fixtures"),
+    (Rule::D5, "audited concurrency only: Ordering::Relaxed and Mutex lock sites must match the declared inventory; no undeclared lock nesting"),
+    (Rule::A0, "allow-directive hygiene: every detlint:allow must be well-formed and suppress a real finding"),
+];
+
+// ---- Pinned inventories -------------------------------------------------
+//
+// Paths are matched as suffixes of the scanned file's normalized path,
+// so the lint behaves identically whether invoked from the repo root
+// (`rust/src/...`), from `rust/` (`src/...`), or with absolute paths.
+
+/// D1: modules allowed to touch `Instant`/`SystemTime` — telemetry
+/// facades whose readings must never feed back into search decisions.
+const D1_ALLOW: &[&str] = &[
+    "src/util/logging.rs",
+    "src/util/benchkit.rs",
+    "src/engine/grpo.rs",
+];
+
+/// D4: the only sanctioned homes of ambient machine state — the
+/// scheduler's single thread-count resolver and the test-matrix
+/// fixtures (`HETRL_TEST_THREADS`).
+const D4_ALLOW: &[&str] = &[
+    "src/scheduler/engine.rs",
+    "src/testing/fixtures.rs",
+];
+
+/// D5 inventory: files allowed to contain `Ordering::Relaxed` atomics.
+/// Each entry is audited in docs/ARCHITECTURE.md: the cost-cache
+/// hit/miss counters, the eval ledger's spent counter, and the log
+/// facade's max-level cell — all monotone telemetry or
+/// quota-reconciled counters, never ordered-logic inputs.
+const D5_RELAXED: &[&str] = &[
+    "src/costmodel/cache.rs",
+    "src/scheduler/mod.rs",
+    "src/log.rs",
+];
+
+/// D5 inventory: files allowed to take `Mutex` locks — the sharded
+/// cost cache and the threadpool's queue/slots/receiver.
+const D5_LOCK: &[&str] = &[
+    "src/costmodel/cache.rs",
+    "src/util/threadpool.rs",
+];
+
+/// D5 lock-order table: files whose statements may acquire **two**
+/// locks, pinned in acquisition order. The audited inventory currently
+/// acquires at most one lock per statement, so the table is empty; any
+/// new nesting must be declared here (and documented in
+/// docs/ARCHITECTURE.md) before it will pass the lint — which is
+/// exactly the review moment where lock-order deadlocks are cheap to
+/// catch.
+pub const LOCK_ORDER: &[&str] = &[];
+
+fn path_in(path: &str, list: &[&str]) -> bool {
+    list.iter().any(|p| path.ends_with(p))
+}
+
+fn is_ident(t: &Token, s: &str) -> bool {
+    t.kind == TokKind::Ident && t.text == s
+}
+
+/// Does the token sequence starting at `i` spell `pat` exactly?
+fn seq(toks: &[Token], i: usize, pat: &[&str]) -> bool {
+    pat.len() <= toks.len() - i && pat.iter().enumerate().all(|(k, p)| toks[i + k].text == *p)
+}
+
+/// Index just past the balanced group opened by the `(` at `open`
+/// (returns `toks.len()` if unbalanced).
+fn skip_parens(toks: &[Token], open: usize) -> usize {
+    let mut depth = 0usize;
+    let mut i = open;
+    while i < toks.len() {
+        match toks[i].text.as_str() {
+            "(" => depth += 1,
+            ")" => {
+                depth -= 1;
+                if depth == 0 {
+                    return i + 1;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    toks.len()
+}
+
+/// Run every rule over one lexed file. `path` is the normalized display
+/// path (used for the inventory allowlists and the findings).
+pub fn check(path: &str, lx: &Lexed) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let toks = &lx.tokens;
+    let mut finding = |rule: Rule, line: u32, msg: String| {
+        out.push(Finding { file: path.to_string(), line, rule, msg, fixable: false });
+    };
+
+    // Lock calls per statement, for the D5 nesting check. Statement
+    // boundaries are `;`, `{`, `}` — conservative, but lock guards held
+    // across them are exactly what the rule wants a human to look at.
+    let mut locks_this_stmt = 0usize;
+
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        match t.text.as_str() {
+            ";" | "{" | "}" => locks_this_stmt = 0,
+            _ => {}
+        }
+
+        // D1 — wall-clock sources.
+        if (is_ident(t, "Instant") || is_ident(t, "SystemTime")) && !path_in(path, D1_ALLOW) {
+            finding(
+                Rule::D1,
+                t.line,
+                format!(
+                    "wall-clock `{}` outside the telemetry allowlist (util/logging, util/benchkit, engine/grpo); time must not influence search results",
+                    t.text
+                ),
+            );
+        }
+
+        // D2 — hash-ordered collections.
+        if is_ident(t, "HashMap") || is_ident(t, "HashSet") {
+            finding(
+                Rule::D2,
+                t.line,
+                format!(
+                    "hash-ordered `{}`: iteration order can feed ordered logic; use BTreeMap/BTreeSet, sort-after-collect, or justify with an allow",
+                    t.text
+                ),
+            );
+        }
+
+        // D3 — NaN-unsafe comparators: `.partial_cmp( … ).unwrap()`.
+        // `fn partial_cmp` trait implementations are definitions, not
+        // comparisons, and are skipped.
+        if is_ident(t, "partial_cmp")
+            && i > 0
+            && toks[i - 1].text == "."
+            && !(i > 1 && is_ident(&toks[i - 2], "fn"))
+            && toks.get(i + 1).map(|n| n.text == "(").unwrap_or(false)
+        {
+            let after = skip_parens(toks, i + 1);
+            if seq(toks, after, &[".", "unwrap"]) {
+                finding(
+                    Rule::D3,
+                    t.line,
+                    "NaN-unsafe comparator `.partial_cmp(..).unwrap()`; use util::ford::cmp_f64 (total order)".to_string(),
+                );
+            }
+        }
+
+        // D4 — ambient nondeterminism.
+        if !path_in(path, D4_ALLOW) {
+            if is_ident(t, "available_parallelism") || is_ident(t, "RandomState") {
+                finding(
+                    Rule::D4,
+                    t.line,
+                    format!(
+                        "ambient nondeterminism `{}` outside engine::resolve_threads / testing::fixtures",
+                        t.text
+                    ),
+                );
+            }
+            if is_ident(t, "thread") && seq(toks, i, &["thread", ":", ":", "current"]) {
+                finding(
+                    Rule::D4,
+                    t.line,
+                    "ambient nondeterminism `thread::current()` outside engine::resolve_threads / testing::fixtures".to_string(),
+                );
+            }
+            if is_ident(t, "env")
+                && (seq(toks, i, &["env", ":", ":", "var"])
+                    || seq(toks, i, &["env", ":", ":", "var_os"])
+                    || seq(toks, i, &["env", ":", ":", "vars"]))
+            {
+                finding(
+                    Rule::D4,
+                    t.line,
+                    "environment read outside engine::resolve_threads / testing::fixtures".to_string(),
+                );
+            }
+        }
+
+        // D5 — audited concurrency inventory.
+        if is_ident(t, "Ordering")
+            && seq(toks, i, &["Ordering", ":", ":", "Relaxed"])
+            && !path_in(path, D5_RELAXED)
+        {
+            finding(
+                Rule::D5,
+                t.line,
+                "`Ordering::Relaxed` outside the audited atomics inventory (docs/ARCHITECTURE.md)".to_string(),
+            );
+        }
+        if is_ident(t, "lock")
+            && i > 0
+            && toks[i - 1].text == "."
+            && toks.get(i + 1).map(|n| n.text == "(").unwrap_or(false)
+        {
+            if !path_in(path, D5_LOCK) {
+                finding(
+                    Rule::D5,
+                    t.line,
+                    "`.lock()` outside the audited mutex inventory (docs/ARCHITECTURE.md)".to_string(),
+                );
+            }
+            locks_this_stmt += 1;
+            if locks_this_stmt == 2 && !path_in(path, LOCK_ORDER) {
+                finding(
+                    Rule::D5,
+                    t.line,
+                    "nested lock acquisition in one statement; declare the pair in lint::rules::LOCK_ORDER (pinned acquisition order) first".to_string(),
+                );
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::lexer::lex;
+
+    fn run(path: &str, src: &str) -> Vec<Finding> {
+        check(path, &lex(src))
+    }
+
+    #[test]
+    fn d1_fires_outside_allowlist_only() {
+        let src = "use std::time::Instant;\nfn f() -> f64 { 0.0 }\n";
+        assert_eq!(run("src/scheduler/foo.rs", src).len(), 1);
+        assert!(run("src/util/benchkit.rs", src).is_empty());
+        // In a string or comment: never fires.
+        assert!(run("src/x.rs", "// Instant\nlet s = \"Instant\";").is_empty());
+    }
+
+    #[test]
+    fn d3_flags_usage_not_definitions() {
+        let usage = "xs.sort_by(|a, b| a.partial_cmp(b).unwrap());";
+        let f = run("src/x.rs", usage);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule.id(), "D3");
+        // Trait impl definition and un-unwrapped use are fine.
+        let def = "fn partial_cmp(&self, o: &Self) -> Option<Ordering> { self.0.partial_cmp(&o.0) }";
+        assert!(run("src/x.rs", def).is_empty());
+    }
+
+    #[test]
+    fn d5_nested_lock_in_one_statement() {
+        let ok = "let a = m1.lock().unwrap(); let b = m2.lock().unwrap();";
+        assert!(run("src/costmodel/cache.rs", ok).is_empty());
+        let nested = "let v = m1.lock().unwrap().merge(m2.lock().unwrap());";
+        let f = run("src/costmodel/cache.rs", nested);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].msg.contains("nested lock"));
+    }
+
+    #[test]
+    fn d4_env_and_parallelism() {
+        let src = "let n = std::thread::available_parallelism(); let v = std::env::var(\"X\");";
+        let f = run("src/x.rs", src);
+        assert_eq!(f.len(), 2);
+        assert!(run("src/testing/fixtures.rs", src).is_empty());
+    }
+}

@@ -7,6 +7,7 @@
 //!   validate-cost-model  predicted vs simulated iteration time
 //!   train                real GRPO training over the AOT artifacts
 //!   info                 artifact manifest summary
+//!   lint                 detlint determinism/concurrency static analysis
 
 use hetrl::balance::{self, BalanceConfig};
 use hetrl::costmodel::CostModel;
@@ -43,6 +44,7 @@ fn main() {
         Some("replay") => cmd_replay(&args),
         Some("train") => cmd_train(&args),
         Some("info") => cmd_info(&args),
+        Some("lint") => cmd_lint(&args),
         _ => {
             print!("{}", help());
             if args.subcommand.is_none() { 0 } else { 2 }
@@ -62,6 +64,7 @@ fn help() -> String {
             ("replay", "dynamic trace: plan -> event -> replan -> resume"),
             ("train", "real GRPO training over artifacts/"),
             ("info", "artifact manifest summary"),
+            ("lint", "detlint: determinism & concurrency static analysis"),
         ],
         &[
             OptSpec { name: "scenario", help: "single|hybrid|country|continent", default: Some("country") },
@@ -83,6 +86,8 @@ fn help() -> String {
             OptSpec { name: "artifacts", help: "artifacts directory", default: Some("artifacts") },
             OptSpec { name: "no-balance", help: "disable load balancing (flag)", default: None },
             OptSpec { name: "hard", help: "train: MATH-like tasks (flag)", default: None },
+            OptSpec { name: "fix-allow", help: "lint: strip unused detlint:allow directives (flag)", default: None },
+            OptSpec { name: "rules", help: "lint: print the rule registry and exit (flag)", default: None },
         ],
     )
 }
@@ -397,6 +402,60 @@ fn cmd_train(args: &Args) -> i32 {
         Err(e) => eprintln!("eval failed: {e:#}"),
     }
     0
+}
+
+fn cmd_lint(args: &Args) -> i32 {
+    use std::path::{Path, PathBuf};
+    if args.flag("rules") {
+        for (r, summary) in hetrl::lint::RULES {
+            println!("{:<3} {}", r.id(), summary);
+        }
+        return 0;
+    }
+    // The parser binds `--fix-allow <path>` as an option with the path
+    // as its value; accept both shapes and recover the path operand.
+    let fix = args.flag("fix-allow") || args.get("fix-allow").is_some();
+    let mut paths: Vec<PathBuf> = args.positional.iter().map(PathBuf::from).collect();
+    if let Some(v) = args.get("fix-allow") {
+        paths.push(PathBuf::from(v));
+    }
+    if paths.is_empty() {
+        let roots: &[&str] = if Path::new("src").is_dir() {
+            &["src", "tests", "benches"]
+        } else if Path::new("rust/src").is_dir() {
+            &["rust/src", "rust/tests", "rust/benches"]
+        } else {
+            eprintln!("hetrl lint: no src/ tree here (run from the repo root or rust/), or pass paths");
+            return 2;
+        };
+        paths = roots.iter().map(PathBuf::from).filter(|p| p.is_dir()).collect();
+    }
+    if fix {
+        match hetrl::lint::fix_unused_allows(&paths) {
+            Ok(n) => println!(
+                "detlint: removed {n} unused allow directive{}",
+                if n == 1 { "" } else { "s" }
+            ),
+            Err(e) => {
+                eprintln!("hetrl lint: {e}");
+                return 2;
+            }
+        }
+    }
+    match hetrl::lint::run_paths(&paths) {
+        Ok(rep) => {
+            print!("{}", rep.render());
+            if rep.is_clean() {
+                0
+            } else {
+                1
+            }
+        }
+        Err(e) => {
+            eprintln!("hetrl lint: {e}");
+            2
+        }
+    }
 }
 
 fn cmd_info(args: &Args) -> i32 {

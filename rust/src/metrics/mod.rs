@@ -56,6 +56,7 @@ impl RunRecord {
 /// Bench output directory: `HETRL_RESULTS` env override, else
 /// `bench_out/` (kept out of the way of source trees and git).
 pub fn results_dir() -> String {
+    // detlint:allow(D4): output directory override only — never feeds search results
     std::env::var("HETRL_RESULTS").unwrap_or_else(|_| "bench_out".to_string())
 }
 

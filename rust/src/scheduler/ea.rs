@@ -164,7 +164,7 @@ impl EaArm {
                 .population
                 .iter()
                 .enumerate()
-                .max_by(|a, b| a.1 .1.partial_cmp(&b.1 .1).unwrap())
+                .max_by(|a, b| crate::util::ford::cmp_f64(a.1 .1, b.1 .1))
                 .map(|(i, _)| i)
                 .unwrap();
             if cost < self.population[worst].1 {
@@ -229,19 +229,19 @@ impl EaArm {
         let slow = *plan.gpu_groups[tg]
             .iter()
             .min_by(|&&a, &&b| {
-                ctx.topo.devices[a]
-                    .effective_flops()
-                    .partial_cmp(&ctx.topo.devices[b].effective_flops())
-                    .unwrap()
+                crate::util::ford::cmp_f64(
+                    ctx.topo.devices[a].effective_flops(),
+                    ctx.topo.devices[b].effective_flops(),
+                )
             })
             .unwrap();
         let fast = *plan.gpu_groups[og]
             .iter()
             .max_by(|&&a, &&b| {
-                ctx.topo.devices[a]
-                    .effective_flops()
-                    .partial_cmp(&ctx.topo.devices[b].effective_flops())
-                    .unwrap()
+                crate::util::ford::cmp_f64(
+                    ctx.topo.devices[a].effective_flops(),
+                    ctx.topo.devices[b].effective_flops(),
+                )
             })
             .unwrap();
         if ctx.topo.devices[fast].effective_flops() <= ctx.topo.devices[slow].effective_flops() {

@@ -238,7 +238,7 @@ impl Scheduler for IlpScheduler {
             for t in 0..wf.n_tasks() {
                 let mut idx: Vec<usize> =
                     (0..options.len()).filter(|&i| options[i].task == t).collect();
-                idx.sort_by(|&a, &b| options[a].cost.partial_cmp(&options[b].cost).unwrap());
+                idx.sort_by(|&a, &b| crate::util::ford::cmp_f64(options[a].cost, options[b].cost));
                 let mut per_degree: Vec<(usize, usize)> = Vec::new();
                 let mut kept = 0;
                 for &i in &idx {
@@ -407,7 +407,7 @@ impl Scheduler for IlpScheduler {
                 .map(|opts| {
                     *opts
                         .iter()
-                        .max_by(|&&a, &&b| x[a].partial_cmp(&x[b]).unwrap())
+                        .max_by(|&&a, &&b| crate::util::ford::cmp_f64(x[a], x[b]))
                         .unwrap()
                 })
                 .collect();
@@ -451,7 +451,7 @@ fn try_place(
             .cloned()
             .filter(|&d| !used_in_wave[d] && !devices.contains(&d))
             .collect();
-        pool.sort_by(|&a, &b| load[a].partial_cmp(&load[b]).unwrap());
+        pool.sort_by(|&a, &b| crate::util::ford::cmp_f64(load[a], load[b]));
         let mut taken = 0;
         for &d in &pool {
             if taken >= cnt {
@@ -468,7 +468,7 @@ fn try_place(
         let mut spares: Vec<usize> = (0..topo.n())
             .filter(|&d| !used_in_wave[d] && !devices.contains(&d))
             .collect();
-        spares.sort_by(|&a, &b| load[a].partial_cmp(&load[b]).unwrap());
+        spares.sort_by(|&a, &b| crate::util::ford::cmp_f64(load[a], load[b]));
         for d in spares {
             if devices.len() >= o.strategy.degree() {
                 break;
@@ -529,7 +529,7 @@ fn extract_plans(
                     .cloned()
                     .filter(|&oi| oi != chosen[t])
                     .collect();
-                rest.sort_by(|&a, &b| options[a].cost.partial_cmp(&options[b].cost).unwrap());
+                rest.sort_by(|&a, &b| crate::util::ford::cmp_f64(options[a].cost, options[b].cost));
                 prefs.extend(rest);
                 let mut placed = false;
                 for oi in prefs {

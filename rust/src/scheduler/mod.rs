@@ -38,17 +38,20 @@
 //!
 //! ## Determinism contract
 //!
-//! With a pure eval budget (no wall cap triggering), the same seed
-//! yields the **bit-identical best plan, best cost and eval count at
-//! any thread count**. This holds because (a) per-arm eval quotas are
-//! derived deterministically from the ledger's remaining budget at each
-//! barrier (never from completion order), (b) quotas per rung sum to at
-//! most the remaining budget, so the global cap cannot cut an arm off
-//! mid-rung, and (c) the barrier reduction is ordered by arm index with
-//! strict-improvement tie-breaks. Trace `wall`/`evals` stamps and cache
-//! hit/miss counters are telemetry and may vary across runs when
-//! threads > 1; `plan`, `cost` and `evals` in [`ScheduleOutcome`] do
-//! not.
+//! The same seed yields the **bit-identical best plan, best cost and
+//! eval count at any thread count**. This holds because (a) per-arm
+//! eval quotas are derived deterministically from the ledger's
+//! remaining budget at each barrier (never from completion order),
+//! (b) quotas per rung sum to at most the remaining budget, so the
+//! global cap cannot cut an arm off mid-rung, (c) the barrier reduction
+//! is ordered by arm index with strict-improvement tie-breaks, and
+//! (d) **wall-clock time never terminates the search**: the
+//! [`EvalLedger`] is exhausted by eval counts alone, and `hetrl lint`
+//! rule D1 statically keeps `Instant`/`SystemTime` out of scheduler
+//! code (the ledger's stopwatch is a [`crate::util::benchkit`]
+//! telemetry type). Trace `wall`/`evals` stamps and cache hit/miss
+//! counters are telemetry and may vary across runs when threads > 1;
+//! `plan`, `cost` and `evals` in [`ScheduleOutcome`] do not.
 //!
 //! [`costmodel::CostModel`]: crate::costmodel::CostModel
 //! [`costmodel::CostCache`]: crate::costmodel::CostCache
@@ -63,13 +66,23 @@ pub mod baselines;
 use crate::costmodel::{CostCache, CostModel};
 use crate::plan::ExecutionPlan;
 use crate::topology::DeviceTopology;
+use crate::util::benchkit::Stopwatch;
 use crate::workflow::{JobConfig, RlWorkflow};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
 
-/// Search budget: cost-model evaluations (deterministic unit used by the
-/// algorithms) plus a wall-clock cap.
+/// Search budget. `evals` — cost-model evaluations — is the
+/// deterministic unit every algorithm spends and the **only** quantity
+/// that terminates the deterministic searchers (SHA-EA, pure EA, warm
+/// replans, anytime search).
+///
+/// `wall_secs` is an *advisory* wall-clock cap: its single consumer is
+/// the [`IlpScheduler`]'s branch & bound cutoff, an explicitly anytime
+/// exact baseline that is exempt from the bit-determinism contract.
+/// Since the D1 fix it never influences the [`EvalLedger`], so a tight
+/// wall cap cannot change which plan the deterministic searchers select
+/// (pinned by `wall_cap_is_telemetry_only` in
+/// `tests/prop_scheduler_parallel.rs`).
 #[derive(Debug, Clone, Copy)]
 pub struct Budget {
     pub evals: usize,
@@ -77,10 +90,13 @@ pub struct Budget {
 }
 
 impl Budget {
+    /// A pure eval budget (no advisory wall cap).
     pub fn evals(evals: usize) -> Budget {
         Budget { evals, wall_secs: f64::INFINITY }
     }
 
+    /// An eval budget with an advisory wall cap — honored only by the
+    /// ILP baseline's branch & bound cutoff (see the type docs).
     pub fn timed(evals: usize, wall_secs: f64) -> Budget {
         Budget { evals, wall_secs }
     }
@@ -140,22 +156,27 @@ pub trait Scheduler {
 /// the single source of truth for budget exhaustion. Quota assignment
 /// at rung barriers guarantees the cap is never exceeded (see the
 /// module docs); the ledger's counter is how the outcome reports total
-/// evals and how wall-clock exhaustion is observed mid-rung.
+/// evals.
+///
+/// Exhaustion is a pure function of the eval count — wall-clock time is
+/// recorded only as telemetry (a [`Stopwatch`], detlint D1's audited
+/// home for timing) and **never** terminates a search. The ledger used
+/// to honor `Budget::wall_secs` as a second exhaustion condition, which
+/// let machine load change which plan a seeded search returned; that
+/// hazard is now banned statically by `hetrl lint`.
 #[derive(Debug)]
 pub struct EvalLedger {
     cap: usize,
-    wall_secs: f64,
     spent: AtomicUsize,
-    started: Instant,
+    sw: Stopwatch,
 }
 
 impl EvalLedger {
     pub fn new(budget: Budget) -> EvalLedger {
         EvalLedger {
             cap: budget.evals,
-            wall_secs: budget.wall_secs,
             spent: AtomicUsize::new(0),
-            started: Instant::now(),
+            sw: Stopwatch::start(),
         }
     }
 
@@ -173,12 +194,17 @@ impl EvalLedger {
         self.cap.saturating_sub(self.spent())
     }
 
+    /// Seconds since the ledger was created. Telemetry only: reported
+    /// in [`ScheduleOutcome::wall`] and trace stamps, never consulted
+    /// for exhaustion.
     pub fn wall(&self) -> f64 {
-        self.started.elapsed().as_secs_f64()
+        self.sw.elapsed_secs()
     }
 
+    /// True once the eval cap is spent. Deliberately independent of
+    /// wall-clock time (see the type docs).
     pub fn exhausted(&self) -> bool {
-        self.spent() >= self.cap || self.wall() >= self.wall_secs
+        self.spent() >= self.cap
     }
 }
 

@@ -212,7 +212,7 @@ fn best_half<T>(items: Vec<T>, score: impl Fn(&T) -> f64) -> Vec<T> {
         .enumerate()
         .map(|(i, x)| (score(&x), i, x))
         .collect();
-    scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+    scored.sort_by(|a, b| crate::util::ford::cmp_f64(a.0, b.0).then(a.1.cmp(&b.1)));
     scored.truncate(keep);
     scored.into_iter().map(|(_, _, x)| x).collect()
 }

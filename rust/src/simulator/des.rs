@@ -105,10 +105,7 @@ impl SimGraph {
         }
         impl Ord for QEntry {
             fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-                self.0
-                    .partial_cmp(&other.0)
-                    .unwrap()
-                    .then(self.1.cmp(&other.1))
+                crate::util::ford::cmp_f64(self.0, other.0).then(self.1.cmp(&other.1))
             }
         }
 

@@ -105,7 +105,7 @@ mod tests {
         assert!(lens.iter().all(|&l| (1.0..=1024.0).contains(&l)));
         // Actually long-tailed: p95 well above mean.
         let mut sorted = lens.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        crate::util::ford::sort_f64(&mut sorted);
         let p95 = crate::util::stats::percentile_sorted(&sorted, 95.0);
         assert!(p95 > mean * 1.3);
     }

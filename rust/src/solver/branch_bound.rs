@@ -4,6 +4,7 @@
 //! LP-rounding heuristic plus exact subtree leaves.
 
 use super::simplex::{solve, Cmp, Lp, LpOutcome};
+// detlint:allow(D1): B&B is an anytime *exact* baseline — its wall-clock cutoff is a sanctioned exception to bit-determinism (see scheduler::Budget docs)
 use std::time::Instant;
 
 /// Solver configuration.
@@ -50,7 +51,7 @@ impl Node {
 
 /// Solve `lp` with the variables in `binaries` restricted to {0,1}.
 pub fn solve_milp(lp: &Lp, binaries: &[usize], cfg: &BnbConfig) -> BnbResult {
-    let t0 = Instant::now();
+    let t0 = Instant::now(); // detlint:allow(D1): anytime cutoff for the exact ILP baseline, exempt from bit-determinism
     let minimize = !lp.maximize;
     let better = |a: f64, b: f64| if minimize { a < b } else { a > b };
 

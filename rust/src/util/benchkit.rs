@@ -7,6 +7,29 @@ use std::time::Instant;
 
 use super::stats;
 
+/// Wall-clock stopwatch for telemetry. This module is one of the three
+/// detlint **D1** allowlisted homes of `Instant` (`util/logging`,
+/// `util/benchkit`, `engine/grpo`): code elsewhere may *report* elapsed
+/// time through a `Stopwatch`, but must never branch on it — wall-clock
+/// time influencing search results breaks the bit-determinism contract
+/// (see `hetrl lint`).
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    /// Start timing now.
+    pub fn start() -> Stopwatch {
+        Stopwatch { start: Instant::now() }
+    }
+
+    /// Seconds elapsed since [`Stopwatch::start`]. Telemetry only.
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
 /// Result of one benchmark.
 #[derive(Debug, Clone)]
 pub struct BenchResult {

@@ -1,0 +1,100 @@
+//! Total-order float comparisons ("ford" = float ordering).
+//!
+//! The schedulers sort and select by cost-model outputs everywhere, and
+//! the idiomatic `a.partial_cmp(&b).unwrap()` comparator panics the
+//! moment a degraded cost model produces a NaN — inside a rayon-free
+//! but still multi-threaded rung, taking the whole search down.
+//! [`cmp_f64`] is the crate-wide replacement: a total order over *all*
+//! `f64` values (detlint rule **D3** bans NaN-unsafe comparators and
+//! points here).
+//!
+//! The order is IEEE 754 `totalOrder` (via [`f64::total_cmp`]):
+//!
+//! ```text
+//! -NaN < -inf < ... < -0.0 < +0.0 < ... < +inf < +NaN
+//! ```
+//!
+//! Two properties matter for the determinism contract:
+//!
+//! * it never panics and never returns "unordered", so sorts and
+//!   `min_by`/`max_by` selections are well-defined on degraded inputs;
+//! * positive NaN ranks *after* `+inf`, so when ascending cost picks a
+//!   minimum, a NaN-costed candidate loses to every real candidate.
+
+use std::cmp::Ordering;
+
+/// Total-order comparison of two `f64`s; see the module docs for the
+/// exact order. Drop-in for `a.partial_cmp(&b).unwrap()` in comparators.
+#[inline]
+pub fn cmp_f64(a: f64, b: f64) -> Ordering {
+    a.total_cmp(&b)
+}
+
+/// Sort a slice ascending under [`cmp_f64`] (NaNs sort last, never
+/// panic). Drop-in for `xs.sort_by(|a, b| a.partial_cmp(b).unwrap())`.
+pub fn sort_f64(xs: &mut [f64]) {
+    xs.sort_by(|a, b| cmp_f64(*a, *b));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn agrees_with_partial_cmp_on_ordinary_values() {
+        let vals = [-3.5, -1.0, 0.5, 1.0, 2.0, 1e300, -1e300];
+        for &a in &vals {
+            for &b in &vals {
+                // detlint:allow(D3): the NaN-unsafe idiom is the reference under test
+                assert_eq!(cmp_f64(a, b), a.partial_cmp(&b).unwrap(), "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn nan_orders_after_infinity() {
+        assert_eq!(cmp_f64(f64::NAN, f64::INFINITY), Ordering::Greater);
+        assert_eq!(cmp_f64(f64::INFINITY, f64::NAN), Ordering::Less);
+        assert_eq!(cmp_f64(f64::NAN, f64::NAN), Ordering::Equal);
+        // Negative NaN sits at the very bottom of the order.
+        assert_eq!(cmp_f64(-f64::NAN, f64::NEG_INFINITY), Ordering::Less);
+    }
+
+    #[test]
+    fn signed_zero_is_ordered() {
+        assert_eq!(cmp_f64(-0.0, 0.0), Ordering::Less);
+        assert_eq!(cmp_f64(0.0, -0.0), Ordering::Greater);
+        assert_eq!(cmp_f64(0.0, 0.0), Ordering::Equal);
+    }
+
+    #[test]
+    fn sort_with_nans_never_panics_and_ranks_them_last() {
+        let mut xs = vec![2.0, f64::NAN, -1.0, f64::INFINITY, 0.0, f64::NEG_INFINITY];
+        sort_f64(&mut xs);
+        assert_eq!(xs[0], f64::NEG_INFINITY);
+        assert_eq!(xs[1], -1.0);
+        assert_eq!(xs[2], 0.0);
+        assert_eq!(xs[3], 2.0);
+        assert_eq!(xs[4], f64::INFINITY);
+        assert!(xs[5].is_nan());
+    }
+
+    #[test]
+    fn min_selection_prefers_real_costs_over_nan() {
+        // Ascending-cost selection must never pick a NaN-costed
+        // candidate over a finite one.
+        let costs = [f64::NAN, 3.0, 7.0];
+        let best = costs.iter().copied().min_by(|a, b| cmp_f64(*a, *b)).unwrap();
+        assert_eq!(best, 3.0);
+    }
+
+    #[test]
+    fn total_order_is_antisymmetric_on_mixed_inputs() {
+        let vals = [f64::NAN, -f64::NAN, f64::INFINITY, -0.0, 0.0, 1.5, -2.5];
+        for &a in &vals {
+            for &b in &vals {
+                assert_eq!(cmp_f64(a, b), cmp_f64(b, a).reverse());
+            }
+        }
+    }
+}

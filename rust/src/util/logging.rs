@@ -35,6 +35,7 @@ static INIT: Once = Once::new();
 /// Install the logger (idempotent). Level from `HETRL_LOG`, default `info`.
 pub fn init() {
     INIT.call_once(|| {
+        // detlint:allow(D4): log verbosity only — never feeds search or plan selection
         let level = match std::env::var("HETRL_LOG").as_deref() {
             Ok("error") => LevelFilter::Error,
             Ok("warn") => LevelFilter::Warn,

@@ -4,6 +4,7 @@
 //! a micro-benchmark harness used by `cargo bench`.
 
 pub mod rng;
+pub mod ford;
 pub mod error;
 pub mod json;
 pub mod cli;

@@ -13,7 +13,8 @@ pub struct Summary {
     pub p95: f64,
 }
 
-/// Compute a [`Summary`] of a non-empty sample.
+/// Compute a [`Summary`] of a non-empty sample. NaN-tolerant: NaNs sort
+/// last under [`super::ford::cmp_f64`] instead of panicking.
 pub fn summarize(xs: &[f64]) -> Summary {
     assert!(!xs.is_empty(), "summarize() on empty sample");
     let n = xs.len();
@@ -24,7 +25,7 @@ pub fn summarize(xs: &[f64]) -> Summary {
         0.0
     };
     let mut sorted = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    super::ford::sort_f64(&mut sorted);
     Summary {
         n,
         mean,

@@ -48,15 +48,6 @@ impl ThreadPool {
         ThreadPool { tx: Some(tx), workers }
     }
 
-    /// Pool sized to available parallelism (min 2).
-    pub fn with_default_size() -> Self {
-        let n = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(4)
-            .max(2);
-        ThreadPool::new(n)
-    }
-
     /// Submit a job.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
         self.tx

@@ -1,0 +1,210 @@
+//! `detlint` self-check: fixtures that must trigger each rule D1–D5,
+//! the allow-directive lifecycle (acceptance, unused rejection,
+//! malformed rejection), the byte-for-byte pinned diagnostic format —
+//! and the gate itself: the shipped tree must be lint-clean.
+//!
+//! Every banned token in this file lives inside a string literal, so
+//! the self-check never flags its own fixtures.
+
+use std::path::PathBuf;
+
+use hetrl::lint::{check_source, fix_unused_allows, run_paths, Finding, Report, Rule};
+
+fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
+    findings.iter().map(|f| f.rule.id()).collect()
+}
+
+// ---- one fixture per rule ----------------------------------------------
+
+#[test]
+fn d1_wall_clock_fixture() {
+    let src = "use std::time::Instant;\nfn f() { let t = Instant::now(); }\n";
+    let f = check_source("src/scheduler/x.rs", src);
+    assert_eq!(rules_of(&f), vec!["D1", "D1"]);
+    assert_eq!((f[0].line, f[1].line), (1, 2));
+    // The same source is fine in a telemetry module.
+    assert!(check_source("src/util/logging.rs", src).is_empty());
+    assert!(check_source("src/engine/grpo.rs", src).is_empty());
+}
+
+#[test]
+fn d2_hash_collections_fixture() {
+    let src = "use std::collections::{HashMap, HashSet};\n";
+    let f = check_source("src/plan/x.rs", src);
+    assert_eq!(rules_of(&f), vec!["D2", "D2"]);
+    // No allowlist for D2 — even the cache must carry explicit allows.
+    assert_eq!(check_source("src/costmodel/cache.rs", src).len(), 2);
+}
+
+#[test]
+fn d3_nan_unsafe_comparator_fixture() {
+    let src = "xs.sort_by(|a, b| a.cost.partial_cmp(&b.cost).unwrap());\n";
+    let f = check_source("src/scheduler/x.rs", src);
+    assert_eq!(rules_of(&f), vec!["D3"]);
+    assert!(f[0].msg.contains("cmp_f64"));
+    // A trait impl defines partial_cmp without comparing floats.
+    let def = "impl PartialOrd for X { fn partial_cmp(&self, o: &Self) -> Option<Ordering> { self.0.partial_cmp(&o.0) } }";
+    assert!(check_source("src/scheduler/x.rs", def).is_empty());
+}
+
+#[test]
+fn d4_ambient_nondeterminism_fixture() {
+    let src = "let n = std::thread::available_parallelism();\nlet v = std::env::var(\"X\");\nlet id = std::thread::current().id();\nlet s = RandomState::new();\n";
+    let f = check_source("src/elastic/x.rs", src);
+    assert_eq!(rules_of(&f), vec!["D4", "D4", "D4", "D4"]);
+    // Sanctioned homes: the thread resolver and the test fixtures.
+    assert!(check_source("src/scheduler/engine.rs", src).is_empty());
+    assert!(check_source("src/testing/fixtures.rs", src).is_empty());
+}
+
+#[test]
+fn d5_concurrency_inventory_fixture() {
+    let relaxed = "let n = c.load(Ordering::Relaxed);\n";
+    assert_eq!(rules_of(&check_source("src/engine/x.rs", relaxed)), vec!["D5"]);
+    assert!(check_source("src/log.rs", relaxed).is_empty());
+
+    let lock = "let g = m.lock().unwrap();\n";
+    assert_eq!(rules_of(&check_source("src/engine/x.rs", lock)), vec!["D5"]);
+    assert!(check_source("src/util/threadpool.rs", lock).is_empty());
+
+    // Nested acquisition in one statement needs a LOCK_ORDER entry even
+    // inside an inventoried file.
+    let nested = "let v = a.lock().unwrap().merge(b.lock().unwrap());\n";
+    let f = check_source("src/util/threadpool.rs", nested);
+    assert_eq!(rules_of(&f), vec!["D5"]);
+    assert!(f[0].msg.contains("LOCK_ORDER"));
+}
+
+// ---- allow-directive lifecycle -----------------------------------------
+
+#[test]
+fn allow_comment_suppresses_trailing_and_standalone() {
+    let trailing = "use std::collections::HashMap; // detlint:allow(D2): keyed lookups only\n";
+    assert!(check_source("src/x.rs", trailing).is_empty());
+    let standalone = "// detlint:allow(D1): telemetry probe\nuse std::time::Instant;\n";
+    assert!(check_source("src/x.rs", standalone).is_empty());
+    // Stacked standalone directives both reach the next code line.
+    let stacked = "// detlint:allow(D1): telemetry probe\n// detlint:allow(D2): keyed lookups only\nuse std::time::Instant; use std::collections::HashMap;\n";
+    assert!(check_source("src/x.rs", stacked).is_empty());
+}
+
+#[test]
+fn unused_allow_is_rejected_and_fixable() {
+    let src = "let x = 1; // detlint:allow(D3): nothing to suppress here\n";
+    let f = check_source("src/x.rs", src);
+    assert_eq!(rules_of(&f), vec!["A0"]);
+    assert!(f[0].fixable, "unused allows are mechanically strippable");
+    assert!(f[0].msg.contains("unused detlint:allow(D3)"));
+}
+
+#[test]
+fn malformed_allow_is_rejected() {
+    for src in [
+        "// detlint:allow(D7): unknown rule\n",
+        "// detlint:allow(A0): the meta rule cannot be suppressed\n",
+        "// detlint:allow(D1) missing colon and reason\n",
+        "// detlint:allow(D1):\n",
+    ] {
+        let f = check_source("src/x.rs", src);
+        assert_eq!(rules_of(&f), vec!["A0"], "for fixture {src:?}");
+        assert!(!f[0].fixable, "malformed directives need a human");
+    }
+}
+
+#[test]
+fn allow_in_doc_comment_or_string_is_inert() {
+    // A doc comment showing the syntax is not a directive (and so can't
+    // go stale); same for string literals.
+    let doc = "/// detlint:allow(D2): example in rustdoc\nlet x = 1;\n";
+    assert!(check_source("src/x.rs", doc).is_empty());
+    let s = "let msg = \"detlint:allow(D2): in a string\";\n";
+    assert!(check_source("src/x.rs", s).is_empty());
+}
+
+// ---- output format ------------------------------------------------------
+
+#[test]
+fn diagnostics_are_pinned_byte_for_byte() {
+    // Findings arrive out of order (file b first) and with a duplicate;
+    // the report must sort by (file, line, rule, message) and dedup.
+    let mut rep = Report::default();
+    rep.findings.extend(check_source("src/b.rs", "let x = a.partial_cmp(&b).unwrap();\n"));
+    rep.findings.extend(check_source(
+        "src/a.rs",
+        "use std::time::Instant;\nuse std::collections::HashMap;\n",
+    ));
+    rep.findings.extend(check_source("src/b.rs", "let x = a.partial_cmp(&b).unwrap();\n"));
+    rep.files_scanned = 2;
+    rep.finalize();
+    let expected = "\
+src/a.rs:1 D1 wall-clock `Instant` outside the telemetry allowlist (util/logging, util/benchkit, engine/grpo); time must not influence search results
+src/a.rs:2 D2 hash-ordered `HashMap`: iteration order can feed ordered logic; use BTreeMap/BTreeSet, sort-after-collect, or justify with an allow
+src/b.rs:1 D3 NaN-unsafe comparator `.partial_cmp(..).unwrap()`; use util::ford::cmp_f64 (total order)
+detlint: 3 findings in 2 files
+";
+    assert_eq!(rep.render(), expected);
+}
+
+#[test]
+fn clean_report_is_a_single_line() {
+    let mut rep = Report::default();
+    rep.files_scanned = 3;
+    rep.finalize();
+    assert_eq!(rep.render(), "detlint: 3 files, no findings\n");
+}
+
+// ---- --fix-allow --------------------------------------------------------
+
+#[test]
+fn fix_allow_strips_stale_directives() {
+    let dir = std::env::temp_dir().join(format!("detlint_fix_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let file = dir.join("stale.rs");
+    std::fs::write(
+        &file,
+        "let x = 1; // detlint:allow(D2): stale trailing\n// detlint:allow(D1): stale standalone\nlet y = 2;\n",
+    )
+    .unwrap();
+    let paths = vec![file.clone()];
+    assert_eq!(run_paths(&paths).unwrap().findings.len(), 2, "both directives stale");
+    let fixed = fix_unused_allows(&paths).unwrap();
+    assert_eq!(fixed, 2);
+    assert_eq!(std::fs::read_to_string(&file).unwrap(), "let x = 1;\nlet y = 2;\n");
+    assert!(run_paths(&paths).unwrap().is_clean());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---- the gate: the shipped tree is lint-clean ---------------------------
+
+#[test]
+fn shipped_tree_is_lint_clean() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let paths: Vec<PathBuf> = ["src", "tests", "benches"]
+        .iter()
+        .map(|d| root.join(d))
+        .filter(|p| p.is_dir())
+        .collect();
+    assert_eq!(paths.len(), 3, "expected src/, tests/ and benches/ under {root:?}");
+    let rep = run_paths(&paths).unwrap();
+    assert!(
+        rep.is_clean(),
+        "the shipped tree must pass its own lint:\n{}",
+        rep.render()
+    );
+    assert!(rep.files_scanned > 40, "walker saw only {} files", rep.files_scanned);
+}
+
+#[test]
+fn rule_registry_is_complete() {
+    let ids: Vec<&str> = hetrl::lint::RULES.iter().map(|(r, _)| r.id()).collect();
+    assert_eq!(ids, vec!["D1", "D2", "D3", "D4", "D5", "A0"]);
+    for (r, summary) in hetrl::lint::RULES {
+        assert!(!summary.is_empty(), "{} needs a summary", r.id());
+    }
+    // Suppressible rules round-trip through the directive parser; the
+    // meta rule does not.
+    for id in ["D1", "D2", "D3", "D4", "D5"] {
+        assert_eq!(Rule::parse_allowable(id).map(Rule::id), Some(id));
+    }
+    assert!(Rule::parse_allowable("A0").is_none());
+}

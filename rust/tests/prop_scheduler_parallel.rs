@@ -118,3 +118,42 @@ fn warm_replan_identical_across_thread_counts() {
     assert_eq!(a.evals, b.evals);
     assert_eq!(a.migration_secs.to_bits(), b.migration_secs.to_bits());
 }
+
+/// Regression for the detlint D1 finding: the eval ledger used to treat
+/// `Budget::wall_secs` as a second exhaustion condition, so machine
+/// load (or an aggressive cap) could cut a seeded search short and
+/// change the selected plan. Since the fix, wall-clock is telemetry
+/// only: an absurdly tight wall cap must yield the bit-identical
+/// outcome of the pure eval budget.
+#[test]
+fn wall_cap_is_telemetry_only() {
+    let (wf, topo, job) = env(Scenario::MultiCountry);
+    for threads in fixtures::test_threads() {
+        let base = ShaEaScheduler::with_threads(9, threads)
+            .schedule(&topo, &wf, &job, Budget::evals(250));
+        let tight = ShaEaScheduler::with_threads(9, threads)
+            .schedule(&topo, &wf, &job, Budget::timed(250, 1e-12));
+        assert!(base.cost.is_finite(), "no plan at {threads} threads");
+        assert_eq!(
+            tight.plan, base.plan,
+            "{threads} threads: a wall cap changed the selected plan"
+        );
+        assert_eq!(tight.cost.to_bits(), base.cost.to_bits());
+        assert_eq!(
+            tight.evals, base.evals,
+            "{threads} threads: a wall cap changed the eval count"
+        );
+    }
+}
+
+/// Back-to-back runs at the same seed are bit-identical even though
+/// their wall-clock telemetry differs — plan selection must depend on
+/// nothing the ledger's stopwatch measures.
+#[test]
+fn repeat_runs_bit_identical_despite_wall_jitter() {
+    let a = sha(13, 2, 200, Scenario::SingleRegion);
+    let b = sha(13, 2, 200, Scenario::SingleRegion);
+    assert_eq!(a.plan, b.plan);
+    assert_eq!(a.cost.to_bits(), b.cost.to_bits());
+    assert_eq!(a.evals, b.evals);
+}
