@@ -63,6 +63,13 @@ echo "== replay smoke (predictive preemption, forced notice) =="
     --iters 6 --events 3 --budget 120 --warm-budget 60 \
     --anytime-rate 4 --notice-secs 100000 --policy preempt --tiny
 
+echo "== replay smoke (async workflow, all five policies) =="
+# Bounded-staleness pipeline over the same tiny trace: generation and
+# training pools degrade independently; the staleness/queue invariants
+# are also asserted by tests/prop_async.rs.
+./target/release/hetrl replay --workflow async --scenario country --seed 0 \
+    --iters 6 --events 3 --budget 120 --warm-budget 60 --policy all --tiny
+
 echo "== search-throughput smoke (parallel engine, 1 vs N threads) =="
 # fig5_search_throughput sweeps thread counts at a small budget and
 # exits non-zero if any N-thread run diverges from (in particular, finds

@@ -56,6 +56,8 @@ fn main() {
         "fig11_elastic",
         &[
             "scenario",
+            "workflow",
+            "staleness_bound",
             "policy",
             "iter",
             "iter_secs",
@@ -67,6 +69,9 @@ fn main() {
             "anytime_cost",
             "cache_hits",
             "cache_misses",
+            "queue_depth_mean",
+            "queue_depth_max",
+            "producer_stall_secs",
             "events",
         ],
     );
@@ -100,6 +105,10 @@ fn main() {
             for rec in &r.records {
                 record.push(vec![
                     Json::str(scenario.name()),
+                    // Constant here; `benches/fig_async.rs` fills the
+                    // async side of the same schema.
+                    Json::str("sync"),
+                    Json::num(0.0),
                     Json::str(policy.name()),
                     Json::num(rec.iter as f64),
                     Json::num(rec.iter_secs),
@@ -112,6 +121,10 @@ fn main() {
                     Json::num(if rec.anytime_cost.is_finite() { rec.anytime_cost } else { -1.0 }),
                     Json::num(rec.cache_hits as f64),
                     Json::num(rec.cache_misses as f64),
+                    // The sync iteration has no rollout queue.
+                    Json::num(0.0),
+                    Json::num(0.0),
+                    Json::num(0.0),
                     Json::str(&rec.events.join("+")),
                 ]);
             }

@@ -1,0 +1,156 @@
+//! Figure "async" (new, beyond the paper) — synchronous vs asynchronous
+//! workflow goodput under elastic cluster dynamics: the fig11 replay
+//! matrix re-run with the RL task graph split into a generation stream
+//! and a training stream joined by a bounded rollout queue
+//! (staleness bound `k = 2`), against the `k = 0` degenerate case that
+//! is bit-identical to the synchronous path.
+//!
+//! For every scenario × policy cell the same seeded event trace is
+//! replayed twice — once per workflow — so the `vs sync` column
+//! isolates what bounded staleness buys once the fleet starts churning:
+//! the generation and training pools degrade independently, and a
+//! machine loss confined to one pool stalls only that stream while the
+//! rollout queue buffers the other (up to `k` policy versions).
+//!
+//! Rows carry the full per-iteration telemetry of fig11 plus the
+//! async-side columns (`workflow`, `staleness_bound`, rollout-queue
+//! mean/max depth, producer stall, observed staleness) and are
+//! persisted as a `RunRecord` under `bench_out/`.
+
+mod common;
+
+use hetrl::asyncrl::{replay_async, AsyncReplayConfig};
+use hetrl::elastic::{first_event_iter, generate_trace, Policy, ReplanConfig, ReplayConfig, TraceConfig};
+use hetrl::metrics::RunRecord;
+use hetrl::topology::{build_testbed, Scenario, TestbedSpec};
+use hetrl::util::json::Json;
+use hetrl::util::table::Table;
+use hetrl::workflow::{Algo, JobConfig, Mode, ModelSpec, RlWorkflow};
+
+fn main() {
+    hetrl::util::logging::init();
+    let seed = 17u64;
+    let iters = if common::full() { 32 } else { 16 };
+    let wf = RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_4b());
+    let job = JobConfig::default();
+    let spec = TestbedSpec::default();
+    let base_cfg = ReplayConfig {
+        iters,
+        trace: TraceConfig { horizon: iters, n_events: 5, ..TraceConfig::default() },
+        replan: ReplanConfig {
+            warm_budget: if common::full() { 200 } else { 120 },
+            cold_budget: common::sha_budget(),
+            ..ReplanConfig::default()
+        },
+        ..ReplayConfig::default()
+    };
+
+    let mut record = RunRecord::new(
+        "fig_async",
+        &[
+            "scenario",
+            "workflow",
+            "staleness_bound",
+            "policy",
+            "iter",
+            "iter_secs",
+            "migration_secs",
+            "active_gpus",
+            "evals",
+            "anytime_evals",
+            "hypothesis_evals",
+            "anytime_cost",
+            "cache_hits",
+            "cache_misses",
+            "queue_depth_mean",
+            "queue_depth_max",
+            "producer_stall_secs",
+            "max_staleness",
+            "events",
+        ],
+    );
+    let mut summary = Table::new(
+        &format!("Async vs sync elastic replay (Qwen-4B GRPO, {iters} iters, seed {seed})"),
+        &[
+            "scenario",
+            "policy",
+            "workflow",
+            "k",
+            "thpt (samp/s)",
+            "post-event thpt",
+            "vs sync",
+            "queue mean/max",
+            "gen stall (s)",
+            "evals",
+        ],
+    );
+    for scenario in Scenario::ALL {
+        let base = build_testbed(scenario, &spec);
+        let trace = generate_trace(&base, &base_cfg.trace, seed);
+        let post = first_event_iter(&trace).unwrap_or(0);
+        eprintln!(
+            "{}: {} events, first at iter {post}",
+            scenario.name(),
+            trace.len()
+        );
+        for policy in Policy::ALL {
+            let mut sync_thpt = f64::NAN;
+            for k in [0usize, 2] {
+                let cfg = AsyncReplayConfig {
+                    base: base_cfg.clone(),
+                    staleness_bound: k,
+                    ..AsyncReplayConfig::default()
+                };
+                let r = replay_async(scenario, &spec, &wf, &job, policy, &cfg, seed);
+                for (rec, q) in r.base.records.iter().zip(&r.queue) {
+                    record.push(vec![
+                        Json::str(scenario.name()),
+                        Json::str(r.workflow_name()),
+                        Json::num(k as f64),
+                        Json::str(policy.name()),
+                        Json::num(rec.iter as f64),
+                        Json::num(rec.iter_secs),
+                        Json::num(rec.migration_secs),
+                        Json::num(rec.active_gpus as f64),
+                        Json::num(rec.evals as f64),
+                        Json::num(rec.anytime_evals as f64),
+                        Json::num(rec.hypothesis_evals as f64),
+                        // JSON has no ∞; -1 marks "no incumbent / not anytime".
+                        Json::num(if rec.anytime_cost.is_finite() { rec.anytime_cost } else { -1.0 }),
+                        Json::num(rec.cache_hits as f64),
+                        Json::num(rec.cache_misses as f64),
+                        Json::num(q.queue_depth_mean),
+                        Json::num(q.queue_depth_max as f64),
+                        Json::num(q.producer_stall_secs),
+                        Json::num(q.max_staleness as f64),
+                        Json::str(&rec.events.join("+")),
+                    ]);
+                }
+                let thpt = r.base.throughput();
+                if k == 0 {
+                    sync_thpt = thpt;
+                }
+                summary.row(vec![
+                    scenario.name().to_string(),
+                    policy.name().to_string(),
+                    r.workflow_name().to_string(),
+                    k.to_string(),
+                    format!("{thpt:.2}"),
+                    format!("{:.2}", r.base.throughput_after(post)),
+                    if k > 0 && sync_thpt.is_finite() && sync_thpt > 0.0 {
+                        format!("{:+.1}%", (thpt / sync_thpt - 1.0) * 100.0)
+                    } else {
+                        "-".to_string()
+                    },
+                    format!("{:.2}/{}", r.mean_queue_depth(), r.max_queue_depth()),
+                    format!("{:.1}", r.producer_stall_secs()),
+                    r.base.total_evals.to_string(),
+                ]);
+            }
+        }
+    }
+    summary.print();
+    if let Ok(p) = record.save(&hetrl::metrics::results_dir()) {
+        println!("rows saved to {}", p.display());
+    }
+}

@@ -1,0 +1,47 @@
+//! Asynchronous RL workflows with bounded off-policy staleness.
+//!
+//! The synchronous HetRL iteration is a barrier: generate → infer →
+//! train → sync, every step on the whole fleet. Asynchronous RL systems
+//! (AReaL, LlamaRL, StreamRL) instead split the task graph into a
+//! **generation stream** and a **training stream** joined by a bounded
+//! **rollout queue**, with a hard off-policy staleness bound `k`: a
+//! rollout batch may be consumed at most `k` policy versions after the
+//! one that generated it. `k = 0` degenerates exactly to today's
+//! synchronous iteration.
+//!
+//! The subsystem has four layers, each reusing an existing mechanism:
+//!
+//! * **Workload model** — [`JobConfig::staleness_bound`] /
+//!   [`JobConfig::rollout_queue_cap`]
+//!   (crate::workflow::JobConfig) carry `k` and the queue capacity;
+//!   the analytic period
+//!   [`bounded_staleness_period`](crate::costmodel::bounded_staleness_period)
+//!   prices async plans k-aware through the ordinary cost model.
+//! * **Simulation** — [`pipeline::simulate_async`] runs per-stream
+//!   continuous batching on the generic DES core
+//!   ([`crate::simulator::des::SimGraph`]), with the queue capacity and
+//!   staleness bound encoded as dependency edges over synthetic
+//!   resources; [`queue::QueueTelemetry`] reports occupancy and
+//!   producer stall.
+//! * **Search** — [`search::plan_async`] adds the **pool split** plan
+//!   dimension: the fleet partitioned into generation and training
+//!   pools, swept as SHA arms on the existing engine under the
+//!   determinism contract (same seed ⇒ bit-identical plan at any
+//!   thread count).
+//! * **Elastic replay** — [`replay::replay_async`] reuses the
+//!   [`crate::elastic`] event/replan/anytime machinery so the two pools
+//!   degrade independently under cluster churn (`hetrl replay
+//!   --workflow async`, `benches/fig_async.rs`).
+//!
+//! [`JobConfig::staleness_bound`]: crate::workflow::JobConfig::staleness_bound
+//! [`JobConfig::rollout_queue_cap`]: crate::workflow::JobConfig::rollout_queue_cap
+
+pub mod pipeline;
+pub mod queue;
+pub mod replay;
+pub mod search;
+
+pub use pipeline::{simulate_async, AsyncPipelineConfig, AsyncSimResult};
+pub use queue::QueueTelemetry;
+pub use replay::{replay_async, AsyncIterStats, AsyncReplayConfig, AsyncReplayResult};
+pub use search::{plan_async, AsyncOutcome, AsyncSearchConfig};

@@ -1,0 +1,660 @@
+//! Dynamic-trace replay for **asynchronous** workflows: the
+//! [`crate::elastic::replay`] loop with the pool-split search
+//! ([`super::search::plan_async`]) for cold episodes and the
+//! bounded-staleness pipeline DES ([`super::pipeline::simulate_async`])
+//! as the measurement, so the generation and training pools degrade —
+//! and are re-planned — independently as the fleet churns.
+//!
+//! All five [`Policy`] variants run unchanged: events fire against the
+//! same [`FleetState`], warm replans and the anytime/preempt background
+//! machinery evolve the incumbent through the same [`Replanner`], and
+//! only cold searches (initial plan, repair fallback, oracle) go
+//! through the pool-split sweep. Event labels are annotated with the
+//! pool the event hits (`[pool:gen]` / `[pool:train]` / `[pool:both]`),
+//! which is what makes "generation pool lost a machine" distinguishable
+//! from "training pool lost a machine" in the replay table and
+//! `fig_async` rows.
+//!
+//! `staleness_bound = 0` does not merely *approximate* the synchronous
+//! path — it **delegates** to [`crate::elastic::replay`] with the
+//! workflow forced to `Mode::Sync`, so a `k = 0` async replay is
+//! bit-identical to a plain sync replay of the same inputs (pinned by
+//! `tests/prop_async.rs`).
+
+use super::pipeline::{simulate_async, AsyncPipelineConfig};
+use super::search::{plan_async, AsyncSearchConfig};
+use crate::balance::{self, BalanceConfig};
+use crate::costmodel::CostModel;
+use crate::elastic::replan::{plan_to_base, prev_placement, repair_plan, Replanner};
+use crate::elastic::{
+    generate_trace, AnytimeSearch, ClusterEvent, FleetState, IterRecord, Policy, ReplayConfig,
+    ReplayResult,
+};
+use crate::plan::ExecutionPlan;
+use crate::scheduler::Budget;
+use crate::topology::{build_testbed, DeviceTopology, Scenario, TestbedSpec};
+use crate::workflow::{JobConfig, Mode, RlTaskId, RlWorkflow};
+
+/// Configuration of an asynchronous replay.
+#[derive(Debug, Clone)]
+pub struct AsyncReplayConfig {
+    /// The underlying replay knobs (iterations, trace, replan budgets,
+    /// noise, balancing) — shared with the synchronous path.
+    pub base: ReplayConfig,
+    /// Hard off-policy staleness bound `k`. `0` delegates to the
+    /// synchronous replay bit-identically.
+    pub staleness_bound: usize,
+    /// Rollout-queue capacity (clamped to ≥ 1).
+    pub queue_capacity: usize,
+    /// Pipeline steps simulated per measured iteration (the DES window).
+    pub window: usize,
+    /// Candidate generation-pool fractions for cold pool-split searches.
+    pub gen_fracs: Vec<f64>,
+}
+
+impl Default for AsyncReplayConfig {
+    fn default() -> Self {
+        AsyncReplayConfig {
+            base: ReplayConfig::default(),
+            staleness_bound: 2,
+            queue_capacity: 2,
+            window: 8,
+            gen_fracs: AsyncSearchConfig::default().gen_fracs,
+        }
+    }
+}
+
+/// Per-iteration pipeline telemetry of an async replay.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AsyncIterStats {
+    /// Time-weighted mean rollout-queue depth during the iteration.
+    pub queue_depth_mean: f64,
+    /// Max simultaneous queue depth during the iteration.
+    pub queue_depth_max: usize,
+    /// Producer (generation) stall per training step, seconds.
+    pub producer_stall_secs: f64,
+    /// Largest observed off-policy staleness in the iteration's window.
+    pub max_staleness: usize,
+}
+
+impl AsyncIterStats {
+    /// All-zero stats (stalled iterations, and every `k = 0` row).
+    pub fn zero() -> AsyncIterStats {
+        AsyncIterStats {
+            queue_depth_mean: 0.0,
+            queue_depth_max: 0,
+            producer_stall_secs: 0.0,
+            max_staleness: 0,
+        }
+    }
+}
+
+/// Outcome of one async replay: the ordinary [`ReplayResult`] plus the
+/// queue/staleness telemetry the async pipeline adds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AsyncReplayResult {
+    /// The policy/iteration telemetry shared with sync replays. For
+    /// `staleness_bound ≥ 1`, `iter_secs` is the pipeline *period*
+    /// (seconds per training step), directly comparable to the sync
+    /// iteration time.
+    pub base: ReplayResult,
+    /// The staleness bound the replay ran under.
+    pub staleness_bound: usize,
+    /// The rollout-queue capacity the replay ran under.
+    pub queue_capacity: usize,
+    /// Per-iteration pipeline stats, aligned with `base.records`.
+    pub queue: Vec<AsyncIterStats>,
+    /// Largest observed staleness across the whole replay. Hard
+    /// invariant: `≤ staleness_bound`.
+    pub max_staleness: usize,
+}
+
+impl AsyncReplayResult {
+    /// `"sync"` for `k = 0` (the delegated path), `"async"` otherwise —
+    /// the replay table's `workflow` column.
+    pub fn workflow_name(&self) -> &'static str {
+        if self.staleness_bound == 0 { "sync" } else { "async" }
+    }
+
+    /// Mean of the per-iteration mean queue depths (0 when empty).
+    pub fn mean_queue_depth(&self) -> f64 {
+        if self.queue.is_empty() {
+            0.0
+        } else {
+            self.queue.iter().map(|q| q.queue_depth_mean).sum::<f64>() / self.queue.len() as f64
+        }
+    }
+
+    /// Largest queue depth seen in any iteration.
+    pub fn max_queue_depth(&self) -> usize {
+        self.queue.iter().map(|q| q.queue_depth_max).max().unwrap_or(0)
+    }
+
+    /// Total producer stall over the replay (per-step stall × window
+    /// steps per iteration, summed).
+    pub fn producer_stall_secs(&self) -> f64 {
+        self.queue.iter().map(|q| q.producer_stall_secs).sum::<f64>()
+    }
+}
+
+/// Base device ids a cluster event touches (`None` for link events,
+/// which hit the WAN between the pools rather than either pool).
+fn affected_base_devices(event: &ClusterEvent, base: &DeviceTopology) -> Option<Vec<usize>> {
+    match event {
+        ClusterEvent::MachinePreempt { machine }
+        | ClusterEvent::MachineLeave { machine }
+        | ClusterEvent::MachineJoin { machine } => Some(
+            base.devices
+                .iter()
+                .filter(|d| d.machine == *machine)
+                .map(|d| d.id)
+                .collect(),
+        ),
+        ClusterEvent::StragglerOnset { device, .. } | ClusterEvent::StragglerClear { device } => {
+            Some(vec![*device])
+        }
+        ClusterEvent::LinkDegrade { .. } | ClusterEvent::LinkRestore { .. } => None,
+    }
+}
+
+/// Classify which pool of the incumbent an event hits, as a label
+/// suffix. `gen`/`train` are the incumbent's device sets in base ids.
+fn pool_suffix(
+    event: &ClusterEvent,
+    base: &DeviceTopology,
+    gen: &[usize],
+    train: &[usize],
+) -> &'static str {
+    let Some(devs) = affected_base_devices(event, base) else {
+        // WAN events sit between the pools.
+        return " [pool:both]";
+    };
+    let hits_gen = devs.iter().any(|d| gen.contains(d));
+    let hits_train = devs.iter().any(|d| train.contains(d));
+    match (hits_gen, hits_train) {
+        (true, true) => " [pool:both]",
+        (true, false) => " [pool:gen]",
+        (false, true) => " [pool:train]",
+        (false, false) => " [pool:none]",
+    }
+}
+
+/// The incumbent's (generation, training) device sets in base ids.
+fn pool_devices(wf: &RlWorkflow, incumbent_base: Option<&ExecutionPlan>) -> (Vec<usize>, Vec<usize>) {
+    let (Some(inc), Some(gen_t)) = (incumbent_base, wf.task_index(RlTaskId::ActorGen)) else {
+        return (Vec::new(), Vec::new());
+    };
+    let gen = inc.task_plans[gen_t].devices();
+    let mut train: Vec<usize> = inc
+        .task_plans
+        .iter()
+        .enumerate()
+        .filter(|&(t, _)| t != gen_t)
+        .flat_map(|(_, tp)| tp.devices())
+        .collect();
+    train.sort_unstable();
+    train.dedup();
+    (gen, train)
+}
+
+/// Replay a dynamic trace under one policy with the asynchronous
+/// workflow model. A pure function of its arguments (same contract as
+/// [`crate::elastic::replay`]); `cfg.staleness_bound = 0` delegates to
+/// the synchronous replay bit-identically.
+pub fn replay_async(
+    scenario: Scenario,
+    spec: &TestbedSpec,
+    wf: &RlWorkflow,
+    job: &JobConfig,
+    policy: Policy,
+    cfg: &AsyncReplayConfig,
+    seed: u64,
+) -> AsyncReplayResult {
+    if cfg.staleness_bound == 0 {
+        // k = 0 IS the synchronous iteration; run the actual sync path
+        // (job untouched — the staleness fields are inert under
+        // Mode::Sync) so the equivalence is structural, not numeric.
+        let base = crate::elastic::replay(
+            scenario,
+            spec,
+            &wf.with_mode(Mode::Sync),
+            job,
+            policy,
+            &cfg.base,
+            seed,
+        );
+        let queue = vec![AsyncIterStats::zero(); base.records.len()];
+        return AsyncReplayResult {
+            base,
+            staleness_bound: 0,
+            queue_capacity: cfg.queue_capacity,
+            queue,
+            max_staleness: 0,
+        };
+    }
+
+    let awf = wf.with_mode(Mode::Async);
+    let wf = &awf;
+    let mut job_async = job.clone();
+    job_async.staleness_bound = cfg.staleness_bound;
+    job_async.rollout_queue_cap = cfg.queue_capacity.max(1);
+    let job = &job_async;
+
+    // Cold episodes run the pool-split sweep under the cold budget; the
+    // episode counter keeps oracle re-searches independently seeded the
+    // same way the replanner's episodes are.
+    let search_cfg = AsyncSearchConfig {
+        budget: Budget::evals(cfg.base.replan.cold_budget),
+        gen_fracs: cfg.gen_fracs.clone(),
+        threads: cfg.base.replan.threads,
+        ea: cfg.base.replan.ea.clone(),
+        ..AsyncSearchConfig::default()
+    };
+    let mut cold_episodes: u64 = 0;
+    let mut cold = |topo: &DeviceTopology| {
+        let ep_seed = seed
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(cold_episodes.wrapping_mul(1442695040888963407));
+        cold_episodes += 1;
+        plan_async(topo, wf, job, &search_cfg, ep_seed)
+    };
+
+    let base_topo = build_testbed(scenario, spec);
+    let trace = generate_trace(&base_topo, &cfg.base.trace, seed);
+    let mut fleet = FleetState::new(base_topo);
+    let mut replanner = Replanner::new(seed, cfg.base.replan.clone());
+    let mut anytime = if policy.runs_background() {
+        Some(AnytimeSearch::new(seed ^ 0xA11C_E5EA, cfg.base.replan.clone()))
+    } else {
+        None
+    };
+    let mut hypo: Option<(DeviceTopology, Vec<usize>, usize)> = None;
+
+    let (mut topo, mut map) = fleet.snapshot();
+    let first = cold(&topo);
+    let mut plan: Option<ExecutionPlan> = first.outcome.plan.map(|p| {
+        if cfg.base.balance {
+            balance::apply(&p, wf, &topo, BalanceConfig::default())
+        } else {
+            p
+        }
+    });
+    let mut incumbent_base = plan.as_ref().map(|p| plan_to_base(p, &map));
+    reseed_anytime(&mut anytime, &topo, wf, job, plan.as_ref());
+
+    let mut records = Vec::with_capacity(cfg.base.iters);
+    let mut stats = Vec::with_capacity(cfg.base.iters);
+    let mut total_secs = 0.0;
+    let mut replans = 0;
+    let mut total_evals = first.outcome.evals;
+    let mut total_anytime_evals = 0usize;
+    let mut total_hypothesis_evals = 0usize;
+    let mut cache_hits = first.outcome.cache_hits;
+    let mut cache_misses = first.outcome.cache_misses;
+    let mut max_staleness = 0usize;
+    let mut cursor = 0usize;
+
+    for iter in 0..cfg.base.iters {
+        // Classify fired events against the *pre-event* incumbent: the
+        // interesting question is which pool the fleet change hit.
+        let (gen_pool, train_pool) = pool_devices(wf, incumbent_base.as_ref());
+        let fired_from = cursor;
+        let mut labels = Vec::new();
+        while cursor < trace.len() && trace[cursor].at_iter <= iter {
+            let suffix = pool_suffix(&trace[cursor].event, fleet.base(), &gen_pool, &train_pool);
+            fleet.apply(&trace[cursor].event);
+            labels.push(format!("{}{}", trace[cursor].label(), suffix));
+            cursor += 1;
+        }
+        let mut migration_secs = 0.0;
+        let mut evals = 0;
+        let mut iter_hits = 0;
+        let mut iter_misses = 0;
+        let mut replanned = false;
+        if !labels.is_empty() {
+            let anytime_base = anytime
+                .as_ref()
+                .and_then(|a| a.incumbent().map(|(p, _)| plan_to_base(p, &map)));
+            let hypothesis_base = match (&anytime, &hypo) {
+                (Some(a), Some((_, hyp_map, idx))) if (fired_from..cursor).contains(idx) => {
+                    a.hypothesis().map(|(p, _)| plan_to_base(p, hyp_map))
+                }
+                _ => None,
+            };
+            let (t, m) = fleet.snapshot();
+            topo = t;
+            map = m;
+            let b2n = FleetState::base_to_snapshot(&map);
+            let mm = cfg.base.replan.migration;
+            let new_plan = match (policy, incumbent_base.as_ref()) {
+                (Policy::Static, Some(inc)) => {
+                    let prev = prev_placement(inc, &b2n);
+                    let repaired = repair_plan(inc, wf, job, &topo, &b2n, seed ^ iter as u64);
+                    match repaired {
+                        Some(p) => {
+                            migration_secs = mm.migration_time(&topo, wf, job, &prev, &p);
+                            Some(p)
+                        }
+                        None => {
+                            let out = cold(&topo);
+                            evals += out.outcome.evals;
+                            iter_hits += out.outcome.cache_hits;
+                            iter_misses += out.outcome.cache_misses;
+                            if let Some(p) = &out.outcome.plan {
+                                migration_secs = mm.migration_time(&topo, wf, job, &prev, p);
+                            }
+                            out.outcome.plan
+                        }
+                    }
+                }
+                (Policy::Warm, Some(inc)) => {
+                    replanned = true;
+                    let out = replanner.replan(&topo, wf, job, inc, &b2n);
+                    evals += out.evals;
+                    iter_hits += out.cache_hits;
+                    iter_misses += out.cache_misses;
+                    migration_secs = out.migration_secs;
+                    out.plan
+                }
+                (Policy::Anytime | Policy::Preempt, Some(inc)) => {
+                    replanned = true;
+                    let out = replanner.replan_with_anytime(
+                        &topo,
+                        wf,
+                        job,
+                        inc,
+                        anytime_base.as_ref(),
+                        hypothesis_base.as_ref(),
+                        &b2n,
+                    );
+                    evals += out.evals;
+                    iter_hits += out.cache_hits;
+                    iter_misses += out.cache_misses;
+                    migration_secs = out.migration_secs;
+                    out.plan
+                }
+                (Policy::Oracle, _) | (_, None) => {
+                    replanned = true;
+                    let out = cold(&topo);
+                    evals += out.outcome.evals;
+                    iter_hits += out.outcome.cache_hits;
+                    iter_misses += out.outcome.cache_misses;
+                    out.outcome.plan
+                }
+            };
+            plan = new_plan.map(|p| {
+                if cfg.base.balance {
+                    balance::apply(&p, wf, &topo, BalanceConfig::default())
+                } else {
+                    p
+                }
+            });
+            incumbent_base = plan.as_ref().map(|p| plan_to_base(p, &map));
+            if replanned {
+                replans += 1;
+            }
+            reseed_anytime(&mut anytime, &topo, wf, job, plan.as_ref());
+            hypo = None;
+        }
+
+        // Measure this iteration as one DES window of the pipeline; the
+        // period (seconds per training step) is the async counterpart of
+        // the sync iteration time.
+        let (iter_secs, iter_samples, iter_stats) = match &plan {
+            Some(p) => {
+                let pipe = AsyncPipelineConfig {
+                    staleness_bound: cfg.staleness_bound,
+                    queue_capacity: cfg.queue_capacity,
+                    window: cfg.window.max(1),
+                    seed: seed ^ (iter as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                    noise: cfg.base.noise,
+                };
+                let r = simulate_async(&topo, wf, job, p, &pipe);
+                let st = AsyncIterStats {
+                    queue_depth_mean: r.queue.mean_depth,
+                    queue_depth_max: r.queue.max_depth,
+                    producer_stall_secs: r.queue.producer_stall_secs / pipe.window as f64,
+                    max_staleness: r.max_staleness,
+                };
+                (r.period, job.total_samples(), st)
+            }
+            None => (
+                records.last().map(|r: &IterRecord| r.iter_secs).unwrap_or(600.0),
+                0,
+                AsyncIterStats::zero(),
+            ),
+        };
+        max_staleness = max_staleness.max(iter_stats.max_staleness);
+        total_secs += iter_secs + migration_secs;
+
+        if policy == Policy::Preempt {
+            if hypo.is_none() {
+                if let Some(idx) = next_noticed_loss(&trace, cursor, iter, iter_secs) {
+                    let hyp_fleet = fleet.apply_hypothetical(&trace[idx].event);
+                    let (ht, hm) = hyp_fleet.snapshot();
+                    hypo = Some((ht, hm, idx));
+                }
+            }
+            if let (Some(a), Some((ht, hm, idx))) = (anytime.as_mut(), hypo.as_ref()) {
+                if a.hypothesis_key() != Some(*idx as u64) {
+                    let hb2n = FleetState::base_to_snapshot(hm);
+                    let mm = cfg.base.replan.migration;
+                    let horizon = cfg.base.replan.horizon_iters.max(1.0);
+                    let prev = incumbent_base
+                        .as_ref()
+                        .map(|inc| prev_placement(inc, &hb2n))
+                        .unwrap_or_default();
+                    let seed_plan = incumbent_base.as_ref().and_then(|inc| {
+                        repair_plan(
+                            inc,
+                            wf,
+                            job,
+                            ht,
+                            &hb2n,
+                            seed ^ (*idx as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                        )
+                    });
+                    let objective = seed_plan
+                        .as_ref()
+                        .map(|p| {
+                            CostModel::new(ht, wf, job).plan_cost(p).iter_time
+                                + mm.migration_time(ht, wf, job, &prev, p) / horizon
+                        })
+                        .unwrap_or(f64::INFINITY);
+                    a.prime_hypothesis(*idx as u64, seed_plan.as_ref(), objective, prev);
+                }
+            }
+        }
+
+        let mut anytime_evals = 0;
+        let mut hypothesis_evals = 0;
+        let mut anytime_cost = f64::INFINITY;
+        if let Some(a) = anytime.as_mut() {
+            a.accrue(iter_secs);
+            let st = a.step(&topo, wf, job, hypo.as_ref().map(|(t, _, _)| t));
+            anytime_evals = st.evals;
+            hypothesis_evals = st.hypothesis_evals;
+            anytime_cost = st.incumbent_cost;
+            iter_hits += st.cache_hits;
+            iter_misses += st.cache_misses;
+        }
+        total_evals += evals;
+        total_anytime_evals += anytime_evals;
+        total_hypothesis_evals += hypothesis_evals;
+        cache_hits += iter_hits;
+        cache_misses += iter_misses;
+
+        records.push(IterRecord {
+            iter,
+            events: labels,
+            replanned,
+            evals,
+            cache_hits: iter_hits,
+            cache_misses: iter_misses,
+            migration_secs,
+            iter_secs,
+            samples: iter_samples,
+            active_gpus: topo.n(),
+            anytime_evals,
+            hypothesis_evals,
+            anytime_cost,
+        });
+        stats.push(iter_stats);
+    }
+
+    AsyncReplayResult {
+        base: ReplayResult {
+            policy,
+            seed,
+            samples: records.iter().map(|r| r.samples).sum(),
+            records,
+            total_secs,
+            replans,
+            total_evals,
+            anytime_evals: total_anytime_evals,
+            hypothesis_evals: total_hypothesis_evals,
+            cache_hits,
+            cache_misses,
+        },
+        staleness_bound: cfg.staleness_bound,
+        queue_capacity: cfg.queue_capacity.max(1),
+        queue: stats,
+        max_staleness,
+    }
+}
+
+/// Reseed the background service on a fresh epoch (same convention as
+/// the sync replay: the plan is costed at its pure iteration time).
+fn reseed_anytime(
+    anytime: &mut Option<AnytimeSearch>,
+    topo: &DeviceTopology,
+    wf: &RlWorkflow,
+    job: &JobConfig,
+    plan: Option<&ExecutionPlan>,
+) {
+    if let Some(a) = anytime.as_mut() {
+        let cost = plan
+            .map(|p| CostModel::new(topo, wf, job).plan_cost(p).iter_time)
+            .unwrap_or(f64::INFINITY);
+        a.reseed(plan, cost);
+    }
+}
+
+/// Index of the next unfired noticed machine loss whose notice window
+/// covers the estimated time until it fires (the sync replay's
+/// predictive-preemption scan, verbatim).
+fn next_noticed_loss(
+    trace: &[crate::elastic::TraceEvent],
+    cursor: usize,
+    iter: usize,
+    iter_secs: f64,
+) -> Option<usize> {
+    let (idx, ev) = trace
+        .iter()
+        .enumerate()
+        .skip(cursor)
+        .find(|(_, e)| e.is_machine_loss())?;
+    let notice = ev.notice_secs?;
+    let remaining = ev.at_iter.saturating_sub(iter + 1) as f64 * iter_secs.max(0.0);
+    (remaining <= notice).then_some(idx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::fixtures;
+
+    fn cfg(k: usize) -> AsyncReplayConfig {
+        fixtures::async_replay_cfg(k, 1)
+    }
+
+    #[test]
+    fn async_replay_runs_all_policies() {
+        let wf = fixtures::tiny_wf();
+        let job = fixtures::async_job();
+        for policy in Policy::ALL {
+            let r = replay_async(
+                Scenario::MultiCountry,
+                &fixtures::small_spec(),
+                &wf,
+                &job,
+                policy,
+                &cfg(2),
+                3,
+            );
+            assert_eq!(r.base.records.len(), r.queue.len());
+            assert!(r.base.total_secs > 0.0 && r.base.total_secs.is_finite(), "{policy:?}");
+            assert!(r.max_staleness <= 2, "{policy:?}");
+            assert_eq!(r.workflow_name(), "async");
+        }
+    }
+
+    #[test]
+    fn k0_delegates_to_sync_replay() {
+        let wf = fixtures::tiny_wf();
+        let job = fixtures::async_job();
+        let c = cfg(0);
+        let a = replay_async(
+            Scenario::MultiCountry,
+            &fixtures::small_spec(),
+            &wf,
+            &job,
+            Policy::Warm,
+            &c,
+            7,
+        );
+        let s = crate::elastic::replay(
+            Scenario::MultiCountry,
+            &fixtures::small_spec(),
+            &wf.with_mode(Mode::Sync),
+            &job,
+            Policy::Warm,
+            &c.base,
+            7,
+        );
+        assert_eq!(a.base, s);
+        assert_eq!(a.workflow_name(), "sync");
+        assert_eq!(a.max_staleness, 0);
+        assert!(a.queue.iter().all(|q| *q == AsyncIterStats::zero()));
+    }
+
+    #[test]
+    fn async_replay_is_deterministic() {
+        let wf = fixtures::tiny_wf();
+        let job = fixtures::async_job();
+        let run = || {
+            replay_async(
+                Scenario::MultiRegionHybrid,
+                &fixtures::small_spec(),
+                &wf,
+                &job,
+                Policy::Anytime,
+                &cfg(2),
+                9,
+            )
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn event_labels_carry_pool_annotations() {
+        let wf = fixtures::tiny_wf();
+        let job = fixtures::async_job();
+        let r = replay_async(
+            Scenario::MultiCountry,
+            &fixtures::small_spec(),
+            &wf,
+            &job,
+            Policy::Warm,
+            &cfg(2),
+            3,
+        );
+        let labels: Vec<&String> =
+            r.base.records.iter().flat_map(|rec| rec.events.iter()).collect();
+        assert!(!labels.is_empty(), "trace fired no events");
+        assert!(
+            labels.iter().all(|l| l.contains("[pool:")),
+            "unannotated labels: {labels:?}"
+        );
+    }
+}

@@ -1,0 +1,235 @@
+//! Scheduler extension for asynchronous workflows: the **pool split**
+//! plan dimension.
+//!
+//! An async plan partitions the heterogeneous fleet into a *generation
+//! pool* and a *training pool* (every non-generation task). Structurally
+//! this is just a Level-1/Level-2 decision — the task grouping
+//! `[[actor-gen], [everything else]]` with GPU-group sizes
+//! `[gen, n - gen]` — so the existing SHA/EA machinery searches it
+//! unchanged: one [`EaArm`] per candidate generation-pool fraction,
+//! successive halving over the shared eval ledger, and the EA's
+//! cross-group swap and TFLOPS-upgrade mutations refining pool
+//! *membership* within each arm. Plans are priced by the k-aware async
+//! cost model
+//! ([`bounded_staleness_period`](crate::costmodel::bounded_staleness_period)
+//! via the workflow's `Async` mode), so the split that wins is the one
+//! whose generation and training periods balance under the job's
+//! staleness bound.
+//!
+//! The search inherits the engine's determinism contract: the same seed
+//! yields the bit-identical plan, cost and eval count at any thread
+//! count (quotas from the ledger, merges in arm order, seeded RNG
+//! streams, no wall-clock).
+
+use crate::scheduler::ea::{EaArm, EaConfig};
+use crate::scheduler::engine::{resolve_threads, run_rung, split_quota, ArmTask};
+use crate::scheduler::{Budget, EvalCtx, ScheduleOutcome};
+use crate::topology::DeviceTopology;
+use crate::util::ford;
+use crate::workflow::{JobConfig, RlTaskId, RlWorkflow};
+
+/// Configuration of one pool-split search.
+#[derive(Debug, Clone)]
+pub struct AsyncSearchConfig {
+    /// Evaluation budget for the whole search.
+    pub budget: Budget,
+    /// Candidate generation-pool sizes as fractions of the fleet; each
+    /// distinct clamped size becomes one SHA arm.
+    pub gen_fracs: Vec<f64>,
+    /// Successive-halving rounds over the arms.
+    pub rounds: usize,
+    /// Worker threads (0 = all cores); never affects the result.
+    pub threads: usize,
+    /// EA hyperparameters for the per-arm low-level search.
+    pub ea: EaConfig,
+}
+
+impl Default for AsyncSearchConfig {
+    fn default() -> Self {
+        AsyncSearchConfig {
+            budget: Budget::evals(600),
+            gen_fracs: vec![0.25, 0.375, 0.5, 0.625, 0.75],
+            rounds: 2,
+            threads: 1,
+            ea: EaConfig::default(),
+        }
+    }
+}
+
+/// Result of a pool-split search: the schedule outcome plus the winning
+/// generation-pool share.
+#[derive(Debug, Clone)]
+pub struct AsyncOutcome {
+    /// Plan, cost, evals, trace and cache telemetry (the cost is the
+    /// k-aware async iteration-time estimate).
+    pub outcome: ScheduleOutcome,
+    /// Fraction of the fleet the best plan dedicates to generation
+    /// (0.0 when no plan was found).
+    pub gen_frac: f64,
+}
+
+/// Search execution plans for an asynchronous workflow by sweeping the
+/// generation/training pool split. `wf.mode` should be
+/// [`Async`](crate::workflow::Mode::Async) so candidates are priced by
+/// the bounded-staleness period; the function itself is mode-agnostic.
+///
+/// Same `seed` ⇒ bit-identical `outcome.plan` / `cost` / `evals` at any
+/// `cfg.threads` (cache hit/miss counters remain approximate telemetry).
+pub fn plan_async(
+    topo: &DeviceTopology,
+    wf: &RlWorkflow,
+    job: &JobConfig,
+    cfg: &AsyncSearchConfig,
+    seed: u64,
+) -> AsyncOutcome {
+    let Some(gen_t) = wf.task_index(RlTaskId::ActorGen) else {
+        return AsyncOutcome { outcome: ScheduleOutcome::empty(), gen_frac: 0.0 };
+    };
+    let n = topo.n();
+    if n < 2 {
+        return AsyncOutcome { outcome: ScheduleOutcome::empty(), gen_frac: 0.0 };
+    }
+    let rest: Vec<usize> = (0..wf.n_tasks()).filter(|&t| t != gen_t).collect();
+    let grouping = vec![vec![gen_t], rest];
+
+    // Candidate generation-pool sizes: distinct clamped fractions, in
+    // config order (order is part of the seed derivation).
+    let mut gen_sizes: Vec<usize> = Vec::new();
+    for &f in &cfg.gen_fracs {
+        let size = ((f * n as f64).round() as usize).clamp(1, n - 1);
+        if !gen_sizes.contains(&size) {
+            gen_sizes.push(size);
+        }
+    }
+    if gen_sizes.is_empty() {
+        gen_sizes.push((n / 2).max(1));
+    }
+
+    let threads = resolve_threads(cfg.threads);
+    let mut ctx = EvalCtx::new(topo, wf, job, cfg.budget);
+    // (original arm index, arm): the index survives halving so seeds and
+    // merge order never depend on which arms got dropped.
+    let mut arms: Vec<(usize, EaArm)> = gen_sizes
+        .iter()
+        .enumerate()
+        .map(|(i, &gs)| {
+            let arm_seed = seed ^ (i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            (i, EaArm::new(grouping.clone(), vec![gs, n - gs], cfg.ea.clone(), arm_seed))
+        })
+        .collect();
+
+    let rounds = cfg.rounds.max(1);
+    for round in 0..rounds {
+        if arms.is_empty() || ctx.exhausted() {
+            break;
+        }
+        let quotas = split_quota(ctx.ledger.remaining(), arms.len(), rounds - round);
+        let tasks: Vec<ArmTask> = arms
+            .drain(..)
+            .zip(quotas)
+            .map(|((i, arm), quota)| ArmTask { key: (0, i), arm, quota })
+            .collect();
+        let runs = run_rung(&mut ctx, tasks, threads);
+        arms = runs
+            .into_iter()
+            .filter(|r| !r.arm.is_infeasible())
+            .map(|r| (r.key.1, r.arm))
+            .collect();
+        // Successive halving: keep the better half by arm best, ties to
+        // the lower original index, keepers back in arm order.
+        if round + 1 < rounds && arms.len() > 1 {
+            let keep = arms.len().div_ceil(2);
+            let mut order: Vec<usize> = (0..arms.len()).collect();
+            order.sort_by(|&a, &b| {
+                ford::cmp_f64(arms[a].1.best, arms[b].1.best).then(arms[a].0.cmp(&arms[b].0))
+            });
+            let mut kept: Vec<bool> = vec![false; arms.len()];
+            for &o in order.iter().take(keep) {
+                kept[o] = true;
+            }
+            let mut next = Vec::with_capacity(keep);
+            for (slot, pair) in arms.into_iter().enumerate() {
+                if kept[slot] {
+                    next.push(pair);
+                }
+            }
+            arms = next;
+        }
+    }
+
+    let gen_frac = ctx
+        .best_plan
+        .as_ref()
+        .map(|p| p.task_plans[gen_t].devices().len() as f64 / n as f64)
+        .unwrap_or(0.0);
+    AsyncOutcome { outcome: ctx.outcome(), gen_frac }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::CostModel;
+    use crate::testing::fixtures;
+    use crate::topology::Scenario;
+    use crate::workflow::Mode;
+
+    fn setup() -> (DeviceTopology, RlWorkflow, JobConfig, AsyncSearchConfig) {
+        let topo = fixtures::small_topo(Scenario::SingleMachine);
+        let wf = fixtures::tiny_wf().with_mode(Mode::Async);
+        let job = JobConfig::tiny();
+        let cfg = AsyncSearchConfig {
+            budget: Budget::evals(160),
+            gen_fracs: vec![1.0 / 3.0, 0.5, 2.0 / 3.0],
+            ea: EaConfig { swap_samples: 40, ..EaConfig::default() },
+            ..AsyncSearchConfig::default()
+        };
+        (topo, wf, job, cfg)
+    }
+
+    #[test]
+    fn finds_a_plan_with_disjoint_pools() {
+        let (topo, wf, job, cfg) = setup();
+        let out = plan_async(&topo, &wf, &job, &cfg, 11);
+        let plan = out.outcome.plan.expect("pool-split search found no plan");
+        assert!(out.outcome.cost.is_finite());
+        assert!(out.gen_frac > 0.0 && out.gen_frac < 1.0);
+        // The 2-group Level-1 structure makes the pools disjoint, so the
+        // plan's gen-overlap fraction — and with it the async overlap
+        // penalty — must be zero.
+        let sc = CostModel::new(&topo, &wf, &job).stream_costs(&plan);
+        assert_eq!(sc.overlap_frac, 0.0);
+    }
+
+    #[test]
+    fn deterministic_across_threads() {
+        let (topo, wf, job, cfg) = setup();
+        let base = plan_async(&topo, &wf, &job, &cfg, 23);
+        for threads in fixtures::test_threads() {
+            let c = AsyncSearchConfig { threads, ..cfg.clone() };
+            let out = plan_async(&topo, &wf, &job, &c, 23);
+            assert_eq!(out.outcome.cost, base.outcome.cost, "threads={threads}");
+            assert_eq!(out.outcome.evals, base.outcome.evals, "threads={threads}");
+            assert_eq!(out.outcome.plan, base.outcome.plan, "threads={threads}");
+            assert_eq!(out.gen_frac, base.gen_frac, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn different_seeds_may_differ_but_all_valid() {
+        let (topo, wf, job, cfg) = setup();
+        for seed in [1u64, 2, 3] {
+            let out = plan_async(&topo, &wf, &job, &cfg, seed);
+            if let Some(p) = &out.outcome.plan {
+                p.validate(&wf, &topo, &job).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn respects_budget() {
+        let (topo, wf, job, mut cfg) = setup();
+        cfg.budget = Budget::evals(40);
+        let out = plan_async(&topo, &wf, &job, &cfg, 5);
+        assert!(out.outcome.evals <= 40);
+    }
+}

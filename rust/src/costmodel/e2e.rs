@@ -28,6 +28,65 @@ impl PlanCost {
     }
 }
 
+/// Steady-state seconds per training step of the bounded-staleness
+/// asynchronous pipeline (the [`crate::asyncrl`] workload model):
+/// generation (`gen`), the training side (`train_side` = reward/ref
+/// inference aggregated with actor training), and weight sync (`sync`),
+/// decoupled by a rollout queue of `queue_cap` slots under a hard
+/// off-policy staleness bound of `staleness_bound` policy versions.
+///
+/// The period is the largest of four cycle bounds of the pipeline's
+/// dependency graph:
+///
+/// * `gen` — the generation pool is busy every step;
+/// * `train_side + sync` — training and weight sync serialize on the
+///   training pool (the generation pool receives weights in-flight,
+///   AReaL-style, and is not blocked by sync);
+/// * `(gen + train_side + sync) / (k + 1)` — the staleness cycle:
+///   generation of step `i` waits for the weight sync of step
+///   `i - k - 1`, so one full gen→train→sync lap amortizes over at
+///   most `k + 1` steps;
+/// * `(gen + train_side) / (cap + 1)` — the capacity cycle: generation
+///   of step `i` waits for batch `i - cap` to leave the queue, which
+///   happens when training step `i - cap - 1`'s consumer frees the
+///   slot.
+///
+/// `staleness_bound = 0` makes the staleness cycle `gen + train_side +
+/// sync`, which dominates the other three bounds — exactly the
+/// synchronous iteration. The period is monotone non-increasing in both
+/// `staleness_bound` and `queue_cap` and floors at
+/// `max(gen, train_side + sync)` (perfect overlap).
+pub fn bounded_staleness_period(
+    gen: f64,
+    train_side: f64,
+    sync: f64,
+    staleness_bound: usize,
+    queue_cap: usize,
+) -> f64 {
+    let k = staleness_bound as f64;
+    let cap = queue_cap.max(1) as f64;
+    gen.max(train_side + sync)
+        .max((gen + train_side + sync) / (k + 1.0))
+        .max((gen + train_side) / (cap + 1.0))
+}
+
+/// Per-stream decomposition of a plan's cost under the async workload
+/// model: what [`bounded_staleness_period`] and the
+/// [`crate::asyncrl::pipeline`] DES consume.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StreamCosts {
+    /// Actor-generation cost per rollout batch (seconds).
+    pub gen: f64,
+    /// Training-side cost per step: reward/ref (and critic) inference
+    /// aggregated by Φ, plus the training task(s).
+    pub train_side: f64,
+    /// Weight-synchronization cost per step (seconds).
+    pub sync: f64,
+    /// Fraction of generation devices shared with other tasks — the
+    /// degree to which gen/train overlap is illusory for this plan.
+    pub overlap_frac: f64,
+}
+
 /// The cost model `C(ρ, σ; G, G_D)`.
 pub struct CostModel<'a> {
     pub topo: &'a DeviceTopology,
@@ -110,17 +169,22 @@ impl<'a> CostModel<'a> {
                     + reshard
             }
             (Algo::Ppo, Mode::Async) => {
-                let train_side = self.phi(&[
-                    c(RlTaskId::RewardInf),
-                    c(RlTaskId::RefInf),
-                    c(RlTaskId::CriticInf),
-                ]) + self.phi(&[c(RlTaskId::ActorTrain), c(RlTaskId::CriticTrain)]);
+                let train_side = self.train_side_cost(&c);
                 let gen = c(RlTaskId::ActorGen);
                 let overlap = self.gen_overlap_frac(plan);
-                // Device sharing between generation and the training side
-                // serializes that fraction of the smaller stream (the
-                // paper's async designs disaggregate for this reason).
-                gen.max(train_side) + overlap * gen.min(train_side) + sync
+                // Steady-state period of the bounded-staleness pipeline
+                // (job.staleness_bound / job.rollout_queue_cap), plus
+                // the contention term: device sharing between generation
+                // and the training side serializes that fraction of the
+                // smaller stream (the paper's async designs disaggregate
+                // for this reason).
+                bounded_staleness_period(
+                    gen,
+                    train_side,
+                    sync,
+                    self.job.staleness_bound,
+                    self.job.rollout_queue_cap,
+                ) + overlap * gen.min(train_side)
             }
             (Algo::Grpo, Mode::Sync) => {
                 c(RlTaskId::ActorGen)
@@ -129,15 +193,65 @@ impl<'a> CostModel<'a> {
                     + reshard
             }
             (Algo::Grpo, Mode::Async) => {
-                let train_side = self.phi(&[c(RlTaskId::RewardInf), c(RlTaskId::RefInf)])
-                    + c(RlTaskId::ActorTrain);
+                let train_side = self.train_side_cost(&c);
                 let gen = c(RlTaskId::ActorGen);
                 let overlap = self.gen_overlap_frac(plan);
-                gen.max(train_side) + overlap * gen.min(train_side) + sync
+                bounded_staleness_period(
+                    gen,
+                    train_side,
+                    sync,
+                    self.job.staleness_bound,
+                    self.job.rollout_queue_cap,
+                ) + overlap * gen.min(train_side)
             }
         };
 
         PlanCost { per_task, reshard, sync, iter_time }
+    }
+
+    /// Training-side cost per step: the non-generation inference tasks
+    /// aggregated by Φ, then the training task(s) — the `train_side`
+    /// stream of [`bounded_staleness_period`].
+    fn train_side_cost(&self, c: &dyn Fn(RlTaskId) -> f64) -> f64 {
+        match self.wf.algo {
+            Algo::Ppo => {
+                self.phi(&[
+                    c(RlTaskId::RewardInf),
+                    c(RlTaskId::RefInf),
+                    c(RlTaskId::CriticInf),
+                ]) + self.phi(&[c(RlTaskId::ActorTrain), c(RlTaskId::CriticTrain)])
+            }
+            Algo::Grpo => {
+                self.phi(&[c(RlTaskId::RewardInf), c(RlTaskId::RefInf)])
+                    + c(RlTaskId::ActorTrain)
+            }
+        }
+    }
+
+    /// Decompose a plan's cost into the async pipeline's streams:
+    /// generation, training side, weight sync and the gen-device overlap
+    /// fraction. The [`crate::asyncrl::pipeline`] DES builds its ops
+    /// from exactly these four numbers.
+    pub fn stream_costs(&self, plan: &ExecutionPlan) -> StreamCosts {
+        let per_task: Vec<TaskCost> = self
+            .wf
+            .tasks
+            .iter()
+            .zip(&plan.task_plans)
+            .map(|(task, tp)| task_cost(self.topo, task, self.job, tp))
+            .collect();
+        let c = |id: RlTaskId| -> f64 {
+            self.wf
+                .task_index(id)
+                .map(|t| per_task[t].total)
+                .unwrap_or(0.0)
+        };
+        StreamCosts {
+            gen: c(RlTaskId::ActorGen),
+            train_side: self.train_side_cost(&c),
+            sync: self.sync_cost(plan),
+            overlap_frac: self.gen_overlap_frac(plan),
+        }
     }
 
     /// Fraction of the actor-generation devices also used by any other
@@ -329,6 +443,79 @@ mod tests {
         let cost = CostModel::new(&topo, &wf, &job).plan_cost(&plan_over(&wf, 64, 16));
         let tp = cost.throughput(&job);
         assert!((tp * cost.iter_time - job.total_samples() as f64).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bounded_staleness_k0_is_the_synchronous_sum() {
+        // k = 0: the staleness cycle forces one full serial lap per
+        // step, whatever the queue capacity.
+        for cap in [1usize, 2, 8] {
+            let p = bounded_staleness_period(10.0, 6.0, 1.0, 0, cap);
+            assert!((p - 17.0).abs() < 1e-12, "cap {cap}: {p}");
+        }
+    }
+
+    #[test]
+    fn bounded_staleness_monotone_and_floored() {
+        let (g, t, s) = (10.0, 6.0, 1.0);
+        let floor = g.max(t + s);
+        let mut prev = f64::INFINITY;
+        for k in 0..6usize {
+            let p = bounded_staleness_period(g, t, s, k, 4);
+            assert!(p <= prev + 1e-12, "k {k} regressed: {p} > {prev}");
+            assert!(p >= floor - 1e-12, "k {k} below floor: {p}");
+            prev = p;
+        }
+        // Large k and cap: the per-pool bounds dominate.
+        assert!((bounded_staleness_period(g, t, s, 100, 100) - floor).abs() < 1e-12);
+        // A starved queue (cap clamped to 1) still bounds the period.
+        let tight = bounded_staleness_period(g, t, 0.0, 100, 0);
+        assert!((tight - g.max(t).max((g + t) / 2.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stream_costs_match_aggregate_arms() {
+        // The async iteration time must be reconstructible from the
+        // public stream decomposition (the DES pipeline relies on it).
+        let topo = build_testbed(Scenario::SingleRegion, &TestbedSpec::default());
+        let job = JobConfig::default();
+        for algo in [Algo::Grpo, Algo::Ppo] {
+            let wf = RlWorkflow::new(algo, Mode::Async, ModelSpec::qwen_4b());
+            let per_task = if algo == Algo::Grpo { 16 } else { 8 };
+            let plan = plan_over(&wf, 64, per_task);
+            let cm = CostModel::new(&topo, &wf, &job);
+            let sc = cm.stream_costs(&plan);
+            let want = bounded_staleness_period(
+                sc.gen,
+                sc.train_side,
+                sc.sync,
+                job.staleness_bound,
+                job.rollout_queue_cap,
+            ) + sc.overlap_frac * sc.gen.min(sc.train_side);
+            let got = cm.plan_cost(&plan).iter_time;
+            assert!(
+                (got - want).abs() < 1e-9 * want.max(1.0),
+                "{algo:?}: {got} != {want}"
+            );
+            assert!(sc.gen > 0.0 && sc.train_side > 0.0 && sc.sync >= 0.0);
+            // plan_over gives each task disjoint devices.
+            assert_eq!(sc.overlap_frac, 0.0);
+        }
+    }
+
+    #[test]
+    fn tighter_staleness_never_speeds_up_a_plan() {
+        let topo = build_testbed(Scenario::SingleRegion, &TestbedSpec::default());
+        let wf = RlWorkflow::new(Algo::Grpo, Mode::Async, ModelSpec::qwen_4b());
+        let plan = plan_over(&wf, 64, 16);
+        let mut prev = f64::INFINITY;
+        for k in 0..4usize {
+            let mut job = JobConfig::default();
+            job.staleness_bound = k;
+            let t = CostModel::new(&topo, &wf, &job).plan_cost(&plan).iter_time;
+            assert!(t <= prev + 1e-12, "k {k}: {t} > {prev}");
+            prev = t;
+        }
     }
 
     #[test]

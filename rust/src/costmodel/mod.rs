@@ -16,6 +16,6 @@ pub mod migration;
 
 pub use cache::{task_plan_key, CostCache};
 pub use comm::ring_minmax;
-pub use e2e::{CostModel, PlanCost};
+pub use e2e::{bounded_staleness_period, CostModel, PlanCost, StreamCosts};
 pub use migration::{MigrationModel, PrevTask};
 pub use task_cost::TaskCost;

@@ -39,6 +39,15 @@
 //!   dynamic-trace replay through the DES (`hetrl replay
 //!   --scenario <s1..s4> --seed N`, compared as static vs warm-replan
 //!   vs anytime vs preempt vs oracle in `benches/fig11_elastic.rs`);
+//! * **asynchronous RL workflows** ([`asyncrl`]): generation and
+//!   training streams joined by a bounded rollout queue under a hard
+//!   off-policy staleness bound `k` (`k = 0` degenerates exactly to the
+//!   synchronous iteration), simulated as per-stream continuous
+//!   batching on the DES core, priced k-aware by
+//!   [`costmodel::bounded_staleness_period`], searched through the
+//!   **pool split** plan dimension (generation vs training pools as SHA
+//!   arms), and replayed elastically with per-pool event attribution
+//!   (`hetrl replay --workflow async`, `benches/fig_async.rs`);
 //! * a standalone **0-1 ILP solver** ([`solver`]): dense simplex LP
 //!   relaxation + branch & bound;
 //! * a **discrete-event cluster simulator** ([`simulator`]) standing in
@@ -79,6 +88,7 @@ pub mod simulator;
 pub mod solver;
 pub mod scheduler;
 pub mod elastic;
+pub mod asyncrl;
 pub mod balance;
 pub mod profiler;
 pub mod metrics;

@@ -78,6 +78,10 @@ fn help() -> String {
             OptSpec { name: "iters", help: "replay: iterations to replay", default: Some("24") },
             OptSpec { name: "events", help: "replay: cluster events in the trace", default: Some("5") },
             OptSpec { name: "policy", help: "replay: static|warm|anytime|preempt|oracle|all", default: Some("all") },
+            OptSpec { name: "workflow", help: "replay: sync|async workflow model", default: Some("sync") },
+            OptSpec { name: "staleness", help: "replay --workflow async: staleness bound k (0 = sync)", default: Some("2") },
+            OptSpec { name: "queue-cap", help: "replay --workflow async: rollout-queue capacity", default: Some("2") },
+            OptSpec { name: "window", help: "replay --workflow async: pipeline steps per iteration", default: Some("8") },
             OptSpec { name: "warm-budget", help: "replay: evals per warm replan", default: Some("150") },
             OptSpec { name: "anytime-rate", help: "replay: background evals per simulated second", default: Some("0.5") },
             OptSpec { name: "notice-secs", help: "replay: pin machine-loss advance notice (0 = none; default: realistic drawn notice)", default: None },
@@ -295,10 +299,32 @@ fn cmd_replay(args: &Args) -> i32 {
     }
     let post = first_event_iter(&trace).unwrap_or(0);
 
+    // The async workflow model: `--workflow async` replays the
+    // bounded-staleness pipeline (crate::asyncrl) instead of the
+    // synchronous barrier; `--staleness 0` delegates back to the sync
+    // path bit-identically.
+    let workflow = args.get_or("workflow", "sync");
+    let async_cfg = match workflow.as_str() {
+        "sync" => None,
+        "async" => Some(hetrl::asyncrl::AsyncReplayConfig {
+            base: cfg.clone(),
+            staleness_bound: args.get_usize("staleness", 2).unwrap_or(2),
+            queue_capacity: args.get_usize("queue-cap", 2).unwrap_or(2),
+            window: args.get_usize("window", 8).unwrap_or(8).max(1),
+            ..hetrl::asyncrl::AsyncReplayConfig::default()
+        }),
+        other => {
+            eprintln!("bad --workflow '{other}' (sync|async)");
+            return 2;
+        }
+    };
+
     let mut table = hetrl::util::table::Table::new(
         &format!("replay: {} / {} / seed {seed}", scenario.name(), wf.name()),
         &[
             "policy",
+            "workflow",
+            "k",
             "total (s)",
             "mean iter (s)",
             "thpt (samp/s)",
@@ -309,10 +335,29 @@ fn cmd_replay(args: &Args) -> i32 {
             "hyp evals",
             "cache hit%",
             "migration (s)",
+            "queue mean/max",
+            "gen stall (s)",
         ],
     );
     for policy in policies {
-        let r = elastic::replay(scenario, &spec, &wf, &job, policy, &cfg, seed);
+        // (base telemetry, workflow / staleness / queue columns)
+        let (r, wf_col, k_col, queue_col, stall_col) = match &async_cfg {
+            None => {
+                let r = elastic::replay(scenario, &spec, &wf, &job, policy, &cfg, seed);
+                (r, "sync".to_string(), "-".into(), "-".into(), "-".into())
+            }
+            Some(ac) => {
+                let ar =
+                    hetrl::asyncrl::replay_async(scenario, &spec, &wf, &job, policy, ac, seed);
+                let cols = (
+                    ar.workflow_name().to_string(),
+                    ar.staleness_bound.to_string(),
+                    format!("{:.2}/{}", ar.mean_queue_depth(), ar.max_queue_depth()),
+                    format!("{:.1}", ar.producer_stall_secs()),
+                );
+                (ar.base, cols.0, cols.1, cols.2, cols.3)
+            }
+        };
         let mig: f64 = r.records.iter().map(|x| x.migration_secs).sum();
         for rec in r.records.iter().filter(|rec| !rec.events.is_empty()) {
             println!(
@@ -328,6 +373,8 @@ fn cmd_replay(args: &Args) -> i32 {
         }
         table.row(vec![
             policy.name().to_string(),
+            wf_col,
+            k_col,
             format!("{:.1}", r.total_secs),
             format!("{:.2}", r.mean_iter_secs()),
             format!("{:.2}", r.throughput()),
@@ -338,6 +385,8 @@ fn cmd_replay(args: &Args) -> i32 {
             r.hypothesis_evals.to_string(),
             format!("{:.0}%", r.cache_hit_rate() * 100.0),
             format!("{mig:.1}"),
+            queue_col,
+            stall_col,
         ]);
     }
     table.print();

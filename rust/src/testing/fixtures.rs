@@ -117,6 +117,30 @@ pub fn background_replay_cfg(threads: usize) -> ReplayConfig {
     cfg
 }
 
+/// The tiny job with the async-pipeline knobs pinned: staleness bound
+/// 2, rollout-queue capacity 2. Pair with
+/// [`tiny_wf`]`.with_mode(Mode::Async)` (or let
+/// [`crate::asyncrl::replay_async`] pin the knobs itself from its
+/// config).
+pub fn async_job() -> JobConfig {
+    JobConfig { staleness_bound: 2, rollout_queue_cap: 2, ..JobConfig::tiny() }
+}
+
+/// Async replay config over [`small_replay_cfg`]: the given staleness
+/// bound, queue capacity 2, a 4-step DES window, and generation-pool
+/// fractions suited to the 12-GPU small testbed.
+pub fn async_replay_cfg(staleness_bound: usize, threads: usize) -> crate::asyncrl::AsyncReplayConfig {
+    let mut base = small_replay_cfg();
+    base.replan.threads = threads;
+    crate::asyncrl::AsyncReplayConfig {
+        base,
+        staleness_bound,
+        queue_capacity: 2,
+        window: 4,
+        gen_fracs: vec![1.0 / 3.0, 0.5, 2.0 / 3.0],
+    }
+}
+
 /// Generate a random valid plan through the Level-1..5 machinery
 /// (`None` when ten seeded attempts all fail).
 pub fn random_plan(
@@ -196,6 +220,18 @@ mod tests {
             }
         }
         assert!(found > 0, "no valid random plan in 20 seeds");
+    }
+
+    #[test]
+    fn async_fixtures_are_consistent() {
+        let j = async_job();
+        assert_eq!(j.staleness_bound, 2);
+        assert_eq!(j.rollout_queue_cap, 2);
+        let c = async_replay_cfg(1, 4);
+        assert_eq!(c.staleness_bound, 1);
+        assert_eq!(c.base.replan.threads, 4);
+        assert!(c.window >= 1);
+        assert!(c.gen_fracs.iter().all(|f| (0.0..1.0).contains(f)));
     }
 
     #[test]

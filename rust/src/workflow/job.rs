@@ -26,6 +26,19 @@ pub struct JobConfig {
     /// fraction of the local generation batch (vLLM continuous batching
     /// keeps this near the whole local batch).
     pub decode_batch_frac: f64,
+    /// Hard off-policy staleness bound `k` for **asynchronous**
+    /// workflows: a rollout batch may be consumed by training at most
+    /// `k` policy versions after the one that generated it (AReaL-Hex /
+    /// LlamaRL bounded staleness). `k = 0` degenerates exactly to the
+    /// synchronous iteration — generation, training and weight sync
+    /// serialize. Consulted only when the workflow's
+    /// [`Mode`](super::Mode) is `Async`; inert for sync workflows.
+    pub staleness_bound: usize,
+    /// Capacity of the bounded rollout queue joining the generation
+    /// stream to the training stream (asynchronous workflows only):
+    /// generation of batch `i` blocks until batch `i - cap` has been
+    /// dequeued. Clamped to ≥ 1 wherever it is consumed.
+    pub rollout_queue_cap: usize,
 }
 
 impl Default for JobConfig {
@@ -39,6 +52,8 @@ impl Default for JobConfig {
             eta: 0.8,
             recompute: true,
             decode_batch_frac: 1.0,
+            staleness_bound: 1,
+            rollout_queue_cap: 2,
         }
     }
 }
@@ -74,6 +89,8 @@ impl JobConfig {
             eta: 0.8,
             recompute: true,
             decode_batch_frac: 1.0,
+            staleness_bound: 1,
+            rollout_queue_cap: 2,
         }
     }
 }
@@ -90,6 +107,11 @@ mod tests {
         assert_eq!(j.seq_out, 1024);
         assert_eq!(j.n_responses, 8);
         assert_eq!(j.total_samples(), 3072);
+        // Async-pipeline defaults: one version of slack, two queued
+        // batches (k = 0 would force the synchronous degenerate case).
+        assert_eq!(j.staleness_bound, 1);
+        assert_eq!(j.rollout_queue_cap, 2);
+        assert_eq!(JobConfig::tiny().staleness_bound, 1);
     }
 
     #[test]

@@ -252,6 +252,16 @@ impl RlWorkflow {
     pub fn task_index(&self, id: RlTaskId) -> Option<usize> {
         self.tasks.iter().position(|t| t.id == id)
     }
+
+    /// A clone of this workflow under a different execution mode. Task
+    /// lists and dependency edges depend only on the algorithm, so the
+    /// clone shares them verbatim; only cost-model pricing and the
+    /// async-pipeline construction consult `mode`. Used by
+    /// [`crate::asyncrl`] to force a workflow onto the sync (`k = 0`)
+    /// or async pricing path without rebuilding it.
+    pub fn with_mode(&self, mode: Mode) -> RlWorkflow {
+        RlWorkflow { mode, ..self.clone() }
+    }
 }
 
 #[cfg(test)]
@@ -297,6 +307,17 @@ mod tests {
         assert_eq!(RlTaskId::ActorGen.kind(), TaskKind::Generation);
         assert_eq!(RlTaskId::RefInf.kind(), TaskKind::Inference);
         assert_eq!(RlTaskId::CriticTrain.kind(), TaskKind::Training);
+    }
+
+    #[test]
+    fn with_mode_changes_only_the_mode() {
+        let sync = RlWorkflow::new(Algo::Grpo, Mode::Sync, model());
+        let asy = sync.with_mode(Mode::Async);
+        assert_eq!(asy.mode, Mode::Async);
+        assert_eq!(asy.algo, sync.algo);
+        assert_eq!(asy.tasks, sync.tasks);
+        assert_eq!(asy.deps, sync.deps);
+        assert_eq!(asy.with_mode(Mode::Sync).mode, Mode::Sync);
     }
 
     #[test]

@@ -1,0 +1,225 @@
+//! Properties of the asynchronous workflow model (`crate::asyncrl`,
+//! `hetrl replay --workflow async`):
+//!
+//! * **the staleness bound is hard** — in every replayed trace, under
+//!   every policy, the observed off-policy staleness never exceeds the
+//!   configured bound `k`, and the rollout queue never exceeds its
+//!   capacity. The bound is structural (dependency edges in the DES op
+//!   graph), so noise and fleet churn cannot break it;
+//! * **`k = 0` degenerates to the synchronous path bit-identically** —
+//!   an async replay with staleness bound 0 delegates to
+//!   [`hetrl::elastic::replay`] with the workflow forced to sync, so
+//!   the results are equal as values, at every thread count;
+//! * **bit-determinism across thread counts** — the pool-split search
+//!   and the async replay run on the same engine contract as the sync
+//!   stack: the deterministic projection (everything except cache
+//!   hit/miss telemetry) is identical at 1, 2 and 8 worker threads;
+//! * **all five policies run** — static, warm-replan, anytime, preempt
+//!   and oracle all complete on a seeded async trace with finite,
+//!   positive goodput.
+
+use hetrl::asyncrl::{replay_async, AsyncReplayResult};
+use hetrl::elastic::{replay, Policy, ReplayResult};
+use hetrl::testing::fixtures;
+use hetrl::topology::Scenario;
+use hetrl::workflow::Mode;
+
+/// The deterministic projection of a replay: everything except the
+/// cache hit/miss telemetry, which is approximate when threads > 1.
+#[allow(clippy::type_complexity)]
+fn fingerprint(
+    r: &ReplayResult,
+) -> Vec<(usize, Vec<String>, bool, usize, usize, usize, u64, u64, usize, usize, u64)> {
+    r.records
+        .iter()
+        .map(|x| {
+            (
+                x.iter,
+                x.events.clone(),
+                x.replanned,
+                x.evals,
+                x.anytime_evals,
+                x.hypothesis_evals,
+                x.migration_secs.to_bits(),
+                x.iter_secs.to_bits(),
+                x.samples,
+                x.active_gpus,
+                x.anytime_cost.to_bits(),
+            )
+        })
+        .collect()
+}
+
+/// [`fingerprint`] plus the async-side telemetry (queue depths, stall,
+/// staleness), all bit-exact.
+fn async_fingerprint(
+    r: &AsyncReplayResult,
+) -> (
+    Vec<(usize, Vec<String>, bool, usize, usize, usize, u64, u64, usize, usize, u64)>,
+    Vec<(u64, usize, u64, usize)>,
+    usize,
+) {
+    (
+        fingerprint(&r.base),
+        r.queue
+            .iter()
+            .map(|q| {
+                (
+                    q.queue_depth_mean.to_bits(),
+                    q.queue_depth_max,
+                    q.producer_stall_secs.to_bits(),
+                    q.max_staleness,
+                )
+            })
+            .collect(),
+        r.max_staleness,
+    )
+}
+
+#[test]
+fn staleness_bound_never_exceeded_in_any_replay() {
+    let wf = fixtures::tiny_wf();
+    let job = fixtures::async_job();
+    for k in [1usize, 2] {
+        for policy in [Policy::Static, Policy::Warm, Policy::Anytime] {
+            for seed in [3u64, 9] {
+                let cfg = fixtures::async_replay_cfg(k, 1);
+                let r = replay_async(
+                    Scenario::MultiCountry,
+                    &fixtures::small_spec(),
+                    &wf,
+                    &job,
+                    policy,
+                    &cfg,
+                    seed,
+                );
+                assert!(
+                    r.max_staleness <= k,
+                    "staleness {} > bound {k} ({policy:?}, seed {seed})",
+                    r.max_staleness
+                );
+                for (i, q) in r.queue.iter().enumerate() {
+                    assert!(q.max_staleness <= k, "iter {i}");
+                    assert!(
+                        q.queue_depth_max <= cfg.queue_capacity,
+                        "iter {i}: depth {} > cap {}",
+                        q.queue_depth_max,
+                        cfg.queue_capacity
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn k0_replay_is_bit_identical_to_the_sync_path() {
+    let wf = fixtures::tiny_wf();
+    let job = fixtures::async_job();
+    for seed in [1u64, 5, 11] {
+        // The 1-thread runs must be equal as whole values (cache
+        // telemetry included); at higher thread counts compare the
+        // deterministic projection.
+        let a1 = replay_async(
+            Scenario::MultiCountry,
+            &fixtures::small_spec(),
+            &wf,
+            &job,
+            Policy::Anytime,
+            &fixtures::async_replay_cfg(0, 1),
+            seed,
+        );
+        let s1 = replay(
+            Scenario::MultiCountry,
+            &fixtures::small_spec(),
+            &wf.with_mode(Mode::Sync),
+            &job,
+            Policy::Anytime,
+            &fixtures::async_replay_cfg(0, 1).base,
+            seed,
+        );
+        assert_eq!(a1.base, s1, "seed {seed}");
+        assert_eq!(a1.max_staleness, 0);
+        assert_eq!(a1.workflow_name(), "sync");
+        for threads in fixtures::test_threads() {
+            let a = replay_async(
+                Scenario::MultiCountry,
+                &fixtures::small_spec(),
+                &wf,
+                &job,
+                Policy::Anytime,
+                &fixtures::async_replay_cfg(0, threads),
+                seed,
+            );
+            let s = replay(
+                Scenario::MultiCountry,
+                &fixtures::small_spec(),
+                &wf.with_mode(Mode::Sync),
+                &job,
+                Policy::Anytime,
+                &fixtures::async_replay_cfg(0, threads).base,
+                seed,
+            );
+            assert_eq!(fingerprint(&a.base), fingerprint(&s), "seed {seed} threads {threads}");
+            // And the k=0 projection is thread-count independent.
+            assert_eq!(fingerprint(&a.base), fingerprint(&a1.base), "threads {threads}");
+        }
+    }
+}
+
+#[test]
+fn async_replay_bit_identical_across_thread_counts() {
+    let wf = fixtures::tiny_wf();
+    let job = fixtures::async_job();
+    for seed in [2u64, 7, 13] {
+        let base = replay_async(
+            Scenario::MultiRegionHybrid,
+            &fixtures::small_spec(),
+            &wf,
+            &job,
+            Policy::Anytime,
+            &fixtures::async_replay_cfg(2, 1),
+            seed,
+        );
+        for threads in fixtures::test_threads() {
+            let r = replay_async(
+                Scenario::MultiRegionHybrid,
+                &fixtures::small_spec(),
+                &wf,
+                &job,
+                Policy::Anytime,
+                &fixtures::async_replay_cfg(2, threads),
+                seed,
+            );
+            assert_eq!(
+                async_fingerprint(&r),
+                async_fingerprint(&base),
+                "seed {seed} threads {threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn all_five_policies_complete_on_an_async_trace() {
+    let wf = fixtures::tiny_wf();
+    let job = fixtures::async_job();
+    for policy in Policy::ALL {
+        let r = replay_async(
+            Scenario::MultiCountry,
+            &fixtures::small_spec(),
+            &wf,
+            &job,
+            policy,
+            &fixtures::async_replay_cfg(2, 1),
+            3,
+        );
+        assert_eq!(r.base.records.len(), r.queue.len(), "{policy:?}");
+        assert!(r.base.total_secs > 0.0 && r.base.total_secs.is_finite(), "{policy:?}");
+        assert!(r.base.throughput() > 0.0, "{policy:?}");
+        assert_eq!(r.workflow_name(), "async", "{policy:?}");
+        if !policy.runs_background() {
+            assert_eq!(r.base.anytime_evals, 0, "{policy:?}");
+        }
+    }
+}
