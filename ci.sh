@@ -70,6 +70,20 @@ echo "== replay smoke (async workflow, all five policies) =="
 ./target/release/hetrl replay --workflow async --scenario country --seed 0 \
     --iters 6 --events 3 --budget 120 --warm-budget 60 --policy all --tiny
 
+echo "== chaos replay smoke (transient faults + recovery pricing, sync) =="
+# Seeded NIC bursts / checkpoint-store outages / task failures with
+# bounded-retry stalls, rollback rework and a searched checkpoint
+# cadence, across all five policies; tests/prop_recover.rs asserts the
+# degeneracy pins and bit-determinism of the same path.
+./target/release/hetrl replay --scenario country --seed 0 \
+    --iters 6 --events 3 --budget 120 --warm-budget 60 \
+    --faults --ckpt-interval auto --policy all --tiny
+
+echo "== chaos replay smoke (transient faults + recovery pricing, async) =="
+./target/release/hetrl replay --workflow async --scenario country --seed 0 \
+    --iters 6 --events 3 --budget 120 --warm-budget 60 \
+    --faults --max-retries 2 --policy all --tiny
+
 echo "== search-throughput smoke (parallel engine, 1 vs N threads) =="
 # fig5_search_throughput sweeps thread counts at a small budget and
 # exits non-zero if any N-thread run diverges from (in particular, finds

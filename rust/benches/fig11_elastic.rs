@@ -17,6 +17,22 @@
 //! * oracle        — full-budget re-search with free instant migration
 //!                   (upper bound).
 //!
+//! The matrix runs three traces per scenario (the `trace` column):
+//!
+//! * `base`       — the loss/join trace exactly as before this column
+//!                  existed; recovery pricing off, so the recovery
+//!                  columns are identically zero (asserted — the
+//!                  degeneracy pin);
+//! * `chaos`      — the same trace plus seeded transient faults (NIC
+//!                  bursts, checkpoint-store outages, task failures)
+//!                  with recovery pricing on and the checkpoint cadence
+//!                  searched — retry stall, rollback rework and
+//!                  checkpoint overhead all land in the rows;
+//! * `total-loss` — a synthetic trace that preempts *every* machine at
+//!                  once (unnoticed) and rejoins them later: the replay
+//!                  must park in the degraded state and resume, never
+//!                  panic (asserted).
+//!
 //! Expected shape: after the first preemption, warm-replan recovers
 //! most of the oracle's throughput while static — stuck with a plan
 //! shaped for the departed fleet — trails; anytime closes more of the
@@ -27,12 +43,75 @@
 
 mod common;
 
-use hetrl::elastic::{self, first_event_iter, generate_trace, Policy, ReplanConfig, ReplayConfig, TraceConfig};
+use hetrl::costmodel::RecoveryModel;
+use hetrl::elastic::{
+    self, first_event_iter, generate_trace, CkptSearchConfig, ClusterEvent, Policy, ReplanConfig,
+    ReplayConfig, ReplayResult, TraceConfig, TraceEvent,
+};
 use hetrl::metrics::RunRecord;
-use hetrl::topology::{build_testbed, Scenario, TestbedSpec};
+use hetrl::topology::{build_testbed, DeviceTopology, Scenario, TestbedSpec};
 use hetrl::util::json::Json;
 use hetrl::util::table::Table;
 use hetrl::workflow::{Algo, JobConfig, Mode, ModelSpec, RlWorkflow};
+
+/// Preempt every machine of `base` at once (no advance notice), rejoin
+/// them all four iterations later: the graceful-degradation worst case.
+fn total_loss_trace(base: &DeviceTopology) -> Vec<TraceEvent> {
+    let n = base.devices.iter().map(|d| d.machine + 1).max().unwrap_or(0);
+    let mut trace: Vec<TraceEvent> = (0..n)
+        .map(|m| TraceEvent {
+            at_iter: 2,
+            event: ClusterEvent::MachinePreempt { machine: m },
+            notice_secs: None,
+        })
+        .collect();
+    trace.extend((0..n).map(|m| TraceEvent {
+        at_iter: 6,
+        event: ClusterEvent::MachineJoin { machine: m },
+        notice_secs: None,
+    }));
+    trace
+}
+
+fn push_rows(
+    record: &mut RunRecord,
+    scenario: Scenario,
+    trace_name: &str,
+    policy: Policy,
+    r: &ReplayResult,
+) {
+    for rec in &r.records {
+        record.push(vec![
+            Json::str(scenario.name()),
+            Json::str(trace_name),
+            // Constant here; `benches/fig_async.rs` fills the
+            // async side of the same schema.
+            Json::str("sync"),
+            Json::num(0.0),
+            Json::str(policy.name()),
+            Json::num(rec.iter as f64),
+            Json::num(rec.iter_secs),
+            Json::num(rec.migration_secs),
+            Json::num(rec.active_gpus as f64),
+            Json::num(rec.evals as f64),
+            Json::num(rec.anytime_evals as f64),
+            Json::num(rec.hypothesis_evals as f64),
+            // JSON has no ∞; -1 marks "no incumbent / not anytime".
+            Json::num(if rec.anytime_cost.is_finite() { rec.anytime_cost } else { -1.0 }),
+            Json::num(rec.cache_hits as f64),
+            Json::num(rec.cache_misses as f64),
+            // The sync iteration has no rollout queue.
+            Json::num(0.0),
+            Json::num(0.0),
+            Json::num(0.0),
+            Json::num(rec.retry_stall_secs),
+            Json::num(rec.rework_secs),
+            Json::num(rec.ckpt_secs),
+            Json::num(if rec.degraded { 1.0 } else { 0.0 }),
+            Json::str(&rec.events.join("+")),
+        ]);
+    }
+}
 
 fn main() {
     hetrl::util::logging::init();
@@ -51,11 +130,21 @@ fn main() {
         },
         ..ReplayConfig::default()
     };
+    // Chaos variant: seeded transient faults on top of the same base
+    // trace, recovery pricing on, checkpoint cadence searched (one
+    // halving round over the default candidate set).
+    let chaos_cfg = ReplayConfig {
+        trace: TraceConfig { fault_events: 4, ..cfg.trace.clone() },
+        recovery: RecoveryModel::with_interval(600.0),
+        ckpt_search: Some(CkptSearchConfig { rounds: 1, ..CkptSearchConfig::default() }),
+        ..cfg.clone()
+    };
 
     let mut record = RunRecord::new(
         "fig11_elastic",
         &[
             "scenario",
+            "trace",
             "workflow",
             "staleness_bound",
             "policy",
@@ -72,6 +161,10 @@ fn main() {
             "queue_depth_mean",
             "queue_depth_max",
             "producer_stall_secs",
+            "retry_stall_secs",
+            "rework_secs",
+            "ckpt_secs",
+            "degraded",
             "events",
         ],
     );
@@ -79,17 +172,49 @@ fn main() {
         &format!("Figure 11: elastic replay (Qwen-4B sync GRPO, {iters} iters, seed {seed})"),
         &[
             "scenario",
+            "trace",
             "policy",
             "thpt (samp/s)",
             "post-event thpt",
             "vs static",
             "evals",
-            "bg evals",
-            "hyp evals",
             "cache hit%",
             "migration (s)",
+            "stall (s)",
+            "rework (s)",
+            "ckpt (s)",
+            "degr",
         ],
     );
+    let row = |summary: &mut Table,
+               scenario: Scenario,
+               tr: &str,
+               policy: Policy,
+               r: &ReplayResult,
+               post: usize,
+               static_post: f64| {
+        let post_thpt = r.throughput_after(post);
+        let mig: f64 = r.records.iter().map(|x| x.migration_secs).sum();
+        summary.row(vec![
+            scenario.name().to_string(),
+            tr.to_string(),
+            policy.name().to_string(),
+            format!("{:.2}", r.throughput()),
+            format!("{post_thpt:.2}"),
+            if static_post.is_finite() && static_post > 0.0 {
+                format!("{:+.1}%", (post_thpt / static_post - 1.0) * 100.0)
+            } else {
+                "-".to_string()
+            },
+            r.total_evals.to_string(),
+            format!("{:.0}%", r.cache_hit_rate() * 100.0),
+            format!("{mig:.1}"),
+            format!("{:.1}", r.retry_stall_secs),
+            format!("{:.1}", r.rework_secs),
+            format!("{:.1}/{}", r.ckpt_secs, r.ckpts),
+            r.degraded_iters.to_string(),
+        ]);
+    };
     for scenario in Scenario::ALL {
         let base = build_testbed(scenario, &spec);
         let trace = generate_trace(&base, &cfg.trace, seed);
@@ -102,54 +227,41 @@ fn main() {
         let mut static_post = f64::NAN;
         for policy in Policy::ALL {
             let r = elastic::replay(scenario, &spec, &wf, &job, policy, &cfg, seed);
-            for rec in &r.records {
-                record.push(vec![
-                    Json::str(scenario.name()),
-                    // Constant here; `benches/fig_async.rs` fills the
-                    // async side of the same schema.
-                    Json::str("sync"),
-                    Json::num(0.0),
-                    Json::str(policy.name()),
-                    Json::num(rec.iter as f64),
-                    Json::num(rec.iter_secs),
-                    Json::num(rec.migration_secs),
-                    Json::num(rec.active_gpus as f64),
-                    Json::num(rec.evals as f64),
-                    Json::num(rec.anytime_evals as f64),
-                    Json::num(rec.hypothesis_evals as f64),
-                    // JSON has no ∞; -1 marks "no incumbent / not anytime".
-                    Json::num(if rec.anytime_cost.is_finite() { rec.anytime_cost } else { -1.0 }),
-                    Json::num(rec.cache_hits as f64),
-                    Json::num(rec.cache_misses as f64),
-                    // The sync iteration has no rollout queue.
-                    Json::num(0.0),
-                    Json::num(0.0),
-                    Json::num(0.0),
-                    Json::str(&rec.events.join("+")),
-                ]);
-            }
-            let post_thpt = r.throughput_after(post);
             if policy == Policy::Static {
-                static_post = post_thpt;
+                static_post = r.throughput_after(post);
             }
-            let mig: f64 = r.records.iter().map(|x| x.migration_secs).sum();
-            summary.row(vec![
-                scenario.name().to_string(),
-                policy.name().to_string(),
-                format!("{:.2}", r.throughput()),
-                format!("{post_thpt:.2}"),
-                if static_post.is_finite() && static_post > 0.0 {
-                    format!("{:+.1}%", (post_thpt / static_post - 1.0) * 100.0)
-                } else {
-                    "-".to_string()
-                },
-                r.total_evals.to_string(),
-                r.anytime_evals.to_string(),
-                r.hypothesis_evals.to_string(),
-                format!("{:.0}%", r.cache_hit_rate() * 100.0),
-                format!("{mig:.1}"),
-            ]);
+            push_rows(&mut record, scenario, "base", policy, &r);
+            row(&mut summary, scenario, "base", policy, &r, post, static_post);
+            // Degeneracy pin: recovery off charges exactly nothing.
+            assert_eq!(r.retry_stall_secs + r.rework_secs + r.ckpt_secs, 0.0);
         }
+        // Chaos pass: every policy must survive the fault stream and
+        // report the recovery charges it paid.
+        let mut chaos_static_post = f64::NAN;
+        for policy in Policy::ALL {
+            let r = elastic::replay(scenario, &spec, &wf, &job, policy, &chaos_cfg, seed);
+            if policy == Policy::Static {
+                chaos_static_post = r.throughput_after(post);
+            }
+            push_rows(&mut record, scenario, "chaos", policy, &r);
+            row(&mut summary, scenario, "chaos", policy, &r, post, chaos_static_post);
+            assert!(r.total_secs.is_finite());
+        }
+        // Total-loss pass: the whole fleet disappears at once; the
+        // replay must park in the degraded state and resume on rejoin.
+        let r = elastic::replay_with_trace(
+            base.clone(),
+            total_loss_trace(&base),
+            &wf,
+            &job,
+            Policy::Warm,
+            &chaos_cfg,
+            seed,
+        );
+        assert!(r.degraded_iters >= 1, "{}: total loss never degraded", scenario.name());
+        assert!(!r.records.last().map(|x| x.degraded).unwrap_or(true));
+        push_rows(&mut record, scenario, "total-loss", Policy::Warm, &r);
+        row(&mut summary, scenario, "total-loss", Policy::Warm, &r, post, f64::NAN);
     }
     summary.print();
     if let Ok(p) = record.save(&hetrl::metrics::results_dir()) {

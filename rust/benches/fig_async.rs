@@ -12,6 +12,14 @@
 //! machine loss confined to one pool stalls only that stream while the
 //! rollout queue buffers the other (up to `k` policy versions).
 //!
+//! Like fig11, the matrix carries a `trace` column: `base` is the plain
+//! loss/join trace with recovery pricing off (recovery columns
+//! identically zero), `chaos` overlays seeded transient faults with
+//! recovery pricing and the analytically picked checkpoint cadence, and
+//! `total-loss` preempts every machine at once to pin graceful
+//! degradation (the replay parks, retains the incumbent, and resumes
+//! on rejoin — asserted, never a panic).
+//!
 //! Rows carry the full per-iteration telemetry of fig11 plus the
 //! async-side columns (`workflow`, `staleness_bound`, rollout-queue
 //! mean/max depth, producer stall, observed staleness) and are
@@ -19,13 +27,75 @@
 
 mod common;
 
-use hetrl::asyncrl::{replay_async, AsyncReplayConfig};
-use hetrl::elastic::{first_event_iter, generate_trace, Policy, ReplanConfig, ReplayConfig, TraceConfig};
+use hetrl::asyncrl::{replay_async, replay_async_with_trace, AsyncReplayConfig, AsyncReplayResult};
+use hetrl::costmodel::RecoveryModel;
+use hetrl::elastic::{
+    first_event_iter, generate_trace, CkptSearchConfig, ClusterEvent, Policy, ReplanConfig,
+    ReplayConfig, TraceConfig, TraceEvent,
+};
 use hetrl::metrics::RunRecord;
-use hetrl::topology::{build_testbed, Scenario, TestbedSpec};
+use hetrl::topology::{build_testbed, DeviceTopology, Scenario, TestbedSpec};
 use hetrl::util::json::Json;
 use hetrl::util::table::Table;
 use hetrl::workflow::{Algo, JobConfig, Mode, ModelSpec, RlWorkflow};
+
+/// Preempt every machine of `base` at once (no advance notice), rejoin
+/// them all four iterations later: the graceful-degradation worst case.
+fn total_loss_trace(base: &DeviceTopology) -> Vec<TraceEvent> {
+    let n = base.devices.iter().map(|d| d.machine + 1).max().unwrap_or(0);
+    let mut trace: Vec<TraceEvent> = (0..n)
+        .map(|m| TraceEvent {
+            at_iter: 2,
+            event: ClusterEvent::MachinePreempt { machine: m },
+            notice_secs: None,
+        })
+        .collect();
+    trace.extend((0..n).map(|m| TraceEvent {
+        at_iter: 6,
+        event: ClusterEvent::MachineJoin { machine: m },
+        notice_secs: None,
+    }));
+    trace
+}
+
+fn push_rows(
+    record: &mut RunRecord,
+    scenario: Scenario,
+    trace_name: &str,
+    policy: Policy,
+    k: usize,
+    r: &AsyncReplayResult,
+) {
+    for (rec, q) in r.base.records.iter().zip(&r.queue) {
+        record.push(vec![
+            Json::str(scenario.name()),
+            Json::str(trace_name),
+            Json::str(r.workflow_name()),
+            Json::num(k as f64),
+            Json::str(policy.name()),
+            Json::num(rec.iter as f64),
+            Json::num(rec.iter_secs),
+            Json::num(rec.migration_secs),
+            Json::num(rec.active_gpus as f64),
+            Json::num(rec.evals as f64),
+            Json::num(rec.anytime_evals as f64),
+            Json::num(rec.hypothesis_evals as f64),
+            // JSON has no ∞; -1 marks "no incumbent / not anytime".
+            Json::num(if rec.anytime_cost.is_finite() { rec.anytime_cost } else { -1.0 }),
+            Json::num(rec.cache_hits as f64),
+            Json::num(rec.cache_misses as f64),
+            Json::num(q.queue_depth_mean),
+            Json::num(q.queue_depth_max as f64),
+            Json::num(q.producer_stall_secs),
+            Json::num(rec.retry_stall_secs),
+            Json::num(rec.rework_secs),
+            Json::num(rec.ckpt_secs),
+            Json::num(if rec.degraded { 1.0 } else { 0.0 }),
+            Json::num(q.max_staleness as f64),
+            Json::str(&rec.events.join("+")),
+        ]);
+    }
+}
 
 fn main() {
     hetrl::util::logging::init();
@@ -44,11 +114,21 @@ fn main() {
         },
         ..ReplayConfig::default()
     };
+    // Chaos variant: same trace plus seeded transient faults, recovery
+    // pricing on; the async path picks its checkpoint cadence
+    // analytically from the candidate set for the fixed pool-split plan.
+    let chaos_base = ReplayConfig {
+        trace: TraceConfig { fault_events: 4, ..base_cfg.trace.clone() },
+        recovery: RecoveryModel::with_interval(600.0),
+        ckpt_search: Some(CkptSearchConfig { rounds: 1, ..CkptSearchConfig::default() }),
+        ..base_cfg.clone()
+    };
 
     let mut record = RunRecord::new(
         "fig_async",
         &[
             "scenario",
+            "trace",
             "workflow",
             "staleness_bound",
             "policy",
@@ -65,6 +145,10 @@ fn main() {
             "queue_depth_mean",
             "queue_depth_max",
             "producer_stall_secs",
+            "retry_stall_secs",
+            "rework_secs",
+            "ckpt_secs",
+            "degraded",
             "max_staleness",
             "events",
         ],
@@ -73,6 +157,7 @@ fn main() {
         &format!("Async vs sync elastic replay (Qwen-4B GRPO, {iters} iters, seed {seed})"),
         &[
             "scenario",
+            "trace",
             "policy",
             "workflow",
             "k",
@@ -81,9 +166,44 @@ fn main() {
             "vs sync",
             "queue mean/max",
             "gen stall (s)",
+            "stall (s)",
+            "rework (s)",
+            "ckpt (s)",
+            "degr",
             "evals",
         ],
     );
+    let row = |summary: &mut Table,
+               scenario: Scenario,
+               tr: &str,
+               policy: Policy,
+               k: usize,
+               r: &AsyncReplayResult,
+               post: usize,
+               sync_thpt: f64| {
+        let thpt = r.base.throughput();
+        summary.row(vec![
+            scenario.name().to_string(),
+            tr.to_string(),
+            policy.name().to_string(),
+            r.workflow_name().to_string(),
+            k.to_string(),
+            format!("{thpt:.2}"),
+            format!("{:.2}", r.base.throughput_after(post)),
+            if k > 0 && sync_thpt.is_finite() && sync_thpt > 0.0 {
+                format!("{:+.1}%", (thpt / sync_thpt - 1.0) * 100.0)
+            } else {
+                "-".to_string()
+            },
+            format!("{:.2}/{}", r.mean_queue_depth(), r.max_queue_depth()),
+            format!("{:.1}", r.producer_stall_secs()),
+            format!("{:.1}", r.base.retry_stall_secs),
+            format!("{:.1}", r.base.rework_secs),
+            format!("{:.1}/{}", r.base.ckpt_secs, r.base.ckpts),
+            r.base.degraded_iters.to_string(),
+            r.base.total_evals.to_string(),
+        ]);
+    };
     for scenario in Scenario::ALL {
         let base = build_testbed(scenario, &spec);
         let trace = generate_trace(&base, &base_cfg.trace, seed);
@@ -102,52 +222,49 @@ fn main() {
                     ..AsyncReplayConfig::default()
                 };
                 let r = replay_async(scenario, &spec, &wf, &job, policy, &cfg, seed);
-                for (rec, q) in r.base.records.iter().zip(&r.queue) {
-                    record.push(vec![
-                        Json::str(scenario.name()),
-                        Json::str(r.workflow_name()),
-                        Json::num(k as f64),
-                        Json::str(policy.name()),
-                        Json::num(rec.iter as f64),
-                        Json::num(rec.iter_secs),
-                        Json::num(rec.migration_secs),
-                        Json::num(rec.active_gpus as f64),
-                        Json::num(rec.evals as f64),
-                        Json::num(rec.anytime_evals as f64),
-                        Json::num(rec.hypothesis_evals as f64),
-                        // JSON has no ∞; -1 marks "no incumbent / not anytime".
-                        Json::num(if rec.anytime_cost.is_finite() { rec.anytime_cost } else { -1.0 }),
-                        Json::num(rec.cache_hits as f64),
-                        Json::num(rec.cache_misses as f64),
-                        Json::num(q.queue_depth_mean),
-                        Json::num(q.queue_depth_max as f64),
-                        Json::num(q.producer_stall_secs),
-                        Json::num(q.max_staleness as f64),
-                        Json::str(&rec.events.join("+")),
-                    ]);
-                }
-                let thpt = r.base.throughput();
                 if k == 0 {
-                    sync_thpt = thpt;
+                    sync_thpt = r.base.throughput();
                 }
-                summary.row(vec![
-                    scenario.name().to_string(),
-                    policy.name().to_string(),
-                    r.workflow_name().to_string(),
-                    k.to_string(),
-                    format!("{thpt:.2}"),
-                    format!("{:.2}", r.base.throughput_after(post)),
-                    if k > 0 && sync_thpt.is_finite() && sync_thpt > 0.0 {
-                        format!("{:+.1}%", (thpt / sync_thpt - 1.0) * 100.0)
-                    } else {
-                        "-".to_string()
-                    },
-                    format!("{:.2}/{}", r.mean_queue_depth(), r.max_queue_depth()),
-                    format!("{:.1}", r.producer_stall_secs()),
-                    r.base.total_evals.to_string(),
-                ]);
+                push_rows(&mut record, scenario, "base", policy, k, &r);
+                row(&mut summary, scenario, "base", policy, k, &r, post, sync_thpt);
+                // Degeneracy pin: recovery off charges exactly nothing.
+                assert_eq!(
+                    r.base.retry_stall_secs + r.base.rework_secs + r.base.ckpt_secs,
+                    0.0
+                );
             }
+            // Chaos pass (k = 2): the split-pool replay must survive the
+            // fault stream and report the recovery charges it paid.
+            let cfg = AsyncReplayConfig {
+                base: chaos_base.clone(),
+                staleness_bound: 2,
+                ..AsyncReplayConfig::default()
+            };
+            let r = replay_async(scenario, &spec, &wf, &job, policy, &cfg, seed);
+            assert!(r.base.total_secs.is_finite());
+            push_rows(&mut record, scenario, "chaos", policy, 2, &r);
+            row(&mut summary, scenario, "chaos", policy, 2, &r, post, f64::NAN);
         }
+        // Total-loss pass: the whole fleet disappears at once; the
+        // async replay must park in the degraded state and resume.
+        let cfg = AsyncReplayConfig {
+            base: chaos_base.clone(),
+            staleness_bound: 2,
+            ..AsyncReplayConfig::default()
+        };
+        let r = replay_async_with_trace(
+            base.clone(),
+            total_loss_trace(&base),
+            &wf,
+            &job,
+            Policy::Warm,
+            &cfg,
+            seed,
+        );
+        assert!(r.base.degraded_iters >= 1, "{}: total loss never degraded", scenario.name());
+        assert!(!r.base.records.last().map(|x| x.degraded).unwrap_or(true));
+        push_rows(&mut record, scenario, "total-loss", Policy::Warm, 2, &r);
+        row(&mut summary, scenario, "total-loss", Policy::Warm, 2, &r, post, f64::NAN);
     }
     summary.print();
     if let Ok(p) = record.save(&hetrl::metrics::results_dir()) {

@@ -43,5 +43,7 @@ pub mod search;
 
 pub use pipeline::{simulate_async, AsyncPipelineConfig, AsyncSimResult};
 pub use queue::QueueTelemetry;
-pub use replay::{replay_async, AsyncIterStats, AsyncReplayConfig, AsyncReplayResult};
+pub use replay::{
+    replay_async, replay_async_with_trace, AsyncIterStats, AsyncReplayConfig, AsyncReplayResult,
+};
 pub use search::{plan_async, AsyncOutcome, AsyncSearchConfig};

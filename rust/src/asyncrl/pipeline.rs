@@ -216,7 +216,7 @@ mod tests {
     use crate::workflow::Mode;
 
     fn setup() -> (DeviceTopology, RlWorkflow, JobConfig, ExecutionPlan) {
-        let topo = fixtures::small_topo(Scenario::SingleMachine);
+        let topo = fixtures::small_topo(Scenario::SingleRegion);
         let wf = fixtures::tiny_wf().with_mode(Mode::Async);
         let job = JobConfig::tiny();
         let plan = fixtures::random_plan(&wf, &topo, &job, 3).expect("plan");

@@ -20,15 +20,26 @@
 //! workflow forced to `Mode::Sync`, so a `k = 0` async replay is
 //! bit-identical to a plain sync replay of the same inputs (pinned by
 //! `tests/prop_async.rs`).
+//!
+//! The failure-and-recovery pricing of the sync replay
+//! ([`ReplayConfig::recovery`]) applies unchanged here: checkpoint
+//! writes at the configured cadence, rollback on unnoticed losses and
+//! retry-exhausted task failures, bounded retry stalls for transient
+//! faults, and graceful degradation (incumbent retained, iterations
+//! stall) when the whole fleet vanishes. With
+//! [`ReplayConfig::ckpt_search`] set, the async path picks the cadence
+//! *analytically* for the cold pool-split plan
+//! ([`crate::elastic::pick_interval_analytic`]) rather than re-running
+//! the plan search per interval arm.
 
 use super::pipeline::{simulate_async, AsyncPipelineConfig};
 use super::search::{plan_async, AsyncSearchConfig};
 use crate::balance::{self, BalanceConfig};
-use crate::costmodel::CostModel;
+use crate::costmodel::{CostModel, RecoveryState};
 use crate::elastic::replan::{plan_to_base, prev_placement, repair_plan, Replanner};
 use crate::elastic::{
-    generate_trace, AnytimeSearch, ClusterEvent, FleetState, IterRecord, Policy, ReplayConfig,
-    ReplayResult,
+    generate_trace, pick_interval_analytic, unnoticed_loss_rate, AnytimeSearch, ClusterEvent,
+    FleetState, IterRecord, Policy, ReplayConfig, ReplayResult, TraceEvent,
 };
 use crate::plan::ExecutionPlan;
 use crate::scheduler::Budget;
@@ -153,7 +164,20 @@ fn affected_base_devices(event: &ClusterEvent, base: &DeviceTopology) -> Option<
         ClusterEvent::StragglerOnset { device, .. } | ClusterEvent::StragglerClear { device } => {
             Some(vec![*device])
         }
-        ClusterEvent::LinkDegrade { .. } | ClusterEvent::LinkRestore { .. } => None,
+        ClusterEvent::NicDegrade { machine, .. } | ClusterEvent::NicRestore { machine } => Some(
+            base.devices
+                .iter()
+                .filter(|d| d.machine == *machine)
+                .map(|d| d.id)
+                .collect(),
+        ),
+        ClusterEvent::TaskFailure { device, .. } => Some(vec![*device]),
+        // WAN shifts and checkpoint-store outages sit between/off the
+        // pools — both pools feel them.
+        ClusterEvent::LinkDegrade { .. }
+        | ClusterEvent::LinkRestore { .. }
+        | ClusterEvent::CkptOutage { .. }
+        | ClusterEvent::CkptRestore => None,
     }
 }
 
@@ -210,13 +234,31 @@ pub fn replay_async(
     cfg: &AsyncReplayConfig,
     seed: u64,
 ) -> AsyncReplayResult {
+    let base_topo = build_testbed(scenario, spec);
+    let trace = generate_trace(&base_topo, &cfg.base.trace, seed);
+    replay_async_with_trace(base_topo, trace, wf, job, policy, cfg, seed)
+}
+
+/// [`replay_async`] with an injected base topology and event trace —
+/// the async counterpart of [`crate::elastic::replay_with_trace`], for
+/// adversarial traces the seeded generator would rarely draw (e.g.
+/// every machine lost at once). `cfg.base.trace` is ignored.
+pub fn replay_async_with_trace(
+    base_topo: DeviceTopology,
+    trace: Vec<TraceEvent>,
+    wf: &RlWorkflow,
+    job: &JobConfig,
+    policy: Policy,
+    cfg: &AsyncReplayConfig,
+    seed: u64,
+) -> AsyncReplayResult {
     if cfg.staleness_bound == 0 {
         // k = 0 IS the synchronous iteration; run the actual sync path
         // (job untouched — the staleness fields are inert under
         // Mode::Sync) so the equivalence is structural, not numeric.
-        let base = crate::elastic::replay(
-            scenario,
-            spec,
+        let base = crate::elastic::replay_with_trace(
+            base_topo,
+            trace,
             &wf.with_mode(Mode::Sync),
             job,
             policy,
@@ -259,10 +301,12 @@ pub fn replay_async(
         plan_async(topo, wf, job, &search_cfg, ep_seed)
     };
 
-    let base_topo = build_testbed(scenario, spec);
-    let trace = generate_trace(&base_topo, &cfg.base.trace, seed);
     let mut fleet = FleetState::new(base_topo);
     let mut replanner = Replanner::new(seed, cfg.base.replan.clone());
+    // Recovery pricing: local copy so the analytically picked
+    // checkpoint interval can replace the configured cadence.
+    let mut recovery = cfg.base.recovery;
+    let mut recov_state = RecoveryState::default();
     let mut anytime = if policy.runs_background() {
         Some(AnytimeSearch::new(seed ^ 0xA11C_E5EA, cfg.base.replan.clone()))
     } else {
@@ -282,6 +326,25 @@ pub fn replay_async(
     let mut incumbent_base = plan.as_ref().map(|p| plan_to_base(p, &map));
     reseed_anytime(&mut anytime, &topo, wf, job, plan.as_ref());
 
+    // Checkpoint interval as a plan dimension, async flavour: the pool
+    // split is fixed by the cold sweep, so instead of re-searching the
+    // plan per interval arm the cadence is picked analytically for the
+    // chosen plan — same objective the sync search's arms minimize.
+    if let (Some(cs), Some(p)) = (&cfg.base.ckpt_search, plan.as_ref()) {
+        if recovery.enabled {
+            let iter_time = CostModel::new(&topo, wf, job).plan_cost(p).iter_time;
+            let write = recovery.ckpt_write_secs(&cfg.base.replan.migration, wf, job, p);
+            let lambda = unnoticed_loss_rate(&trace, &recovery, cfg.base.iters);
+            recovery.ckpt_interval_secs = pick_interval_analytic(
+                iter_time,
+                write,
+                lambda,
+                &cs.candidates,
+                recovery.ckpt_interval_secs,
+            );
+        }
+    }
+
     let mut records = Vec::with_capacity(cfg.base.iters);
     let mut stats = Vec::with_capacity(cfg.base.iters);
     let mut total_secs = 0.0;
@@ -293,6 +356,10 @@ pub fn replay_async(
     let mut cache_misses = first.outcome.cache_misses;
     let mut max_staleness = 0usize;
     let mut cursor = 0usize;
+    let mut total_stall = 0.0f64;
+    let mut total_rework = 0.0f64;
+    let mut total_ckpt = 0.0f64;
+    let mut degraded_iters = 0usize;
 
     for iter in 0..cfg.base.iters {
         // Classify fired events against the *pre-event* incumbent: the
@@ -305,6 +372,26 @@ pub fn replay_async(
             fleet.apply(&trace[cursor].event);
             labels.push(format!("{}{}", trace[cursor].label(), suffix));
             cursor += 1;
+        }
+        // Recovery pricing for the fired events — same rules as the
+        // sync replay: bounded retry stalls for transient faults,
+        // rollback to the last checkpoint on unnoticed machine losses
+        // and retry-exhausted task failures.
+        let mut retry_stall_secs = 0.0f64;
+        let mut rework_secs = 0.0f64;
+        if recovery.enabled {
+            for ev in &trace[fired_from..cursor] {
+                if let Some(attempts) = ev.event.attempts() {
+                    let (stall, recovered) = recovery.retry_stall(attempts);
+                    retry_stall_secs += stall;
+                    if !recovered && matches!(ev.event, ClusterEvent::TaskFailure { .. }) {
+                        rework_secs += recov_state.rollback();
+                    }
+                }
+                if ev.is_machine_loss() && ev.notice_secs.is_none() {
+                    rework_secs += recov_state.rollback();
+                }
+            }
         }
         let mut migration_secs = 0.0;
         let mut evals = 0;
@@ -389,7 +476,12 @@ pub fn replay_async(
                     p
                 }
             });
-            incumbent_base = plan.as_ref().map(|p| plan_to_base(p, &map));
+            // Graceful degradation (same as the sync replay): a barrier
+            // with no feasible plan retains the incumbent in base-id
+            // space; planning resumes from it at the next join barrier.
+            if let Some(p) = plan.as_ref() {
+                incumbent_base = Some(plan_to_base(p, &map));
+            }
             if replanned {
                 replans += 1;
             }
@@ -425,14 +517,36 @@ pub fn replay_async(
             ),
         };
         max_staleness = max_staleness.max(iter_stats.max_staleness);
-        total_secs += iter_secs + migration_secs;
+        // Checkpoint cadence over productive pipeline time: writes are
+        // priced while the store is reachable; outages freeze the
+        // stable point (widening the rollback exposure) instead.
+        let mut ckpt_secs = 0.0f64;
+        if recovery.enabled {
+            if let Some(p) = &plan {
+                let write = recovery.ckpt_write_secs(&cfg.base.replan.migration, wf, job, p);
+                ckpt_secs =
+                    recov_state.advance(iter_secs, write, fleet.store_up(), recovery.ckpt_interval_secs);
+            }
+        }
+        let degraded = plan.is_none();
+        if degraded {
+            degraded_iters += 1;
+        }
+        total_secs += iter_secs + migration_secs + retry_stall_secs + rework_secs + ckpt_secs;
+        total_stall += retry_stall_secs;
+        total_rework += rework_secs;
+        total_ckpt += ckpt_secs;
 
         if policy == Policy::Preempt {
             if hypo.is_none() {
                 if let Some(idx) = next_noticed_loss(&trace, cursor, iter, iter_secs) {
                     let hyp_fleet = fleet.apply_hypothetical(&trace[idx].event);
                     let (ht, hm) = hyp_fleet.snapshot();
-                    hypo = Some((ht, hm, idx));
+                    // An empty hypothetical fleet (every machine gone)
+                    // has nothing to search — skip priming.
+                    if ht.n() > 0 {
+                        hypo = Some((ht, hm, idx));
+                    }
                 }
             }
             if let (Some(a), Some((ht, hm, idx))) = (anytime.as_mut(), hypo.as_ref()) {
@@ -498,6 +612,10 @@ pub fn replay_async(
             anytime_evals,
             hypothesis_evals,
             anytime_cost,
+            retry_stall_secs,
+            rework_secs,
+            ckpt_secs,
+            degraded,
         });
         stats.push(iter_stats);
     }
@@ -515,6 +633,12 @@ pub fn replay_async(
             hypothesis_evals: total_hypothesis_evals,
             cache_hits,
             cache_misses,
+            retry_stall_secs: total_stall,
+            rework_secs: total_rework,
+            ckpt_secs: total_ckpt,
+            ckpts: recov_state.ckpts,
+            degraded_iters,
+            ckpt_interval_secs: if recovery.enabled { recovery.ckpt_interval_secs } else { 0.0 },
         },
         staleness_bound: cfg.staleness_bound,
         queue_capacity: cfg.queue_capacity.max(1),
@@ -634,6 +758,43 @@ mod tests {
             )
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn async_faults_charge_exactly_their_recovery_time() {
+        let wf = fixtures::tiny_wf();
+        let job = fixtures::async_job();
+        let mut chaos = cfg(2);
+        chaos.base.trace.fault_events = 3;
+        let run = |c: &AsyncReplayConfig| {
+            replay_async(
+                Scenario::MultiCountry,
+                &fixtures::small_spec(),
+                &wf,
+                &job,
+                Policy::Warm,
+                c,
+                2,
+            )
+        };
+        let free = run(&chaos);
+        assert_eq!(free.base.retry_stall_secs, 0.0);
+        assert_eq!(free.base.ckpt_secs, 0.0);
+
+        let mut priced = chaos.clone();
+        priced.base.recovery = crate::costmodel::RecoveryModel::with_interval(120.0);
+        let paid = run(&priced);
+        let extra = paid.base.retry_stall_secs + paid.base.rework_secs + paid.base.ckpt_secs;
+        assert!(paid.base.retry_stall_secs > 0.0, "fault trace produced no retry stalls");
+        // Recovery pricing is purely additive: it never perturbs the
+        // plan-search trajectory, so the totals differ by exactly the
+        // stall + rework + checkpoint charge.
+        let diff = paid.base.total_secs - free.base.total_secs;
+        assert!(
+            (diff - extra).abs() <= 1e-9 * paid.base.total_secs.max(1.0),
+            "diff {diff} != recovery charge {extra}"
+        );
+        assert_eq!(paid.base.ckpt_interval_secs, 120.0);
     }
 
     #[test]

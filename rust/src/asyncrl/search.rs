@@ -174,7 +174,7 @@ mod tests {
     use crate::workflow::Mode;
 
     fn setup() -> (DeviceTopology, RlWorkflow, JobConfig, AsyncSearchConfig) {
-        let topo = fixtures::small_topo(Scenario::SingleMachine);
+        let topo = fixtures::small_topo(Scenario::SingleRegion);
         let wf = fixtures::tiny_wf().with_mode(Mode::Async);
         let job = JobConfig::tiny();
         let cfg = AsyncSearchConfig {

@@ -128,6 +128,15 @@ impl Default for MigrationModel {
 }
 
 impl MigrationModel {
+    /// A migration model priced against a testbed's own checkpoint
+    /// store ([`crate::topology::TestbedSpec::ckpt_bw`]) instead of the
+    /// hardcoded default — the store is a property of the deployment,
+    /// and the same bandwidth must govern restores here and checkpoint
+    /// writes in [`crate::costmodel::RecoveryModel`].
+    pub fn for_spec(spec: &crate::topology::TestbedSpec) -> MigrationModel {
+        MigrationModel { ckpt_bw: spec.ckpt_bw, ..MigrationModel::default() }
+    }
+
     /// Wall-clock cost of migrating from the previous placement to
     /// `plan` (both in `topo`'s id space). Per destination shard:
     ///
@@ -394,6 +403,41 @@ mod tests {
             "replicated holders must spread the load: {spread_fetch} vs {one_fetch}"
         );
         assert!(contended > spread, "contention must cost more than spreading");
+    }
+
+    #[test]
+    fn slower_store_raises_restore_and_write_cost() {
+        // The S2 plumbing test: a testbed with a 4x-slower checkpoint
+        // store must raise *both* directions — migration restores (no
+        // live holder) and checkpoint writes (RecoveryModel) — through
+        // the one TestbedSpec knob.
+        let (wf, topo, job) = setup(Scenario::SingleRegion);
+        let spec = TestbedSpec::default();
+        let slow_spec = TestbedSpec { ckpt_bw: spec.ckpt_bw / 4.0, ..spec.clone() };
+        let mm = MigrationModel::for_spec(&spec);
+        let mm_slow = MigrationModel::for_spec(&slow_spec);
+        assert_eq!(mm.ckpt_bw, MigrationModel::default().ckpt_bw);
+        assert_eq!(mm_slow.ckpt_bw * 4.0, mm.ckpt_bw);
+
+        // Restore direction: everything re-fetched from the store.
+        let moved = plan(&wf, 8);
+        let none: Vec<PrevTask> = wf.tasks.iter().map(|_| PrevTask::default()).collect();
+        let restore = mm.migration_time(&topo, &wf, &job, &none, &moved);
+        let restore_slow = mm_slow.migration_time(&topo, &wf, &job, &none, &moved);
+        assert!(
+            restore_slow > restore,
+            "slower store must slow restores: {restore_slow} vs {restore}"
+        );
+
+        // Write direction: one checkpoint of the same plan.
+        let rm = crate::costmodel::RecoveryModel::with_interval(600.0);
+        let write = rm.ckpt_write_secs(&mm, &wf, &job, &moved);
+        let write_slow = rm.ckpt_write_secs(&mm_slow, &wf, &job, &moved);
+        assert!(write > 0.0);
+        assert!(
+            (write_slow / write - 4.0).abs() < 1e-9,
+            "slower store must slow writes 4x: {write_slow} vs {write}"
+        );
     }
 
     #[test]

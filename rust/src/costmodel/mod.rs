@@ -13,9 +13,11 @@ pub mod task_cost;
 pub mod e2e;
 pub mod cache;
 pub mod migration;
+pub mod recovery;
 
 pub use cache::{task_plan_key, CostCache};
 pub use comm::ring_minmax;
 pub use e2e::{bounded_staleness_period, CostModel, PlanCost, StreamCosts};
 pub use migration::{MigrationModel, PrevTask};
+pub use recovery::{RecoveryModel, RecoveryState};
 pub use task_cost::TaskCost;

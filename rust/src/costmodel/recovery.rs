@@ -1,0 +1,286 @@
+//! Failure & recovery pricing: checkpoint cadence, lost-work rollback,
+//! and transient-fault retry/backoff.
+//!
+//! The elastic replay charges three new kinds of simulated time, all of
+//! them deterministic functions of the plan, the trace, and the config:
+//!
+//! * **Checkpoint writes** — at a configurable cadence
+//!   ([`RecoveryModel::ckpt_interval_secs`]) the job persists one DP
+//!   replica's model/optimizer state to the checkpoint store, priced
+//!   against the store bandwidth already modelled by
+//!   [`MigrationModel::ckpt_bw`]. DP replicas hold identical weights,
+//!   so only one replica per task writes.
+//! * **Rollback / rework** — when an *unnoticed* machine loss fires (no
+//!   advance-notice window, so nothing could be drained or pre-copied),
+//!   or when a task-level failure exhausts its retry budget, the job
+//!   rolls back to the last completed checkpoint and re-runs the
+//!   productive sim-time since then. A noticed loss charges no rework:
+//!   the notice window is exactly what lets the runtime flush state
+//!   before the machine vanishes, so notice has a priced value.
+//! * **Retry stalls** — transient faults ([`crate::elastic::ClusterEvent`]
+//!   NIC bursts, checkpoint-store outages, task failures) are retried
+//!   with a deterministic bounded linear backoff: a fault needing `a`
+//!   attempts stalls the iteration by `min(a, max_retries) ·
+//!   retry_backoff_secs`, so the stall is always bounded by
+//!   `max_retries × retry_backoff_secs` in sim time.
+//!
+//! Degeneracy contract: with [`RecoveryModel::enabled`] false (the
+//! default) nothing is charged and the replay is bit-identical to the
+//! pre-recovery driver; with recovery enabled, a loss-free trace and
+//! checkpointing disabled (`ckpt_interval_secs == 0`) charge exactly
+//! `0.0` everywhere, which keeps every float bit-identical too.
+
+use crate::costmodel::migration::MigrationModel;
+use crate::plan::memory::tasklet_memory;
+use crate::plan::ExecutionPlan;
+use crate::workflow::{JobConfig, RlWorkflow};
+
+/// Parameters of the failure-and-recovery model.
+///
+/// The model is deliberately plan-independent except through
+/// [`RecoveryModel::ckpt_write_secs`]: the replay owns *when* rollbacks
+/// and retries fire (from the event trace), this struct owns *how much*
+/// each one costs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RecoveryModel {
+    /// Master switch. `false` (the default) disables every charge and
+    /// keeps the replay bit-identical to the pre-recovery driver.
+    pub enabled: bool,
+    /// Productive sim-seconds between checkpoint completions. `0.0`
+    /// disables checkpointing while leaving rollback/retry pricing on:
+    /// an unnoticed loss then reworks everything since the last
+    /// completed checkpoint — i.e. since the start of the run.
+    pub ckpt_interval_secs: f64,
+    /// Retry budget per transient fault. A fault whose drawn `attempts`
+    /// exceeds this is *unrecovered*: task failures then charge a full
+    /// rollback. `0` disables retries entirely (zero stall), which
+    /// degenerates NIC bursts to plain link-degrade events.
+    pub max_retries: usize,
+    /// Backoff per retry attempt, in sim seconds. The backoff is linear
+    /// (constant per attempt), so the stall of any single fault is
+    /// exactly `min(attempts, max_retries) * retry_backoff_secs` and
+    /// never exceeds `max_retries * retry_backoff_secs`.
+    pub retry_backoff_secs: f64,
+}
+
+impl Default for RecoveryModel {
+    fn default() -> Self {
+        RecoveryModel {
+            enabled: false,
+            ckpt_interval_secs: 600.0,
+            max_retries: 3,
+            retry_backoff_secs: 15.0,
+        }
+    }
+}
+
+impl RecoveryModel {
+    /// A [`RecoveryModel`] with recovery pricing on and the given
+    /// checkpoint cadence (the other knobs keep their defaults).
+    pub fn with_interval(ckpt_interval_secs: f64) -> Self {
+        RecoveryModel { enabled: true, ckpt_interval_secs, ..RecoveryModel::default() }
+    }
+
+    /// Wall-clock cost of one checkpoint write for `plan`: each task
+    /// persists one DP replica's model/optimizer state (DP replicas are
+    /// identical, so one writer per task suffices), and all writes
+    /// serialize on the store's ingress bandwidth
+    /// ([`MigrationModel::ckpt_bw`]) — the same bottleneck the
+    /// migration model charges for restores, so a slower store raises
+    /// both directions consistently.
+    pub fn ckpt_write_secs(
+        &self,
+        mm: &MigrationModel,
+        wf: &RlWorkflow,
+        job: &JobConfig,
+        plan: &ExecutionPlan,
+    ) -> f64 {
+        let mut bytes = 0.0f64;
+        for (t, tp) in plan.task_plans.iter().enumerate() {
+            let task = &wf.tasks[t];
+            let s = tp.strategy;
+            let local_batch = (job.total_samples() as f64 / s.dp as f64).ceil() as usize;
+            for &layers_j in &tp.layer_split {
+                // One replica = all pipeline stages × all tp slots; the
+                // memory model prices a single (stage, tp-slot) shard.
+                bytes += s.tp as f64 * tasklet_memory(task, job, layers_j, s.tp, local_batch).model;
+            }
+        }
+        bytes / mm.ckpt_bw
+    }
+
+    /// Deterministic bounded retry/backoff for one transient fault that
+    /// needs `attempts` attempts to clear. Returns `(stall_secs,
+    /// recovered)`: the stall actually charged (retries performed ×
+    /// linear backoff, capped at the retry budget) and whether the
+    /// fault cleared within the budget.
+    pub fn retry_stall(&self, attempts: usize) -> (f64, bool) {
+        let performed = attempts.min(self.max_retries);
+        (performed as f64 * self.retry_backoff_secs, attempts <= self.max_retries)
+    }
+
+    /// Upper bound on the stall any single fault can charge.
+    pub fn max_stall_secs(&self) -> f64 {
+        self.max_retries as f64 * self.retry_backoff_secs
+    }
+}
+
+/// Running checkpoint/rollback bookkeeping for one replay.
+///
+/// Time is split into *productive* sim-time (iterations actually run)
+/// and overheads; the cadence is measured in productive time so a slow
+/// checkpoint store cannot starve the cadence clock it feeds. The
+/// invariant maintained by [`RecoveryState::advance`] is that, whenever
+/// the store is up, productive time since the last completed checkpoint
+/// stays strictly below the interval — which is exactly the bound the
+/// rollback rule inherits.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RecoveryState {
+    /// Productive sim-seconds elapsed so far.
+    prod: f64,
+    /// Productive sim-time captured by the last completed checkpoint
+    /// (0 until the first checkpoint completes).
+    stable: f64,
+    /// Checkpoints completed so far.
+    pub ckpts: usize,
+}
+
+impl RecoveryState {
+    /// Account one finished iteration of `iter_secs` productive time
+    /// and complete any checkpoints whose cadence points were crossed.
+    /// Returns the checkpoint-write overhead charged (0 when the store
+    /// is down — an outage freezes `stable`, lengthening the exposure
+    /// window, which is precisely the risk a store outage creates).
+    pub fn advance(
+        &mut self,
+        iter_secs: f64,
+        write_secs: f64,
+        store_up: bool,
+        interval: f64,
+    ) -> f64 {
+        self.prod += iter_secs;
+        if !store_up || interval <= 0.0 {
+            return 0.0;
+        }
+        let mut overhead = 0.0;
+        while self.prod - self.stable >= interval {
+            self.stable += interval;
+            overhead += write_secs;
+            self.ckpts += 1;
+        }
+        overhead
+    }
+
+    /// Charge a rollback: returns the rework (productive sim-time since
+    /// the last completed checkpoint) and re-anchors the stable point —
+    /// the re-run work itself is what re-establishes the state, so
+    /// consecutive losses never double-charge the same window.
+    pub fn rollback(&mut self) -> f64 {
+        let rework = self.prod - self.stable;
+        self.stable = self.prod;
+        rework
+    }
+
+    /// Productive sim-time currently at risk (since the last completed
+    /// checkpoint).
+    pub fn exposure_secs(&self) -> f64 {
+        self.prod - self.stable
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::{ParallelStrategy, TaskPlan};
+    use crate::workflow::{Algo, Mode, ModelSpec};
+
+    fn wf_plan() -> (RlWorkflow, JobConfig, ExecutionPlan) {
+        let wf = RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_1b7());
+        let job = JobConfig::tiny();
+        let mut task_plans = Vec::new();
+        for (t, task) in wf.tasks.iter().enumerate() {
+            let s = ParallelStrategy::new(1, 1, 2);
+            task_plans.push(TaskPlan::uniform(s, task.model.nl, vec![2 * t, 2 * t + 1]));
+        }
+        let n = 2 * wf.n_tasks();
+        let plan = ExecutionPlan {
+            task_groups: vec![(0..wf.n_tasks()).collect()],
+            gpu_groups: vec![(0..n).collect()],
+            task_plans,
+        };
+        (wf, job, plan)
+    }
+
+    #[test]
+    fn slower_store_raises_write_cost() {
+        let (wf, job, plan) = wf_plan();
+        let rm = RecoveryModel::with_interval(300.0);
+        let fast = MigrationModel::default();
+        let slow = MigrationModel { ckpt_bw: fast.ckpt_bw / 4.0, ..fast };
+        let wf_fast = rm.ckpt_write_secs(&fast, &wf, &job, &plan);
+        let wf_slow = rm.ckpt_write_secs(&slow, &wf, &job, &plan);
+        assert!(wf_fast > 0.0);
+        assert!(
+            (wf_slow / wf_fast - 4.0).abs() < 1e-9,
+            "4x slower store must write 4x slower: {wf_slow} vs {wf_fast}"
+        );
+    }
+
+    #[test]
+    fn retry_stall_is_bounded_and_linear() {
+        let rm = RecoveryModel { max_retries: 3, retry_backoff_secs: 10.0, ..RecoveryModel::with_interval(0.0) };
+        assert_eq!(rm.retry_stall(0), (0.0, true));
+        assert_eq!(rm.retry_stall(2), (20.0, true));
+        assert_eq!(rm.retry_stall(3), (30.0, true));
+        // Budget exhausted: stall caps at the bound, fault unrecovered.
+        assert_eq!(rm.retry_stall(7), (30.0, false));
+        assert_eq!(rm.max_stall_secs(), 30.0);
+        // Zero-retry policy: no stall ever, nothing recovers.
+        let zero = RecoveryModel { max_retries: 0, ..rm };
+        assert_eq!(zero.retry_stall(5), (0.0, false));
+        assert_eq!(zero.max_stall_secs(), 0.0);
+    }
+
+    #[test]
+    fn cadence_and_rollback_invariants() {
+        let mut st = RecoveryState::default();
+        let interval = 100.0;
+        // 3 iterations of 40s: checkpoint completes inside the third.
+        assert_eq!(st.advance(40.0, 5.0, true, interval), 0.0);
+        assert_eq!(st.advance(40.0, 5.0, true, interval), 0.0);
+        assert_eq!(st.advance(40.0, 5.0, true, interval), 5.0);
+        assert_eq!(st.ckpts, 1);
+        assert!(st.exposure_secs() < interval);
+        // A long iteration crosses two cadence points at once.
+        assert_eq!(st.advance(200.0, 5.0, true, interval), 10.0);
+        assert_eq!(st.ckpts, 3);
+        assert!(st.exposure_secs() < interval);
+        // Rollback charges exactly the exposure and re-anchors.
+        let exp = st.exposure_secs();
+        assert_eq!(st.rollback(), exp);
+        assert_eq!(st.exposure_secs(), 0.0);
+        assert_eq!(st.rollback(), 0.0, "back-to-back losses never double-charge");
+    }
+
+    #[test]
+    fn store_outage_freezes_the_stable_point() {
+        let mut st = RecoveryState::default();
+        let interval = 50.0;
+        assert_eq!(st.advance(60.0, 2.0, false, interval), 0.0, "store down: no write");
+        assert_eq!(st.ckpts, 0);
+        assert!(st.exposure_secs() >= interval, "outage lengthens exposure");
+        // Store back up: the backlog of cadence points drains.
+        let overhead = st.advance(60.0, 2.0, true, interval);
+        assert!(overhead >= 2.0);
+        assert!(st.exposure_secs() < interval);
+    }
+
+    #[test]
+    fn disabled_interval_charges_nothing() {
+        let mut st = RecoveryState::default();
+        assert_eq!(st.advance(1000.0, 5.0, true, 0.0), 0.0);
+        assert_eq!(st.ckpts, 0);
+        // ... but rollback still loses everything since the start.
+        assert_eq!(st.rollback(), 1000.0);
+    }
+}

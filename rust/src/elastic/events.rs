@@ -40,6 +40,31 @@ pub enum ClusterEvent {
     StragglerOnset { device: usize, slowdown: f64 },
     /// The straggler recovers.
     StragglerClear { device: usize },
+    /// Transient fault: one machine's NIC degrades (flapping optics,
+    /// overloaded ToR port) — every cross-machine link touching it has
+    /// its bandwidth multiplied by `bw_factor` (≤ 1) until the paired
+    /// [`ClusterEvent::NicRestore`]. The runtime retries the flaky
+    /// transfers; `attempts` is how many (deterministic, drawn by the
+    /// generator) it takes to work around the burst, each priced by the
+    /// [`crate::costmodel::RecoveryModel`] backoff. With a zero-retry
+    /// policy the stall vanishes and the event degenerates to a plain
+    /// bandwidth degradation.
+    NicDegrade { machine: usize, bw_factor: f64, attempts: usize },
+    /// The machine's NIC returns to its base bandwidth.
+    NicRestore { machine: usize },
+    /// Transient fault: the checkpoint/object store becomes
+    /// unreachable. While down, no checkpoint completes (the recovery
+    /// model's stable point freezes, lengthening the rollback exposure
+    /// window) and reconnection is retried `attempts` times.
+    CkptOutage { attempts: usize },
+    /// The checkpoint store is reachable again.
+    CkptRestore,
+    /// Transient fault: one task attempt on `device` crashes (CUDA
+    /// error, OOM spike, wedged collective) and is retried with
+    /// deterministic backoff. If `attempts` exceeds the retry budget
+    /// the iteration's progress is lost and a rollback to the last
+    /// completed checkpoint is charged.
+    TaskFailure { device: usize, attempts: usize },
 }
 
 impl ClusterEvent {
@@ -51,6 +76,31 @@ impl ClusterEvent {
             self,
             ClusterEvent::MachinePreempt { .. } | ClusterEvent::MachineLeave { .. }
         )
+    }
+
+    /// Whether this is a transient fault — the retried kind
+    /// ([`ClusterEvent::NicDegrade`], [`ClusterEvent::CkptOutage`],
+    /// [`ClusterEvent::TaskFailure`]) whose recovery attempts are
+    /// priced by the retry/backoff policy. Restore events are not
+    /// faults.
+    pub fn is_transient_fault(&self) -> bool {
+        matches!(
+            self,
+            ClusterEvent::NicDegrade { .. }
+                | ClusterEvent::CkptOutage { .. }
+                | ClusterEvent::TaskFailure { .. }
+        )
+    }
+
+    /// Retry attempts a transient fault needs to clear (`None` for
+    /// every non-fault event).
+    pub fn attempts(&self) -> Option<usize> {
+        match *self {
+            ClusterEvent::NicDegrade { attempts, .. }
+            | ClusterEvent::CkptOutage { attempts }
+            | ClusterEvent::TaskFailure { attempts, .. } => Some(attempts),
+            _ => None,
+        }
     }
 
     /// Compact display label for timelines and run records.
@@ -67,6 +117,15 @@ impl ClusterEvent {
                 format!("straggler(d{device},×{slowdown:.2})")
             }
             ClusterEvent::StragglerClear { device } => format!("recover(d{device})"),
+            ClusterEvent::NicDegrade { machine, bw_factor, attempts } => {
+                format!("nic(m{machine},bw×{bw_factor:.2},a{attempts})")
+            }
+            ClusterEvent::NicRestore { machine } => format!("nic-ok(m{machine})"),
+            ClusterEvent::CkptOutage { attempts } => format!("ckpt-out(a{attempts})"),
+            ClusterEvent::CkptRestore => "ckpt-ok".to_string(),
+            ClusterEvent::TaskFailure { device, attempts } => {
+                format!("taskfail(d{device},a{attempts})")
+            }
         }
     }
 }
@@ -98,6 +157,11 @@ impl TraceEvent {
     pub fn is_machine_loss(&self) -> bool {
         self.event.is_machine_loss()
     }
+
+    /// [`ClusterEvent::is_transient_fault`] of the carried event.
+    pub fn is_transient_fault(&self) -> bool {
+        self.event.is_transient_fault()
+    }
 }
 
 /// Trace-generation knobs.
@@ -119,6 +183,12 @@ pub struct TraceConfig {
     /// generator draw. The override is applied *after* generation, so
     /// the event sequence for a seed is identical whatever it is set to.
     pub notice_override: Option<f64>,
+    /// Number of *transient-fault* events (NIC bursts, checkpoint-store
+    /// outages, task failures) to inject on top of the base trace.
+    /// Faults are drawn by a **separate** RNG stream, so `0` (the
+    /// default) leaves the base trace bit-identical to a pre-fault
+    /// generator run for the same seed.
+    pub fault_events: usize,
 }
 
 impl Default for TraceConfig {
@@ -129,6 +199,7 @@ impl Default for TraceConfig {
             min_active_frac: 0.5,
             force_preempt: true,
             notice_override: None,
+            fault_events: 0,
         }
     }
 }
@@ -182,7 +253,14 @@ pub fn generate_trace(topo: &DeviceTopology, cfg: &TraceConfig, seed: u64) -> Ve
     let mut rng = Rng::new(seed ^ 0xE1A5_71C0_FFEE);
     let machines = machine_ids(topo);
     let pairs = region_pairs(topo);
-    let floor = ((machines.len() as f64 * cfg.min_active_frac).ceil() as usize).max(1);
+    // `min_active_frac <= 0` deliberately permits losing *every*
+    // machine — the all-loss chaos scenario the degraded replay path
+    // must survive (see `super::replay`).
+    let floor = if cfg.min_active_frac <= 0.0 {
+        0
+    } else {
+        ((machines.len() as f64 * cfg.min_active_frac).ceil() as usize).max(1)
+    };
 
     // Mutable world model mirrored while generating.
     let mut active: Vec<usize> = machines.clone();
@@ -291,6 +369,85 @@ pub fn generate_trace(topo: &DeviceTopology, cfg: &TraceConfig, seed: u64) -> Ve
         };
         out.push(TraceEvent { at_iter, event, notice_secs });
     }
+    if cfg.fault_events > 0 {
+        out = merge_by_iter(out, generate_faults(topo, cfg, seed));
+    }
+    out
+}
+
+/// Generate `cfg.fault_events` transient faults from a dedicated RNG
+/// stream (`seed ^ 0x_FA17_5EED_CAFE`). Keeping the stream separate
+/// from the base generator's is what makes the base trace bit-identical
+/// whether faults are requested or not — `fault_events = 0` consumes no
+/// randomness at all.
+fn generate_faults(topo: &DeviceTopology, cfg: &TraceConfig, seed: u64) -> Vec<TraceEvent> {
+    let mut rng = Rng::new(seed ^ 0xFA17_5EED_CAFE);
+    let machines = machine_ids(topo);
+    let hi = cfg.horizon.max(2);
+    let mut iters: Vec<usize> = (0..cfg.fault_events).map(|_| rng.range(1, hi)).collect();
+    iters.sort_unstable();
+
+    // Mirror of the fault-relevant world state.
+    let mut nic_degraded: Vec<usize> = Vec::new();
+    let mut store_down = false;
+
+    let mut out = Vec::with_capacity(iters.len());
+    for &at_iter in &iters {
+        let event = match rng.below(100) {
+            // 0..45: NIC burst onset, or the paired restore when the
+            // drawn machine is already degraded.
+            r if r < 45 => {
+                let m = *rng.choice(&machines);
+                if nic_degraded.contains(&m) {
+                    nic_degraded.retain(|&x| x != m);
+                    ClusterEvent::NicRestore { machine: m }
+                } else {
+                    nic_degraded.push(m);
+                    ClusterEvent::NicDegrade {
+                        machine: m,
+                        bw_factor: 0.2 + 0.5 * rng.f64(),
+                        attempts: 1 + rng.below(4),
+                    }
+                }
+            }
+            // 45..65: checkpoint-store outage toggle.
+            r if r < 65 => {
+                store_down = !store_down;
+                if store_down {
+                    ClusterEvent::CkptOutage { attempts: 1 + rng.below(4) }
+                } else {
+                    ClusterEvent::CkptRestore
+                }
+            }
+            // 65..100: task-level failure on a random base device.
+            _ => ClusterEvent::TaskFailure {
+                device: rng.below(topo.n()),
+                attempts: 1 + rng.below(4),
+            },
+        };
+        out.push(TraceEvent { at_iter, event, notice_secs: None });
+    }
+    out
+}
+
+/// Stable merge of two `at_iter`-sorted traces: base events sort before
+/// fault events at the same iteration, and relative order within each
+/// stream is preserved — so the merged trace is a pure function of its
+/// two inputs.
+fn merge_by_iter(base: Vec<TraceEvent>, faults: Vec<TraceEvent>) -> Vec<TraceEvent> {
+    let mut out = Vec::with_capacity(base.len() + faults.len());
+    let (mut bi, mut fi) = (0, 0);
+    while bi < base.len() && fi < faults.len() {
+        if base[bi].at_iter <= faults[fi].at_iter {
+            out.push(base[bi].clone());
+            bi += 1;
+        } else {
+            out.push(faults[fi].clone());
+            fi += 1;
+        }
+    }
+    out.extend_from_slice(&base[bi..]);
+    out.extend_from_slice(&faults[fi..]);
     out
 }
 
@@ -405,6 +562,86 @@ mod tests {
                 assert_eq!(z.notice_secs, None);
             }
         }
+    }
+
+    #[test]
+    fn faults_do_not_perturb_the_base_trace() {
+        let t = topo();
+        let base_cfg = TraceConfig::default();
+        for seed in 0..6 {
+            let plain = generate_trace(&t, &base_cfg, seed);
+            let faulty = generate_trace(
+                &t,
+                &TraceConfig { fault_events: 6, ..base_cfg.clone() },
+                seed,
+            );
+            assert_eq!(faulty.len(), plain.len() + 6);
+            // Dropping the fault events recovers the base trace exactly
+            // (separate RNG streams) ...
+            let stripped: Vec<TraceEvent> = faulty
+                .iter()
+                .filter(|e| {
+                    !e.is_transient_fault()
+                        && !matches!(
+                            e.event,
+                            ClusterEvent::NicRestore { .. } | ClusterEvent::CkptRestore
+                        )
+                })
+                .cloned()
+                .collect();
+            assert_eq!(stripped, plain);
+            // ... and the merged trace stays iteration-sorted.
+            for w in faulty.windows(2) {
+                assert!(w[0].at_iter <= w[1].at_iter);
+            }
+            // Faults never carry notice, always carry attempts ≥ 1.
+            for e in &faulty {
+                if e.is_transient_fault() {
+                    assert_eq!(e.notice_secs, None);
+                    assert!(e.event.attempts().unwrap() >= 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fault_stream_is_deterministic() {
+        let t = topo();
+        let cfg = TraceConfig { fault_events: 8, ..TraceConfig::default() };
+        assert_eq!(generate_trace(&t, &cfg, 11), generate_trace(&t, &cfg, 11));
+        assert_ne!(generate_trace(&t, &cfg, 11), generate_trace(&t, &cfg, 12));
+    }
+
+    #[test]
+    fn zero_floor_permits_total_loss() {
+        let t = topo();
+        let cfg = TraceConfig {
+            n_events: 64,
+            min_active_frac: 0.0,
+            force_preempt: true,
+            ..TraceConfig::default()
+        };
+        // With enough events and no floor, at least one seed must drive
+        // the fleet to zero machines at some point.
+        let mut saw_total_loss = false;
+        for seed in 0..8 {
+            let trace = generate_trace(&t, &cfg, seed);
+            let mut active = 8i64;
+            for e in &trace {
+                match e.event {
+                    ClusterEvent::MachinePreempt { .. } | ClusterEvent::MachineLeave { .. } => {
+                        active -= 1
+                    }
+                    ClusterEvent::MachineJoin { .. } => active += 1,
+                    _ => {}
+                }
+                assert!(active >= 0, "seed {seed}: negative machine count");
+                if active == 0 {
+                    saw_total_loss = true;
+                }
+            }
+        }
+        assert!(saw_total_loss, "no seed ever emptied the fleet");
     }
 
     #[test]

@@ -21,6 +21,14 @@ pub struct FleetState {
     slowdown: Vec<f64>,
     /// Region pair (min, max) → (lat_factor, bw_factor).
     link_scale: BTreeMap<(usize, usize), (f64, f64)>,
+    /// Machine id → NIC bandwidth factor (≤ 1) from a transient
+    /// [`ClusterEvent::NicDegrade`] burst; absent = healthy. Applies to
+    /// every cross-*machine* link touching the machine.
+    nic_scale: BTreeMap<usize, f64>,
+    /// Checkpoint-store reachability ([`ClusterEvent::CkptOutage`] /
+    /// [`ClusterEvent::CkptRestore`]). While `false`, no checkpoint
+    /// completes.
+    store_up: bool,
     /// Bumped on every applied event; snapshot caches key off it.
     epoch: u64,
 }
@@ -36,6 +44,8 @@ impl FleetState {
             active: vec![true; n_machines],
             slowdown: vec![1.0; n],
             link_scale: BTreeMap::new(),
+            nic_scale: BTreeMap::new(),
+            store_up: true,
             epoch: 0,
         }
     }
@@ -53,6 +63,11 @@ impl FleetState {
     /// Number of currently active machines.
     pub fn active_machines(&self) -> usize {
         self.active.iter().filter(|&&a| a).count()
+    }
+
+    /// Whether the checkpoint store is currently reachable.
+    pub fn store_up(&self) -> bool {
+        self.store_up
     }
 
     /// Apply one event. Out-of-range indices are ignored (a trace built
@@ -87,6 +102,24 @@ impl FleetState {
                     *s = 1.0;
                 }
             }
+            ClusterEvent::NicDegrade { machine, bw_factor, .. } => {
+                if machine < self.active.len() {
+                    self.nic_scale.insert(machine, bw_factor.clamp(1e-3, 1.0));
+                }
+            }
+            ClusterEvent::NicRestore { machine } => {
+                self.nic_scale.remove(&machine);
+            }
+            ClusterEvent::CkptOutage { .. } => {
+                self.store_up = false;
+            }
+            ClusterEvent::CkptRestore => {
+                self.store_up = true;
+            }
+            // A task failure changes no fleet state — the *replay*
+            // charges its retry stall (and rollback if the retry budget
+            // is exhausted); the fleet only ticks its epoch.
+            ClusterEvent::TaskFailure { .. } => {}
         }
         self.epoch += 1;
     }
@@ -137,6 +170,34 @@ impl FleetState {
                     if let Some(&(lat, bw)) = self.link_scale.get(&(ri.min(rj), ri.max(rj))) {
                         topo.alpha[i][j] *= lat;
                         topo.beta[i][j] *= bw;
+                    }
+                }
+            }
+        }
+        // Transient NIC bursts: every cross-machine edge touching a
+        // degraded machine loses bandwidth (both directions share the
+        // NIC; two degraded endpoints compound).
+        if !self.nic_scale.is_empty() {
+            let n = topo.n();
+            for i in 0..n {
+                let mi = self.base.devices[map[i]].machine;
+                for j in 0..n {
+                    if i == j {
+                        continue;
+                    }
+                    let mj = self.base.devices[map[j]].machine;
+                    if mi == mj {
+                        continue;
+                    }
+                    let mut f = 1.0f64;
+                    if let Some(&s) = self.nic_scale.get(&mi) {
+                        f *= s;
+                    }
+                    if let Some(&s) = self.nic_scale.get(&mj) {
+                        f *= s;
+                    }
+                    if f < 1.0 {
+                        topo.beta[i][j] *= f;
                     }
                 }
             }
@@ -211,6 +272,42 @@ mod tests {
         f.apply(&ClusterEvent::LinkRestore { ra: 1, rb: 0 });
         let (t2, _) = f.snapshot();
         assert_eq!(t2.lat(cross.0, cross.1), t0.lat(cross.0, cross.1));
+    }
+
+    #[test]
+    fn nic_burst_scales_cross_machine_bandwidth_only() {
+        let mut f = fleet();
+        let (t0, _) = f.snapshot();
+        f.apply(&ClusterEvent::NicDegrade { machine: 0, bw_factor: 0.25, attempts: 2 });
+        let (t1, _) = f.snapshot();
+        // Device 0 (machine 0) ↔ device 8 (machine 1): degraded.
+        assert!((t1.bw(0, 8) / t0.bw(0, 8) - 0.25).abs() < 1e-9);
+        assert!((t1.bw(8, 0) / t0.bw(8, 0) - 0.25).abs() < 1e-9);
+        // Intra-machine links untouched; latency untouched.
+        assert_eq!(t1.bw(0, 1), t0.bw(0, 1));
+        assert_eq!(t1.lat(0, 8), t0.lat(0, 8));
+        // Links not touching machine 0 untouched.
+        assert_eq!(t1.bw(8, 16), t0.bw(8, 16));
+        f.apply(&ClusterEvent::NicRestore { machine: 0 });
+        assert_eq!(f.snapshot().0.bw(0, 8), t0.bw(0, 8));
+    }
+
+    #[test]
+    fn store_outage_toggles_and_task_failure_is_stateless() {
+        let mut f = fleet();
+        assert!(f.store_up());
+        let (t0, m0) = f.snapshot();
+        f.apply(&ClusterEvent::CkptOutage { attempts: 1 });
+        assert!(!f.store_up());
+        f.apply(&ClusterEvent::TaskFailure { device: 3, attempts: 2 });
+        // Neither event changes the topology snapshot.
+        let (t1, m1) = f.snapshot();
+        assert_eq!(m1, m0);
+        assert_eq!(t1.n(), t0.n());
+        assert_eq!(t1.devices[3].speed, t0.devices[3].speed);
+        f.apply(&ClusterEvent::CkptRestore);
+        assert!(f.store_up());
+        assert_eq!(f.epoch(), 3);
     }
 
     #[test]

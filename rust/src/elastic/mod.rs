@@ -35,18 +35,31 @@
 //! * [`replay`] — end-to-end dynamic-trace replay on the DES
 //!   ([`crate::simulator`]): plan → event → replan → resume, comparing
 //!   static / warm-replan / anytime / preempt / oracle policies
-//!   (`hetrl replay`, `benches/fig11_elastic.rs`).
+//!   (`hetrl replay`, `benches/fig11_elastic.rs`);
+//! * [`recovery`] — the checkpoint interval as a *searched* plan
+//!   dimension: SHA arms per candidate cadence on the evaluation
+//!   engine, scored by a recovery-aware objective
+//!   (`iter_time·(1 + w/I) + λ·I/2`) built from
+//!   [`crate::costmodel::RecoveryModel`] and the trace's
+//!   unnoticed-loss rate.
 
 pub mod anytime;
 pub mod events;
 pub mod fleet;
+pub mod recovery;
 pub mod replan;
 pub mod replay;
 
 pub use anytime::{AnytimeConfig, AnytimeSearch, AnytimeStep};
 pub use events::{generate_trace, ClusterEvent, TraceConfig, TraceEvent};
 pub use fleet::FleetState;
+pub use recovery::{
+    interval_objective, pick_interval_analytic, plan_with_ckpt_interval, unnoticed_loss_rate,
+    CkptSearchConfig,
+};
 pub use replan::{
     plan_to_base, prev_placement, repair_plan, ReplanConfig, ReplanOutcome, Replanner,
 };
-pub use replay::{first_event_iter, replay, IterRecord, Policy, ReplayConfig, ReplayResult};
+pub use replay::{
+    first_event_iter, replay, replay_with_trace, IterRecord, Policy, ReplayConfig, ReplayResult,
+};

@@ -1,0 +1,407 @@
+//! The checkpoint interval as a **searched plan dimension**.
+//!
+//! A short cadence wastes bandwidth writing state nobody loses; a long
+//! one exposes the job to huge rework when a spot machine vanishes
+//! unannounced. The right trade depends on the plan itself (its state
+//! size sets the write cost) and on the trace's loss rate — so the
+//! interval is searched jointly with the plan, as successive-halving
+//! arms on the existing evaluation engine ([`crate::scheduler::engine`]):
+//!
+//! 1. **Structure discovery** — a reduced-budget cold SHA-EA search
+//!    finds a good plan structure (Level-1/2 grouping) exactly as the
+//!    ordinary cold plan would.
+//! 2. **Interval arms** — one EA arm per candidate interval, each
+//!    seeded with the discovered plan (plus light perturbations) and
+//!    evolved under a *recovery-aware* objective:
+//!
+//!    `iter_time · (1 + w(p)/I) + λ · I/2`
+//!
+//!    where `w(p)` is the plan's checkpoint-write time
+//!    ([`RecoveryModel::ckpt_write_secs`]), `I` the arm's interval, and
+//!    `λ` the trace's unnoticed-loss rate per iteration — `w/I` prices
+//!    the cadence overhead per productive second and `I/2` the expected
+//!    rework per loss. Arms run in a fixed order with quotas derived
+//!    from the shared ledger ([`crate::scheduler::engine::split_quota`]),
+//!    and halving keeps the better half by NaN-safe comparison — same
+//!    seed ⇒ bit-identical winner (plan *and* interval) at any thread
+//!    count.
+//!
+//! Degeneracy: with [`crate::elastic::ReplayConfig::ckpt_search`] unset
+//! (the default) none of this runs and the replay's initial plan is
+//! bit-identical to the plain cold search.
+
+use super::events::TraceEvent;
+use super::replan::{ReplanOutcome, Replanner};
+use crate::costmodel::{CostModel, RecoveryModel};
+use crate::plan::ExecutionPlan;
+use crate::scheduler::ea::{perturbations, EaArm};
+use crate::scheduler::engine::{self, SeededArmTask};
+use crate::scheduler::{Budget, EvalCtx};
+use crate::topology::DeviceTopology;
+use crate::util::ford;
+use crate::workflow::{JobConfig, RlWorkflow};
+use std::sync::Arc;
+
+/// Knobs for the checkpoint-interval search (CLI:
+/// `hetrl replay --ckpt-interval auto`).
+#[derive(Debug, Clone)]
+pub struct CkptSearchConfig {
+    /// Candidate checkpoint intervals, sim-seconds, ascending. One SHA
+    /// arm per candidate.
+    pub candidates: Vec<f64>,
+    /// Successive-halving rounds over the candidate arms.
+    pub rounds: usize,
+    /// Fraction of the cold budget spent on structure discovery before
+    /// the interval arms divide the rest.
+    pub structure_frac: f64,
+}
+
+impl Default for CkptSearchConfig {
+    fn default() -> Self {
+        CkptSearchConfig {
+            candidates: vec![120.0, 300.0, 600.0, 1200.0],
+            rounds: 2,
+            structure_frac: 0.4,
+        }
+    }
+}
+
+/// Unnoticed-loss rate of a trace, per iteration: machine losses with
+/// no advance notice plus task failures whose drawn attempts exceed the
+/// retry budget — exactly the events the replay charges a rollback for.
+pub fn unnoticed_loss_rate(trace: &[TraceEvent], recovery: &RecoveryModel, iters: usize) -> f64 {
+    let losses = trace
+        .iter()
+        .filter(|e| {
+            (e.is_machine_loss() && e.notice_secs.is_none())
+                || matches!(
+                    e.event,
+                    super::events::ClusterEvent::TaskFailure { attempts, .. }
+                        if attempts > recovery.max_retries
+                )
+        })
+        .count();
+    losses as f64 / iters.max(1) as f64
+}
+
+/// The closed-form recovery-aware objective for a fixed plan: expected
+/// per-iteration cost at interval `I` given the plan's iteration time,
+/// its checkpoint-write time `w`, and the per-iteration loss rate `λ`.
+/// Used by the arm penalty and, analytically, by the async replay
+/// (which picks the interval for its fixed initial pool split instead
+/// of re-searching the plan).
+pub fn interval_objective(iter_time: f64, write_secs: f64, lambda_iter: f64, interval: f64) -> f64 {
+    if interval <= 0.0 {
+        return f64::INFINITY;
+    }
+    iter_time * (1.0 + write_secs / interval) + lambda_iter * interval / 2.0
+}
+
+/// Pick the candidate interval minimizing [`interval_objective`] for a
+/// fixed plan — NaN-safe, ties to the earlier candidate. Returns
+/// `fallback` when `candidates` is empty.
+pub fn pick_interval_analytic(
+    iter_time: f64,
+    write_secs: f64,
+    lambda_iter: f64,
+    candidates: &[f64],
+    fallback: f64,
+) -> f64 {
+    let mut best = fallback;
+    let mut best_obj = f64::INFINITY;
+    for &i in candidates {
+        let obj = interval_objective(iter_time, write_secs, lambda_iter, i);
+        if ford::cmp_f64(obj, best_obj) == std::cmp::Ordering::Less {
+            best_obj = obj;
+            best = i;
+        }
+    }
+    best
+}
+
+/// One live interval arm.
+struct IntervalArm {
+    /// Index into `CkptSearchConfig::candidates` (the tie-break order).
+    idx: usize,
+    interval: f64,
+    arm: EaArm,
+    best_cost: f64,
+    best_plan: Option<ExecutionPlan>,
+}
+
+/// Cold-plan with the checkpoint interval as a searched dimension.
+/// Returns the winning plan episode (budget accounting includes both
+/// phases) and the chosen interval (`recovery.ckpt_interval_secs` when
+/// the search could not improve on the configured cadence — e.g. no
+/// feasible structure, or an empty candidate list).
+///
+/// Deterministic: arm quotas derive from the shared ledger at each
+/// round barrier, arms run and merge in candidate order, and halving
+/// breaks ties toward the earlier candidate — the winner is
+/// bit-identical at any thread count.
+pub fn plan_with_ckpt_interval(
+    replanner: &mut Replanner,
+    topo: &DeviceTopology,
+    wf: &RlWorkflow,
+    job: &JobConfig,
+    trace: &[TraceEvent],
+    recovery: &RecoveryModel,
+    cfg: &CkptSearchConfig,
+    iters: usize,
+) -> (ReplanOutcome, f64) {
+    let fallback = recovery.ckpt_interval_secs;
+    if topo.n() == 0 || cfg.candidates.is_empty() {
+        return (replanner.cold_plan(topo, wf, job), fallback);
+    }
+
+    // Phase 1: structure discovery under a reduced budget.
+    let full_budget = replanner.cfg.cold_budget;
+    let b1 = ((full_budget as f64) * cfg.structure_frac.clamp(0.05, 0.95)).round() as usize;
+    replanner.cfg.cold_budget = b1.max(1);
+    let mut base = replanner.cold_plan(topo, wf, job);
+    replanner.cfg.cold_budget = full_budget;
+    let Some(base_plan) = base.plan.clone() else {
+        // No feasible structure: nothing for the arms to refine.
+        return (base, fallback);
+    };
+
+    // Phase 2: one arm per candidate interval over the remaining
+    // budget, each under its own recovery-aware penalty.
+    let lambda = unnoticed_loss_rate(trace, recovery, iters);
+    let mm = replanner.cfg.migration;
+    let seed = replanner.next_episode_seed();
+    let grouping = base_plan.task_groups.clone();
+    let sizes: Vec<usize> = base_plan.gpu_groups.iter().map(|g| g.len()).collect();
+    let threads = engine::resolve_threads(replanner.cfg.threads);
+    let arm_budget = full_budget.saturating_sub(base.evals);
+    let parent = EvalCtx::new(topo, wf, job, Budget::evals(arm_budget));
+
+    let mut live: Vec<IntervalArm> = cfg
+        .candidates
+        .iter()
+        .enumerate()
+        .map(|(idx, &interval)| IntervalArm {
+            idx,
+            interval,
+            arm: EaArm::new(
+                grouping.clone(),
+                sizes.clone(),
+                replanner.cfg.ea.clone(),
+                seed.wrapping_add((idx as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+            ),
+            best_cost: f64::INFINITY,
+            best_plan: None,
+        })
+        .collect();
+
+    let rounds = cfg.rounds.max(1);
+    for round in 0..rounds {
+        let quotas = engine::split_quota(parent.ledger.remaining(), live.len(), rounds - round);
+        for (slot, ia) in live.iter_mut().enumerate() {
+            if quotas[slot] == 0 {
+                continue;
+            }
+            // Child context: shares the ledger and cache with every
+            // other arm (global budget cap, shared per-task memo) but
+            // carries this arm's own interval penalty and incumbent.
+            let mut actx = parent.worker();
+            actx.best_cost = ia.best_cost;
+            let interval = ia.interval;
+            let cache = Arc::clone(&parent.cache);
+            let rec = *recovery;
+            actx.penalty = Some(Arc::new(move |p: &ExecutionPlan| {
+                let it = CostModel::new(topo, wf, job).plan_cost_cached(p, &cache).iter_time;
+                let w = rec.ckpt_write_secs(&mm, wf, job, p);
+                // `eval` already charged `it`; add the recovery terms.
+                it * w / interval + lambda * interval / 2.0
+            }));
+            let seeds = if round == 0 {
+                let mut s = vec![base_plan.clone()];
+                s.extend(perturbations(
+                    &base_plan,
+                    replanner.cfg.seed_mutants,
+                    seed ^ (ia.idx as u64).wrapping_mul(0xA5A5_A5A5_A5A5),
+                ));
+                s
+            } else {
+                Vec::new()
+            };
+            let arm = std::mem::replace(
+                &mut ia.arm,
+                EaArm::new(grouping.clone(), sizes.clone(), replanner.cfg.ea.clone(), 0),
+            );
+            let mut runs = engine::run_seeded_rung(
+                &mut actx,
+                vec![SeededArmTask { key: (0, ia.idx), arm, quota: quotas[slot], seeds }],
+                threads,
+            );
+            ia.arm = runs.pop().expect("one task in, one run out").arm;
+            if ford::cmp_f64(actx.best_cost, ia.best_cost) == std::cmp::Ordering::Less {
+                ia.best_cost = actx.best_cost;
+                ia.best_plan = actx.best_plan.take();
+            }
+        }
+        // Halve: keep the better half by penalized objective, ties to
+        // the earlier candidate; drop arms that proved infeasible.
+        if live.len() > 1 {
+            let mut order: Vec<usize> = (0..live.len()).collect();
+            order.sort_by(|&a, &b| {
+                ford::cmp_f64(live[a].best_cost, live[b].best_cost)
+                    .then(live[a].idx.cmp(&live[b].idx))
+            });
+            let keep = live.len().div_ceil(2);
+            let kept: Vec<usize> = order.into_iter().take(keep).collect();
+            let mut slot = 0usize;
+            live.retain(|ia| {
+                let k = kept.contains(&slot);
+                slot += 1;
+                k
+            });
+            // `retain` kept slot order; that is candidate order, which
+            // is what the next round's quota split iterates in.
+        }
+        if parent.ledger.exhausted() {
+            break;
+        }
+    }
+
+    // Winner: the surviving arm with the best penalized objective.
+    let winner = live
+        .into_iter()
+        .filter(|ia| ia.best_plan.is_some())
+        .min_by(|a, b| ford::cmp_f64(a.best_cost, b.best_cost).then(a.idx.cmp(&b.idx)));
+
+    let spent = parent.ledger.spent();
+    base.evals += spent;
+    base.cache_hits += parent.cache.hits();
+    base.cache_misses += parent.cache.misses();
+    match winner {
+        Some(ia) => {
+            let plan = ia.best_plan.expect("filtered on is_some");
+            let iter_time = CostModel::new(topo, wf, job).plan_cost(&plan).iter_time;
+            base.iter_time = iter_time;
+            base.objective = ia.best_cost;
+            base.plan = Some(plan);
+            (base, ia.interval)
+        }
+        // Arms found nothing: keep the structure-discovery plan and the
+        // configured cadence.
+        None => (base, fallback),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elastic::events::{generate_trace, ClusterEvent, TraceConfig};
+    use crate::elastic::replan::ReplanConfig;
+    use crate::scheduler::ea::EaConfig;
+    use crate::testing::fixtures;
+    use crate::topology::{build_testbed, Scenario};
+    use crate::workflow::{Algo, JobConfig, Mode, ModelSpec, RlWorkflow};
+
+    fn setup() -> (RlWorkflow, DeviceTopology, JobConfig) {
+        (
+            RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_1b7()),
+            build_testbed(Scenario::MultiCountry, &fixtures::small_spec()),
+            JobConfig::tiny(),
+        )
+    }
+
+    fn small_cfg() -> ReplanConfig {
+        ReplanConfig {
+            warm_budget: 40,
+            cold_budget: 160,
+            seed_mutants: 2,
+            ea: EaConfig { swap_samples: 40, ..EaConfig::default() },
+            ..ReplanConfig::default()
+        }
+    }
+
+    #[test]
+    fn interval_objective_shape() {
+        // Overhead term falls with I, rework term grows with I: the
+        // objective is unimodal over a swept grid and ∞ at I ≤ 0.
+        assert_eq!(interval_objective(10.0, 5.0, 0.1, 0.0), f64::INFINITY);
+        let grid = [60.0, 120.0, 300.0, 600.0, 1200.0, 2400.0];
+        let objs: Vec<f64> =
+            grid.iter().map(|&i| interval_objective(30.0, 20.0, 0.2, i)).collect();
+        let mut inflections = 0;
+        for w in objs.windows(2) {
+            if w[1] < w[0] {
+                continue;
+            }
+            inflections += 1;
+        }
+        assert!(inflections >= 1, "rework term must eventually dominate: {objs:?}");
+        // λ = 0 ⇒ the largest candidate wins (pure overhead amortization).
+        assert_eq!(pick_interval_analytic(30.0, 20.0, 0.0, &grid, 600.0), 2400.0);
+        // Huge λ ⇒ the smallest candidate wins.
+        assert_eq!(pick_interval_analytic(30.0, 20.0, 100.0, &grid, 600.0), 60.0);
+        // Empty candidates ⇒ fallback.
+        assert_eq!(pick_interval_analytic(30.0, 20.0, 1.0, &[], 450.0), 450.0);
+    }
+
+    #[test]
+    fn loss_rate_counts_unnoticed_and_exhausted_only() {
+        let rec = RecoveryModel { max_retries: 2, ..RecoveryModel::with_interval(300.0) };
+        let mk = |event, notice_secs| TraceEvent { at_iter: 1, event, notice_secs };
+        let trace = vec![
+            mk(ClusterEvent::MachinePreempt { machine: 0 }, None), // counts
+            mk(ClusterEvent::MachineLeave { machine: 1 }, Some(120.0)), // noticed: no
+            mk(ClusterEvent::TaskFailure { device: 0, attempts: 3 }, None), // exceeds budget
+            mk(ClusterEvent::TaskFailure { device: 1, attempts: 2 }, None), // within: no
+            mk(ClusterEvent::CkptOutage { attempts: 4 }, None),    // not a loss
+        ];
+        assert!((unnoticed_loss_rate(&trace, &rec, 10) - 0.2).abs() < 1e-12);
+        assert_eq!(unnoticed_loss_rate(&[], &rec, 10), 0.0);
+    }
+
+    #[test]
+    fn searched_interval_is_deterministic_across_threads() {
+        let (wf, topo, job) = setup();
+        let rec = RecoveryModel::with_interval(600.0);
+        let scfg = CkptSearchConfig {
+            candidates: vec![120.0, 600.0],
+            rounds: 2,
+            ..CkptSearchConfig::default()
+        };
+        let trace = generate_trace(
+            &topo,
+            &TraceConfig { horizon: 8, n_events: 3, ..TraceConfig::default() },
+            7,
+        );
+        let run = |threads: usize| {
+            let mut rp = Replanner::new(21, ReplanConfig { threads, ..small_cfg() });
+            plan_with_ckpt_interval(&mut rp, &topo, &wf, &job, &trace, &rec, &scfg, 8)
+        };
+        let baseline = run(1);
+        assert!(baseline.0.evals <= small_cfg().cold_budget, "budget overrun");
+        for threads in fixtures::test_threads() {
+            let (out, interval) = run(threads);
+            assert_eq!(out.plan, baseline.0.plan, "plan diverged at {threads} threads");
+            assert_eq!(interval, baseline.1, "interval diverged at {threads} threads");
+            assert_eq!(out.evals, baseline.0.evals);
+        }
+    }
+
+    #[test]
+    fn loss_free_trace_prefers_longer_intervals() {
+        // With λ = 0 the penalty is pure cadence overhead, so whenever
+        // both arms evolve the same plan the longer interval must win.
+        let (wf, topo, job) = setup();
+        let rec = RecoveryModel::with_interval(600.0);
+        let scfg = CkptSearchConfig {
+            candidates: vec![60.0, 1200.0],
+            rounds: 1,
+            ..CkptSearchConfig::default()
+        };
+        let mut rp = Replanner::new(33, small_cfg());
+        let (out, interval) = plan_with_ckpt_interval(
+            &mut rp, &topo, &wf, &job, &[], &rec, &scfg, 8,
+        );
+        if out.plan.is_some() {
+            assert_eq!(interval, 1200.0, "λ=0 must amortize toward the long cadence");
+        }
+    }
+}

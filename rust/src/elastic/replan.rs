@@ -250,6 +250,14 @@ impl Replanner {
             .wrapping_add(self.episodes.wrapping_mul(1442695040888963407))
     }
 
+    /// Advance the episode counter and hand out the next episode seed —
+    /// lets sibling search drivers (the checkpoint-interval search in
+    /// [`super::recovery`]) draw their arm seeds from the same
+    /// deterministic stream the warm/cold episodes use.
+    pub(crate) fn next_episode_seed(&mut self) -> u64 {
+        self.next_seed()
+    }
+
     /// Cold search (initial plan, oracle, or warm-path fallback): a full
     /// multi-level SHA-EA run, no migration penalty.
     pub fn cold_plan(
@@ -259,6 +267,21 @@ impl Replanner {
         job: &JobConfig,
     ) -> ReplanOutcome {
         let seed = self.next_seed();
+        // An empty snapshot (every machine lost) has no plan; searching
+        // it is undefined in the level machinery, so the degraded
+        // replay path gets a well-defined "no plan" outcome instead.
+        if topo.n() == 0 {
+            return ReplanOutcome {
+                plan: None,
+                iter_time: f64::INFINITY,
+                objective: f64::INFINITY,
+                migration_secs: 0.0,
+                evals: 0,
+                warm: false,
+                cache_hits: 0,
+                cache_misses: 0,
+            };
+        }
         let mut sched = ShaEaScheduler::with_threads(seed, self.cfg.threads);
         let out = sched.schedule(topo, wf, job, Budget::evals(self.cfg.cold_budget));
         ReplanOutcome {

@@ -33,13 +33,39 @@
 //! `(scenario, spec, wf, job, policy, cfg, seed)` — including the
 //! anytime/preempt policies, whose background budget is accounted in
 //! sim-time.
+//!
+//! # Failure & recovery
+//!
+//! With [`ReplayConfig::recovery`] enabled the replay additionally
+//! prices (all in sim-time, so determinism is untouched):
+//!
+//! * **checkpoint writes** at the configured (or searched, see
+//!   [`ReplayConfig::ckpt_search`]) cadence
+//!   ([`crate::costmodel::RecoveryModel::ckpt_write_secs`]);
+//! * **rollback/rework** on *unnoticed* machine losses and on task
+//!   failures that exhaust their retry budget — the productive sim-time
+//!   since the last completed checkpoint is re-run
+//!   ([`crate::costmodel::RecoveryState::rollback`]); noticed losses
+//!   charge no rework, which is precisely the priced value of notice;
+//! * **retry stalls** for transient faults (NIC bursts,
+//!   checkpoint-store outages, task failures) under a deterministic
+//!   bounded linear backoff.
+//!
+//! A fleet snapshot with **zero machines** (every machine lost) no
+//! longer errors: the replay enters a *degraded* state — the incumbent
+//! is retained in base-id space, iterations stall at the usual
+//! no-feasible-plan price, and planning resumes at the next join
+//! barrier ([`IterRecord::degraded`] flags such iterations). With
+//! recovery disabled (the default) every new charge is exactly `0.0`
+//! and the replay is bit-identical to the pre-recovery driver.
 
 use super::anytime::AnytimeSearch;
-use super::events::{generate_trace, TraceConfig, TraceEvent};
+use super::events::{generate_trace, ClusterEvent, TraceConfig, TraceEvent};
 use super::fleet::FleetState;
+use super::recovery::{plan_with_ckpt_interval, CkptSearchConfig};
 use super::replan::{plan_to_base, prev_placement, repair_plan, ReplanConfig, Replanner};
 use crate::balance::{self, BalanceConfig};
-use crate::costmodel::CostModel;
+use crate::costmodel::{CostModel, RecoveryModel, RecoveryState};
 use crate::plan::ExecutionPlan;
 use crate::simulator::{simulate_plan, NoiseModel, SimConfig};
 use crate::topology::{build_testbed, DeviceTopology, Scenario, TestbedSpec};
@@ -119,6 +145,15 @@ pub struct ReplayConfig {
     pub noise: NoiseModel,
     /// Apply the heterogeneity load balancer after every (re)plan.
     pub balance: bool,
+    /// Failure-and-recovery pricing (checkpoint cadence, rollback,
+    /// retry/backoff). Disabled by default, which keeps the replay
+    /// bit-identical to the pre-recovery driver.
+    pub recovery: RecoveryModel,
+    /// When set (and `recovery` is enabled), the initial cold search
+    /// treats the checkpoint interval as a searched plan dimension
+    /// ([`super::recovery::plan_with_ckpt_interval`]); the winning
+    /// interval replaces `recovery.ckpt_interval_secs` for the replay.
+    pub ckpt_search: Option<CkptSearchConfig>,
 }
 
 impl Default for ReplayConfig {
@@ -130,6 +165,8 @@ impl Default for ReplayConfig {
             sim_iters: 1,
             noise: NoiseModel::default(),
             balance: true,
+            recovery: RecoveryModel::default(),
+            ckpt_search: None,
         }
     }
 }
@@ -176,6 +213,22 @@ pub struct IterRecord {
     /// non-background policies or when no incumbent exists). Monotone
     /// non-increasing between events; resets at each barrier.
     pub anytime_cost: f64,
+    /// Retry/backoff stall charged for transient faults that fired
+    /// before this iteration (0.0 with recovery disabled; bounded by
+    /// faults × [`crate::costmodel::RecoveryModel::max_stall_secs`]).
+    pub retry_stall_secs: f64,
+    /// Rollback rework charged at this iteration: productive sim-time
+    /// since the last completed checkpoint, re-run because an unnoticed
+    /// machine loss (or a retry-exhausted task failure) fired (0.0 with
+    /// recovery disabled).
+    pub rework_secs: f64,
+    /// Checkpoint-write overhead charged during this iteration (0.0
+    /// with recovery disabled, checkpointing off, or the store down).
+    pub ckpt_secs: f64,
+    /// Whether the replay was *degraded* at this iteration: no feasible
+    /// plan exists (e.g. every machine lost), the fleet stalls, and the
+    /// retained incumbent resumes at the next join barrier.
+    pub degraded: bool,
 }
 
 /// Full replay outcome for one policy.
@@ -210,6 +263,21 @@ pub struct ReplayResult {
     pub cache_hits: usize,
     /// Cost-cache misses (same scope as `cache_hits`).
     pub cache_misses: usize,
+    /// Σ [`IterRecord::retry_stall_secs`] (0.0 with recovery disabled).
+    pub retry_stall_secs: f64,
+    /// Σ [`IterRecord::rework_secs`] (0.0 with recovery disabled).
+    pub rework_secs: f64,
+    /// Σ [`IterRecord::ckpt_secs`] (0.0 with recovery disabled).
+    pub ckpt_secs: f64,
+    /// Checkpoints completed over the replay.
+    pub ckpts: usize,
+    /// Iterations spent degraded (no feasible plan; see
+    /// [`IterRecord::degraded`]).
+    pub degraded_iters: usize,
+    /// Checkpoint interval in effect: the searched winner under
+    /// [`ReplayConfig::ckpt_search`], otherwise the configured cadence
+    /// (0.0 when recovery is disabled).
+    pub ckpt_interval_secs: f64,
 }
 
 impl ReplayResult {
@@ -316,8 +384,31 @@ pub fn replay(
 ) -> ReplayResult {
     let base = build_testbed(scenario, spec);
     let trace = generate_trace(&base, &cfg.trace, seed);
+    replay_with_trace(base, trace, wf, job, policy, cfg, seed)
+}
+
+/// [`replay`] with an injected base topology and event trace instead of
+/// the seeded generator — the entry point for adversarial traces the
+/// generator would rarely draw (e.g. every machine lost at once, which
+/// must degrade gracefully rather than panic). `cfg.trace` is ignored;
+/// everything else behaves exactly as in [`replay`], and
+/// `replay(scenario, spec, ...)` is by definition
+/// `replay_with_trace(build_testbed(..), generate_trace(..), ...)`.
+pub fn replay_with_trace(
+    base: DeviceTopology,
+    trace: Vec<TraceEvent>,
+    wf: &RlWorkflow,
+    job: &JobConfig,
+    policy: Policy,
+    cfg: &ReplayConfig,
+    seed: u64,
+) -> ReplayResult {
     let mut fleet = FleetState::new(base);
     let mut replanner = Replanner::new(seed, cfg.replan.clone());
+    // Recovery pricing: local copy so a searched checkpoint interval
+    // can replace the configured cadence without touching the config.
+    let mut recovery = cfg.recovery;
+    let mut recov_state = RecoveryState::default();
     // The background service exists only under the anytime/preempt
     // policies; its allowance is accounted in sim-time, so the replay
     // stays a pure function of its inputs. Both policies share the
@@ -334,9 +425,28 @@ pub fn replay(
     let mut hypo: Option<(DeviceTopology, Vec<usize>, usize)> = None;
 
     // Initial plan on the full fleet (identical across policies: the
-    // replanner's episode counter starts equal).
+    // replanner's episode counter starts equal). With a checkpoint
+    // search configured the cold episode additionally picks the
+    // cadence; without one the episode is the plain cold search,
+    // bit-identical to the pre-recovery driver.
     let (mut topo, mut map) = fleet.snapshot();
-    let cold = replanner.cold_plan(&topo, wf, job);
+    let cold = match &cfg.ckpt_search {
+        Some(cs) if recovery.enabled => {
+            let (out, interval) = plan_with_ckpt_interval(
+                &mut replanner,
+                &topo,
+                wf,
+                job,
+                &trace,
+                &recovery,
+                cs,
+                cfg.iters,
+            );
+            recovery.ckpt_interval_secs = interval;
+            out
+        }
+        _ => replanner.cold_plan(&topo, wf, job),
+    };
     let mut plan: Option<ExecutionPlan> = cold.plan.map(|p| {
         if cfg.balance {
             balance::apply(&p, wf, &topo, BalanceConfig::default())
@@ -356,6 +466,10 @@ pub fn replay(
     let mut cache_hits = cold.cache_hits;
     let mut cache_misses = cold.cache_misses;
     let mut cursor = 0usize;
+    let mut total_stall = 0.0f64;
+    let mut total_rework = 0.0f64;
+    let mut total_ckpt = 0.0f64;
+    let mut degraded_iters = 0usize;
 
     for iter in 0..cfg.iters {
         // Fire due events.
@@ -365,6 +479,29 @@ pub fn replay(
             fleet.apply(&trace[cursor].event);
             labels.push(trace[cursor].label());
             cursor += 1;
+        }
+        // Recovery pricing for the events that just fired: transient
+        // faults stall for their bounded retry/backoff; unnoticed
+        // machine losses — and task failures whose drawn attempts
+        // exhaust the retry budget — roll the job back to the last
+        // completed checkpoint (the rework is re-run productive
+        // sim-time). Noticed losses charge nothing here: the notice
+        // window is what lets state drain before the machine vanishes.
+        let mut retry_stall_secs = 0.0f64;
+        let mut rework_secs = 0.0f64;
+        if recovery.enabled {
+            for ev in &trace[fired_from..cursor] {
+                if let Some(attempts) = ev.event.attempts() {
+                    let (stall, recovered) = recovery.retry_stall(attempts);
+                    retry_stall_secs += stall;
+                    if !recovered && matches!(ev.event, ClusterEvent::TaskFailure { .. }) {
+                        rework_secs += recov_state.rollback();
+                    }
+                }
+                if ev.is_machine_loss() && ev.notice_secs.is_none() {
+                    rework_secs += recov_state.rollback();
+                }
+            }
         }
         let mut migration_secs = 0.0;
         let mut evals = 0;
@@ -472,7 +609,16 @@ pub fn replay(
                     p
                 }
             });
-            incumbent_base = plan.as_ref().map(|p| plan_to_base(p, &map));
+            // Graceful degradation: when the barrier produced no plan
+            // (e.g. zero machines survive — the guarded cold search
+            // returns `None` instead of erroring), *retain* the
+            // incumbent in base-id space. The fleet stalls at the
+            // degraded price below and planning resumes from the
+            // retained incumbent at the next join barrier, instead of
+            // restarting cold from nothing.
+            if let Some(p) = plan.as_ref() {
+                incumbent_base = Some(plan_to_base(p, &map));
+            }
             if replanned {
                 replans += 1;
             }
@@ -503,7 +649,33 @@ pub fn replay(
                 0,
             ),
         };
-        total_secs += iter_secs + migration_secs;
+        // Checkpoint cadence: only productive iterations advance the
+        // cadence clock (a degraded stall makes no progress worth
+        // persisting), and an outage of the checkpoint store freezes
+        // the stable point — lengthening the rollback exposure, which
+        // is exactly the risk an outage creates. With recovery disabled
+        // every charge below is exactly 0.0, keeping the sum
+        // bit-identical to the pre-recovery driver.
+        let mut ckpt_secs = 0.0f64;
+        if recovery.enabled {
+            if let Some(p) = &plan {
+                let write = recovery.ckpt_write_secs(&cfg.replan.migration, wf, job, p);
+                ckpt_secs = recov_state.advance(
+                    iter_secs,
+                    write,
+                    fleet.store_up(),
+                    recovery.ckpt_interval_secs,
+                );
+            }
+        }
+        let degraded = plan.is_none();
+        if degraded {
+            degraded_iters += 1;
+        }
+        total_secs += iter_secs + migration_secs + retry_stall_secs + rework_secs + ckpt_secs;
+        total_stall += retry_stall_secs;
+        total_rework += rework_secs;
+        total_ckpt += ckpt_secs;
 
         // Predictive preemption: when the nearest upcoming machine
         // loss carries notice that covers the estimated time until it
@@ -521,7 +693,13 @@ pub fn replay(
                 if let Some(idx) = next_noticed_loss(&trace, cursor, iter, iter_secs) {
                     let hyp_fleet = fleet.apply_hypothetical(&trace[idx].event);
                     let (ht, hm) = hyp_fleet.snapshot();
-                    hypo = Some((ht, hm, idx));
+                    // An empty hypothetical fleet (the predicted loss
+                    // takes the last machine) has nothing to search —
+                    // skip priming instead of handing the background
+                    // service a zero-device topology.
+                    if ht.n() > 0 {
+                        hypo = Some((ht, hm, idx));
+                    }
                 }
             }
             if let (Some(a), Some((ht, hm, idx))) = (anytime.as_mut(), hypo.as_ref()) {
@@ -594,6 +772,10 @@ pub fn replay(
             anytime_evals,
             hypothesis_evals,
             anytime_cost,
+            retry_stall_secs,
+            rework_secs,
+            ckpt_secs,
+            degraded,
         });
     }
 
@@ -609,6 +791,12 @@ pub fn replay(
         hypothesis_evals: total_hypothesis_evals,
         cache_hits,
         cache_misses,
+        retry_stall_secs: total_stall,
+        rework_secs: total_rework,
+        ckpt_secs: total_ckpt,
+        ckpts: recov_state.ckpts,
+        degraded_iters,
+        ckpt_interval_secs: if recovery.enabled { recovery.ckpt_interval_secs } else { 0.0 },
     }
 }
 
@@ -628,9 +816,7 @@ mod tests {
                 seed_mutants: 2,
                 ..ReplanConfig::default()
             },
-            sim_iters: 1,
-            noise: NoiseModel::default(),
-            balance: true,
+            ..ReplayConfig::default()
         }
     }
 
@@ -707,6 +893,64 @@ mod tests {
             9,
         );
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn inert_recovery_is_bit_identical() {
+        // Loss-free trace + checkpointing disabled: recovery *enabled*
+        // must reproduce the recovery-disabled replay bit-for-bit.
+        let wf = RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_1b7());
+        let job = JobConfig::tiny();
+        let mut quiet = tiny_cfg();
+        quiet.trace.n_events = 0;
+        let mut inert = quiet.clone();
+        inert.recovery = crate::costmodel::RecoveryModel::with_interval(0.0);
+        for policy in [Policy::Warm, Policy::Preempt] {
+            let plain =
+                replay(Scenario::MultiCountry, &small_spec(), &wf, &job, policy, &quiet, 11);
+            let rec =
+                replay(Scenario::MultiCountry, &small_spec(), &wf, &job, policy, &inert, 11);
+            assert_eq!(plain.total_secs.to_bits(), rec.total_secs.to_bits(), "{policy:?}");
+            assert_eq!(plain.records, rec.records, "{policy:?}");
+            assert_eq!(rec.rework_secs, 0.0);
+            assert_eq!(rec.retry_stall_secs, 0.0);
+            assert_eq!(rec.ckpts, 0);
+        }
+    }
+
+    #[test]
+    fn faults_charge_exactly_their_recovery_time() {
+        // Same faulty trace with and without recovery pricing: events,
+        // plans and measurements are identical, so the enabled run's
+        // extra time must be exactly its stall + rework + checkpoint
+        // telemetry — and some stall must actually be charged (every
+        // generated fault carries attempts ≥ 1).
+        let wf = RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_1b7());
+        let job = JobConfig::tiny();
+        let mut cfg = tiny_cfg();
+        cfg.trace.fault_events = 3;
+        let mut priced = cfg.clone();
+        priced.recovery = crate::costmodel::RecoveryModel::with_interval(120.0);
+        let free = replay(Scenario::MultiCountry, &small_spec(), &wf, &job, Policy::Warm, &cfg, 2);
+        let paid =
+            replay(Scenario::MultiCountry, &small_spec(), &wf, &job, Policy::Warm, &priced, 2);
+        assert!(paid.retry_stall_secs > 0.0, "no fault stall charged");
+        let extra = paid.retry_stall_secs + paid.rework_secs + paid.ckpt_secs;
+        assert!(
+            (paid.total_secs - free.total_secs - extra).abs() < 1e-9 * paid.total_secs.max(1.0),
+            "recovery charge mismatch: {} vs {} + {extra}",
+            paid.total_secs,
+            free.total_secs
+        );
+        assert_eq!(
+            paid.retry_stall_secs,
+            paid.records.iter().map(|r| r.retry_stall_secs).sum::<f64>()
+        );
+        assert_eq!(paid.ckpt_interval_secs, 120.0);
+        // Per-event stall bound: never beyond faults × max stall.
+        let bound = paid.records.iter().map(|r| r.events.len()).sum::<usize>() as f64
+            * priced.recovery.max_stall_secs();
+        assert!(paid.retry_stall_secs <= bound + 1e-9);
     }
 
     #[test]

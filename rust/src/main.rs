@@ -10,9 +10,10 @@
 //!   lint                 detlint determinism/concurrency static analysis
 
 use hetrl::balance::{self, BalanceConfig};
-use hetrl::costmodel::CostModel;
+use hetrl::costmodel::{CostModel, MigrationModel, RecoveryModel};
 use hetrl::elastic::{
-    self, first_event_iter, generate_trace, Policy, ReplanConfig, ReplayConfig, TraceConfig,
+    self, first_event_iter, generate_trace, CkptSearchConfig, Policy, ReplanConfig, ReplayConfig,
+    TraceConfig,
 };
 use hetrl::engine::{GrpoConfig, GrpoTrainer, TaskDifficulty, WorkerFleet};
 use hetrl::profiler::{profile, ProfilerConfig};
@@ -24,7 +25,7 @@ use hetrl::scheduler::{
 use hetrl::simulator::{simulate_plan, SimConfig};
 use hetrl::topology::{build_testbed, Scenario, TestbedSpec};
 use hetrl::util::cli::{usage, Args, OptSpec};
-use hetrl::util::units::fmt_secs;
+use hetrl::util::units::{fmt_secs, GBITPS_BYTES};
 use hetrl::workflow::{Algo, JobConfig, Mode, ModelSpec, RlWorkflow};
 
 fn main() {
@@ -85,6 +86,10 @@ fn help() -> String {
             OptSpec { name: "warm-budget", help: "replay: evals per warm replan", default: Some("150") },
             OptSpec { name: "anytime-rate", help: "replay: background evals per simulated second", default: Some("0.5") },
             OptSpec { name: "notice-secs", help: "replay: pin machine-loss advance notice (0 = none; default: realistic drawn notice)", default: None },
+            OptSpec { name: "faults", help: "replay: seed N transient faults and enable recovery pricing (bare flag = 4)", default: None },
+            OptSpec { name: "ckpt-interval", help: "replay: checkpoint cadence in secs, or 'auto' to search it (enables recovery)", default: None },
+            OptSpec { name: "max-retries", help: "replay: retry budget per transient fault", default: Some("3") },
+            OptSpec { name: "ckpt-bw", help: "checkpoint-store bandwidth in Gbit/s (prices migrations restores + ckpt writes)", default: Some("2.5") },
             OptSpec { name: "tiny", help: "replay: scaled-down job (flag)", default: None },
             OptSpec { name: "steps", help: "train: number of GRPO steps", default: Some("100") },
             OptSpec { name: "artifacts", help: "artifacts directory", default: Some("artifacts") },
@@ -273,13 +278,78 @@ fn cmd_replay(args: &Args) -> i32 {
             }
         },
     };
-    let spec = TestbedSpec::default();
+    // Failure & recovery knobs. `--faults [N]` seeds transient-fault
+    // events into the trace and turns recovery pricing on;
+    // `--ckpt-interval <secs|auto>` turns it on too, with either a
+    // pinned cadence or the searched one; `--ckpt-bw` reprices the
+    // checkpoint store (migration restores *and* checkpoint writes).
+    let faults_on = args.flag("faults") || args.get("faults").is_some();
+    let fault_events = if faults_on {
+        match args.get_usize("faults", 4) {
+            Ok(n) => n,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    } else {
+        0
+    };
+    let mut recovery = RecoveryModel::default();
+    let mut ckpt_search = None;
+    match args.get("ckpt-interval") {
+        None => {}
+        Some("auto") => {
+            recovery.enabled = true;
+            ckpt_search = Some(CkptSearchConfig::default());
+        }
+        Some(v) => match v.parse::<f64>() {
+            Ok(s) if s >= 0.0 => recovery = RecoveryModel::with_interval(s),
+            _ => {
+                eprintln!("--ckpt-interval expects seconds >= 0 or 'auto', got '{v}'");
+                return 2;
+            }
+        },
+    }
+    // Seeded faults without an explicit cadence still price recovery,
+    // at the default checkpoint interval.
+    recovery.enabled = recovery.enabled || faults_on;
+    recovery.max_retries = match args.get_usize("max-retries", recovery.max_retries) {
+        Ok(n) => n,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let mut spec = TestbedSpec::default();
+    if args.get("ckpt-bw").is_some() {
+        match args.get_f64("ckpt-bw", 0.0) {
+            Ok(g) if g > 0.0 => spec.ckpt_bw = g * GBITPS_BYTES,
+            Ok(_) => {
+                eprintln!("--ckpt-bw expects a positive Gbit/s figure");
+                return 2;
+            }
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    }
     let mut replan = ReplanConfig { warm_budget, cold_budget, threads, ..ReplanConfig::default() };
     replan.anytime.evals_per_sim_sec = anytime_rate;
+    replan.migration = MigrationModel::for_spec(&spec);
     let cfg = ReplayConfig {
         iters,
-        trace: TraceConfig { horizon: iters, n_events, notice_override, ..TraceConfig::default() },
+        trace: TraceConfig {
+            horizon: iters,
+            n_events,
+            fault_events,
+            notice_override,
+            ..TraceConfig::default()
+        },
         replan,
+        recovery,
+        ckpt_search,
         ..ReplayConfig::default()
     };
 
@@ -335,6 +405,10 @@ fn cmd_replay(args: &Args) -> i32 {
             "hyp evals",
             "cache hit%",
             "migration (s)",
+            "retry stall (s)",
+            "rework (s)",
+            "ckpt (s)",
+            "degraded",
             "queue mean/max",
             "gen stall (s)",
         ],
@@ -371,6 +445,15 @@ fn cmd_replay(args: &Args) -> i32 {
                 fmt_secs(rec.iter_secs),
             );
         }
+        if cfg.recovery.enabled {
+            println!(
+                "  [{}] checkpoint cadence {} -> {} writes, {} degraded iters",
+                policy.name(),
+                fmt_secs(r.ckpt_interval_secs),
+                r.ckpts,
+                r.degraded_iters,
+            );
+        }
         table.row(vec![
             policy.name().to_string(),
             wf_col,
@@ -385,6 +468,10 @@ fn cmd_replay(args: &Args) -> i32 {
             r.hypothesis_evals.to_string(),
             format!("{:.0}%", r.cache_hit_rate() * 100.0),
             format!("{mig:.1}"),
+            format!("{:.1}", r.retry_stall_secs),
+            format!("{:.1}", r.rework_secs),
+            format!("{:.1}/{}", r.ckpt_secs, r.ckpts),
+            r.degraded_iters.to_string(),
             queue_col,
             stall_col,
         ]);

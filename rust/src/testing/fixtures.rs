@@ -24,7 +24,6 @@ use crate::scheduler::ea::EaConfig;
 use crate::scheduler::levels::{
     assemble, assign_devices, default_task_plans, gpu_groupings, set_partitions,
 };
-use crate::simulator::NoiseModel;
 use crate::topology::{build_testbed, DeviceTopology, GpuModel, Scenario, TestbedSpec};
 use crate::util::rng::Rng;
 use crate::workflow::{Algo, JobConfig, Mode, ModelSpec, RlWorkflow};
@@ -61,6 +60,7 @@ pub fn small_spec() -> TestbedSpec {
     TestbedSpec {
         machines: vec![(GpuModel::A100, 1), (GpuModel::L40S, 1), (GpuModel::L4, 1)],
         gpus_per_machine: 4,
+        ..TestbedSpec::default()
     }
 }
 
@@ -81,16 +81,34 @@ pub fn small_replan_cfg() -> ReplanConfig {
 }
 
 /// Short dynamic-replay config (6 iterations, 3 events) over
-/// [`small_replan_cfg`].
+/// [`small_replan_cfg`]. Recovery pricing stays at its default
+/// (disabled) — see [`fault_replay_cfg`] for the chaos variant.
 pub fn small_replay_cfg() -> ReplayConfig {
     ReplayConfig {
         iters: 6,
         trace: TraceConfig { horizon: 6, n_events: 3, ..TraceConfig::default() },
         replan: small_replan_cfg(),
-        sim_iters: 1,
-        noise: NoiseModel::default(),
-        balance: true,
+        ..ReplayConfig::default()
     }
+}
+
+/// Chaos-replay config for `tests/prop_recover.rs`: the small testbed
+/// over an 8-iteration trace with 2 ordinary events, `faults` seeded
+/// transient faults, and recovery pricing on at a 120 s checkpoint
+/// cadence (short enough that tiny traces actually complete
+/// checkpoints).
+pub fn fault_replay_cfg(faults: usize, threads: usize) -> ReplayConfig {
+    let mut cfg = small_replay_cfg();
+    cfg.iters = 8;
+    cfg.trace = TraceConfig {
+        horizon: 8,
+        n_events: 2,
+        fault_events: faults,
+        ..TraceConfig::default()
+    };
+    cfg.replan.threads = threads;
+    cfg.recovery = crate::costmodel::RecoveryModel::with_interval(120.0);
+    cfg
 }
 
 /// Replay config for the background-search property suites

@@ -59,6 +59,14 @@ pub struct TestbedSpec {
     /// (model, number of 8-GPU machines)
     pub machines: Vec<(GpuModel, usize)>,
     pub gpus_per_machine: usize,
+    /// Checkpoint/object-store bandwidth (bytes/s) of this testbed —
+    /// the single bottleneck both checkpoint *writes*
+    /// ([`crate::costmodel::RecoveryModel`]) and no-live-holder
+    /// *restores* ([`crate::costmodel::MigrationModel`]) serialize on.
+    /// Heterogeneous deployments differ wildly here (S3 vs. a
+    /// rack-local NVMe cache), so it is part of the testbed, not a
+    /// model constant; `hetrl replay --ckpt-bw <gbps>` overrides it.
+    pub ckpt_bw: f64,
 }
 
 impl Default for TestbedSpec {
@@ -67,6 +75,7 @@ impl Default for TestbedSpec {
         TestbedSpec {
             machines: vec![(GpuModel::A100, 3), (GpuModel::L40S, 3), (GpuModel::L4, 2)],
             gpus_per_machine: 8,
+            ckpt_bw: 2.5 * GBITPS_BYTES,
         }
     }
 }

@@ -1,0 +1,319 @@
+//! Properties of the failure-and-recovery model (`hetrl replay
+//! --faults`, `ReplayConfig::recovery`):
+//!
+//! * **bit-determinism under faults** — a chaos replay (seeded
+//!   transient faults, recovery pricing on, the checkpoint interval
+//!   searched) is bit-identical at 1, 2 and 8 worker threads, across
+//!   seeds;
+//! * **the degeneracy pin** — with a loss-free trace (all machine
+//!   losses noticed, no faults) and checkpointing disabled, enabling
+//!   recovery charges exactly `0.0` everywhere: the result equals the
+//!   recovery-disabled replay *as a value*, for every policy, in both
+//!   the sync and async workflows;
+//! * **rollback is bounded by the cadence** — while the checkpoint
+//!   store is up, no single rollback ever reworks more than one
+//!   checkpoint interval of productive time;
+//! * **retry stalls are bounded** — total stall never exceeds
+//!   `faults × max_retries × backoff`, and a zero-retry policy charges
+//!   no stall at all (NIC bursts degenerate to plain degrade events);
+//! * **total fleet loss degrades gracefully** — a trace that preempts
+//!   *every* machine at once must not panic under any policy, in either
+//!   workflow: the replay stalls in a degraded state, retains the
+//!   incumbent, and resumes (and finishes productive iterations) after
+//!   the machines rejoin.
+
+use hetrl::asyncrl::replay_async_with_trace;
+use hetrl::costmodel::RecoveryModel;
+use hetrl::elastic::{
+    generate_trace, replay, replay_with_trace, CkptSearchConfig, ClusterEvent, Policy,
+    ReplayResult, TraceEvent,
+};
+use hetrl::testing::fixtures;
+use hetrl::topology::Scenario;
+use hetrl::workflow::JobConfig;
+
+/// The deterministic projection of a replay: everything except the
+/// cache hit/miss telemetry, which is approximate when threads > 1.
+#[allow(clippy::type_complexity)]
+fn fingerprint(
+    r: &ReplayResult,
+) -> (
+    Vec<(usize, Vec<String>, bool, usize, u64, u64, usize, usize, u64, u64, u64, bool)>,
+    (u64, u64, u64, u64, usize, usize, u64, usize),
+) {
+    let records = r
+        .records
+        .iter()
+        .map(|x| {
+            (
+                x.iter,
+                x.events.clone(),
+                x.replanned,
+                x.evals,
+                x.migration_secs.to_bits(),
+                x.iter_secs.to_bits(),
+                x.samples,
+                x.active_gpus,
+                x.retry_stall_secs.to_bits(),
+                x.rework_secs.to_bits(),
+                x.ckpt_secs.to_bits(),
+                x.degraded,
+            )
+        })
+        .collect();
+    let totals = (
+        r.total_secs.to_bits(),
+        r.retry_stall_secs.to_bits(),
+        r.rework_secs.to_bits(),
+        r.ckpt_secs.to_bits(),
+        r.ckpts,
+        r.degraded_iters,
+        r.ckpt_interval_secs.to_bits(),
+        r.total_evals,
+    );
+    (records, totals)
+}
+
+/// A trace that preempts every machine of the 3-machine small testbed
+/// at once (unnoticed) and rejoins them all a few iterations later.
+fn total_loss_trace() -> Vec<TraceEvent> {
+    let mut trace: Vec<TraceEvent> = (0..3)
+        .map(|m| TraceEvent {
+            at_iter: 2,
+            event: ClusterEvent::MachinePreempt { machine: m },
+            notice_secs: None,
+        })
+        .collect();
+    trace.extend((0..3).map(|m| TraceEvent {
+        at_iter: 5,
+        event: ClusterEvent::MachineJoin { machine: m },
+        notice_secs: None,
+    }));
+    trace
+}
+
+#[test]
+fn chaos_replay_is_bit_deterministic_across_threads() {
+    let wf = fixtures::tiny_wf();
+    let job = JobConfig::tiny();
+    for seed in [3u64, 7, 13] {
+        let mut base_cfg = fixtures::fault_replay_cfg(3, 1);
+        // Exercise the searched checkpoint interval too: two candidate
+        // cadences, one halving round.
+        base_cfg.ckpt_search = Some(CkptSearchConfig {
+            candidates: vec![120.0, 600.0],
+            rounds: 1,
+            ..CkptSearchConfig::default()
+        });
+        let base = replay(
+            Scenario::MultiCountry,
+            &fixtures::small_spec(),
+            &wf,
+            &job,
+            Policy::Warm,
+            &base_cfg,
+            seed,
+        );
+        assert!(base.retry_stall_secs > 0.0, "seed {seed}: chaos trace charged no stall");
+        for threads in fixtures::test_threads() {
+            let cfg = fixtures::fault_replay_cfg(3, threads);
+            let cfg = hetrl::elastic::ReplayConfig { ckpt_search: base_cfg.ckpt_search.clone(), ..cfg };
+            let r = replay(
+                Scenario::MultiCountry,
+                &fixtures::small_spec(),
+                &wf,
+                &job,
+                Policy::Warm,
+                &cfg,
+                seed,
+            );
+            assert_eq!(
+                fingerprint(&r),
+                fingerprint(&base),
+                "seed {seed}, threads {threads}: chaos replay diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn inert_recovery_is_the_disabled_replay_every_policy_both_workflows() {
+    // Loss-free trace: every machine loss noticed, zero faults. With
+    // checkpointing disabled too, recovery-enabled must equal
+    // recovery-disabled as a value (every charge is exactly 0.0).
+    let wf = fixtures::tiny_wf();
+    let job = JobConfig::tiny();
+    let mut cfg = fixtures::small_replay_cfg();
+    cfg.trace.notice_override = Some(45.0);
+    let mut inert = cfg.clone();
+    inert.recovery = RecoveryModel::with_interval(0.0);
+    for policy in Policy::ALL {
+        let plain = replay(
+            Scenario::MultiCountry,
+            &fixtures::small_spec(),
+            &wf,
+            &job,
+            policy,
+            &cfg,
+            17,
+        );
+        let rec = replay(
+            Scenario::MultiCountry,
+            &fixtures::small_spec(),
+            &wf,
+            &job,
+            policy,
+            &inert,
+            17,
+        );
+        assert_eq!(plain, rec, "{policy:?}: inert recovery perturbed the sync replay");
+        assert_eq!(rec.retry_stall_secs, 0.0);
+        assert_eq!(rec.rework_secs, 0.0);
+        assert_eq!(rec.ckpts, 0);
+    }
+    // Async workflow (k = 2), same pin.
+    let ajob = fixtures::async_job();
+    let mut acfg = fixtures::async_replay_cfg(2, 1);
+    acfg.base.trace.notice_override = Some(45.0);
+    let mut ainert = acfg.clone();
+    ainert.base.recovery = RecoveryModel::with_interval(0.0);
+    for policy in Policy::ALL {
+        let topo = fixtures::small_topo(Scenario::MultiCountry);
+        let trace = generate_trace(&topo, &acfg.base.trace, 17);
+        let plain =
+            replay_async_with_trace(topo.clone(), trace.clone(), &wf, &ajob, policy, &acfg, 17);
+        let rec = replay_async_with_trace(topo, trace, &wf, &ajob, policy, &ainert, 17);
+        assert_eq!(plain, rec, "{policy:?}: inert recovery perturbed the async replay");
+    }
+}
+
+#[test]
+fn rollback_never_exceeds_one_checkpoint_interval() {
+    // Unnoticed losses only, store never down: every rollback reworks
+    // strictly less than one interval of productive time.
+    let wf = fixtures::tiny_wf();
+    let job = JobConfig::tiny();
+    let trace = vec![
+        TraceEvent {
+            at_iter: 3,
+            event: ClusterEvent::MachinePreempt { machine: 1 },
+            notice_secs: None,
+        },
+        TraceEvent {
+            at_iter: 5,
+            event: ClusterEvent::MachineJoin { machine: 1 },
+            notice_secs: None,
+        },
+        TraceEvent {
+            at_iter: 6,
+            event: ClusterEvent::MachinePreempt { machine: 2 },
+            notice_secs: None,
+        },
+    ];
+    // Calibrate the cadence to the measured iteration time (half the
+    // first iteration) so every iteration provably crosses at least one
+    // cadence point, whatever the absolute time scale of the testbed.
+    let mut cfg = fixtures::fault_replay_cfg(0, 1);
+    let topo = fixtures::small_topo(Scenario::MultiCountry);
+    let probe = {
+        let mut free = cfg.clone();
+        free.recovery = RecoveryModel::default(); // disabled
+        replay_with_trace(topo.clone(), trace.clone(), &wf, &job, Policy::Warm, &free, 4)
+    };
+    let interval = probe.records[0].iter_secs / 2.0;
+    assert!(interval > 0.0, "probe replay measured a zero-length iteration");
+    cfg.recovery = RecoveryModel::with_interval(interval);
+    let r = replay_with_trace(topo, trace, &wf, &job, Policy::Warm, &cfg, 4);
+    assert!(r.rework_secs > 0.0, "unnoticed losses charged no rework");
+    for rec in &r.records {
+        assert!(
+            rec.rework_secs <= interval + 1e-9,
+            "iter {}: rollback {} exceeds the {interval}s cadence",
+            rec.iter,
+            rec.rework_secs
+        );
+    }
+    assert!(r.ckpts > 0, "cadence never completed a checkpoint");
+}
+
+#[test]
+fn retry_stalls_are_bounded_and_vanish_with_zero_retries() {
+    let wf = fixtures::tiny_wf();
+    let job = JobConfig::tiny();
+    let faults = 4usize;
+    for seed in [1u64, 2, 5] {
+        let cfg = fixtures::fault_replay_cfg(faults, 1);
+        let r = replay(
+            Scenario::MultiCountry,
+            &fixtures::small_spec(),
+            &wf,
+            &job,
+            Policy::Warm,
+            &cfg,
+            seed,
+        );
+        let bound = faults as f64 * cfg.recovery.max_stall_secs();
+        assert!(
+            r.retry_stall_secs <= bound + 1e-9,
+            "seed {seed}: stall {} exceeds {faults} x {}",
+            r.retry_stall_secs,
+            cfg.recovery.max_stall_secs()
+        );
+        // Zero-retry policy: transient faults charge no stall at all —
+        // a NIC burst degenerates to a plain bandwidth degradation.
+        let mut zero = cfg.clone();
+        zero.recovery.max_retries = 0;
+        let rz = replay(
+            Scenario::MultiCountry,
+            &fixtures::small_spec(),
+            &wf,
+            &job,
+            Policy::Warm,
+            &zero,
+            seed,
+        );
+        assert_eq!(rz.retry_stall_secs, 0.0, "seed {seed}: zero-retry policy stalled");
+    }
+}
+
+#[test]
+fn total_fleet_loss_degrades_and_resumes_sync() {
+    let wf = fixtures::tiny_wf();
+    let job = JobConfig::tiny();
+    let cfg = fixtures::fault_replay_cfg(0, 1);
+    for policy in Policy::ALL {
+        let topo = fixtures::small_topo(Scenario::MultiCountry);
+        let r = replay_with_trace(topo, total_loss_trace(), &wf, &job, policy, &cfg, 6);
+        assert_eq!(r.records.len(), cfg.iters, "{policy:?}: replay did not finish");
+        assert!(r.degraded_iters >= 1, "{policy:?}: total loss never degraded");
+        assert!(r.total_secs.is_finite(), "{policy:?}");
+        // Degraded iterations stall the whole fleet.
+        for rec in r.records.iter().filter(|rec| rec.degraded) {
+            assert_eq!(rec.samples, 0, "{policy:?}: degraded iter processed samples");
+        }
+        // After the join barrier the replay resumes and finishes
+        // productive iterations.
+        let last = r.records.last().unwrap();
+        assert!(!last.degraded, "{policy:?}: never resumed after the fleet rejoined");
+        assert!(last.samples > 0, "{policy:?}: resumed but processed nothing");
+    }
+}
+
+#[test]
+fn total_fleet_loss_degrades_and_resumes_async() {
+    let wf = fixtures::tiny_wf();
+    let job = fixtures::async_job();
+    let mut cfg = fixtures::async_replay_cfg(2, 1);
+    cfg.base.iters = 8;
+    cfg.base.recovery = RecoveryModel::with_interval(120.0);
+    for policy in [Policy::Static, Policy::Warm, Policy::Preempt] {
+        let topo = fixtures::small_topo(Scenario::MultiCountry);
+        let r = replay_async_with_trace(topo, total_loss_trace(), &wf, &job, policy, &cfg, 6);
+        assert_eq!(r.base.records.len(), cfg.base.iters, "{policy:?}");
+        assert!(r.base.degraded_iters >= 1, "{policy:?}: total loss never degraded");
+        assert!(r.base.total_secs.is_finite(), "{policy:?}");
+        let last = r.base.records.last().unwrap();
+        assert!(!last.degraded, "{policy:?}: async replay never resumed");
+        assert!(last.samples > 0, "{policy:?}: resumed but processed nothing");
+    }
+}
