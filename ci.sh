@@ -84,11 +84,28 @@ echo "== chaos replay smoke (transient faults + recovery pricing, async) =="
     --iters 6 --events 3 --budget 120 --warm-budget 60 \
     --faults --max-retries 2 --policy all --tiny
 
-echo "== search-throughput smoke (parallel engine, 1 vs N threads) =="
-# fig5_search_throughput sweeps thread counts at a small budget and
-# exits non-zero if any N-thread run diverges from (in particular, finds
-# a worse plan than) the 1-thread run at the same seed.
+echo "== search-throughput smoke (parallel engine, 1 vs N threads, full vs delta) =="
+# fig5_search_throughput sweeps thread counts x {full, delta} at a small
+# budget and exits non-zero if any N-thread run diverges from (in
+# particular, finds a worse plan than) the 1-thread run at the same
+# seed, or if delta-eval diverges from full re-pricing / fails to price
+# strictly fewer tasks.
 cargo bench --bench fig5_search_throughput
+
+echo "== delta-vs-full consistency smoke (hetrl schedule) =="
+# Delta evaluation must change work, never results: the same schedule
+# run with incremental pricing (the default) and with --full-eval must
+# print the identical plan fingerprint and predicted iteration time.
+delta_out=$(./target/release/hetrl schedule --scenario country --seed 0 --budget 300 \
+    | grep -E '^(plan fingerprint|predicted):')
+full_out=$(./target/release/hetrl schedule --scenario country --seed 0 --budget 300 --full-eval \
+    | grep -E '^(plan fingerprint|predicted):')
+if [[ "$delta_out" != "$full_out" ]]; then
+    echo "ci.sh: FAIL - delta-eval schedule diverged from --full-eval:" >&2
+    diff <(echo "$delta_out") <(echo "$full_out") >&2 || true
+    exit 1
+fi
+echo "$delta_out"
 
 if [[ "${1:-}" == "--bench" ]]; then
     echo "== fig11 elastic bench =="

@@ -1,15 +1,24 @@
 //! Figure 5b (new, beyond the paper) — scaling of the parallel
 //! plan-evaluation engine: SHA-EA search throughput (cost-model
 //! evals/sec) and time-to-incumbent-quality vs worker-thread count on
-//! the Multi-Country 64-GPU fleet, same seed and eval budget per run.
+//! the Multi-Country 64-GPU fleet, same seed and eval budget per run,
+//! with each thread count run twice — full re-pricing and incremental
+//! (delta) evaluation — to put a number on the hot-path speed pass.
 //!
-//! This bench doubles as the CI determinism smoke: the engine's
-//! contract is that the same seed yields the **bit-identical best plan
-//! at any thread count**, so any divergence in best cost or plan across
-//! the thread sweep (in particular an N-thread run finding a *worse*
-//! plan than the 1-thread run) exits non-zero and fails `ci.sh`.
+//! This bench doubles as the CI determinism smoke, with two gates:
 //!
-//! Rows are persisted as a `RunRecord` under `bench_out/`.
+//! * the engine's contract that the same seed yields the
+//!   **bit-identical best plan at any thread count** — any divergence
+//!   in best cost / plan / evals across the thread sweep exits non-zero
+//!   and fails `ci.sh`;
+//! * the delta-eval contract that incremental pricing changes *work*,
+//!   never *results* — at every thread count the delta run must match
+//!   the full run bit-for-bit while resolving **strictly fewer**
+//!   per-task costs.
+//!
+//! Rows are persisted as a `RunRecord` under `bench_out/`; the
+//! `task_pricings` / `pricings_per_eval` columns are the paired
+//! full-vs-delta cost of one candidate evaluation.
 
 mod common;
 
@@ -48,6 +57,7 @@ fn main() {
         "fig5_search_throughput",
         &[
             "threads",
+            "eval_mode",
             "budget_evals",
             "evals",
             "wall_s",
@@ -55,6 +65,8 @@ fn main() {
             "best_iter_time_s",
             "t_to_95pct_s",
             "cache_hit_rate",
+            "task_pricings",
+            "pricings_per_eval",
         ],
     );
     let mut table = Table::new(
@@ -62,67 +74,114 @@ fn main() {
             "Figure 5b: parallel search throughput (Qwen-8B sync PPO, Multi-Country, \
              budget {budget}, seed {seed})"
         ),
-        &["threads", "wall (s)", "evals/s", "best iter (s)", "t→95% (s)", "cache hit%"],
+        &[
+            "threads",
+            "eval",
+            "wall (s)",
+            "evals/s",
+            "best iter (s)",
+            "t→95% (s)",
+            "cache hit%",
+            "pricings/eval",
+        ],
     );
 
-    let mut runs: Vec<(usize, ScheduleOutcome)> = Vec::new();
+    // (threads, mode, outcome); mode false = full re-price, true = delta.
+    let mut runs: Vec<(usize, bool, ScheduleOutcome)> = Vec::new();
     for &t in &thread_counts {
-        let mut sched = ShaEaScheduler::with_threads(seed, t);
-        let out = sched.schedule(&topo, &wf, &job, Budget::evals(budget));
-        let eps = if out.wall > 0.0 { out.evals as f64 / out.wall } else { 0.0 };
-        let lookups = out.cache_hits + out.cache_misses;
-        let hit_rate = if lookups > 0 {
-            out.cache_hits as f64 / lookups as f64
-        } else {
-            0.0
-        };
-        table.row(vec![
-            t.to_string(),
-            format!("{:.3}", out.wall),
-            format!("{eps:.0}"),
-            if out.cost.is_finite() { format!("{:.1}", out.cost) } else { "∞".into() },
-            format!("{:.3}", time_to_quality(&out)),
-            format!("{:.0}%", hit_rate * 100.0),
-        ]);
-        record.push(vec![
-            Json::num(t as f64),
-            Json::num(budget as f64),
-            Json::num(out.evals as f64),
-            Json::num(out.wall),
-            Json::num(eps),
-            Json::num(if out.cost.is_finite() { out.cost } else { -1.0 }),
-            Json::num(time_to_quality(&out)),
-            Json::num(hit_rate),
-        ]);
-        runs.push((t, out));
+        for delta in [false, true] {
+            let mut sched = ShaEaScheduler::with_threads(seed, t);
+            sched.cfg.ea.delta_eval = delta;
+            let out = sched.schedule(&topo, &wf, &job, Budget::evals(budget));
+            let eps = if out.wall > 0.0 { out.evals as f64 / out.wall } else { 0.0 };
+            let lookups = out.cache_hits + out.cache_misses;
+            let hit_rate = if lookups > 0 {
+                out.cache_hits as f64 / lookups as f64
+            } else {
+                0.0
+            };
+            let mode = if delta { "delta" } else { "full" };
+            let per_eval = if out.evals > 0 {
+                out.task_pricings as f64 / out.evals as f64
+            } else {
+                0.0
+            };
+            table.row(vec![
+                t.to_string(),
+                mode.to_string(),
+                format!("{:.3}", out.wall),
+                format!("{eps:.0}"),
+                if out.cost.is_finite() { format!("{:.1}", out.cost) } else { "∞".into() },
+                format!("{:.3}", time_to_quality(&out)),
+                format!("{:.0}%", hit_rate * 100.0),
+                format!("{per_eval:.2}"),
+            ]);
+            record.push(vec![
+                Json::num(t as f64),
+                Json::str(mode),
+                Json::num(budget as f64),
+                Json::num(out.evals as f64),
+                Json::num(out.wall),
+                Json::num(eps),
+                Json::num(if out.cost.is_finite() { out.cost } else { -1.0 }),
+                Json::num(time_to_quality(&out)),
+                Json::num(hit_rate),
+                Json::num(out.task_pricings as f64),
+                Json::num(per_eval),
+            ]);
+            runs.push((t, delta, out));
+        }
     }
     table.print();
 
-    // Determinism + quality gate (the CI smoke): every thread count
-    // must reproduce the 1-thread incumbent bit-for-bit.
-    let (_, base) = &runs[0];
     let mut ok = true;
-    for (t, out) in &runs[1..] {
-        if out.cost.to_bits() != base.cost.to_bits() {
-            eprintln!(
-                "FAIL: {t}-thread best cost {} != 1-thread {} (seed {seed})",
-                out.cost, base.cost
-            );
+
+    // Gate 1 (determinism): every thread count must reproduce the
+    // 1-thread incumbent bit-for-bit, within each eval mode.
+    for mode in [false, true] {
+        let base = &runs.iter().find(|(t, d, _)| *t == 1 && *d == mode).unwrap().2;
+        for (t, _, out) in runs.iter().filter(|(t, d, _)| *t != 1 && *d == mode) {
+            if out.cost.to_bits() != base.cost.to_bits() {
+                eprintln!(
+                    "FAIL: {t}-thread best cost {} != 1-thread {} (seed {seed})",
+                    out.cost, base.cost
+                );
+                ok = false;
+            }
+            if out.plan != base.plan {
+                eprintln!("FAIL: {t}-thread best plan differs from 1-thread (seed {seed})");
+                ok = false;
+            }
+            if out.evals != base.evals {
+                eprintln!(
+                    "FAIL: {t}-thread spent {} evals != 1-thread {} (seed {seed})",
+                    out.evals, base.evals
+                );
+                ok = false;
+            }
+        }
+    }
+
+    // Gate 2 (delta-eval): at each thread count, delta must match full
+    // bit-for-bit and resolve strictly fewer per-task costs.
+    for &t in &thread_counts {
+        let full = &runs.iter().find(|(tt, d, _)| *tt == t && !*d).unwrap().2;
+        let delta = &runs.iter().find(|(tt, d, _)| *tt == t && *d).unwrap().2;
+        if delta.cost.to_bits() != full.cost.to_bits() || delta.plan != full.plan {
+            eprintln!("FAIL: delta-eval diverged from full re-pricing at {t} threads (seed {seed})");
             ok = false;
         }
-        if out.plan != base.plan {
-            eprintln!("FAIL: {t}-thread best plan differs from 1-thread (seed {seed})");
-            ok = false;
-        }
-        if out.evals != base.evals {
+        if delta.task_pricings >= full.task_pricings {
             eprintln!(
-                "FAIL: {t}-thread spent {} evals != 1-thread {} (seed {seed})",
-                out.evals, base.evals
+                "FAIL: delta-eval priced {} tasks >= full's {} at {t} threads (seed {seed})",
+                delta.task_pricings, full.task_pricings
             );
             ok = false;
         }
     }
-    if let Some((_, four)) = runs.iter().find(|(t, _)| *t == 4) {
+
+    let base = &runs.iter().find(|(t, d, _)| *t == 1 && *d).unwrap().2;
+    if let Some((_, _, four)) = runs.iter().find(|(t, d, _)| *t == 4 && *d) {
         let speedup = (four.evals as f64 / four.wall) / (base.evals as f64 / base.wall);
         println!("speedup @4 threads: {speedup:.2}x ({cores} cores available)");
     }

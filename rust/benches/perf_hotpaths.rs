@@ -6,8 +6,9 @@
 
 mod common;
 
-use hetrl::costmodel::{ring_minmax, CostModel};
+use hetrl::costmodel::{ring_minmax, CostCache, CostModel};
 use hetrl::plan::{ExecutionPlan, ParallelStrategy, TaskPlan};
+use hetrl::scheduler::ea::perturbations_with_footprints;
 use hetrl::scheduler::{Budget, Scheduler, ShaEaScheduler};
 use hetrl::simulator::{simulate_plan, NoiseModel, SimConfig};
 use hetrl::solver::{solve_milp, BnbConfig, Cmp, Lp};
@@ -40,6 +41,18 @@ fn main() {
 
     r.bench("costmodel/plan_cost", 5, 50, || {
         std::hint::black_box(cm.plan_cost(&plan));
+    });
+
+    // The scheduler's actual inner loop after the PR 9 speed pass:
+    // re-price only a mutation's dirty footprint against a cached
+    // baseline (compare against costmodel/plan_cost above).
+    let cache = CostCache::new();
+    let base = cm.plan_cost(&plan).per_task;
+    let (mutant, dirty) = perturbations_with_footprints(&plan, 1, 7)
+        .pop()
+        .expect("one perturbation");
+    r.bench("costmodel/plan_cost_delta", 5, 50, || {
+        std::hint::black_box(cm.plan_cost_delta(&mutant, &base, &dirty, &cache));
     });
 
     let ring_devs: Vec<usize> = (0..8).map(|i| i * 8).collect();

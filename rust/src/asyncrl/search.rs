@@ -73,8 +73,10 @@ pub struct AsyncOutcome {
 /// [`Async`](crate::workflow::Mode::Async) so candidates are priced by
 /// the bounded-staleness period; the function itself is mode-agnostic.
 ///
-/// Same `seed` ⇒ bit-identical `outcome.plan` / `cost` / `evals` at any
-/// `cfg.threads` (cache hit/miss counters remain approximate telemetry).
+/// Same `seed` ⇒ bit-identical `outcome.plan` / `cost` / `evals` —
+/// and, since the sharded cache's accounting is exact, bit-identical
+/// `cache_hits` / `cache_misses` / `task_pricings` — at any
+/// `cfg.threads`.
 pub fn plan_async(
     topo: &DeviceTopology,
     wf: &RlWorkflow,

@@ -3,33 +3,55 @@
 //! [`super::task_cost::task_cost`] evaluation of a `TaskPlan` depends
 //! only on the task index and the plan fields. Searches mutate one task
 //! at a time, so most per-task results are reusable between candidate
-//! plans — the cache is now **always on** for every scheduler (a fresh
-//! one per [`crate::scheduler::EvalCtx`]), not just the elastic
-//! replanner.
+//! plans — the cache is **always on** for every scheduler (a fresh one
+//! per [`crate::scheduler::EvalCtx`]), not just the elastic replanner.
 //!
-//! The cache is concurrent: entries live in `SHARDS` mutex-guarded
-//! shards selected by the top bits of the FNV key (the crate is
-//! dependency-free, so no lock-free map), letting the parallel
-//! evaluation engine's workers share warm results with little
-//! contention. Values are computed *outside* the shard lock; a racing
-//! duplicate computation is idempotent (the cost model is pure), so the
-//! hit/miss counters are telemetry, not a determinism surface.
+//! The cache is concurrent: entries live in `SHARDS` reader-writer
+//! locked shards selected by the top bits of the FNV key (the crate is
+//! dependency-free, so no lock-free map). Warm lookups — the vast
+//! majority on the evaluation hot path — take only a read lock, so
+//! workers sharing a warm cache never serialize against each other.
+//! Values are computed *outside* any lock; inserts are double-checked
+//! under the write lock and the **first** insert wins, which makes the
+//! hit/miss counters exact: `misses()` equals the number of distinct
+//! keys ever priced, and `hits()` equals all other lookups. Both are
+//! therefore bit-deterministic for a given candidate stream at any
+//! thread count (a racing duplicate computation is idempotent — the
+//! cost model is pure — and the loser's lookup counts as a hit).
 
 use super::task_cost::TaskCost;
 use crate::plan::TaskPlan;
 use std::collections::HashMap; // detlint:allow(D2): keyed get/insert only — shard maps are never iterated
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::RwLock;
 
-/// Number of mutex-guarded shards (power of two; indexed by key prefix).
+/// Number of rw-locked shards (power of two; indexed by key prefix).
 const SHARDS: usize = 16;
 
 /// FNV-1a over the fields of a task plan that determine its cost.
 /// The topology, workflow and job are fixed for a cache's lifetime
 /// (a fresh [`CostCache`] is created per search/replanning episode).
+///
+/// Every field is mixed behind a **field-domain tag**, and each
+/// variable-length field is additionally **length-prefixed**, so the
+/// serialized byte stream is injective over `(task_idx, TaskPlan)`:
+/// two distinct inputs always produce distinct streams, and the only
+/// remaining collision source is the 64-bit hash itself. Without the
+/// tags and prefixes, boundary-shifted plans (e.g. `layer_split=[5,3],
+/// assignment=[7]` vs `layer_split=[5], assignment=[3,7]`) fed FNV the
+/// identical stream and silently shared a memo slot — returning a
+/// *wrong* cached `TaskCost` to every scheduler.
 pub fn task_plan_key(task_idx: usize, tp: &TaskPlan) -> u64 {
     const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
     const PRIME: u64 = 0x0000_0100_0000_01B3;
+    // Field-domain tags — outside the value range of any mixed field's
+    // low byte mattering; what matters is that each field starts with a
+    // distinct constant so streams cannot be re-segmented.
+    const TAG_TASK: u64 = 0xA1;
+    const TAG_STRATEGY: u64 = 0xA2;
+    const TAG_LAYER_SPLIT: u64 = 0xA3;
+    const TAG_ASSIGNMENT: u64 = 0xA4;
+    const TAG_DP_SHARES: u64 = 0xA5;
     let mut h = OFFSET;
     let mut mix = |x: u64| {
         for b in x.to_le_bytes() {
@@ -37,28 +59,43 @@ pub fn task_plan_key(task_idx: usize, tp: &TaskPlan) -> u64 {
             h = h.wrapping_mul(PRIME);
         }
     };
+    mix(TAG_TASK);
     mix(task_idx as u64);
+    mix(TAG_STRATEGY);
     mix(tp.strategy.dp as u64);
     mix(tp.strategy.pp as u64);
     mix(tp.strategy.tp as u64);
+    mix(TAG_LAYER_SPLIT);
+    mix(tp.layer_split.len() as u64);
     for &l in &tp.layer_split {
         mix(l as u64);
     }
+    mix(TAG_ASSIGNMENT);
+    mix(tp.assignment.len() as u64);
     for &d in &tp.assignment {
         mix(d as u64);
     }
+    mix(TAG_DP_SHARES);
+    mix(tp.dp_shares.len() as u64);
     for &s in &tp.dp_shares {
         mix(s.to_bits());
     }
     h
 }
 
-/// Sharded concurrent per-task cost memo with hit/miss telemetry.
-/// All methods take `&self`; the cache is shared freely across the
-/// parallel engine's workers (e.g. behind an `Arc`).
+/// Sharded concurrent per-task cost memo with **exact** hit/miss
+/// accounting. All methods take `&self`; the cache is shared freely
+/// across the parallel engine's workers (e.g. behind an `Arc`).
+///
+/// Exactness guarantee: `misses()` is the number of distinct keys whose
+/// cost was memoized (one miss per computed key, even under racing
+/// duplicate computations), `hits()` is every other lookup, and
+/// `hits() + misses()` is the total lookup count. All three are
+/// bit-deterministic for a deterministic candidate stream regardless of
+/// thread count or interleaving.
 #[derive(Debug)]
 pub struct CostCache {
-    shards: Vec<Mutex<HashMap<u64, TaskCost>>>, // detlint:allow(D2): keyed lookups only, never iterated
+    shards: Vec<RwLock<HashMap<u64, TaskCost>>>, // detlint:allow(D2): keyed lookups only, never iterated
     hits: AtomicUsize,
     misses: AtomicUsize,
 }
@@ -72,7 +109,7 @@ impl Default for CostCache {
 impl CostCache {
     pub fn new() -> CostCache {
         CostCache {
-            shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(), // detlint:allow(D2): keyed lookups only, never iterated
+            shards: (0..SHARDS).map(|_| RwLock::new(HashMap::new())).collect(), // detlint:allow(D2): keyed lookups only, never iterated
             hits: AtomicUsize::new(0),
             misses: AtomicUsize::new(0),
         }
@@ -80,24 +117,26 @@ impl CostCache {
 
     /// Shard for a key: top `log2(SHARDS)` bits of the (well-mixed)
     /// FNV hash, so `SHARDS` is the single tuning knob.
-    fn shard(&self, key: u64) -> &Mutex<HashMap<u64, TaskCost>> { // detlint:allow(D2): keyed lookups only, never iterated
+    fn shard(&self, key: u64) -> &RwLock<HashMap<u64, TaskCost>> { // detlint:allow(D2): keyed lookups only, never iterated
         const _: () = assert!(SHARDS.is_power_of_two());
         &self.shards[(key >> (64 - SHARDS.trailing_zeros())) as usize]
     }
 
-    /// Per-task lookups that found a memoized result.
+    /// Per-task lookups that reused a memoized result (including a
+    /// lookup that lost an insert race and adopted the winner's value).
     pub fn hits(&self) -> usize {
         self.hits.load(Ordering::Relaxed)
     }
 
-    /// Per-task lookups that had to run the cost model.
+    /// Distinct keys whose cost was computed and memoized — exactly one
+    /// miss per key, no matter how many workers raced to compute it.
     pub fn misses(&self) -> usize {
         self.misses.load(Ordering::Relaxed)
     }
 
     /// Entries currently memoized.
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -107,13 +146,17 @@ impl CostCache {
     /// Drop all entries (topology changed — results are stale).
     pub fn clear(&self) {
         for s in &self.shards {
-            s.lock().unwrap().clear();
+            s.write().unwrap().clear();
         }
     }
 
     /// Look up the cost for `(task_idx, tp)`, computing via `f` on miss.
-    /// `f` runs outside the shard lock; concurrent misses on the same
-    /// key may both compute (idempotent), last insert wins.
+    ///
+    /// Warm path: a read lock and a hit. Cold path: `f` runs outside
+    /// any lock (the cost model is pure, so racing duplicates are
+    /// idempotent), then the insert is double-checked under the write
+    /// lock — the first inserter records the miss, a loser discards its
+    /// duplicate, adopts the memoized value, and records a hit.
     pub fn get_or(
         &self,
         task_idx: usize,
@@ -121,13 +164,19 @@ impl CostCache {
         f: impl FnOnce() -> TaskCost,
     ) -> TaskCost {
         let key = task_plan_key(task_idx, tp);
-        if let Some(&c) = self.shard(key).lock().unwrap().get(&key) {
+        let shard = self.shard(key);
+        if let Some(&c) = shard.read().unwrap().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return c;
         }
-        self.misses.fetch_add(1, Ordering::Relaxed);
         let c = f();
-        self.shard(key).lock().unwrap().insert(key, c);
+        let mut w = shard.write().unwrap();
+        if let Some(&winner) = w.get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return winner;
+        }
+        w.insert(key, c);
+        self.misses.fetch_add(1, Ordering::Relaxed);
         c
     }
 }
@@ -152,6 +201,83 @@ mod tests {
         let mut c = plan(vec![0, 1, 2, 3]);
         c.layer_split = vec![5, 3];
         assert_ne!(task_plan_key(0, &a), task_plan_key(0, &c));
+    }
+
+    /// The untagged, unprefixed legacy scheme this PR replaces: fields
+    /// mixed back-to-back, so a boundary shift between two
+    /// variable-length fields produced the identical byte stream.
+    fn legacy_key(task_idx: usize, tp: &TaskPlan) -> u64 {
+        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01B3;
+        let mut h = OFFSET;
+        let mut mix = |x: u64| {
+            for b in x.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(PRIME);
+            }
+        };
+        mix(task_idx as u64);
+        mix(tp.strategy.dp as u64);
+        mix(tp.strategy.pp as u64);
+        mix(tp.strategy.tp as u64);
+        for &l in &tp.layer_split {
+            mix(l as u64);
+        }
+        for &d in &tp.assignment {
+            mix(d as u64);
+        }
+        for &s in &tp.dp_shares {
+            mix(s.to_bits());
+        }
+        h
+    }
+
+    /// Regression pin for the boundary-shift collision: the element
+    /// `3` migrates between `layer_split` and `assignment` while the
+    /// concatenated streams stay byte-identical. The legacy scheme
+    /// collides (same memo slot, wrong cached cost); the tagged,
+    /// length-prefixed scheme must not.
+    #[test]
+    fn boundary_shift_pair_no_longer_collides() {
+        let strategy = ParallelStrategy::new(1, 2, 2);
+        let a = TaskPlan {
+            strategy,
+            layer_split: vec![5, 3],
+            assignment: vec![7],
+            dp_shares: vec![1.0],
+        };
+        let b = TaskPlan {
+            strategy,
+            layer_split: vec![5],
+            assignment: vec![3, 7],
+            dp_shares: vec![1.0],
+        };
+        assert_ne!(a, b, "the two plans are genuinely distinct");
+        assert_eq!(
+            legacy_key(0, &a),
+            legacy_key(0, &b),
+            "the legacy scheme collides on the boundary-shift pair"
+        );
+        assert_ne!(
+            task_plan_key(0, &a),
+            task_plan_key(0, &b),
+            "tags + length prefixes must separate the pair"
+        );
+        // The same shift across the assignment/dp_shares boundary.
+        let c = TaskPlan {
+            strategy,
+            layer_split: vec![8],
+            assignment: vec![2, 1.0f64.to_bits() as usize],
+            dp_shares: vec![],
+        };
+        let d = TaskPlan {
+            strategy,
+            layer_split: vec![8],
+            assignment: vec![2],
+            dp_shares: vec![1.0],
+        };
+        assert_eq!(legacy_key(0, &c), legacy_key(0, &d));
+        assert_ne!(task_plan_key(0, &c), task_plan_key(0, &d));
     }
 
     #[test]
@@ -194,11 +320,47 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
-        // 32 distinct (task, plan) keys exist; every lookup is counted.
-        // (Concurrent misses on the same key are legal, so no tight hit
-        // floor — only the totals and the entry count are exact.)
+        // 32 distinct (task, plan) keys, each looked up by 4 threads.
+        // Accounting is exact under any interleaving: one miss per
+        // distinct key, every other lookup a hit.
         assert_eq!(cache.len(), 32);
-        assert_eq!(cache.hits() + cache.misses(), 4 * 32);
-        assert!(cache.misses() >= 32, "misses {}", cache.misses());
+        assert_eq!(cache.misses(), 32);
+        assert_eq!(cache.hits(), 4 * 32 - 32);
+    }
+
+    /// All threads race on a *single* key through a barrier: no matter
+    /// who wins the insert, exactly one miss is recorded and every
+    /// other lookup (including racing losers that computed a duplicate)
+    /// counts as a hit.
+    #[test]
+    fn racing_duplicate_computation_is_one_miss() {
+        use std::sync::{Arc, Barrier};
+        const N: usize = 8;
+        let cache = Arc::new(CostCache::new());
+        let gate = Arc::new(Barrier::new(N));
+        let computed = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..N {
+            let cache = Arc::clone(&cache);
+            let gate = Arc::clone(&gate);
+            let computed = Arc::clone(&computed);
+            handles.push(std::thread::spawn(move || {
+                let p = plan(vec![0, 1, 2, 3]);
+                gate.wait();
+                cache.get_or(0, &p, || {
+                    computed.fetch_add(1, Ordering::Relaxed);
+                    TaskCost { total: 7.0, ..TaskCost::default() }
+                })
+            }));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap().total, 7.0);
+        }
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.misses(), 1, "one miss per computed key");
+        assert_eq!(cache.hits(), N - 1);
+        // Duplicate computations may have happened — that is legal —
+        // but they never inflate the miss count.
+        assert!(computed.load(Ordering::Relaxed) >= 1);
     }
 }

@@ -1,0 +1,93 @@
+//! Dirty-task footprints for incremental plan evaluation.
+//!
+//! EA perturbations ([`crate::scheduler::ea`]) rewrite the `TaskPlan`s
+//! of a *known* subset of tasks: a strategy or assignment mutation
+//! touches one task, a device swap touches exactly the tasks whose
+//! assignment contains either swapped device. A [`DirtySet`] carries
+//! that footprint from the mutation site to
+//! [`super::CostModel::plan_cost_delta`], which re-prices only the
+//! dirty tasks and reuses the caller's memoized per-task costs for the
+//! rest. Because [`super::task_cost::task_cost`] is a pure function of
+//! `(task, TaskPlan)`, reusing a clean task's cost is bit-identical to
+//! recomputing it — the full re-price is the delta path's oracle
+//! (`tests/prop_delta_eval.rs` pins this).
+//!
+//! The only soundness requirement is that the set is a **superset** of
+//! the tasks whose plans differ from the baseline; over-approximating
+//! (e.g. a task swapped twice back to its original plan) costs a
+//! redundant cache lookup, never correctness.
+
+/// Sorted, deduplicated set of task indices whose `TaskPlan` may
+/// differ from an evaluation baseline. Task counts are tiny (≤ 6 for
+/// every workflow shape), so a sorted `Vec` beats any hash structure
+/// and keeps iteration order deterministic.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct DirtySet {
+    tasks: Vec<usize>,
+}
+
+impl DirtySet {
+    /// Empty footprint (a no-op mutation).
+    pub fn new() -> DirtySet {
+        DirtySet::default()
+    }
+
+    /// Footprint of a single-task mutation.
+    pub fn single(t: usize) -> DirtySet {
+        DirtySet { tasks: vec![t] }
+    }
+
+    /// Mark task `t` dirty.
+    pub fn insert(&mut self, t: usize) {
+        if let Err(pos) = self.tasks.binary_search(&t) {
+            self.tasks.insert(pos, t);
+        }
+    }
+
+    /// Merge another footprint into this one (set union).
+    pub fn union_with(&mut self, other: &DirtySet) {
+        for &t in &other.tasks {
+            self.insert(t);
+        }
+    }
+
+    /// Whether task `t` must be re-priced.
+    pub fn contains(&self, t: usize) -> bool {
+        self.tasks.binary_search(&t).is_ok()
+    }
+
+    /// Number of dirty tasks.
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Dirty task indices in ascending order.
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.tasks.iter().copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_union_sorted_dedup() {
+        let mut a = DirtySet::new();
+        assert!(a.is_empty());
+        a.insert(3);
+        a.insert(1);
+        a.insert(3);
+        assert_eq!(a.iter().collect::<Vec<_>>(), vec![1, 3]);
+        let mut b = DirtySet::single(2);
+        b.union_with(&a);
+        assert_eq!(b.iter().collect::<Vec<_>>(), vec![1, 2, 3]);
+        assert_eq!(b.len(), 3);
+        assert!(b.contains(2));
+        assert!(!b.contains(0));
+    }
+}

@@ -145,8 +145,104 @@ impl<'a> CostModel<'a> {
         self.aggregate(plan, per_task)
     }
 
+    /// [`Self::plan_cost_cached`] restricted to a dirty-task footprint:
+    /// tasks in `dirty` are re-priced through the cache, every other
+    /// task reuses its cost from `base` (the per-task costs of a
+    /// previously priced plan that agrees with `plan` outside `dirty`).
+    ///
+    /// Because [`task_cost`] is pure in `(task, TaskPlan)`, the result
+    /// is **bit-identical** to a full [`Self::plan_cost_cached`] of
+    /// `plan` whenever `dirty` is a superset of the tasks whose
+    /// `TaskPlan` differs from the baseline — the soundness contract
+    /// every footprint producer in [`crate::scheduler::ea`] upholds and
+    /// `tests/prop_delta_eval.rs` pins against the full-re-price oracle.
+    pub fn plan_cost_delta(
+        &self,
+        plan: &ExecutionPlan,
+        base: &[TaskCost],
+        dirty: &super::dirty::DirtySet,
+        cache: &super::cache::CostCache,
+    ) -> PlanCost {
+        let mut per_task = Vec::new();
+        self.price_delta_into(plan, base, dirty, cache, &mut per_task);
+        self.aggregate(plan, per_task)
+    }
+
+    /// Hot-path form of [`Self::plan_cost_cached`]: fills `out` with the
+    /// per-task costs (reusing its allocation — the schedulers' batched
+    /// scoring loop passes one scratch buffer for a whole batch) and
+    /// returns the end-to-end iteration time.
+    pub fn price_cached_into(
+        &self,
+        plan: &ExecutionPlan,
+        cache: &super::cache::CostCache,
+        out: &mut Vec<TaskCost>,
+    ) -> f64 {
+        out.clear();
+        out.extend(
+            self.wf
+                .tasks
+                .iter()
+                .zip(&plan.task_plans)
+                .enumerate()
+                .map(|(t, (task, tp))| {
+                    cache.get_or(t, tp, || task_cost(self.topo, task, self.job, tp))
+                }),
+        );
+        self.iter_time_of(plan, out, self.reshard_cost(plan), self.sync_cost(plan))
+    }
+
+    /// Hot-path form of [`Self::plan_cost_delta`]: fills `out` (reusing
+    /// its allocation) and returns the end-to-end iteration time. The
+    /// number of per-task cost resolutions routed through the cache is
+    /// exactly `dirty.len()`.
+    pub fn price_delta_into(
+        &self,
+        plan: &ExecutionPlan,
+        base: &[TaskCost],
+        dirty: &super::dirty::DirtySet,
+        cache: &super::cache::CostCache,
+        out: &mut Vec<TaskCost>,
+    ) -> f64 {
+        debug_assert_eq!(base.len(), plan.task_plans.len());
+        debug_assert!(dirty.iter().all(|t| t < plan.task_plans.len()));
+        out.clear();
+        out.extend(
+            self.wf
+                .tasks
+                .iter()
+                .zip(&plan.task_plans)
+                .enumerate()
+                .map(|(t, (task, tp))| {
+                    if dirty.contains(t) {
+                        cache.get_or(t, tp, || task_cost(self.topo, task, self.job, tp))
+                    } else {
+                        base[t]
+                    }
+                }),
+        );
+        self.iter_time_of(plan, out, self.reshard_cost(plan), self.sync_cost(plan))
+    }
+
     /// Combine per-task Ψ costs into the end-to-end iteration time.
     fn aggregate(&self, plan: &ExecutionPlan, per_task: Vec<TaskCost>) -> PlanCost {
+        let reshard = self.reshard_cost(plan);
+        let sync = self.sync_cost(plan);
+        let iter_time = self.iter_time_of(plan, &per_task, reshard, sync);
+        PlanCost { per_task, reshard, sync, iter_time }
+    }
+
+    /// The per-algorithm/mode iteration-time formula — a pure function
+    /// of the plan's task plans, the per-task Ψ costs and the
+    /// reshard/sync terms, so the delta path reuses it verbatim (bit
+    /// identity with the full path follows from purity).
+    fn iter_time_of(
+        &self,
+        plan: &ExecutionPlan,
+        per_task: &[TaskCost],
+        reshard: f64,
+        sync: f64,
+    ) -> f64 {
         let c = |id: RlTaskId| -> f64 {
             self.wf
                 .task_index(id)
@@ -154,10 +250,7 @@ impl<'a> CostModel<'a> {
                 .unwrap_or(0.0)
         };
 
-        let reshard = self.reshard_cost(plan);
-        let sync = self.sync_cost(plan);
-
-        let iter_time = match (self.wf.algo, self.wf.mode) {
+        match (self.wf.algo, self.wf.mode) {
             (Algo::Ppo, Mode::Sync) => {
                 c(RlTaskId::ActorGen)
                     + self.phi(&[
@@ -204,9 +297,7 @@ impl<'a> CostModel<'a> {
                     self.job.rollout_queue_cap,
                 ) + overlap * gen.min(train_side)
             }
-        };
-
-        PlanCost { per_task, reshard, sync, iter_time }
+        }
     }
 
     /// Training-side cost per step: the non-generation inference tasks
@@ -533,5 +624,37 @@ mod tests {
         assert_eq!(b, c);
         assert_eq!(cache.misses(), wf.n_tasks());
         assert_eq!(cache.hits(), wf.n_tasks());
+    }
+
+    #[test]
+    fn delta_matches_full_after_mutation() {
+        use super::super::dirty::DirtySet;
+        let topo = build_testbed(Scenario::MultiCountry, &TestbedSpec::default());
+        let job = JobConfig::default();
+        let wf = RlWorkflow::new(Algo::Grpo, Mode::Sync, ModelSpec::qwen_4b());
+        let cm = CostModel::new(&topo, &wf, &job);
+        let plan = plan_over(&wf, 64, 16);
+        let cache = super::super::cache::CostCache::new();
+        let base = cm.plan_cost_cached(&plan, &cache);
+        assert_eq!(cache.misses(), wf.n_tasks());
+
+        // Perturb one task's assignment; only that task is dirty.
+        let mut mutant = plan.clone();
+        mutant.task_plans[1].assignment.swap(0, 5);
+        let delta = cm.plan_cost_delta(&mutant, &base.per_task, &DirtySet::single(1), &cache);
+        // Bit-identical to pricing the mutant from scratch (PartialEq
+        // on PlanCost compares every f64 exactly).
+        assert_eq!(delta, cm.plan_cost(&mutant));
+        // Exactly one new per-task cost was computed.
+        assert_eq!(cache.misses(), wf.n_tasks() + 1);
+
+        // The scratch forms agree with the owning forms bit-for-bit.
+        let mut scratch = Vec::new();
+        let it_full = cm.price_cached_into(&mutant, &cache, &mut scratch);
+        assert_eq!(it_full.to_bits(), cm.plan_cost(&mutant).iter_time.to_bits());
+        assert_eq!(scratch, cm.plan_cost(&mutant).per_task);
+        let it_delta =
+            cm.price_delta_into(&mutant, &base.per_task, &DirtySet::single(1), &cache, &mut scratch);
+        assert_eq!(it_delta.to_bits(), it_full.to_bits());
     }
 }

@@ -12,11 +12,13 @@ pub mod compute;
 pub mod task_cost;
 pub mod e2e;
 pub mod cache;
+pub mod dirty;
 pub mod migration;
 pub mod recovery;
 
 pub use cache::{task_plan_key, CostCache};
 pub use comm::ring_minmax;
+pub use dirty::DirtySet;
 pub use e2e::{bounded_staleness_period, CostModel, PlanCost, StreamCosts};
 pub use migration::{MigrationModel, PrevTask};
 pub use recovery::{RecoveryModel, RecoveryState};

@@ -120,9 +120,12 @@ pub struct AnytimeStep {
     /// Evaluations spent on the post-event hypothesis incumbent this
     /// step (0 unless a noticed machine loss is pending).
     pub hypothesis_evals: usize,
-    /// Cost-cache hits for the step (exact at 1 worker thread).
+    /// Cost-cache hits for the step (exact at any worker-thread count:
+    /// the sharded cache charges a racing duplicate computation as one
+    /// miss plus hits for the losers).
     pub cache_hits: usize,
-    /// Cost-cache misses for the step (exact at 1 worker thread).
+    /// Cost-cache misses for the step — one per distinct key priced,
+    /// at any thread count.
     pub cache_misses: usize,
     /// Primary incumbent objective after the step: `iter_time` +
     /// amortized migration from the running plan (∞ when no incumbent

@@ -95,10 +95,13 @@ pub struct ReplanOutcome {
     pub evals: usize,
     /// Whether the warm-started path produced the plan (vs cold search).
     pub warm: bool,
-    /// Per-task cost-cache hits during the episode (approximate when
-    /// `ReplanConfig::threads` > 1 — racing workers may double-compute).
+    /// Per-task cost-cache hits during the episode. Exact and
+    /// bit-deterministic at any `ReplanConfig::threads`: a racing
+    /// duplicate computation still counts one miss, so
+    /// `hits + misses` equals the episode's cache lookups.
     pub cache_hits: usize,
-    /// Per-task cost-cache misses during the episode.
+    /// Per-task cost-cache misses during the episode — one per distinct
+    /// key priced, at any thread count.
     pub cache_misses: usize,
 }
 

@@ -56,7 +56,7 @@ pub const RULES: &[(Rule, &str)] = &[
     (Rule::D2, "no HashMap/HashSet — hash iteration order can feed ordered logic; use BTreeMap/BTreeSet or sort-after-collect"),
     (Rule::D3, "no NaN-unsafe float ordering (.partial_cmp(..).unwrap()); use util::ford::cmp_f64"),
     (Rule::D4, "no ambient nondeterminism (available_parallelism, thread::current, RandomState, env reads) outside engine::resolve_threads / testing::fixtures"),
-    (Rule::D5, "audited concurrency only: Ordering::Relaxed and Mutex lock sites must match the declared inventory; no undeclared lock nesting"),
+    (Rule::D5, "audited concurrency only: Ordering::Relaxed, Mutex lock sites and RwLock types must match the declared inventory; no undeclared lock nesting"),
     (Rule::A0, "allow-directive hygiene: every detlint:allow must be well-formed and suppress a real finding"),
 ];
 
@@ -93,12 +93,18 @@ const D5_RELAXED: &[&str] = &[
     "src/log.rs",
 ];
 
-/// D5 inventory: files allowed to take `Mutex` locks — the sharded
-/// cost cache and the threadpool's queue/slots/receiver.
-const D5_LOCK: &[&str] = &[
-    "src/costmodel/cache.rs",
-    "src/util/threadpool.rs",
-];
+/// D5 inventory: files allowed to take `Mutex` locks — the
+/// threadpool's queue/slots/receiver. (The cost cache moved to sharded
+/// `RwLock`s; see [`D5_RWLOCK`].)
+const D5_LOCK: &[&str] = &["src/util/threadpool.rs"];
+
+/// D5 inventory: files allowed to mention the `RwLock` type — the
+/// sharded cost cache, whose read-mostly shards take a shared lock on
+/// the warm path and an exclusive lock only to insert. Flagging the
+/// type (rather than `.read()`/`.write()` calls, which collide with the
+/// io traits) makes any new reader-writer lock a declared, reviewed
+/// site.
+const D5_RWLOCK: &[&str] = &["src/costmodel/cache.rs"];
 
 /// D5 lock-order table: files whose statements may acquire **two**
 /// locks, pinned in acquisition order. The audited inventory currently
@@ -250,6 +256,13 @@ pub fn check(path: &str, lx: &Lexed) -> Vec<Finding> {
                 "`Ordering::Relaxed` outside the audited atomics inventory (docs/ARCHITECTURE.md)".to_string(),
             );
         }
+        if is_ident(t, "RwLock") && !path_in(path, D5_RWLOCK) {
+            finding(
+                Rule::D5,
+                t.line,
+                "`RwLock` outside the audited reader-writer inventory (docs/ARCHITECTURE.md)".to_string(),
+            );
+        }
         if is_ident(t, "lock")
             && i > 0
             && toks[i - 1].text == "."
@@ -307,11 +320,18 @@ mod tests {
     #[test]
     fn d5_nested_lock_in_one_statement() {
         let ok = "let a = m1.lock().unwrap(); let b = m2.lock().unwrap();";
-        assert!(run("src/costmodel/cache.rs", ok).is_empty());
+        assert!(run("src/util/threadpool.rs", ok).is_empty());
         let nested = "let v = m1.lock().unwrap().merge(m2.lock().unwrap());";
-        let f = run("src/costmodel/cache.rs", nested);
+        let f = run("src/util/threadpool.rs", nested);
         assert_eq!(f.len(), 1, "{f:?}");
         assert!(f[0].msg.contains("nested lock"));
+    }
+
+    #[test]
+    fn d5_rwlock_type_outside_inventory() {
+        let src = "use std::sync::RwLock;\nlet s: RwLock<u32> = RwLock::new(0);";
+        assert_eq!(run("src/scheduler/x.rs", src).len(), 3);
+        assert!(run("src/costmodel/cache.rs", src).is_empty());
     }
 
     #[test]

@@ -94,6 +94,7 @@ fn help() -> String {
             OptSpec { name: "steps", help: "train: number of GRPO steps", default: Some("100") },
             OptSpec { name: "artifacts", help: "artifacts directory", default: Some("artifacts") },
             OptSpec { name: "no-balance", help: "disable load balancing (flag)", default: None },
+            OptSpec { name: "full-eval", help: "schedule: disable delta-eval, re-price every task per candidate (flag)", default: None },
             OptSpec { name: "hard", help: "train: MATH-like tasks (flag)", default: None },
             OptSpec { name: "fix-allow", help: "lint: strip unused detlint:allow directives (flag)", default: None },
             OptSpec { name: "rules", help: "lint: print the rule registry and exit (flag)", default: None },
@@ -119,15 +120,25 @@ fn parse_env(args: &Args) -> Result<(RlWorkflow, hetrl::topology::DeviceTopology
     Ok((RlWorkflow::new(algo, mode, model), topo, JobConfig::default()))
 }
 
-fn make_scheduler(name: &str, seed: u64, threads: usize) -> Result<Box<dyn Scheduler>, String> {
+fn make_scheduler(
+    name: &str,
+    seed: u64,
+    threads: usize,
+    full_eval: bool,
+) -> Result<Box<dyn Scheduler>, String> {
     Ok(match name {
-        "sha-ea" => Box::new(ShaEaScheduler::with_threads(seed, threads)),
+        "sha-ea" => {
+            let mut s = ShaEaScheduler::with_threads(seed, threads);
+            s.cfg.ea.delta_eval = !full_eval;
+            Box::new(s)
+        }
         "ilp" => Box::new(IlpScheduler::new()),
         "verl" => Box::new(VerlScheduler::new(seed)),
         "streamrl" => Box::new(StreamRlScheduler::new(seed)),
         "deap" => {
             let mut s = PureEaScheduler::new(seed);
             s.threads = threads;
+            s.cfg.delta_eval = !full_eval;
             Box::new(s)
         }
         "random" => Box::new(RandomScheduler::new(seed)),
@@ -153,7 +164,9 @@ fn cmd_schedule(args: &Args, also_simulate: bool) -> i32 {
     let seed = args.get_u64("seed", 0).unwrap_or(0);
     let budget = args.get_usize("budget", 600).unwrap_or(600);
     let threads = args.get_usize("threads", 0).unwrap_or(0);
-    let mut sched = match make_scheduler(&args.get_or("scheduler", "sha-ea"), seed, threads) {
+    let full_eval = args.flag("full-eval");
+    let mut sched =
+        match make_scheduler(&args.get_or("scheduler", "sha-ea"), seed, threads, full_eval) {
         Ok(s) => s,
         Err(e) => {
             eprintln!("{e}");
@@ -178,13 +191,15 @@ fn cmd_schedule(args: &Args, also_simulate: bool) -> i32 {
     }
     let lookups = out.cache_hits + out.cache_misses;
     println!(
-        "search: {} evals in {} ({} cache hits / {} lookups) -> predicted iteration {}",
+        "search: {} evals in {} ({} cache hits / {} lookups, {} task pricings) -> predicted iteration {}",
         out.evals,
         fmt_secs(out.wall),
         out.cache_hits,
         lookups,
+        out.task_pricings,
         fmt_secs(out.cost)
     );
+    println!("plan fingerprint: {:016x}", plan.fingerprint());
     print!("{}", plan.describe(&wf, &topo));
     let cm = CostModel::new(&topo, &wf, &job);
     let cost = cm.plan_cost(&plan);

@@ -252,6 +252,49 @@ impl ExecutionPlan {
         Ok(())
     }
 
+    /// Order-sensitive FNV-1a digest over every field of the plan:
+    /// groupings, then each task's strategy, layer split, device
+    /// assignment, and DP shares (as IEEE-754 bits). Each list is
+    /// length-prefixed and each field domain-tagged, so two plans share
+    /// a fingerprint iff they are structurally identical. Used by
+    /// `hetrl schedule` (and the CI delta-vs-full smoke that diffs its
+    /// output) to compare plans across process runs.
+    pub fn fingerprint(&self) -> u64 {
+        struct Fnv(u64);
+        impl Fnv {
+            fn mix(&mut self, v: u64) {
+                self.0 ^= v;
+                self.0 = self.0.wrapping_mul(0x0000_0100_0000_01B3);
+            }
+            fn list(&mut self, tag: u8, items: impl ExactSizeIterator<Item = u64>) {
+                self.mix(tag as u64);
+                self.mix(items.len() as u64);
+                for v in items {
+                    self.mix(v);
+                }
+            }
+        }
+        let mut f = Fnv(0xcbf2_9ce4_8422_2325);
+        f.mix(0xB0);
+        f.mix(self.task_groups.len() as u64);
+        for tg in &self.task_groups {
+            f.list(0xB1, tg.iter().map(|&t| t as u64));
+        }
+        for gg in &self.gpu_groups {
+            f.list(0xB2, gg.iter().map(|&d| d as u64));
+        }
+        for tp in &self.task_plans {
+            f.mix(0xB3);
+            f.mix(tp.strategy.dp as u64);
+            f.mix(tp.strategy.pp as u64);
+            f.mix(tp.strategy.tp as u64);
+            f.list(0xB4, tp.layer_split.iter().map(|&x| x as u64));
+            f.list(0xB5, tp.assignment.iter().map(|&d| d as u64));
+            f.list(0xB6, tp.dp_shares.iter().map(|s| s.to_bits()));
+        }
+        f.0
+    }
+
     /// Human-readable plan dump.
     pub fn describe(&self, wf: &RlWorkflow, topo: &DeviceTopology) -> String {
         let mut s = String::new();
@@ -324,6 +367,19 @@ mod tests {
         let (wf, topo, job) = setup();
         let plan = simple_plan(&wf, &topo);
         plan.validate(&wf, &topo, &job).unwrap();
+    }
+
+    #[test]
+    fn fingerprint_tracks_structural_identity() {
+        let (wf, topo, _) = setup();
+        let plan = simple_plan(&wf, &topo);
+        assert_eq!(plan.fingerprint(), plan.clone().fingerprint());
+        let mut swapped = plan.clone();
+        swapped.task_plans[0].assignment.swap(0, 1);
+        assert_ne!(plan.fingerprint(), swapped.fingerprint());
+        let mut reshared = plan.clone();
+        reshared.task_plans[1].dp_shares = vec![0.75, 0.25];
+        assert_ne!(plan.fingerprint(), reshared.fingerprint());
     }
 
     #[test]

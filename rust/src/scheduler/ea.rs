@@ -11,11 +11,28 @@
 //!   maximizing machine/zone/region locality; the improved *phenotype*
 //!   is evaluated but "not mapped back to the genotype", preserving
 //!   population diversity (Hinton & Nowlan 1987; Baldwin 1896).
+//!
+//! # Delta evaluation
+//!
+//! Every mutation operator reports the **dirty footprint** of tasks
+//! whose `TaskPlan` it rewrote (a single task for strategy/assignment
+//! mutations, [`swap_footprint`] for device swaps), and the local
+//! search reports the footprint of its accepted swap sequence. Each
+//! genome stores its phenotype's per-task costs as a baseline, so an
+//! offspring's phenotype can be priced incrementally against its
+//! parent's phenotype via [`EvalCtx::eval_delta`]: the child differs
+//! from the parent phenotype only on `parent-local-search ∪ mutation ∪
+//! child-local-search`. The cost model is pure per task, so the delta
+//! path is bit-identical to a full re-price (`tests/prop_delta_eval.rs`
+//! pins this against the oracle); it is on by default
+//! ([`EaConfig::delta_eval`]) and only changes *how many tasks are
+//! priced*, never which candidates are generated or what they score.
 
 use super::levels::{
     assemble, assign_devices, default_task_plans, strategy_feasible, TaskGrouping,
 };
 use super::{Budget, EvalCtx, ScheduleOutcome, Scheduler};
+use crate::costmodel::{DirtySet, TaskCost};
 use crate::plan::parallel::uniform_layer_split;
 use crate::plan::{ExecutionPlan, ParallelStrategy};
 use crate::topology::DeviceTopology;
@@ -33,6 +50,17 @@ pub struct EaConfig {
     pub swap_passes: usize,
     /// Disable the paper-specific operators (the DEAP-like baseline).
     pub vanilla: bool,
+    /// Price offspring incrementally against their parent's phenotype
+    /// baseline (bit-identical to the full path; see the module docs).
+    /// On by default; `hetrl schedule --full-eval` turns it off for
+    /// consistency smokes.
+    pub delta_eval: bool,
+    /// Offspring generated and scored per batch in [`EaArm::run`]:
+    /// parents are drawn from the population snapshot at batch start,
+    /// then the whole batch is priced back-to-back (sharing the
+    /// evaluation context's scratch buffer) and inserted in batch
+    /// order — deterministic at any thread count.
+    pub score_batch: usize,
 }
 
 impl Default for EaConfig {
@@ -43,8 +71,47 @@ impl Default for EaConfig {
             swap_samples: 160,
             swap_passes: 2,
             vanilla: false,
+            delta_eval: true,
+            score_batch: 8,
         }
     }
+}
+
+/// Delta-eval baseline of a genome: its *phenotype*'s per-task costs
+/// plus the local-search footprint separating that phenotype from the
+/// stored genotype. `None` when the phenotype failed validation (there
+/// is nothing sound to delta against).
+struct Baseline {
+    per_task: Vec<TaskCost>,
+    ls_dirty: DirtySet,
+}
+
+/// One population entry: the genotype (Baldwinian — the local-search
+/// improvement is *not* written back), its phenotype fitness, and the
+/// delta-eval baseline.
+struct Genome {
+    genotype: ExecutionPlan,
+    cost: f64,
+    base: Option<Baseline>,
+}
+
+/// An offspring awaiting scoring: produced by [`EaArm::spawn_candidate`]
+/// during the generation half of a batch, priced in the scoring half.
+struct Candidate {
+    genotype: ExecutionPlan,
+    phenotype: ExecutionPlan,
+    /// Population index of the parent whose baseline prices this
+    /// candidate incrementally; `None` → full evaluation (delta
+    /// disabled, or the parent has no baseline). Valid for the whole
+    /// batch because insertions are deferred to the batch boundary.
+    parent: Option<usize>,
+    /// Dirty footprint of `phenotype` vs the parent's *phenotype*:
+    /// parent local search ∪ mutation ∪ child local search.
+    dirty: DirtySet,
+    /// Footprint of `phenotype` vs `genotype` (this candidate's own
+    /// local search) — stored as the baseline if it joins the
+    /// population.
+    ls_dirty: DirtySet,
 }
 
 /// EA population for one (task grouping, GPU grouping) arm.
@@ -52,7 +119,7 @@ pub struct EaArm {
     pub grouping: TaskGrouping,
     pub sizes: Vec<usize>,
     cfg: EaConfig,
-    population: Vec<(ExecutionPlan, f64)>,
+    population: Vec<Genome>,
     rng: Rng,
     /// Best cost this arm has produced (for SHA's BestHalf).
     pub best: f64,
@@ -124,11 +191,30 @@ impl EaArm {
                 }
                 continue;
             }
-            // offspring by mutation
-            let parent = self.rng.below(self.population.len());
-            let mut child = self.population[parent].0.clone();
-            self.mutate(ctx, &mut child);
-            spent += self.offer(ctx, child);
+            // Offspring by mutation, in scoring batches: parents are
+            // drawn from the population snapshot at batch start, all
+            // candidates are generated (mutation + local search, pure
+            // RNG work), then priced back-to-back — the tight pricing
+            // loop reuses the context's scratch buffer — and finally
+            // inserted in batch order. Deferring insertion keeps every
+            // candidate's parent index (and its delta baseline) valid
+            // through the whole batch.
+            let batch = self.cfg.score_batch.max(1).min(budget_evals - spent);
+            let mut cands = Vec::with_capacity(batch);
+            for _ in 0..batch {
+                cands.push(self.spawn_candidate(ctx));
+            }
+            let mut scored = Vec::with_capacity(cands.len());
+            for cand in cands {
+                if ctx.exhausted() {
+                    break;
+                }
+                scored.push(self.score(ctx, cand));
+                spent += 1;
+            }
+            for g in scored {
+                self.insert_genome(g);
+            }
         }
         spent
     }
@@ -146,32 +232,94 @@ impl EaArm {
         self.population.len()
     }
 
-    /// Evaluate (with Baldwinian local search) and insert into the
-    /// population. Returns evaluations consumed.
+    /// Fully evaluate (with Baldwinian local search) and insert into
+    /// the population — the path for random inits and injected seeds,
+    /// which have no parent baseline to delta against. Returns
+    /// evaluations consumed.
     fn offer(&mut self, ctx: &mut EvalCtx<'_>, genotype: ExecutionPlan) -> usize {
-        let phenotype = if self.cfg.vanilla {
-            genotype.clone()
+        let (phenotype, ls_dirty) = if self.cfg.vanilla {
+            (genotype.clone(), DirtySet::new())
         } else {
             self.local_search(ctx.topo, &genotype)
         };
         let cost = ctx.eval(&phenotype);
         self.best = self.best.min(cost);
-        // Population stores the *genotype* with the phenotype's fitness.
+        let base = ctx.last_per_task().map(|pt| Baseline {
+            per_task: pt.to_vec(),
+            ls_dirty,
+        });
+        self.insert_genome(Genome { genotype, cost, base });
+        1
+    }
+
+    /// Generation half of a batch: draw a parent from the current
+    /// population, mutate its genotype, run the local search, and
+    /// assemble the dirty footprint of the child phenotype versus the
+    /// parent phenotype (parent local search ∪ mutation ∪ child local
+    /// search). Pure RNG + plan surgery — no evaluations are charged.
+    fn spawn_candidate(&mut self, ctx: &EvalCtx<'_>) -> Candidate {
+        let parent = self.rng.below(self.population.len());
+        let mut genotype = self.population[parent].genotype.clone();
+        let mut dirty = self.mutate(ctx, &mut genotype);
+        let (phenotype, ls_dirty) = if self.cfg.vanilla {
+            (genotype.clone(), DirtySet::new())
+        } else {
+            self.local_search(ctx.topo, &genotype)
+        };
+        dirty.union_with(&ls_dirty);
+        let parent = if self.cfg.delta_eval {
+            match &self.population[parent].base {
+                Some(b) => {
+                    dirty.union_with(&b.ls_dirty);
+                    Some(parent)
+                }
+                None => None,
+            }
+        } else {
+            None
+        };
+        Candidate { genotype, phenotype, parent, dirty, ls_dirty }
+    }
+
+    /// Scoring half of a batch: price one candidate (incrementally
+    /// against its parent's baseline when it has one, fully otherwise)
+    /// and package it as a genome with its own baseline. Exactly one
+    /// evaluation.
+    fn score(&mut self, ctx: &mut EvalCtx<'_>, cand: Candidate) -> Genome {
+        let Candidate { genotype, phenotype, parent, dirty, ls_dirty } = cand;
+        let cost = match parent {
+            Some(p) => {
+                let base = self.population[p].base.as_ref().expect("parent baseline");
+                ctx.eval_delta(&phenotype, &base.per_task, &dirty)
+            }
+            None => ctx.eval(&phenotype),
+        };
+        self.best = self.best.min(cost);
+        let base = ctx.last_per_task().map(|pt| Baseline {
+            per_task: pt.to_vec(),
+            ls_dirty,
+        });
+        Genome { genotype, cost, base }
+    }
+
+    /// Population-insertion policy: fill to capacity, then replace the
+    /// worst genome on strict improvement. The population stores the
+    /// *genotype* with the phenotype's fitness (Baldwinian).
+    fn insert_genome(&mut self, g: Genome) {
         if self.population.len() < self.cfg.population {
-            self.population.push((genotype, cost));
+            self.population.push(g);
         } else {
             let worst = self
                 .population
                 .iter()
                 .enumerate()
-                .max_by(|a, b| crate::util::ford::cmp_f64(a.1 .1, b.1 .1))
+                .max_by(|a, b| crate::util::ford::cmp_f64(a.1.cost, b.1.cost))
                 .map(|(i, _)| i)
                 .unwrap();
-            if cost < self.population[worst].1 {
-                self.population[worst] = (genotype, cost);
+            if g.cost < self.population[worst].cost {
+                self.population[worst] = g;
             }
         }
-        1
     }
 
     /// Random Level-3/4/5 initialization for this arm.
@@ -189,12 +337,16 @@ impl EaArm {
         Some(assemble(&self.grouping, groups, plans))
     }
 
-    /// Mutation operators (paper-specific + generic).
-    fn mutate(&mut self, ctx: &EvalCtx<'_>, plan: &mut ExecutionPlan) {
+    /// Mutation operators (paper-specific + generic). Returns the dirty
+    /// footprint: a superset of the tasks whose `TaskPlan` the mutation
+    /// rewrote (empty for a no-op draw).
+    fn mutate(&mut self, ctx: &EvalCtx<'_>, plan: &mut ExecutionPlan) -> DirtySet {
         let use_upgrade =
             !self.cfg.vanilla && self.rng.chance(self.cfg.upgrade_prob);
-        if use_upgrade && self.tflops_upgrade(ctx, plan) {
-            return;
+        if use_upgrade {
+            if let Some(fp) = self.tflops_upgrade(ctx, plan) {
+                return fp;
+            }
         }
         match self.rng.below(3) {
             0 => self.mutate_strategy(ctx, plan),
@@ -205,7 +357,13 @@ impl EaArm {
 
     /// Paper mutation: move a higher-TFLOPS GPU from a non-training group
     /// into a training-task group (swapping with one of its members).
-    fn tflops_upgrade(&mut self, ctx: &EvalCtx<'_>, plan: &mut ExecutionPlan) -> bool {
+    /// Returns the swap's dirty footprint, or `None` if no upgrading
+    /// swap exists (the caller falls through to the generic operators).
+    fn tflops_upgrade(
+        &mut self,
+        ctx: &EvalCtx<'_>,
+        plan: &mut ExecutionPlan,
+    ) -> Option<DirtySet> {
         let wf = ctx.wf;
         // Find training groups and non-training groups.
         let is_training_group = |gi: usize| {
@@ -218,12 +376,12 @@ impl EaArm {
         let other_groups: Vec<usize> =
             (0..plan.task_groups.len()).filter(|&g| !is_training_group(g)).collect();
         if train_groups.is_empty() || other_groups.is_empty() {
-            return false;
+            return None;
         }
         let tg = *self.rng.choice(&train_groups);
         let og = *self.rng.choice(&other_groups);
         if plan.gpu_groups[tg].is_empty() || plan.gpu_groups[og].is_empty() {
-            return false;
+            return None;
         }
         // Slowest device in the training group / fastest outside.
         let slow = *plan.gpu_groups[tg]
@@ -245,14 +403,16 @@ impl EaArm {
             })
             .unwrap();
         if ctx.topo.devices[fast].effective_flops() <= ctx.topo.devices[slow].effective_flops() {
-            return false;
+            return None;
         }
+        let fp = swap_footprint(plan, slow, fast);
         swap_devices(plan, slow, fast);
-        true
+        Some(fp)
     }
 
-    /// Re-pick the parallelization of one random task.
-    fn mutate_strategy(&mut self, ctx: &EvalCtx<'_>, plan: &mut ExecutionPlan) {
+    /// Re-pick the parallelization of one random task. Footprint: that
+    /// task (empty when no feasible alternative strategy exists).
+    fn mutate_strategy(&mut self, ctx: &EvalCtx<'_>, plan: &mut ExecutionPlan) -> DirtySet {
         let t = self.rng.below(ctx.wf.n_tasks());
         let gi = plan.group_of_task(t);
         let devs = plan.gpu_groups[gi].clone();
@@ -263,7 +423,7 @@ impl EaArm {
                 .filter(|&s| strategy_feasible(task, ctx.job, ctx.topo, &devs, s))
                 .collect();
         if strategies.is_empty() {
-            return;
+            return DirtySet::new();
         }
         let s = *self.rng.choice(&strategies);
         let ordered = ctx.topo.locality_order(&devs);
@@ -271,12 +431,18 @@ impl EaArm {
         plan.task_plans[t].layer_split = uniform_layer_split(task.model.nl, s.pp);
         plan.task_plans[t].dp_shares = vec![1.0 / s.dp as f64; s.dp];
         plan.task_plans[t].assignment = ordered[..s.degree()].to_vec();
+        DirtySet::single(t)
     }
 
     /// Swap one device between two GPU groups (keeping sizes fixed).
-    fn mutate_cross_group_swap(&mut self, _ctx: &EvalCtx<'_>, plan: &mut ExecutionPlan) {
+    /// Footprint: every task whose assignment touches either device.
+    fn mutate_cross_group_swap(
+        &mut self,
+        _ctx: &EvalCtx<'_>,
+        plan: &mut ExecutionPlan,
+    ) -> DirtySet {
         if plan.gpu_groups.len() < 2 {
-            return;
+            return DirtySet::new();
         }
         let a = self.rng.below(plan.gpu_groups.len());
         let mut b = self.rng.below(plan.gpu_groups.len());
@@ -284,16 +450,19 @@ impl EaArm {
             b = (b + 1) % plan.gpu_groups.len();
         }
         if plan.gpu_groups[a].is_empty() || plan.gpu_groups[b].is_empty() {
-            return;
+            return DirtySet::new();
         }
         let da = *self.rng.choice(&plan.gpu_groups[a]);
         let db = *self.rng.choice(&plan.gpu_groups[b]);
+        let fp = swap_footprint(plan, da, db);
         swap_devices(plan, da, db);
+        fp
     }
 
     /// Permute a task's tasklet→device map: swap two used devices, or
-    /// swap a used device for an idle one in the same group.
-    fn mutate_assignment(&mut self, _ctx: &EvalCtx<'_>, plan: &mut ExecutionPlan) {
+    /// swap a used device for an idle one in the same group. Footprint:
+    /// that task (empty when the group has no idle device to swap in).
+    fn mutate_assignment(&mut self, _ctx: &EvalCtx<'_>, plan: &mut ExecutionPlan) -> DirtySet {
         let t = self.rng.below(plan.task_plans.len());
         let gi = plan.group_of_task(t);
         let group = plan.gpu_groups[gi].clone();
@@ -309,16 +478,19 @@ impl EaArm {
                 .cloned()
                 .collect();
             if unused.is_empty() {
-                return;
+                return DirtySet::new();
             }
             let i = self.rng.below(tp.assignment.len());
             tp.assignment[i] = *self.rng.choice(&unused);
         }
+        DirtySet::single(t)
     }
 
     /// Greedy cross-group swap local search on the locality score
     /// (machine > zone > region affinity). Returns the improved
-    /// phenotype; the genotype is left untouched by the caller.
+    /// phenotype plus the dirty footprint of the accepted swap sequence
+    /// (phenotype vs input plan); the genotype is left untouched by the
+    /// caller.
     ///
     /// Perf note (§Perf L3-1): swap gains are computed *incrementally*
     /// on the group membership vectors — swapping `a∈A` with `b∈B`
@@ -326,9 +498,13 @@ impl EaArm {
     /// `Σ_{m∈A\{a}} (aff(b,m) − aff(a,m)) + Σ_{m∈B\{b}} (aff(a,m) − aff(b,m))`
     /// — and accepted swaps are recorded and applied to the plan once at
     /// the end, instead of cloning the full plan per sampled swap.
-    fn local_search(&mut self, topo: &DeviceTopology, plan: &ExecutionPlan) -> ExecutionPlan {
+    fn local_search(
+        &mut self,
+        topo: &DeviceTopology,
+        plan: &ExecutionPlan,
+    ) -> (ExecutionPlan, DirtySet) {
         if plan.gpu_groups.len() < 2 {
-            return plan.clone();
+            return (plan.clone(), DirtySet::new());
         }
         let mut groups: Vec<Vec<usize>> = plan.gpu_groups.clone();
         let mut accepted: Vec<(usize, usize)> = Vec::new();
@@ -370,13 +546,19 @@ impl EaArm {
             }
         }
         if accepted.is_empty() {
-            return plan.clone();
+            return (plan.clone(), DirtySet::new());
         }
         let mut best = plan.clone();
+        let mut dirty = DirtySet::new();
         for (a, b) in accepted {
+            // Footprint of each swap against the plan state it applies
+            // to; the union is a sound superset of every task the swap
+            // sequence touched (a task swapped back to its original
+            // plan stays marked — redundant, never wrong).
+            dirty.union_with(&swap_footprint(&best, a, b));
             swap_devices(&mut best, a, b);
         }
-        best
+        (best, dirty)
     }
 }
 
@@ -387,10 +569,26 @@ impl EaArm {
 /// warm arms and the elastic anytime background search, so both seed
 /// their populations identically for the same arm seed.
 pub fn perturbations(plan: &ExecutionPlan, count: usize, seed: u64) -> Vec<ExecutionPlan> {
+    perturbations_with_footprints(plan, count, seed)
+        .into_iter()
+        .map(|(p, _)| p)
+        .collect()
+}
+
+/// [`perturbations`] plus each mutant's dirty footprint versus the seed
+/// plan — the form the delta-eval property tests drive their seeded
+/// perturbation chains with. Identical RNG stream and mutants as
+/// [`perturbations`] for the same `(plan, count, seed)`.
+pub fn perturbations_with_footprints(
+    plan: &ExecutionPlan,
+    count: usize,
+    seed: u64,
+) -> Vec<(ExecutionPlan, DirtySet)> {
     let mut rng = Rng::new(seed ^ 0x3A57_11CE);
     let mut out = Vec::with_capacity(count);
     for _ in 0..count {
         let mut mutant = plan.clone();
+        let mut dirty = DirtySet::new();
         let all: Vec<usize> = mutant.gpu_groups.iter().flatten().copied().collect();
         if all.len() >= 2 {
             let a = all[rng.below(all.len())];
@@ -398,11 +596,29 @@ pub fn perturbations(plan: &ExecutionPlan, count: usize, seed: u64) -> Vec<Execu
             if a == b {
                 b = all[(rng.below(all.len()) + 1) % all.len()];
             }
+            dirty = swap_footprint(&mutant, a, b);
             swap_devices(&mut mutant, a, b);
         }
-        out.push(mutant);
+        out.push((mutant, dirty));
     }
     out
+}
+
+/// Tasks whose `TaskPlan` a [`swap_devices`]`(plan, a, b)` call would
+/// rewrite: exactly those whose assignment contains either device.
+/// Containment of `{a, b}` is invariant under the swap itself, so the
+/// footprint is the same computed before or after applying it.
+pub fn swap_footprint(plan: &ExecutionPlan, a: usize, b: usize) -> DirtySet {
+    let mut dirty = DirtySet::new();
+    if a == b {
+        return dirty;
+    }
+    for (t, tp) in plan.task_plans.iter().enumerate() {
+        if tp.assignment.iter().any(|&d| d == a || d == b) {
+            dirty.insert(t);
+        }
+    }
+    dirty
 }
 
 /// Swap group membership of devices `a` and `b` and rewrite all task
@@ -607,6 +823,59 @@ mod tests {
             // A device swap rearranges groups but never invents devices.
             assert_eq!(devset(m), devset(&plan));
         }
+    }
+
+    #[test]
+    fn perturbation_footprints_cover_changed_tasks() {
+        let (wf, topo, job) = setup();
+        let mut ctx = EvalCtx::new(&topo, &wf, &job, Budget::evals(20));
+        let grouping: TaskGrouping = vec![vec![0, 1], vec![2, 3]];
+        let mut arm = EaArm::new(grouping, vec![32, 32], EaConfig::default(), 23);
+        arm.run(&mut ctx, 20);
+        let plan = ctx.best_plan.clone().expect("plan");
+        let mutants = perturbations_with_footprints(&plan, 8, 5);
+        assert_eq!(
+            mutants.iter().map(|(p, _)| p.clone()).collect::<Vec<_>>(),
+            perturbations(&plan, 8, 5),
+            "footprint variant must not perturb the RNG stream"
+        );
+        for (i, (m, dirty)) in mutants.iter().enumerate() {
+            for t in 0..plan.task_plans.len() {
+                if plan.task_plans[t] != m.task_plans[t] {
+                    assert!(dirty.contains(t), "mutant {i}: task {t} changed but not dirty");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn delta_eval_matches_full_eval_bitwise() {
+        // The same arm seed with delta on vs off must walk the identical
+        // search trajectory and land on the identical best cost — delta
+        // changes how many tasks are priced, never what anything scores.
+        let (wf, topo, job) = setup();
+        let run = |delta: bool| {
+            let mut ctx = EvalCtx::new(&topo, &wf, &job, Budget::evals(140));
+            let cfg = EaConfig { delta_eval: delta, ..EaConfig::default() };
+            let grouping: TaskGrouping = vec![vec![0], vec![1, 2, 3]];
+            let mut arm = EaArm::new(grouping, vec![24, 40], cfg, 9);
+            arm.run(&mut ctx, 140);
+            let best = arm.best;
+            let out = ctx.outcome();
+            (best, out)
+        };
+        let (best_d, out_d) = run(true);
+        let (best_f, out_f) = run(false);
+        assert_eq!(best_d.to_bits(), best_f.to_bits());
+        assert_eq!(out_d.cost.to_bits(), out_f.cost.to_bits());
+        assert_eq!(out_d.plan, out_f.plan);
+        assert_eq!(out_d.evals, out_f.evals);
+        assert!(
+            out_d.task_pricings < out_f.task_pricings,
+            "delta must price strictly fewer tasks: {} vs {}",
+            out_d.task_pricings,
+            out_f.task_pricings
+        );
     }
 
     #[test]

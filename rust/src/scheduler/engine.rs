@@ -79,6 +79,11 @@ pub fn split_allowance(quota: usize, hypothesis_pending: bool) -> (usize, usize)
 pub struct WorkerOutcome {
     /// Evaluations this worker charged to the shared ledger.
     pub spent: usize,
+    /// Per-task cost resolutions this worker performed (full evals add
+    /// the task count, delta evals their footprint size); summed into
+    /// the parent in merge order, so the total is thread-count
+    /// invariant.
+    pub pricings: usize,
     /// Best objective the worker saw (including the parent incumbent's
     /// cost it started from).
     pub best_cost: f64,
@@ -93,6 +98,7 @@ impl WorkerOutcome {
     pub fn capture(w: EvalCtx<'_>) -> WorkerOutcome {
         WorkerOutcome {
             spent: w.evals,
+            pricings: w.pricings,
             best_cost: w.best_cost,
             best_plan: w.best_plan,
             trace: w.trace,
@@ -108,6 +114,7 @@ impl WorkerOutcome {
 /// hand-off below is exactly the plan of the last accepted point.
 fn merge(ctx: &mut EvalCtx<'_>, wo: WorkerOutcome) {
     ctx.evals += wo.spent;
+    ctx.pricings += wo.pricings;
     let mut improved = false;
     for tp in wo.trace {
         if tp.best_cost < ctx.best_cost {

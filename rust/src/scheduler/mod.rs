@@ -49,9 +49,25 @@
 //! [`EvalLedger`] is exhausted by eval counts alone, and `hetrl lint`
 //! rule D1 statically keeps `Instant`/`SystemTime` out of scheduler
 //! code (the ledger's stopwatch is a [`crate::util::benchkit`]
-//! telemetry type). Trace `wall`/`evals` stamps and cache hit/miss
-//! counters are telemetry and may vary across runs when threads > 1;
-//! `plan`, `cost` and `evals` in [`ScheduleOutcome`] do not.
+//! telemetry type). Trace `wall` stamps are telemetry and may vary
+//! across runs; `plan`, `cost` and `evals` in [`ScheduleOutcome`] do
+//! not — and since the cost cache moved to exact double-checked miss
+//! accounting, `cache_hits`/`cache_misses`/`task_pricings` are also
+//! bit-deterministic at any thread count (misses count distinct priced
+//! keys; the candidate stream is seed-determined).
+//!
+//! ## Incremental (delta) evaluation
+//!
+//! [`EvalCtx::eval`] prices every task of a candidate. EA perturbations
+//! touch a known footprint, so [`EvalCtx::eval_delta`] takes the
+//! baseline's per-task costs plus a [`DirtySet`] and re-prices only the
+//! dirty tasks ([`crate::costmodel::CostModel::price_delta_into`]); the
+//! cost model is pure per task, so the result is bit-identical to the
+//! full path whenever the footprint covers every task whose plan
+//! differs from the baseline. Delta evaluation is **on by default**
+//! ([`ea::EaConfig::delta_eval`]); the full re-price remains the oracle
+//! (`tests/prop_delta_eval.rs`, the ci.sh consistency smoke, and the
+//! `fig5_search_throughput` bit-identity gate).
 //!
 //! [`costmodel::CostModel`]: crate::costmodel::CostModel
 //! [`costmodel::CostCache`]: crate::costmodel::CostCache
@@ -63,7 +79,7 @@ pub mod sha;
 pub mod ilp;
 pub mod baselines;
 
-use crate::costmodel::{CostCache, CostModel};
+use crate::costmodel::{CostCache, CostModel, DirtySet, TaskCost};
 use crate::plan::ExecutionPlan;
 use crate::topology::DeviceTopology;
 use crate::util::benchkit::Stopwatch;
@@ -120,10 +136,22 @@ pub struct ScheduleOutcome {
     pub evals: usize,
     pub wall: f64,
     pub trace: Vec<TracePoint>,
-    /// Per-task cost-cache telemetry for the run (approximate under
-    /// concurrency: racing workers may double-compute a key).
+    /// Per-task cost-cache lookups that reused a memoized result.
+    /// Exact and bit-deterministic at any thread count (the cache's
+    /// double-checked insert counts one miss per distinct priced key
+    /// and every other lookup as a hit).
     pub cache_hits: usize,
+    /// Distinct per-task plans whose cost was computed (exact; see
+    /// [`Self::cache_hits`]).
     pub cache_misses: usize,
+    /// Per-task cost resolutions routed through the shared cache: the
+    /// task count for every full evaluation plus the dirty-footprint
+    /// size for every delta evaluation. This is the delta-eval
+    /// scoreboard — strictly lower than `evals × n_tasks` when the
+    /// incremental path is doing its job — and, like the cache
+    /// counters, bit-deterministic for a given seed at any thread
+    /// count.
+    pub task_pricings: usize,
 }
 
 impl ScheduleOutcome {
@@ -136,6 +164,7 @@ impl ScheduleOutcome {
             trace: Vec::new(),
             cache_hits: 0,
             cache_misses: 0,
+            task_pricings: 0,
         }
     }
 }
@@ -229,9 +258,20 @@ pub struct EvalCtx<'a> {
     pub penalty: Option<Arc<dyn Fn(&ExecutionPlan) -> f64 + Send + Sync + 'a>>,
     /// Evaluations charged through *this* context (per-worker).
     pub evals: usize,
+    /// Per-task cost resolutions performed through *this* context
+    /// (per-worker; merged into [`ScheduleOutcome::task_pricings`] at
+    /// rung barriers). A full evaluation adds the task count, a delta
+    /// evaluation adds its dirty-footprint size.
+    pub pricings: usize,
     pub best_cost: f64,
     pub best_plan: Option<ExecutionPlan>,
     pub trace: Vec<TracePoint>,
+    /// Reusable per-task cost buffer: one allocation serves a whole
+    /// batch of candidates (see `ea`'s batched scoring loop). Valid —
+    /// holding the last evaluated candidate's per-task costs — only
+    /// when `scratch_valid`.
+    scratch: Vec<TaskCost>,
+    scratch_valid: bool,
 }
 
 impl<'a> EvalCtx<'a> {
@@ -251,9 +291,12 @@ impl<'a> EvalCtx<'a> {
             cache: Arc::new(CostCache::new()),
             penalty: None,
             evals: 0,
+            pricings: 0,
             best_cost: f64::INFINITY,
             best_plan: None,
             trace: Vec::new(),
+            scratch: Vec::new(),
+            scratch_valid: false,
         }
     }
 
@@ -271,9 +314,12 @@ impl<'a> EvalCtx<'a> {
             cache: Arc::clone(&self.cache),
             penalty: self.penalty.clone(),
             evals: 0,
+            pricings: 0,
             best_cost: self.best_cost,
             best_plan: None,
             trace: Vec::new(),
+            scratch: Vec::new(),
+            scratch_valid: false,
         }
     }
 
@@ -295,14 +341,61 @@ impl<'a> EvalCtx<'a> {
 
     /// Evaluate a candidate plan: validity check + cost model (+ the
     /// optional penalty term). Returns the objective (∞ for invalid
-    /// plans). Updates this worker's incumbent and trace.
+    /// plans). Updates this worker's incumbent and trace. Prices every
+    /// task (adding the task count to [`Self::pricings`]); see
+    /// [`Self::eval_delta`] for the incremental form.
     pub fn eval(&mut self, plan: &ExecutionPlan) -> f64 {
         self.charge(1);
-        let mut cost = if plan.validate(self.wf, self.topo, self.job).is_ok() {
-            self.cm.plan_cost_cached(plan, &self.cache).iter_time
+        let cost = if plan.validate(self.wf, self.topo, self.job).is_ok() {
+            let it = self.cm.price_cached_into(plan, &self.cache, &mut self.scratch);
+            self.pricings += plan.task_plans.len();
+            self.scratch_valid = true;
+            it
         } else {
+            self.scratch_valid = false;
             f64::INFINITY
         };
+        self.finish(plan, cost)
+    }
+
+    /// Incremental evaluation: identical contract to [`Self::eval`]
+    /// (validity check, penalty, incumbent/trace update, one ledger
+    /// charge) but re-prices only the tasks in `dirty`, reusing `base`
+    /// — the per-task costs of a previously evaluated plan that agrees
+    /// with `plan` outside the footprint — for the rest. Bit-identical
+    /// to [`Self::eval`] under that soundness condition (the cost model
+    /// is pure per task); adds only `dirty.len()` to [`Self::pricings`].
+    pub fn eval_delta(
+        &mut self,
+        plan: &ExecutionPlan,
+        base: &[TaskCost],
+        dirty: &DirtySet,
+    ) -> f64 {
+        self.charge(1);
+        let cost = if plan.validate(self.wf, self.topo, self.job).is_ok() {
+            let it = self
+                .cm
+                .price_delta_into(plan, base, dirty, &self.cache, &mut self.scratch);
+            self.pricings += dirty.len();
+            self.scratch_valid = true;
+            it
+        } else {
+            self.scratch_valid = false;
+            f64::INFINITY
+        };
+        self.finish(plan, cost)
+    }
+
+    /// Per-task costs of the most recently evaluated *valid* candidate
+    /// (`None` if the last candidate failed validation). The EA stores
+    /// this as the baseline for its next delta evaluation; the borrow
+    /// ends before the next `eval*` call, which overwrites the buffer.
+    pub fn last_per_task(&self) -> Option<&[TaskCost]> {
+        self.scratch_valid.then(|| self.scratch.as_slice())
+    }
+
+    /// Shared tail of the `eval*` family: penalty, incumbent, trace.
+    fn finish(&mut self, plan: &ExecutionPlan, mut cost: f64) -> f64 {
         if cost.is_finite() {
             if let Some(penalty) = &self.penalty {
                 cost += (**penalty)(plan);
@@ -329,6 +422,7 @@ impl<'a> EvalCtx<'a> {
             trace: self.trace,
             cache_hits: self.cache.hits(),
             cache_misses: self.cache.misses(),
+            task_pricings: self.pricings,
         }
     }
 }

@@ -265,6 +265,17 @@ mod tests {
         let out = ShaEaScheduler::new(1).schedule(&topo, &wf, &job, Budget::evals(600));
         assert!(out.cache_misses > 0, "cache never consulted");
         assert!(out.cache_hits > 0, "mutated candidates should reuse task costs");
+        // Exact accounting: every pricing is either a hit or a miss.
+        assert_eq!(out.cache_hits + out.cache_misses, out.task_pricings);
+        // Delta-eval (on by default) prices strictly fewer tasks than
+        // full re-pricing every candidate would.
+        assert!(
+            out.task_pricings < out.evals * wf.n_tasks(),
+            "delta-eval inactive: {} pricings for {} evals × {} tasks",
+            out.task_pricings,
+            out.evals,
+            wf.n_tasks()
+        );
     }
 
     #[test]

@@ -66,6 +66,13 @@ fn d5_concurrency_inventory_fixture() {
     let lock = "let g = m.lock().unwrap();\n";
     assert_eq!(rules_of(&check_source("src/engine/x.rs", lock)), vec!["D5"]);
     assert!(check_source("src/util/threadpool.rs", lock).is_empty());
+    // The cost cache's Mutex entry was retired with the sharded-RwLock
+    // rewrite: a `.lock()` there is a finding again.
+    assert_eq!(rules_of(&check_source("src/costmodel/cache.rs", lock)), vec!["D5"]);
+
+    let rw = "let shard = RwLock::new(0u64);\n";
+    assert_eq!(rules_of(&check_source("src/engine/x.rs", rw)), vec!["D5"]);
+    assert!(check_source("src/costmodel/cache.rs", rw).is_empty());
 
     // Nested acquisition in one statement needs a LOCK_ORDER entry even
     // inside an inventoried file.

@@ -1,0 +1,124 @@
+//! Delta evaluation vs the full re-price oracle.
+//!
+//! Two layers of the same contract:
+//!
+//! * **scheduler level** — a SHA+EA run with `delta_eval` on produces
+//!   the bit-identical best plan / cost / eval count as the same run
+//!   with it off, at every thread count in the test matrix, while
+//!   performing strictly fewer per-task cost resolutions (delta prices
+//!   only each candidate's dirty footprint). Delta evaluation changes
+//!   *work*, never *results* — it consumes no randomness and alters no
+//!   scores, so the candidate streams are identical;
+//! * **cost-model level** — over a seeded chain of device-swap
+//!   perturbations, [`CostModel::plan_cost_delta`] against the rolling
+//!   baseline equals an uncached [`CostModel::plan_cost`] of the same
+//!   mutant, `PlanCost` exactly (`==` on every f64 field), and each
+//!   delta touches the cache exactly `dirty.len()` times.
+//!
+//! The chain plan assigns each task a disjoint 16-GPU slice, so a
+//! device-pair swap dirties at most two of the four tasks — every step
+//! asserts the delta priced strictly fewer tasks than a full re-price.
+
+use hetrl::costmodel::{CostCache, CostModel, TaskCost};
+use hetrl::plan::{ExecutionPlan, ParallelStrategy, TaskPlan};
+use hetrl::scheduler::ea::perturbations_with_footprints;
+use hetrl::scheduler::{Budget, ScheduleOutcome, Scheduler, ShaEaScheduler};
+use hetrl::testing::fixtures;
+use hetrl::topology::Scenario;
+
+fn sha(seed: u64, threads: usize, delta: bool) -> ScheduleOutcome {
+    let (wf, topo, job) = fixtures::env(Scenario::MultiCountry);
+    let mut s = ShaEaScheduler::with_threads(seed, threads);
+    s.cfg.ea.delta_eval = delta;
+    s.schedule(&topo, &wf, &job, Budget::evals(300))
+}
+
+#[test]
+fn delta_eval_bit_identical_to_full_and_strictly_cheaper() {
+    for seed in [1u64, 5, 11] {
+        for threads in fixtures::test_threads() {
+            let full = sha(seed, threads, false);
+            let delta = sha(seed, threads, true);
+            assert!(full.cost.is_finite(), "seed {seed}: no plan");
+            assert_eq!(
+                delta.cost.to_bits(),
+                full.cost.to_bits(),
+                "seed {seed} threads {threads}: best cost diverged"
+            );
+            assert_eq!(delta.plan, full.plan, "seed {seed} threads {threads}: plan diverged");
+            assert_eq!(delta.evals, full.evals, "seed {seed} threads {threads}: evals diverged");
+            // Both modes look up exactly what they price, and the exact
+            // accounting makes the counters assertable at any thread
+            // count.
+            for out in [&full, &delta] {
+                assert_eq!(out.cache_hits + out.cache_misses, out.task_pricings);
+            }
+            // Every key delta mode skips was resolved when its
+            // baseline was first priced, so the distinct-key (miss)
+            // count matches full mode; only the lookup volume drops.
+            assert_eq!(
+                delta.cache_misses, full.cache_misses,
+                "seed {seed} threads {threads}: distinct priced keys diverged"
+            );
+            assert!(
+                delta.task_pricings < full.task_pricings,
+                "seed {seed} threads {threads}: delta did not price fewer tasks ({} vs {})",
+                delta.task_pricings,
+                full.task_pricings
+            );
+        }
+    }
+}
+
+/// All four GRPO tasks in one group over the whole fleet, each task on
+/// its own disjoint 16-GPU slice (the 64-GPU single-region testbed).
+fn disjoint_plan(wf: &hetrl::workflow::RlWorkflow, n_gpus: usize) -> ExecutionPlan {
+    let mut task_plans = Vec::new();
+    for (t, task) in wf.tasks.iter().enumerate() {
+        let s = ParallelStrategy::new(2, 2, 4); // 16 GPUs per task
+        let devs: Vec<usize> = (t * 16..(t + 1) * 16).collect();
+        task_plans.push(TaskPlan::uniform(s, task.model.nl, devs));
+    }
+    ExecutionPlan {
+        task_groups: vec![(0..wf.n_tasks()).collect()],
+        gpu_groups: vec![(0..n_gpus).collect()],
+        task_plans,
+    }
+}
+
+#[test]
+fn delta_pricing_matches_full_oracle_over_perturbation_chains() {
+    let (wf, topo, job) = fixtures::env(Scenario::SingleRegion);
+    let cm = CostModel::new(&topo, &wf, &job);
+    let n_tasks = wf.n_tasks();
+    for seed in [0u64, 3, 9] {
+        let mut current = disjoint_plan(&wf, topo.n());
+        current.validate(&wf, &topo, &job).expect("chain seed plan is valid");
+        let cache = CostCache::new();
+        let mut base: Vec<TaskCost> = cm.plan_cost(&current).per_task;
+        for step in 0..8u64 {
+            let (mutant, dirty) = perturbations_with_footprints(&current, 1, seed * 100 + step)
+                .pop()
+                .expect("one perturbation");
+            assert!(
+                dirty.len() < n_tasks,
+                "seed {seed} step {step}: disjoint slices must keep the footprint partial"
+            );
+            let lookups0 = cache.hits() + cache.misses();
+            let got = cm.plan_cost_delta(&mutant, &base, &dirty, &cache);
+            let lookups1 = cache.hits() + cache.misses();
+            assert_eq!(
+                lookups1 - lookups0,
+                dirty.len(),
+                "seed {seed} step {step}: delta must touch the cache once per dirty task"
+            );
+            let oracle = cm.plan_cost(&mutant);
+            assert_eq!(
+                got, oracle,
+                "seed {seed} step {step}: delta price diverged from the full oracle"
+            );
+            base = got.per_task;
+            current = mutant;
+        }
+    }
+}
