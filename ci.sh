@@ -9,7 +9,9 @@
 # the =1 pass pins that everything passes with a purely sequential
 # engine (no cross-thread comparisons at all), the =8 pass adds the
 # 1-vs-8 determinism comparisons (prop_anytime,
-# prop_scheduler_parallel). The second pass costs a full re-run; drop
+# prop_scheduler_parallel) and the interleaving-fuzz thread matrix
+# (prop_interleave: shuffled DES replays bit-equal unshuffled ones at
+# every worker-thread count). The second pass costs a full re-run; drop
 # the =1 pass if CI minutes ever matter more than the sequential pin.
 #
 # Bench/RunRecord output lands in rust/bench_out/ (HETRL_RESULTS overrides).
@@ -69,6 +71,28 @@ echo "== replay smoke (async workflow, all five policies) =="
 # are also asserted by tests/prop_async.rs.
 ./target/release/hetrl replay --workflow async --scenario country --seed 0 \
     --iters 6 --events 3 --budget 120 --warm-budget 60 --policy all --tiny
+
+echo "== shuffle-invariance smoke (--shuffle-seed 7 vs FIFO, sync + async) =="
+# Replay-order invariance end to end: permuting same-timestamp DES
+# ready ties with --shuffle-seed must not change one byte of replay
+# output. tests/prop_interleave.rs fuzzes the same property over 8
+# seeds x 3 traces x all policies; this pins the CLI flag plumbing.
+# --threads 1 keeps the cache-hit column deterministic so a whole-
+# output diff is valid.
+for wf_flags in "" "--workflow async"; do
+    plain=$(./target/release/hetrl replay $wf_flags --scenario country --seed 0 \
+        --iters 6 --events 3 --budget 120 --warm-budget 60 --threads 1 \
+        --policy all --tiny)
+    shuffled=$(./target/release/hetrl replay $wf_flags --scenario country --seed 0 \
+        --iters 6 --events 3 --budget 120 --warm-budget 60 --threads 1 \
+        --policy all --tiny --shuffle-seed 7)
+    if [[ "$plain" != "$shuffled" ]]; then
+        echo "ci.sh: FAIL - --shuffle-seed 7 changed replay output (${wf_flags:-sync}):" >&2
+        diff <(echo "$plain") <(echo "$shuffled") >&2 || true
+        exit 1
+    fi
+done
+echo "shuffle-invariance smoke: sync and async outputs byte-identical"
 
 echo "== chaos replay smoke (transient faults + recovery pricing, sync) =="
 # Seeded NIC bursts / checkpoint-store outages / task failures with

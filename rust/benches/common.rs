@@ -40,6 +40,7 @@ pub fn sim_cfg() -> SimConfig {
         iters: if full() { 3 } else { 2 },
         seed: 0xBE,
         noise: NoiseModel::default(),
+        shuffle: None,
     }
 }
 

@@ -39,7 +39,7 @@ fn main() {
             let pred = CostModel::new(&topo, &wf, &job).plan_cost(&plan).iter_time;
             let mut meas = Vec::new();
             for s in 0..seeds {
-                let cfg = SimConfig { iters: 2, seed: 100 + s, noise: NoiseModel::default() };
+                let cfg = SimConfig { iters: 2, seed: 100 + s, noise: NoiseModel::default(), shuffle: None };
                 meas.push(simulate_plan(&topo, &wf, &job, &plan, &cfg).iter_time);
             }
             let stats = hetrl::util::stats::summarize(&meas);

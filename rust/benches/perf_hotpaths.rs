@@ -60,7 +60,7 @@ fn main() {
         std::hint::black_box(ring_minmax(&topo, &ring_devs, 1e8));
     });
 
-    let sim_cfg = SimConfig { iters: 1, seed: 1, noise: NoiseModel::default() };
+    let sim_cfg = SimConfig { iters: 1, seed: 1, noise: NoiseModel::default(), shuffle: None };
     let tiny_job = JobConfig::tiny();
     r.bench("simulator/grpo_iteration", 2, 10, || {
         std::hint::black_box(simulate_plan(&topo, &wf, &tiny_job, &plan, &sim_cfg));

@@ -61,6 +61,10 @@ pub struct AsyncPipelineConfig {
     pub seed: u64,
     /// Noise model for compute/communication jitter.
     pub noise: NoiseModel,
+    /// Optional seeded same-timestamp tie shuffle for the DES run
+    /// (`None` = FIFO order, byte-identical to the pre-shuffle
+    /// pipeline). See [`crate::simulator::ShuffleConfig`].
+    pub shuffle: Option<crate::simulator::ShuffleConfig>,
 }
 
 impl Default for AsyncPipelineConfig {
@@ -71,6 +75,7 @@ impl Default for AsyncPipelineConfig {
             window: 8,
             seed: 0,
             noise: NoiseModel::default(),
+            shuffle: None,
         }
     }
 }
@@ -171,7 +176,7 @@ pub fn simulate_async(
         sync_ops.push(si);
     }
 
-    let out = g.simulate();
+    let out = g.simulate_with(cfg.shuffle);
 
     // Observed staleness of step i: versions the generating policy was
     // behind when G_i started = i minus the number of weight syncs that
@@ -230,6 +235,7 @@ mod tests {
             window: 12,
             seed: 0,
             noise: NoiseModel::off(),
+            shuffle: None,
         }
     }
 

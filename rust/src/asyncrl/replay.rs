@@ -500,6 +500,7 @@ pub fn replay_async_with_trace(
                     window: cfg.window.max(1),
                     seed: seed ^ (iter as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
                     noise: cfg.base.noise,
+                    shuffle: cfg.base.shuffle,
                 };
                 let r = simulate_async(&topo, wf, job, p, &pipe);
                 let st = AsyncIterStats {

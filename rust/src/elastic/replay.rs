@@ -154,6 +154,11 @@ pub struct ReplayConfig {
     /// ([`super::recovery::plan_with_ckpt_interval`]); the winning
     /// interval replaces `recovery.ckpt_interval_secs` for the replay.
     pub ckpt_search: Option<CkptSearchConfig>,
+    /// Optional seeded same-timestamp tie shuffle for every DES
+    /// measurement in the replay (`None` = FIFO order, byte-identical
+    /// to the pre-shuffle driver). Replay metrics are invariant under
+    /// any seed — the property `tests/prop_interleave.rs` fuzzes.
+    pub shuffle: Option<crate::simulator::ShuffleConfig>,
 }
 
 impl Default for ReplayConfig {
@@ -167,6 +172,7 @@ impl Default for ReplayConfig {
             balance: true,
             recovery: RecoveryModel::default(),
             ckpt_search: None,
+            shuffle: None,
         }
     }
 }
@@ -638,6 +644,7 @@ pub fn replay_with_trace(
                     iters: cfg.sim_iters.max(1),
                     seed: seed ^ (iter as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
                     noise: cfg.noise,
+                    shuffle: cfg.shuffle,
                 };
                 (simulate_plan(&topo, wf, job, p, &sim).iter_time, job.total_samples())
             }

@@ -86,6 +86,7 @@ fn help() -> String {
             OptSpec { name: "warm-budget", help: "replay: evals per warm replan", default: Some("150") },
             OptSpec { name: "anytime-rate", help: "replay: background evals per simulated second", default: Some("0.5") },
             OptSpec { name: "notice-secs", help: "replay: pin machine-loss advance notice (0 = none; default: realistic drawn notice)", default: None },
+            OptSpec { name: "shuffle-seed", help: "replay: permute same-timestamp DES ready ties with this seed (metrics are invariant; unset = FIFO)", default: None },
             OptSpec { name: "faults", help: "replay: seed N transient faults and enable recovery pricing (bare flag = 4)", default: None },
             OptSpec { name: "ckpt-interval", help: "replay: checkpoint cadence in secs, or 'auto' to search it (enables recovery)", default: None },
             OptSpec { name: "max-retries", help: "replay: retry budget per transient fault", default: Some("3") },
@@ -293,6 +294,21 @@ fn cmd_replay(args: &Args) -> i32 {
             }
         },
     };
+    // `--shuffle-seed N` permutes same-timestamp DES ready ties with a
+    // seeded rank (simulator::ShuffleConfig); replay metrics are
+    // invariant under any seed (tests/prop_interleave.rs), so this is
+    // an order-sensitivity fuzz knob, not a behavior knob. Unset =
+    // FIFO, byte-identical to the pre-shuffle output.
+    let shuffle = match args.get("shuffle-seed") {
+        None => None,
+        Some(_) => match args.get_u64("shuffle-seed", 0) {
+            Ok(s) => Some(hetrl::simulator::ShuffleConfig { seed: s }),
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        },
+    };
     // Failure & recovery knobs. `--faults [N]` seeds transient-fault
     // events into the trace and turns recovery pricing on;
     // `--ckpt-interval <secs|auto>` turns it on too, with either a
@@ -365,6 +381,7 @@ fn cmd_replay(args: &Args) -> i32 {
         replan,
         recovery,
         ckpt_search,
+        shuffle,
         ..ReplayConfig::default()
     };
 

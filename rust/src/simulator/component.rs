@@ -1,0 +1,627 @@
+//! Component engine: the simulator's event loop as an explicit set of
+//! schedulable components (borrowed from embedded_emul's execution
+//! engine architecture).
+//!
+//! A [`Component`] exposes `id()`, `next_tick()` and `tick()`; the
+//! [`Engine`] drives all components off one priority queue keyed
+//! `(next_tick, ComponentId)` — earliest tick first, ties broken by
+//! ascending component id, so the global event order is a deterministic
+//! function of component state alone. The op-DAG executor
+//! ([`OpExecutor`]), device banks and NIC/link-token pools and
+//! checkpoint stores ([`ResourceOwner`], one per [`ResourceKind`]) are
+//! all components; future background migrations slot in as additional
+//! components with finite `next_tick`s rather than special cases inside
+//! the executor loop.
+//!
+//! # Bit-identity with the legacy executor
+//!
+//! [`crate::simulator::SimGraph::simulate`] runs on this engine and is
+//! bit-identical to the pre-component executor
+//! ([`crate::simulator::SimGraph::simulate_reference`]): the executor
+//! commits exactly one op per tick — the least `(ready_time, tie_rank,
+//! op id)` entry of its ready heap — and its `next_tick` is that
+//! entry's ready time, so the engine pops ops in exactly the legacy
+//! `(ready_time, op id)` order (successor ready times equal dependency
+//! finish times, which are never below the current queue minimum, so
+//! engine time is monotone). Start/finish arithmetic, resource
+//! free-time updates and busy accounting run in the same order with
+//! the same expressions, hence identical f64 results.
+//!
+//! # Seeded interleaving fuzz ([`ShuffleConfig`])
+//!
+//! With a shuffle seed set, same-timestamp ready ties are permuted by
+//! a deterministic seeded `tie_rank`; ops with distinct ready times
+//! are never reordered. The rank is assigned per *conflict component*
+//! (ops transitively sharing a resource), not per op: ops that contend
+//! for a resource keep their FIFO (op id = program issue) order, which
+//! is load-bearing — e.g. microbatch issue order through a pipeline
+//! stage is a permutation-flow-shop sequence whose reordering would
+//! legitimately change the makespan. Ops in *different* components
+//! touch disjoint resource state, their ready times are fixed by
+//! dependency finishes alone, and within each component the relative
+//! order is unchanged — so the entire [`SimOutcome`] (start, finish,
+//! busy, makespan, bit for bit) is invariant under every shuffle seed.
+//! The shuffle therefore perturbs the engine's *internal* event
+//! interleaving (the thing a latent order-sensitivity bug would
+//! depend on) while pinning the *observable* schedule; with it off
+//! (`None`, the default) the rank is the op id itself and the order is
+//! byte-identical to FIFO. `tests/prop_interleave.rs` fuzzes this
+//! invariance across random DAGs and both replay workflows.
+
+use std::any::Any;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::des::{OpId, ResourceKind, SimGraph, SimOutcome};
+use crate::util::ford;
+use crate::util::rng::Rng;
+
+/// Identity of a component in the [`Engine`]; doubles as the
+/// same-tick tie-break (ascending) in the event queue.
+pub type ComponentId = usize;
+
+/// Seeded tie-break shuffler for same-timestamp ready events.
+///
+/// Off (`Option::None` wherever it is plumbed) means strict FIFO
+/// `(ready_time, op id)` order, byte-identical to the legacy executor.
+/// On, ops that become ready at the *same* instant are reordered by a
+/// deterministic seeded rank of their conflict component (ops
+/// transitively sharing a resource — see the module docs for why
+/// within-component FIFO order must be preserved and why the resulting
+/// schedule is bit-invariant). Distinct ready times are never
+/// reordered, and any two runs with the same seed still produce the
+/// identical event order — this fuzzes the tie-break, not determinism.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShuffleConfig {
+    /// Seed of the tie-rank stream (the crate's [`Rng`]).
+    pub seed: u64,
+}
+
+impl ShuffleConfig {
+    /// Deterministic tie rank for conflict-component key `key`: one
+    /// draw from a per-key [`Rng`] stream split off `(seed, key)`.
+    /// Equal-ready-time ties order by `(rank, op id)`, so even rank
+    /// collisions stay deterministic.
+    pub fn tie_rank(&self, key: u64) -> u64 {
+        Rng::new(self.seed ^ key.wrapping_mul(0x9E37_79B9_7F4A_7C15)).next_u64()
+    }
+}
+
+/// A schedulable simulation component.
+///
+/// The engine pops the component with the least `(next_tick, id)` and
+/// calls [`Component::tick`]; the returned value is its new
+/// `next_tick` (`f64::INFINITY` to go idle). A component's `next_tick`
+/// may only change as a result of its *own* tick; cross-component
+/// interaction during a tick goes through [`EngineCtx`] accessors and
+/// must not reschedule the peer (a stale-entry check in the engine
+/// guards this contract).
+pub trait Component: Any {
+    /// Queue identity; assigned at [`Engine::add`] time.
+    fn id(&self) -> ComponentId;
+    /// Simulation time of this component's next event
+    /// (`f64::INFINITY` when idle).
+    fn next_tick(&self) -> f64;
+    /// Advance to `now`, perform one event, return the new `next_tick`.
+    fn tick(&mut self, now: f64, ctx: &mut EngineCtx) -> f64;
+    /// Downcast support for typed cross-component access.
+    fn as_any_mut(&mut self) -> &mut dyn Any;
+}
+
+/// Queue key: `(next_tick, component id)`, min-first.
+struct EventKey(f64, ComponentId);
+
+impl PartialEq for EventKey {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for EventKey {}
+impl PartialOrd for EventKey {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for EventKey {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        ford::cmp_f64(self.0, other.0).then(self.1.cmp(&other.1))
+    }
+}
+
+/// What a ticking component sees of the rest of the system: the graph
+/// being simulated plus typed access to its peer components (the
+/// ticking component itself is checked out of its slot for the
+/// duration of the tick).
+pub struct EngineCtx<'a, 'g> {
+    /// The graph under simulation (op table, resource kinds).
+    pub graph: &'g SimGraph,
+    slots: &'a mut [Option<Box<dyn Component>>],
+}
+
+impl EngineCtx<'_, '_> {
+    /// Typed mutable access to a peer component. Panics if `cid` is the
+    /// ticking component (checked out) or the type does not match.
+    pub fn peer_mut<C: Component>(&mut self, cid: ComponentId) -> &mut C {
+        self.slots[cid]
+            .as_mut()
+            .expect("peer_mut: component is ticking or absent")
+            .as_any_mut()
+            .downcast_mut::<C>()
+            .expect("peer_mut: component type mismatch")
+    }
+}
+
+/// The component scheduler: a slot per component plus the
+/// `(next_tick, ComponentId)` event queue.
+#[derive(Default)]
+pub struct Engine {
+    slots: Vec<Option<Box<dyn Component>>>,
+    queue: BinaryHeap<Reverse<EventKey>>,
+}
+
+impl Engine {
+    /// An engine with no components.
+    pub fn new() -> Self {
+        Engine::default()
+    }
+
+    /// Next component id to be assigned by [`Engine::add`].
+    pub fn next_id(&self) -> ComponentId {
+        self.slots.len()
+    }
+
+    /// Register a component. Its `id()` must equal [`Engine::next_id`]
+    /// at the time of the call (components are constructed knowing
+    /// their slot).
+    pub fn add(&mut self, c: Box<dyn Component>) -> ComponentId {
+        let cid = self.slots.len();
+        assert_eq!(c.id(), cid, "component id must match its slot");
+        self.slots.push(Some(c));
+        cid
+    }
+
+    /// Typed mutable access to a component between runs (setup /
+    /// outcome extraction). Panics on type mismatch.
+    pub fn component_mut<C: Component>(&mut self, cid: ComponentId) -> &mut C {
+        self.slots[cid]
+            .as_mut()
+            .expect("component_mut: absent component")
+            .as_any_mut()
+            .downcast_mut::<C>()
+            .expect("component_mut: component type mismatch")
+    }
+
+    /// Run to quiescence: repeatedly pop the least `(next_tick, id)`
+    /// entry and tick that component until no component has a finite
+    /// `next_tick`. Stale queue entries (a component whose `next_tick`
+    /// moved since it was enqueued) are re-enqueued at their fresh
+    /// time, never ticked.
+    pub fn run(&mut self, graph: &SimGraph) {
+        for (cid, slot) in self.slots.iter().enumerate() {
+            let t = slot.as_ref().expect("run: absent component").next_tick();
+            if t.is_finite() {
+                self.queue.push(Reverse(EventKey(t, cid)));
+            }
+        }
+        while let Some(Reverse(EventKey(t, cid))) = self.queue.pop() {
+            let fresh = self.slots[cid].as_ref().expect("run: absent component").next_tick();
+            if ford::cmp_f64(fresh, t) != std::cmp::Ordering::Equal {
+                if fresh.is_finite() {
+                    self.queue.push(Reverse(EventKey(fresh, cid)));
+                }
+                continue;
+            }
+            let mut c = self.slots[cid].take().expect("run: component re-entry");
+            let nt = c.tick(t, &mut EngineCtx { graph, slots: &mut self.slots });
+            self.slots[cid] = Some(c);
+            if nt.is_finite() {
+                self.queue.push(Reverse(EventKey(nt, cid)));
+            }
+        }
+    }
+}
+
+/// Passive resource-owner component: holds free-time and busy
+/// accounting for all resources of one [`ResourceKind`] (devices,
+/// NIC/link tokens, checkpoint stores). Passive today — its
+/// `next_tick` is infinite until background transfers (migration
+/// overlap, ROADMAP) give it events of its own; the executor reads and
+/// writes it through [`EngineCtx::peer_mut`] during op commits.
+pub struct ResourceOwner {
+    cid: ComponentId,
+    kind: ResourceKind,
+    /// Time each resource becomes available, indexed by *global*
+    /// resource id (entries of other kinds stay untouched at 0).
+    free: Vec<f64>,
+    /// Cumulative busy time per resource (same indexing).
+    busy: Vec<f64>,
+}
+
+impl ResourceOwner {
+    /// Owner of every resource of `kind` in a universe of
+    /// `n_resources`.
+    pub fn new(cid: ComponentId, kind: ResourceKind, n_resources: usize) -> Self {
+        ResourceOwner { cid, kind, free: vec![0.0; n_resources], busy: vec![0.0; n_resources] }
+    }
+
+    /// The kind of resource this component owns.
+    pub fn kind(&self) -> ResourceKind {
+        self.kind
+    }
+
+    /// Time resource `r` becomes available.
+    pub fn free_at(&self, r: usize) -> f64 {
+        self.free[r]
+    }
+
+    /// Occupy resource `r` until `until`, accruing `dur` busy time.
+    pub fn occupy(&mut self, r: usize, until: f64, dur: f64) {
+        self.free[r] = until;
+        self.busy[r] += dur;
+    }
+}
+
+impl Component for ResourceOwner {
+    fn id(&self) -> ComponentId {
+        self.cid
+    }
+    fn next_tick(&self) -> f64 {
+        f64::INFINITY
+    }
+    fn tick(&mut self, _now: f64, _ctx: &mut EngineCtx) -> f64 {
+        f64::INFINITY
+    }
+    fn as_any_mut(&mut self) -> &mut dyn Any {
+        self
+    }
+}
+
+/// Ready-heap key: `(ready_time, tie_rank, op id)`, min-first. With
+/// the shuffle off `tie_rank == op id`, so the order collapses to the
+/// legacy `(ready_time, op id)` FIFO.
+struct ReadyKey(f64, u64, OpId);
+
+impl PartialEq for ReadyKey {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for ReadyKey {}
+impl PartialOrd for ReadyKey {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for ReadyKey {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        ford::cmp_f64(self.0, other.0)
+            .then(self.1.cmp(&other.1))
+            .then(self.2.cmp(&other.2))
+    }
+}
+
+/// The op-DAG executor component: FIFO list scheduling over the graph,
+/// one op commit per tick. Resource state lives in the
+/// [`ResourceOwner`] peers; this component owns only the dependency
+/// bookkeeping and the per-op schedule it is building.
+pub struct OpExecutor {
+    cid: ComponentId,
+    /// Owning component per global resource id.
+    owner_of: Vec<ComponentId>,
+    /// Ready-heap tie rank per op: the op id itself with the shuffle
+    /// off, else the seeded rank of the op's conflict component.
+    rank: Vec<u64>,
+    indeg: Vec<usize>,
+    rdeps: Vec<Vec<OpId>>,
+    ready: BinaryHeap<Reverse<ReadyKey>>,
+    start: Vec<f64>,
+    finish: Vec<f64>,
+    makespan: f64,
+    committed: usize,
+}
+
+impl OpExecutor {
+    /// Build the executor for `graph`, seeding the ready heap with all
+    /// zero-indegree ops at time 0.
+    pub fn new(
+        cid: ComponentId,
+        graph: &SimGraph,
+        owner_of: Vec<ComponentId>,
+        shuffle: Option<ShuffleConfig>,
+    ) -> Self {
+        let n = graph.ops.len();
+        let mut indeg = vec![0usize; n];
+        let mut rdeps: Vec<Vec<OpId>> = vec![Vec::new(); n];
+        for (id, op) in graph.ops.iter().enumerate() {
+            indeg[id] = op.deps.len();
+            for &d in &op.deps {
+                rdeps[d].push(id);
+            }
+        }
+        let rank = match shuffle {
+            None => (0..n as u64).collect(),
+            Some(s) => {
+                // Conflict components: union-find over resources, ops
+                // joined through the resources they co-use. Ops in the
+                // same component share a seeded rank (so their FIFO
+                // order survives); zero-resource ops (barriers) are
+                // singleton components and shuffle freely.
+                let nr = graph.n_resources();
+                let mut parent: Vec<usize> = (0..nr).collect();
+                fn find(parent: &mut [usize], mut x: usize) -> usize {
+                    while parent[x] != x {
+                        parent[x] = parent[parent[x]];
+                        x = parent[x];
+                    }
+                    x
+                }
+                for op in &graph.ops {
+                    for w in op.resources.windows(2) {
+                        let (a, b) = (find(&mut parent, w[0]), find(&mut parent, w[1]));
+                        parent[a.max(b)] = a.min(b);
+                    }
+                }
+                (0..n)
+                    .map(|id| {
+                        let key = match graph.ops[id].resources.first() {
+                            Some(&r) => find(&mut parent, r) as u64,
+                            None => (nr + id) as u64,
+                        };
+                        s.tie_rank(key)
+                    })
+                    .collect()
+            }
+        };
+        let mut ex = OpExecutor {
+            cid,
+            owner_of,
+            rank,
+            indeg,
+            rdeps,
+            ready: BinaryHeap::new(),
+            start: vec![f64::NAN; n],
+            finish: vec![f64::NAN; n],
+            makespan: 0.0,
+            committed: 0,
+        };
+        for id in 0..n {
+            if ex.indeg[id] == 0 {
+                ex.push_ready(0.0, id);
+            }
+        }
+        ex
+    }
+
+    fn push_ready(&mut self, ready: f64, id: OpId) {
+        self.ready.push(Reverse(ReadyKey(ready, self.rank[id], id)));
+    }
+
+    /// Number of ops committed so far (equals the op count after a
+    /// completed run iff the graph was acyclic).
+    pub fn committed(&self) -> usize {
+        self.committed
+    }
+
+    /// Extract the schedule built so far as a [`SimOutcome`] (busy
+    /// accounting is merged in by the caller from the resource owners).
+    pub fn outcome(&self, busy: Vec<f64>) -> SimOutcome {
+        SimOutcome {
+            makespan: self.makespan,
+            finish: self.finish.clone(),
+            start: self.start.clone(),
+            busy,
+        }
+    }
+}
+
+impl Component for OpExecutor {
+    fn id(&self) -> ComponentId {
+        self.cid
+    }
+
+    fn next_tick(&self) -> f64 {
+        match self.ready.peek() {
+            Some(Reverse(k)) => k.0,
+            None => f64::INFINITY,
+        }
+    }
+
+    fn tick(&mut self, _now: f64, ctx: &mut EngineCtx) -> f64 {
+        let Reverse(ReadyKey(rt, _rank, id)) = self.ready.pop().expect("tick on empty ready heap");
+        let op = &ctx.graph.ops[id];
+        let mut t0 = rt;
+        for &r in &op.resources {
+            t0 = t0.max(ctx.peer_mut::<ResourceOwner>(self.owner_of[r]).free_at(r));
+        }
+        let t1 = t0 + op.duration;
+        for &r in &op.resources {
+            ctx.peer_mut::<ResourceOwner>(self.owner_of[r]).occupy(r, t1, op.duration);
+        }
+        self.start[id] = t0;
+        self.finish[id] = t1;
+        self.makespan = self.makespan.max(t1);
+        self.committed += 1;
+        // Each op commits exactly once, so its reverse-dependency list
+        // can be consumed (and this sidesteps holding a borrow of
+        // `rdeps` across the `indeg`/heap mutations below).
+        for succ in std::mem::take(&mut self.rdeps[id]) {
+            self.indeg[succ] -= 1;
+            if self.indeg[succ] == 0 {
+                let r = ctx.graph.ready_of(succ, &self.finish);
+                self.push_ready(r, succ);
+            }
+        }
+        self.next_tick()
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn Any {
+        self
+    }
+}
+
+/// Simulate `graph` on the component engine: one [`ResourceOwner`] per
+/// resource kind present plus the [`OpExecutor`]. This is the engine
+/// behind [`SimGraph::simulate`] / [`SimGraph::simulate_with`].
+pub(super) fn run_sim(graph: &SimGraph, shuffle: Option<ShuffleConfig>) -> SimOutcome {
+    let nr = graph.n_resources();
+    let mut engine = Engine::new();
+    // Owner components in fixed kind order; resources map to their
+    // kind's owner.
+    let mut owner_cid: [Option<ComponentId>; ResourceKind::ALL.len()] =
+        [None; ResourceKind::ALL.len()];
+    for (ki, &kind) in ResourceKind::ALL.iter().enumerate() {
+        if (0..nr).any(|r| graph.resource_kind(r) == kind) {
+            let cid = engine.next_id();
+            owner_cid[ki] = Some(engine.add(Box::new(ResourceOwner::new(cid, kind, nr))));
+        }
+    }
+    let owner_of: Vec<ComponentId> = (0..nr)
+        .map(|r| {
+            let ki = ResourceKind::ALL
+                .iter()
+                .position(|&k| k == graph.resource_kind(r))
+                .expect("resource kind not in ResourceKind::ALL");
+            owner_cid[ki].expect("resource kind without owner component")
+        })
+        .collect();
+    let exec_cid = engine.next_id();
+    engine.add(Box::new(OpExecutor::new(exec_cid, graph, owner_of, shuffle)));
+    engine.run(graph);
+
+    let mut busy = vec![0.0f64; nr];
+    for cid in owner_cid.into_iter().flatten() {
+        let owner = engine.component_mut::<ResourceOwner>(cid);
+        for r in 0..nr {
+            busy[r] += owner.busy[r];
+        }
+    }
+    let ex = engine.component_mut::<OpExecutor>(exec_cid);
+    assert_eq!(ex.committed(), graph.ops.len(), "cycle in sim graph");
+    ex.outcome(busy)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Toy component that fires at fixed times, recording `(time, id)`
+    /// into a shared log via the recorder peer.
+    struct Pinger {
+        cid: ComponentId,
+        times: Vec<f64>, // reversed; pop() yields ascending
+        recorder: ComponentId,
+    }
+    struct Recorder {
+        cid: ComponentId,
+        log: Vec<(f64, ComponentId)>,
+    }
+    impl Component for Recorder {
+        fn id(&self) -> ComponentId {
+            self.cid
+        }
+        fn next_tick(&self) -> f64 {
+            f64::INFINITY
+        }
+        fn tick(&mut self, _now: f64, _ctx: &mut EngineCtx) -> f64 {
+            f64::INFINITY
+        }
+        fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+            self
+        }
+    }
+    impl Component for Pinger {
+        fn id(&self) -> ComponentId {
+            self.cid
+        }
+        fn next_tick(&self) -> f64 {
+            self.times.last().copied().unwrap_or(f64::INFINITY)
+        }
+        fn tick(&mut self, now: f64, ctx: &mut EngineCtx) -> f64 {
+            let t = self.times.pop().expect("tick past schedule");
+            assert_eq!(t, now);
+            let me = self.cid;
+            ctx.peer_mut::<Recorder>(self.recorder).log.push((now, me));
+            self.next_tick()
+        }
+        fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+            self
+        }
+    }
+
+    #[test]
+    fn engine_orders_by_tick_then_component_id() {
+        let g = SimGraph::new(0);
+        let mut e = Engine::new();
+        let rec = e.add(Box::new(Recorder { cid: 0, log: Vec::new() }));
+        // Pinger 1 fires at 2.0 and 1.0; pinger 2 at 1.0 and 3.0. At
+        // t=1.0 both are due: component id breaks the tie (1 before 2).
+        e.add(Box::new(Pinger { cid: 1, times: vec![2.0, 1.0], recorder: rec }));
+        e.add(Box::new(Pinger { cid: 2, times: vec![3.0, 1.0], recorder: rec }));
+        e.run(&g);
+        let log = &e.component_mut::<Recorder>(rec).log;
+        assert_eq!(log, &[(1.0, 1), (1.0, 2), (2.0, 1), (3.0, 2)]);
+    }
+
+    #[test]
+    fn tie_rank_deterministic_and_seed_sensitive() {
+        let s7 = ShuffleConfig { seed: 7 };
+        assert_eq!(s7.tie_rank(3), s7.tie_rank(3));
+        let ranks7: Vec<u64> = (0..64).map(|i| s7.tie_rank(i)).collect();
+        let ranks8: Vec<u64> = (0..64).map(|i| ShuffleConfig { seed: 8 }.tie_rank(i)).collect();
+        assert_ne!(ranks7, ranks8);
+        // Ranks must actually permute relative order somewhere,
+        // otherwise the fuzz is vacuous.
+        assert!((1..64).any(|i| ranks7[i] < ranks7[i - 1]));
+    }
+
+    #[test]
+    fn shuffle_reorders_ties_but_not_distinct_ready_times() {
+        // Three independent unit ops on disjoint resources, all ready
+        // at t=0: any commit order yields the same schedule, but the
+        // shuffle must still be exercised (covered by the equivalence
+        // suites); an op chained after them has a distinct ready time
+        // and must start last under every seed.
+        for seed in [0u64, 7, 41] {
+            let mut g = SimGraph::new(3);
+            let a = g.add(vec![0], 1.0, vec![], 0);
+            g.add(vec![1], 1.0, vec![], 0);
+            g.add(vec![2], 1.0, vec![], 0);
+            let tail = g.add(vec![0], 1.0, vec![a], 0);
+            let o = g.simulate_with(Some(ShuffleConfig { seed }));
+            let base = g.simulate();
+            assert_eq!(o.start[tail], 1.0);
+            assert_eq!(o.makespan, base.makespan);
+            assert_eq!(o.start, base.start);
+            assert_eq!(o.finish, base.finish);
+            assert_eq!(o.busy, base.busy);
+        }
+    }
+
+    #[test]
+    fn resource_owners_split_by_kind() {
+        // One device op and one link-token op: busy accounting merged
+        // across two owner components must match the reference run.
+        let mut g = SimGraph::new(1);
+        let l = g.add_resource(); // ResourceKind::LinkToken
+        g.add(vec![0], 2.0, vec![], 0);
+        g.add(vec![l], 3.0, vec![], 0);
+        assert_eq!(g.resource_kind(0), ResourceKind::Device);
+        assert_eq!(g.resource_kind(l), ResourceKind::LinkToken);
+        let o = g.simulate();
+        let r = g.simulate_reference();
+        assert_eq!(o.busy, vec![2.0, 3.0]);
+        assert_eq!(o.busy, r.busy);
+        assert_eq!(o.start, r.start);
+        assert_eq!(o.finish, r.finish);
+    }
+
+    #[test]
+    fn ckpt_store_kind_supported() {
+        let mut g = SimGraph::new(1);
+        let c = g.add_resource_of(ResourceKind::CkptStore);
+        let w = g.add(vec![0, c], 1.0, vec![], 0);
+        let o = g.simulate();
+        assert_eq!(o.finish[w], 1.0);
+        assert_eq!(o.busy[c], 1.0);
+    }
+}

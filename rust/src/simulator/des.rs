@@ -2,13 +2,46 @@
 //! occupying a set of exclusive resources for a duration. Simulation
 //! performs event-driven list scheduling: an op starts when all its
 //! dependencies have finished and all its resources are free; ties are
-//! broken FIFO by ready time, then by op id (deterministic).
+//! broken FIFO by ready time, then by op id (deterministic), unless a
+//! [`ShuffleConfig`] seed permutes same-timestamp ties (see
+//! [`SimGraph::simulate_with`]).
+//!
+//! Since the component refactor the event loop itself lives in
+//! [`super::component`]: the op-DAG executor, device banks, link-token
+//! pools and checkpoint stores are [`super::component::Component`]s
+//! driven off one `(next_tick, ComponentId)` queue. This module keeps
+//! the graph representation, the public `simulate*` API, and the
+//! pre-component executor as a pinned reference implementation
+//! ([`SimGraph::simulate_reference`]) for the equivalence suites.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
+use super::component::{self, ShuffleConfig};
+
 /// Index of an op in a [`SimGraph`].
 pub type OpId = usize;
+
+/// What a simulation resource models; each kind is owned by its own
+/// [`super::component::ResourceOwner`] component in the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResourceKind {
+    /// A physical device (GPU); `SimGraph::new(n)` creates `n` of these.
+    Device,
+    /// A synthetic NIC/link token (e.g. a WAN backbone channel);
+    /// [`SimGraph::add_resource`] creates these.
+    LinkToken,
+    /// A checkpoint store endpoint (serialized snapshot writes).
+    CkptStore,
+}
+
+impl ResourceKind {
+    /// Every kind, in the fixed order owner components are
+    /// instantiated (stable across runs — part of the determinism
+    /// contract).
+    pub const ALL: [ResourceKind; 3] =
+        [ResourceKind::Device, ResourceKind::LinkToken, ResourceKind::CkptStore];
+}
 
 /// One operation: compute on a device group, or a transfer on a link.
 #[derive(Debug, Clone)]
@@ -25,7 +58,7 @@ pub struct Op {
 #[derive(Debug, Default)]
 pub struct SimGraph {
     pub ops: Vec<Op>,
-    n_resources: usize,
+    kinds: Vec<ResourceKind>,
 }
 
 /// Result of simulating a graph.
@@ -39,25 +72,37 @@ pub struct SimOutcome {
 }
 
 impl SimGraph {
+    /// A graph over `n_resources` devices ([`ResourceKind::Device`]).
     pub fn new(n_resources: usize) -> Self {
-        SimGraph { ops: Vec::new(), n_resources }
+        SimGraph { ops: Vec::new(), kinds: vec![ResourceKind::Device; n_resources] }
     }
 
-    /// Allocate an extra synthetic resource (e.g. a WAN link token).
+    /// Allocate an extra synthetic link token
+    /// ([`ResourceKind::LinkToken`], e.g. a WAN backbone channel).
     pub fn add_resource(&mut self) -> usize {
-        self.n_resources += 1;
-        self.n_resources - 1
+        self.add_resource_of(ResourceKind::LinkToken)
+    }
+
+    /// Allocate an extra resource of an explicit kind.
+    pub fn add_resource_of(&mut self, kind: ResourceKind) -> usize {
+        self.kinds.push(kind);
+        self.kinds.len() - 1
     }
 
     pub fn n_resources(&self) -> usize {
-        self.n_resources
+        self.kinds.len()
+    }
+
+    /// The kind of resource `r`. Panics if out of range.
+    pub fn resource_kind(&self, r: usize) -> ResourceKind {
+        self.kinds[r]
     }
 
     /// Add an op; panics on out-of-range resources or forward deps.
     pub fn add(&mut self, resources: Vec<usize>, duration: f64, deps: Vec<OpId>, tag: usize) -> OpId {
         let id = self.ops.len();
         for &r in &resources {
-            assert!(r < self.n_resources, "resource {r} out of range");
+            assert!(r < self.kinds.len(), "resource {r} out of range");
         }
         for &d in &deps {
             assert!(d < id, "dependency {d} must precede op {id}");
@@ -72,8 +117,35 @@ impl SimGraph {
         self.add(Vec::new(), 0.0, deps, usize::MAX)
     }
 
-    /// Event-driven simulation. `O((V+E) log V + V·R)` with small R.
+    /// Ready time of `op` given per-op finish times: the latest
+    /// dependency finish (0 for sources). The single source of truth
+    /// for ready-time computation, shared by the component executor
+    /// and the pinned reference executor.
+    pub(crate) fn ready_of(&self, op: OpId, finish: &[f64]) -> f64 {
+        self.ops[op].deps.iter().map(|&d| finish[d]).fold(0.0f64, f64::max)
+    }
+
+    /// Event-driven simulation on the component engine, FIFO tie-break.
+    /// `O((V+E) log V + V·R)` with small R. Bit-identical to
+    /// [`SimGraph::simulate_reference`].
     pub fn simulate(&self) -> SimOutcome {
+        self.simulate_with(None)
+    }
+
+    /// Simulation with an optional seeded tie-break shuffle for
+    /// same-timestamp ready events. `None` is byte-identical to
+    /// [`SimGraph::simulate`]; any seed still yields a fully
+    /// deterministic event order (see
+    /// [`super::component::ShuffleConfig`]).
+    pub fn simulate_with(&self, shuffle: Option<ShuffleConfig>) -> SimOutcome {
+        component::run_sim(self, shuffle)
+    }
+
+    /// The pre-component executor, kept verbatim (modulo the dead
+    /// `ready_time` buffer it used to carry) as the pinned oracle for
+    /// the component-engine equivalence suites
+    /// (`tests/integration_simulator.rs`).
+    pub fn simulate_reference(&self) -> SimOutcome {
         let n = self.ops.len();
         let mut indeg: Vec<usize> = vec![0; n];
         let mut rdeps: Vec<Vec<OpId>> = vec![Vec::new(); n];
@@ -84,9 +156,8 @@ impl SimGraph {
             }
         }
         // resource_free[r] = time the resource becomes available
-        let mut resource_free = vec![0.0f64; self.n_resources];
-        let mut busy = vec![0.0f64; self.n_resources];
-        let mut ready_time = vec![0.0f64; n];
+        let mut resource_free = vec![0.0f64; self.kinds.len()];
+        let mut busy = vec![0.0f64; self.kinds.len()];
         let mut start = vec![f64::NAN; n];
         let mut finish = vec![f64::NAN; n];
 
@@ -136,13 +207,7 @@ impl SimGraph {
                 indeg[succ] -= 1;
                 if indeg[succ] == 0 {
                     // Ready when the latest dependency finishes.
-                    let r = self.ops[succ]
-                        .deps
-                        .iter()
-                        .map(|&d| finish[d])
-                        .fold(0.0f64, f64::max);
-                    ready_time[succ] = r;
-                    queue.push(Reverse(QEntry(r, succ)));
+                    queue.push(Reverse(QEntry(self.ready_of(succ, &finish), succ)));
                 }
             }
         }
@@ -257,5 +322,28 @@ mod tests {
             g.simulate().makespan
         };
         assert_eq!(build(), build());
+    }
+
+    #[test]
+    fn ready_time_is_max_dep_finish() {
+        // Pin for the ready-time unification (the old executor kept a
+        // `ready_time` buffer that was written but never read after
+        // push; `ready_of` is now the single source): a diamond's join
+        // becomes ready exactly when its *later* dependency finishes,
+        // on both executors.
+        let mut g = SimGraph::new(2);
+        let a = g.add(vec![0], 1.0, vec![], 0);
+        let b = g.add(vec![0], 2.0, vec![a], 0); // finishes at 3
+        let c = g.add(vec![1], 1.0, vec![a], 0); // finishes at 2
+        let d = g.add(vec![1], 1.0, vec![b, c], 0);
+        let o = g.simulate();
+        let r = g.simulate_reference();
+        assert_eq!(g.ready_of(d, &o.finish), 3.0);
+        assert_eq!(o.start[d], 3.0);
+        assert_eq!(o.finish[d], 4.0);
+        assert_eq!(o.start, r.start);
+        assert_eq!(o.finish, r.finish);
+        assert_eq!(o.busy, r.busy);
+        assert_eq!(o.makespan, r.makespan);
     }
 }

@@ -15,6 +15,7 @@
 //!   pair serialize across tasks;
 //! * multiplicative lognormal jitter on compute and communication.
 
+use super::component::ShuffleConfig;
 use super::des::{OpId, SimGraph};
 use super::noise::NoiseModel;
 use crate::costmodel::comm::{cv_all_gather, cv_dp, cv_p2p, cv_pp, cv_tp, layer_params};
@@ -32,11 +33,15 @@ pub struct SimConfig {
     pub iters: usize,
     pub seed: u64,
     pub noise: NoiseModel,
+    /// Optional seeded same-timestamp tie shuffle (`None` = FIFO,
+    /// byte-identical to the pre-shuffle simulator). See
+    /// [`ShuffleConfig`].
+    pub shuffle: Option<ShuffleConfig>,
 }
 
 impl Default for SimConfig {
     fn default() -> Self {
-        SimConfig { iters: 3, seed: 0xBEEF, noise: NoiseModel::default() }
+        SimConfig { iters: 3, seed: 0xBEEF, noise: NoiseModel::default(), shuffle: None }
     }
 }
 
@@ -496,7 +501,7 @@ pub fn simulate_plan(
             }
         }
 
-        let outcome = b.g.simulate();
+        let outcome = b.g.simulate_with(cfg.shuffle);
         iter_times.push(outcome.makespan);
         for t in 0..wf.n_tasks() {
             let f = b.g.tag_finish(&outcome, t);
@@ -540,7 +545,7 @@ mod tests {
     }
 
     fn fast_cfg() -> SimConfig {
-        SimConfig { iters: 2, seed: 7, noise: NoiseModel::default() }
+        SimConfig { iters: 2, seed: 7, noise: NoiseModel::default(), shuffle: None }
     }
 
     #[test]
@@ -581,7 +586,7 @@ mod tests {
         let asyn = RlWorkflow::new(Algo::Grpo, Mode::Async, model);
         // Disaggregated plan: generation on its own devices.
         let plan = make_plan(&sync, 64, 16);
-        let cfg = SimConfig { iters: 2, seed: 3, noise: NoiseModel::off() };
+        let cfg = SimConfig { iters: 2, seed: 3, noise: NoiseModel::off(), shuffle: None };
         let r_sync = simulate_plan(&topo, &sync, &job, &plan, &cfg);
         let r_async = simulate_plan(&topo, &asyn, &job, &plan, &cfg);
         assert!(r_async.iter_time <= r_sync.iter_time * 1.05);
@@ -621,7 +626,7 @@ mod tests {
         let plan = make_plan(&wf, 64, 16);
         let cm = crate::costmodel::CostModel::new(&topo, &wf, &job);
         let pred = cm.plan_cost(&plan).iter_time;
-        let cfg = SimConfig { iters: 2, seed: 11, noise: NoiseModel::default() };
+        let cfg = SimConfig { iters: 2, seed: 11, noise: NoiseModel::default(), shuffle: None };
         let meas = simulate_plan(&topo, &wf, &job, &plan, &cfg).iter_time;
         let ratio = pred / meas;
         assert!(

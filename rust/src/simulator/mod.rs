@@ -10,10 +10,12 @@
 //! bubbles and task overlap from the event order rather than closed
 //! forms. Cost-model validation (paper Figure 7) compares the two.
 
+pub mod component;
 pub mod des;
 pub mod noise;
 pub mod execsim;
 
-pub use des::{OpId, SimGraph};
+pub use component::{Component, ComponentId, Engine, EngineCtx, OpExecutor, ResourceOwner, ShuffleConfig};
+pub use des::{OpId, ResourceKind, SimGraph};
 pub use execsim::{simulate_plan, SimConfig, SimResult};
 pub use noise::NoiseModel;

@@ -24,6 +24,7 @@ use crate::scheduler::ea::EaConfig;
 use crate::scheduler::levels::{
     assemble, assign_devices, default_task_plans, gpu_groupings, set_partitions,
 };
+use crate::simulator::{OpId, SimGraph};
 use crate::topology::{build_testbed, DeviceTopology, GpuModel, Scenario, TestbedSpec};
 use crate::util::rng::Rng;
 use crate::workflow::{Algo, JobConfig, Mode, ModelSpec, RlWorkflow};
@@ -157,6 +158,48 @@ pub fn async_replay_cfg(staleness_bound: usize, threads: usize) -> crate::asyncr
         window: 4,
         gen_fracs: vec![1.0 / 3.0, 0.5, 2.0 / 3.0],
     }
+}
+
+/// Seeded random op-DAG over `n_resources` devices plus a couple of
+/// WAN link tokens: durations quantized to 0.25 s (including zeros) so
+/// distinct ops genuinely finish — and successors become ready — at
+/// identical timestamps, random dependency fan-in from earlier ops,
+/// occasional zero-duration barriers. Shared by the component-engine
+/// equivalence suite (`tests/integration_simulator.rs`) and the
+/// interleave fuzz suite (`tests/prop_interleave.rs`).
+pub fn random_sim_graph(seed: u64, n_ops: usize, n_resources: usize) -> SimGraph {
+    assert!(n_resources > 0, "random_sim_graph needs at least one device");
+    let mut rng = Rng::new(seed ^ 0x51D5_EED5_0DA6_0000);
+    let mut g = SimGraph::new(n_resources);
+    let links: Vec<usize> = (0..n_resources.min(2)).map(|_| g.add_resource()).collect();
+    fn pick_deps(rng: &mut Rng, upto: usize, max_n: usize) -> Vec<OpId> {
+        let n = rng.below(max_n + 1);
+        let mut deps: Vec<OpId> = (0..n).map(|_| rng.below(upto)).collect();
+        deps.sort_unstable();
+        deps.dedup();
+        deps
+    }
+    for i in 0..n_ops {
+        // ~1 in 8 ops is a barrier over random predecessors.
+        if i > 0 && rng.chance(0.125) {
+            g.barrier(pick_deps(&mut rng, i, 3));
+            continue;
+        }
+        let mut resources = vec![rng.below(n_resources)];
+        if rng.chance(0.25) {
+            let r2 = rng.below(n_resources);
+            if r2 != resources[0] {
+                resources.push(r2);
+            }
+        }
+        if rng.chance(0.2) {
+            resources.push(links[rng.below(links.len())]);
+        }
+        let duration = rng.below(5) as f64 * 0.25;
+        let deps = if i == 0 { Vec::new() } else { pick_deps(&mut rng, i, 2) };
+        g.add(resources, duration, deps, i % 4);
+    }
+    g
 }
 
 /// Generate a random valid plan through the Level-1..5 machinery

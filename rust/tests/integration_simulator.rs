@@ -1,12 +1,117 @@
-//! Integration: cost model vs discrete-event simulator agreement.
+//! Integration: cost model vs discrete-event simulator agreement, plus
+//! the component-engine equivalence pins (the engine behind
+//! `SimGraph::simulate` must reproduce the legacy executor
+//! `SimGraph::simulate_reference` bit-identically).
 
 use hetrl::balance::{self, BalanceConfig};
 use hetrl::costmodel::CostModel;
 use hetrl::scheduler::{Budget, Scheduler, ShaEaScheduler};
-use hetrl::simulator::{simulate_plan, NoiseModel, SimConfig};
+use hetrl::simulator::{simulate_plan, NoiseModel, OpId, SimConfig, SimGraph};
 use hetrl::testing::fixtures;
 use hetrl::topology::Scenario;
 use hetrl::workflow::{Algo, JobConfig, Mode, ModelSpec};
+
+/// Bit-exact equivalence of the component engine and the pinned
+/// pre-component reference executor on one graph: makespan and the
+/// full start/finish/busy vectors must match to the last bit (`==` on
+/// f64 — no tolerance; a completed run contains no NaNs).
+fn assert_engine_equivalence(g: &SimGraph, label: &str) {
+    let c = g.simulate();
+    let r = g.simulate_reference();
+    assert_eq!(c.makespan, r.makespan, "{label}: makespan diverged");
+    assert_eq!(c.start, r.start, "{label}: start vector diverged");
+    assert_eq!(c.finish, r.finish, "{label}: finish vector diverged");
+    assert_eq!(c.busy, r.busy, "{label}: busy vector diverged");
+}
+
+/// The unit graphs from `simulator::des`'s own test suite, rebuilt
+/// here so the equivalence pin covers every hand-written shape the
+/// executor is specified against.
+fn unit_graphs() -> Vec<(&'static str, SimGraph)> {
+    let mut graphs = Vec::new();
+
+    let mut g = SimGraph::new(1);
+    let a = g.add(vec![0], 1.0, vec![], 0);
+    let b = g.add(vec![0], 2.0, vec![a], 0);
+    g.add(vec![0], 3.0, vec![b], 0);
+    graphs.push(("sequential_chain", g));
+
+    let mut g = SimGraph::new(2);
+    g.add(vec![0], 5.0, vec![], 0);
+    g.add(vec![1], 3.0, vec![], 1);
+    graphs.push(("parallel_on_disjoint_resources", g));
+
+    let mut g = SimGraph::new(1);
+    g.add(vec![0], 5.0, vec![], 0);
+    g.add(vec![0], 3.0, vec![], 1);
+    graphs.push(("contention_serializes", g));
+
+    let mut g = SimGraph::new(2);
+    g.add(vec![0], 4.0, vec![], 0);
+    g.add(vec![1], 1.0, vec![], 0);
+    g.add(vec![0, 1], 1.0, vec![], 1);
+    graphs.push(("multi_resource_op_waits_for_all", g));
+
+    let mut g = SimGraph::new(2);
+    let a = g.add(vec![0], 2.0, vec![], 0);
+    g.add(vec![1], 1.0, vec![a], 0);
+    graphs.push(("dependencies_respected_across_resources", g));
+
+    let mut g = SimGraph::new(2);
+    let mut prev_stage: Vec<Option<OpId>> = vec![None, None];
+    for _m in 0..3 {
+        let f0 = g.add(vec![0], 1.0, prev_stage[0].into_iter().collect(), 0);
+        let f1 = g.add(vec![1], 1.0, vec![f0], 0);
+        prev_stage = vec![Some(f0), Some(f1)];
+    }
+    graphs.push(("pipeline_bubble_emerges", g));
+
+    let mut g = SimGraph::new(1);
+    let a = g.add(vec![0], 1.5, vec![], 7);
+    g.barrier(vec![a]);
+    graphs.push(("barrier_and_tags", g));
+
+    let mut g = SimGraph::new(4);
+    let mut last = Vec::new();
+    for i in 0..50 {
+        let deps = if i % 7 == 0 { last.clone() } else { Vec::new() };
+        let id = g.add(vec![i % 4], (i % 5) as f64 * 0.3 + 0.1, deps, 0);
+        if i % 3 == 0 {
+            last = vec![id];
+        }
+    }
+    graphs.push(("deterministic_50_op_graph", g));
+
+    graphs
+}
+
+#[test]
+fn component_engine_matches_reference_on_unit_graphs() {
+    for (label, g) in unit_graphs() {
+        assert_engine_equivalence(&g, label);
+    }
+}
+
+#[test]
+fn component_engine_matches_reference_on_random_dags() {
+    // 16 seeded random DAGs (mixed device/link-token resources,
+    // quantized durations so ready-time ties genuinely occur,
+    // barriers) through the shared fixture builder.
+    for seed in 0..16u64 {
+        let g = fixtures::random_sim_graph(seed, 120, 5);
+        assert_engine_equivalence(&g, &format!("random_sim_graph(seed {seed})"));
+    }
+}
+
+#[test]
+fn component_engine_empty_graph() {
+    let g = SimGraph::new(3);
+    let o = g.simulate();
+    assert_eq!(o.makespan, 0.0);
+    assert!(o.start.is_empty() && o.finish.is_empty());
+    assert_eq!(o.busy, vec![0.0; 3]);
+    assert_engine_equivalence(&g, "empty graph");
+}
 
 #[test]
 fn cost_model_ranks_like_simulator() {
@@ -24,7 +129,7 @@ fn cost_model_ranks_like_simulator() {
             continue;
         };
         pred.push(cm.plan_cost(&plan).iter_time);
-        let cfg = SimConfig { iters: 2, seed: 9, noise: NoiseModel::default() };
+        let cfg = SimConfig { iters: 2, seed: 9, noise: NoiseModel::default(), shuffle: None };
         meas.push(simulate_plan(&topo, &wf, &job, &plan, &cfg).iter_time);
     }
     assert!(pred.len() >= 6, "not enough valid plans generated");
@@ -42,7 +147,7 @@ fn balancing_does_not_hurt_simulation() {
     let out = ShaEaScheduler::new(7).schedule(&topo, &wf, &job, Budget::timed(400, 40.0));
     let plan = out.plan.unwrap();
     let balanced = balance::apply(&plan, &wf, &topo, BalanceConfig::default());
-    let cfg = SimConfig { iters: 3, seed: 5, noise: NoiseModel::off() };
+    let cfg = SimConfig { iters: 3, seed: 5, noise: NoiseModel::off(), shuffle: None };
     let off = simulate_plan(&topo, &wf, &job, &plan, &cfg).iter_time;
     let on = simulate_plan(&topo, &wf, &job, &balanced, &cfg).iter_time;
     assert!(on <= off * 1.05, "balancing hurt simulation: {on} vs {off}");
@@ -55,7 +160,7 @@ fn scenario_ordering_preserved_in_simulation() {
     let job = JobConfig::tiny();
     let out = ShaEaScheduler::new(1).schedule(&topo1, &wf, &job, Budget::timed(150, 20.0));
     let plan = out.plan.unwrap();
-    let cfg = SimConfig { iters: 2, seed: 2, noise: NoiseModel::off() };
+    let cfg = SimConfig { iters: 2, seed: 2, noise: NoiseModel::off(), shuffle: None };
     let t1 = simulate_plan(&topo1, &wf, &job, &plan, &cfg).iter_time;
     let (_, topo4, _) = fixtures::env(Scenario::MultiContinent);
     if plan.validate(&wf, &topo4, &job).is_ok() {

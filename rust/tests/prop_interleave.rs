@@ -1,0 +1,336 @@
+//! Seeded-interleaving fuzz: replay-order invariance as an actively
+//! tested guarantee.
+//!
+//! The component DES engine (`hetrl::simulator::component`) accepts a
+//! [`ShuffleConfig`] that permutes the commit order of same-timestamp
+//! ready ties *across* resource-conflict components while preserving
+//! FIFO (program) order *within* each component. By the argument in
+//! that module's docs, the entire observable schedule — start, finish,
+//! busy and makespan — is bit-invariant under every shuffle seed; the
+//! seed only perturbs the engine's internal event interleaving. This
+//! suite makes that argument an executable property:
+//!
+//! * **DES level** — on seeded random op-DAGs (quantized durations, so
+//!   ready-time ties genuinely occur), `simulate_with(Some(seed))` is
+//!   bit-identical to `simulate()` for every fuzz seed, and shuffle-off
+//!   is byte-identical to the pinned pre-component reference executor;
+//! * **replay level** — for ≥ 8 shuffle seeds × 3 trace seeds × all
+//!   five policies × both workflows (sync elastic replay and the
+//!   bounded-staleness async replay, both with a seeded fault so the
+//!   recovery charges are nonzero), the deterministic replay
+//!   fingerprint (everything except cache hit/miss telemetry:
+//!   per-record schedule/search telemetry, recovery charges, totals,
+//!   async queue telemetry) is bit-identical to the unshuffled run;
+//! * **thread matrix** — the invariance holds at every worker-thread
+//!   count from `fixtures::test_threads()` (1/2/8 by default; `1` and
+//!   `n` under `HETRL_TEST_THREADS=n`).
+
+use hetrl::asyncrl::{replay_async, AsyncReplayConfig, AsyncReplayResult};
+use hetrl::elastic::{replay, Policy, ReplayConfig, ReplayResult, TraceConfig};
+use hetrl::simulator::ShuffleConfig;
+use hetrl::testing::fixtures;
+use hetrl::topology::Scenario;
+
+/// ≥ 8 fuzz seeds, including 0 (xor with the conflict-component key
+/// must still decorrelate) and a high-entropy one.
+const SHUFFLE_SEEDS: [u64; 8] = [0, 2, 3, 5, 7, 11, 41, 0xDEAD_BEEF];
+
+/// Trace seeds for the replay-level matrices.
+const TRACE_SEEDS: [u64; 3] = [3, 9, 17];
+
+/// Lean sync replay config: short trace and small search budgets so
+/// the 3 × 5 × (1 + 8)-run matrix stays debug-mode friendly. Searches
+/// dominate replay runtime and are shuffle-independent, so shrinking
+/// them loses no coverage of the property under test. One seeded
+/// transient fault plus recovery pricing keeps the recovery charges
+/// (retry stall, rework, checkpoint writes) *nonzero*, so their
+/// invariance is pinned for real rather than vacuously at 0.0.
+fn lean_cfg(shuffle: Option<ShuffleConfig>, threads: usize) -> ReplayConfig {
+    let mut cfg = fixtures::small_replay_cfg();
+    cfg.iters = 4;
+    cfg.trace = TraceConfig { horizon: 4, n_events: 2, fault_events: 1, ..TraceConfig::default() };
+    cfg.replan.warm_budget = 16;
+    cfg.replan.cold_budget = 48;
+    cfg.replan.threads = threads;
+    cfg.recovery = hetrl::costmodel::RecoveryModel::with_interval(120.0);
+    cfg.shuffle = shuffle;
+    cfg
+}
+
+/// Lean async replay config (staleness bound 2) over [`lean_cfg`].
+fn lean_async_cfg(shuffle: Option<ShuffleConfig>, threads: usize) -> AsyncReplayConfig {
+    let mut cfg = fixtures::async_replay_cfg(2, threads);
+    cfg.base = lean_cfg(shuffle, threads);
+    cfg
+}
+
+/// Per-record search/schedule telemetry (the `tests/prop_async.rs`
+/// projection).
+type RecordFp = (usize, Vec<String>, bool, usize, usize, usize, u64, u64, usize, usize, u64);
+/// Per-record recovery charges (the `tests/prop_recover.rs` fields;
+/// a separate tuple because std's tuple `PartialEq` stops at 12).
+type RecoveryFp = (u64, u64, u64, bool);
+/// Replay totals, recovery charges included.
+type TotalsFp = (u64, u64, u64, u64, usize, usize, u64, usize);
+
+/// The deterministic projection of a replay: everything except the
+/// cache hit/miss telemetry, which is approximate when threads > 1.
+/// Merges the `tests/prop_async.rs` projection with
+/// `tests/prop_recover.rs`'s recovery charges and totals.
+fn fingerprint(r: &ReplayResult) -> (Vec<RecordFp>, Vec<RecoveryFp>, TotalsFp) {
+    let records = r
+        .records
+        .iter()
+        .map(|x| {
+            (
+                x.iter,
+                x.events.clone(),
+                x.replanned,
+                x.evals,
+                x.anytime_evals,
+                x.hypothesis_evals,
+                x.migration_secs.to_bits(),
+                x.iter_secs.to_bits(),
+                x.samples,
+                x.active_gpus,
+                x.anytime_cost.to_bits(),
+            )
+        })
+        .collect();
+    let recovery = r
+        .records
+        .iter()
+        .map(|x| {
+            (
+                x.retry_stall_secs.to_bits(),
+                x.rework_secs.to_bits(),
+                x.ckpt_secs.to_bits(),
+                x.degraded,
+            )
+        })
+        .collect();
+    let totals = (
+        r.total_secs.to_bits(),
+        r.retry_stall_secs.to_bits(),
+        r.rework_secs.to_bits(),
+        r.ckpt_secs.to_bits(),
+        r.ckpts,
+        r.degraded_iters,
+        r.ckpt_interval_secs.to_bits(),
+        r.total_evals,
+    );
+    (records, recovery, totals)
+}
+
+/// [`fingerprint`] plus the async-side queue telemetry and staleness,
+/// all bit-exact.
+#[allow(clippy::type_complexity)]
+fn async_fingerprint(
+    r: &AsyncReplayResult,
+) -> (
+    (Vec<RecordFp>, Vec<RecoveryFp>, TotalsFp),
+    Vec<(u64, usize, u64, usize)>,
+    usize,
+) {
+    (
+        fingerprint(&r.base),
+        r.queue
+            .iter()
+            .map(|q| {
+                (
+                    q.queue_depth_mean.to_bits(),
+                    q.queue_depth_max,
+                    q.producer_stall_secs.to_bits(),
+                    q.max_staleness,
+                )
+            })
+            .collect(),
+        r.max_staleness,
+    )
+}
+
+#[test]
+fn des_outcome_bit_invariant_under_every_shuffle_seed() {
+    // Random DAGs with quantized (tie-rich) durations: every fuzz seed
+    // must reproduce the unshuffled outcome to the last bit — start
+    // and finish of every op, per-resource busy time, makespan.
+    for graph_seed in 0..6u64 {
+        let g = fixtures::random_sim_graph(graph_seed, 150, 4);
+        let base = g.simulate();
+        for &s in &SHUFFLE_SEEDS {
+            let shuffled = g.simulate_with(Some(ShuffleConfig { seed: s }));
+            assert_eq!(
+                shuffled.makespan, base.makespan,
+                "graph {graph_seed}, shuffle {s}: makespan diverged"
+            );
+            assert_eq!(shuffled.start, base.start, "graph {graph_seed}, shuffle {s}: start");
+            assert_eq!(shuffled.finish, base.finish, "graph {graph_seed}, shuffle {s}: finish");
+            assert_eq!(shuffled.busy, base.busy, "graph {graph_seed}, shuffle {s}: busy");
+        }
+    }
+}
+
+#[test]
+fn shuffle_off_is_byte_identical_to_the_reference_executor() {
+    // The pre-PR contract: with no ShuffleConfig, the component engine
+    // commits ops in exactly the legacy FIFO `(ready_time, op_id)`
+    // order. The pinned reference executor *is* the pre-PR loop, so
+    // equality here is the byte-identity pin for shuffle-off mode.
+    for graph_seed in 0..6u64 {
+        let g = fixtures::random_sim_graph(graph_seed, 150, 4);
+        let off = g.simulate_with(None);
+        let fifo = g.simulate();
+        let reference = g.simulate_reference();
+        assert_eq!(off.makespan, fifo.makespan, "graph {graph_seed}: simulate_with(None) drifted");
+        assert_eq!(off.start, fifo.start, "graph {graph_seed}");
+        assert_eq!(off.finish, fifo.finish, "graph {graph_seed}");
+        assert_eq!(off.busy, fifo.busy, "graph {graph_seed}");
+        assert_eq!(off.makespan, reference.makespan, "graph {graph_seed}: vs reference");
+        assert_eq!(off.start, reference.start, "graph {graph_seed}: vs reference");
+        assert_eq!(off.finish, reference.finish, "graph {graph_seed}: vs reference");
+        assert_eq!(off.busy, reference.busy, "graph {graph_seed}: vs reference");
+    }
+}
+
+#[test]
+fn sync_replay_fingerprint_invariant_under_shuffle() {
+    // 3 trace seeds × all five policies × 8 shuffle seeds, sync
+    // workflow: every shuffled replay must reproduce the unshuffled
+    // fingerprint bit-for-bit.
+    let wf = fixtures::tiny_wf();
+    let job = hetrl::workflow::JobConfig::tiny();
+    let spec = fixtures::small_spec();
+    for policy in Policy::ALL {
+        for &seed in &TRACE_SEEDS {
+            let base = replay(
+                Scenario::MultiCountry,
+                &spec,
+                &wf,
+                &job,
+                policy,
+                &lean_cfg(None, 1),
+                seed,
+            );
+            let want = fingerprint(&base);
+            for &s in &SHUFFLE_SEEDS {
+                let got = replay(
+                    Scenario::MultiCountry,
+                    &spec,
+                    &wf,
+                    &job,
+                    policy,
+                    &lean_cfg(Some(ShuffleConfig { seed: s }), 1),
+                    seed,
+                );
+                assert_eq!(
+                    fingerprint(&got),
+                    want,
+                    "sync replay not shuffle-invariant ({policy:?}, trace seed {seed}, shuffle {s})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn async_replay_fingerprint_invariant_under_shuffle() {
+    // Same matrix for the bounded-staleness async workflow (k = 2):
+    // the fingerprint here additionally pins the queue telemetry
+    // (depths, producer stall, staleness) bit-exactly.
+    let wf = fixtures::tiny_wf();
+    let job = fixtures::async_job();
+    let spec = fixtures::small_spec();
+    for policy in Policy::ALL {
+        for &seed in &TRACE_SEEDS {
+            let base = replay_async(
+                Scenario::MultiCountry,
+                &spec,
+                &wf,
+                &job,
+                policy,
+                &lean_async_cfg(None, 1),
+                seed,
+            );
+            let want = async_fingerprint(&base);
+            for &s in &SHUFFLE_SEEDS {
+                let got = replay_async(
+                    Scenario::MultiCountry,
+                    &spec,
+                    &wf,
+                    &job,
+                    policy,
+                    &lean_async_cfg(Some(ShuffleConfig { seed: s }), 1),
+                    seed,
+                );
+                assert_eq!(
+                    async_fingerprint(&got),
+                    want,
+                    "async replay not shuffle-invariant ({policy:?}, trace seed {seed}, shuffle {s})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn shuffle_invariance_holds_at_every_thread_count() {
+    // A reduced combo swept over the worker-thread matrix
+    // (`HETRL_TEST_THREADS` honored: default {1, 2, 8}, `n` ⇒ {1, n}).
+    // The shuffled fingerprint must equal the unshuffled one at the
+    // *same* thread count — and the fingerprint itself is already
+    // pinned thread-invariant by tests/prop_async.rs, so transitively
+    // every (threads, shuffle) cell agrees.
+    let wf = fixtures::tiny_wf();
+    let job = fixtures::async_job();
+    let spec = fixtures::small_spec();
+    let seed = TRACE_SEEDS[0];
+    for threads in fixtures::test_threads() {
+        let sync_base = fingerprint(&replay(
+            Scenario::MultiCountry,
+            &spec,
+            &wf,
+            &job,
+            Policy::Warm,
+            &lean_cfg(None, threads),
+            seed,
+        ));
+        let async_base = async_fingerprint(&replay_async(
+            Scenario::MultiCountry,
+            &spec,
+            &wf,
+            &job,
+            Policy::Warm,
+            &lean_async_cfg(None, threads),
+            seed,
+        ));
+        for &s in &SHUFFLE_SEEDS[..2] {
+            let shuffle = Some(ShuffleConfig { seed: s });
+            let sync_got = fingerprint(&replay(
+                Scenario::MultiCountry,
+                &spec,
+                &wf,
+                &job,
+                Policy::Warm,
+                &lean_cfg(shuffle, threads),
+                seed,
+            ));
+            assert_eq!(
+                sync_got, sync_base,
+                "sync replay not shuffle-invariant at {threads} threads (shuffle {s})"
+            );
+            let async_got = async_fingerprint(&replay_async(
+                Scenario::MultiCountry,
+                &spec,
+                &wf,
+                &job,
+                Policy::Warm,
+                &lean_async_cfg(shuffle, threads),
+                seed,
+            ));
+            assert_eq!(
+                async_got, async_base,
+                "async replay not shuffle-invariant at {threads} threads (shuffle {s})"
+            );
+        }
+    }
+}

@@ -182,7 +182,7 @@ fn prop_simulator_makespan_at_least_critical_compute() {
             let Some(plan) = random_plan(&wf, &topo, &job, seed as u64) else {
                 return true;
             };
-            let cfg = SimConfig { iters: 1, seed: 1, noise: NoiseModel::off() };
+            let cfg = SimConfig { iters: 1, seed: 1, noise: NoiseModel::off(), shuffle: None };
             let r = simulate_plan(&topo, &wf, &job, &plan, &cfg);
             r.per_task
                 .iter()
