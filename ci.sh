@@ -18,6 +18,18 @@
 set -euo pipefail
 cd "$(dirname "$0")/rust"
 
+echo "== DES shuffle-invariance differential model (python, no-toolchain gate) =="
+# Bit-exact stdlib-Python port of the DES engine's RNG, executors,
+# conflict-component rank construction and the random_sim_graph
+# fixture: runs the prop_interleave DES fuzz (plus wider zero-duration
+# adversarial sweeps and the historical mid-instant-release
+# counterexample) even where no Rust toolchain exists.
+if command -v python3 >/dev/null 2>&1; then
+    python3 ../python/tests/test_des_shuffle.py
+else
+    echo "ci.sh: WARNING - no python3 on PATH; skipping DES model." >&2
+fi
+
 if ! command -v cargo >/dev/null 2>&1; then
     echo "ci.sh: WARNING - no rust toolchain on PATH; skipping build/test." >&2
     echo "ci.sh: the crate is dependency-free; any stock cargo can build it." >&2

@@ -1,0 +1,447 @@
+"""Executable differential model of the Rust DES engine's shuffle
+invariance (``rust/src/simulator/{des,component}.rs``).
+
+This is a line-faithful port of the pieces that carry the
+replay-order-invariance proof obligation: the crate's PRNG
+(SplitMix64 -> xoshiro256**), the pinned reference executor
+(``SimGraph::simulate_reference``), the component-engine executor with
+its ``(ready_time, tie_rank, op_id)`` ready heap, the conflict-component
+rank construction, and the ``testing::fixtures::random_sim_graph``
+fixture. Python floats are IEEE-754 doubles and the simulator only
+uses ``max``/``+``/``*``, so outcomes here are bit-comparable to the
+Rust ones.
+
+It exists because the invariance argument was once *wrong in a way a
+desk-check missed*: ranking zero-duration ops (barriers, dur-0 queue
+ops) as free-floating singleton components is unsound — their commit
+releases successors *mid-instant*, so their pop position gates which
+same-component op reaches a contended resource first. The fixed rank
+construction couples every zero-duration op into its successors'
+components. This suite
+
+* reproduces the historical counterexample against the pre-fix rank
+  scheme (a regression canary: the test FAILS if the unsound scheme
+  ever looks invariant, i.e. the canary itself rots),
+* runs the same DES-level fuzz as ``rust/tests/prop_interleave.rs``
+  (identical graphs via the ported RNG + fixture, identical shuffle
+  seeds) against the fixed scheme,
+* and fuzzes far wider: dense-tie graphs, zero-duration-heavy graphs,
+  adversarial *arbitrary* rank assignments (any per-component rank
+  must be invariant, not just the seeded ones).
+
+Runs with pytest or directly: ``python3 python/tests/test_des_shuffle.py``.
+"""
+
+import heapq
+import itertools
+
+MASK = (1 << 64) - 1
+USIZE_MAX = (1 << 64) - 1  # tag for barriers; value irrelevant to the sim
+
+
+# ----------------------------------------------------------------------
+# util::rng (SplitMix64 seeding xoshiro256**), bit-exact
+# ----------------------------------------------------------------------
+
+def _splitmix64(state):
+    state = (state + 0x9E37_79B9_7F4A_7C15) & MASK
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58_476D_1CE4_E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D0_49BB_1331_11EB) & MASK
+    return state, (z ^ (z >> 31)) & MASK
+
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+class Rng:
+    def __init__(self, seed):
+        sm = seed & MASK
+        s = []
+        for _ in range(4):
+            sm, v = _splitmix64(sm)
+            s.append(v)
+        self.s = s
+
+    def next_u64(self):
+        s = self.s
+        result = (_rotl((s[1] * 5) & MASK, 7) * 9) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def below(self, n):
+        assert n > 0
+        zone = MASK - (MASK % n)
+        while True:
+            v = self.next_u64()
+            if v < zone:
+                return v % n
+
+    def chance(self, p):
+        return self.f64() < p
+
+
+def tie_rank(seed, key):
+    """ShuffleConfig::tie_rank: one draw off Rng(seed ^ key * GOLDEN)."""
+    return Rng(seed ^ ((key * 0x9E37_79B9_7F4A_7C15) & MASK)).next_u64()
+
+
+# ----------------------------------------------------------------------
+# simulator::des::SimGraph + the two executors
+# ----------------------------------------------------------------------
+
+class Op:
+    __slots__ = ("resources", "duration", "deps", "tag")
+
+    def __init__(self, resources, duration, deps, tag):
+        self.resources = resources
+        self.duration = duration
+        self.deps = deps
+        self.tag = tag
+
+
+class SimGraph:
+    def __init__(self, n_resources):
+        self.ops = []
+        self.n_resources = n_resources
+
+    def add_resource(self):
+        self.n_resources += 1
+        return self.n_resources - 1
+
+    def add(self, resources, duration, deps, tag):
+        op_id = len(self.ops)
+        assert all(r < self.n_resources for r in resources)
+        assert all(d < op_id for d in deps)
+        assert duration >= 0.0
+        self.ops.append(Op(resources, duration, deps, tag))
+        return op_id
+
+    def barrier(self, deps):
+        return self.add([], 0.0, deps, USIZE_MAX)
+
+    def ready_of(self, op_id, finish):
+        r = 0.0
+        for d in self.ops[op_id].deps:
+            r = max(r, finish[d])
+        return r
+
+
+def _run(graph, rank):
+    """One executor loop, ready heap keyed (ready, rank[id], id).
+
+    With rank[id] == id this is ``simulate_reference`` /
+    shuffle-off ``simulate()``; any other rank models a ShuffleConfig.
+    The component Engine adds nothing observable while ResourceOwners
+    are passive (the executor is the only component with finite ticks),
+    so this loop *is* the engine semantics for both Rust code paths.
+    """
+    n = len(graph.ops)
+    indeg = [len(op.deps) for op in graph.ops]
+    rdeps = [[] for _ in range(n)]
+    for op_id, op in enumerate(graph.ops):
+        for d in op.deps:
+            rdeps[d].append(op_id)
+    free = [0.0] * graph.n_resources
+    busy = [0.0] * graph.n_resources
+    start = [None] * n
+    finish = [None] * n
+    heap = [(0.0, rank[i], i) for i in range(n) if indeg[i] == 0]
+    heapq.heapify(heap)
+    makespan = 0.0
+    done = 0
+    while heap:
+        rt, _, op_id = heapq.heappop(heap)
+        op = graph.ops[op_id]
+        t0 = rt
+        for r in op.resources:
+            t0 = max(t0, free[r])
+        t1 = t0 + op.duration
+        for r in op.resources:
+            free[r] = t1
+            busy[r] += op.duration
+        start[op_id] = t0
+        finish[op_id] = t1
+        makespan = max(makespan, t1)
+        done += 1
+        for succ in rdeps[op_id]:
+            indeg[succ] -= 1
+            if indeg[succ] == 0:
+                heapq.heappush(heap, (graph.ready_of(succ, finish), rank[succ], succ))
+    assert done == n, "cycle in sim graph"
+    return makespan, start, finish, busy
+
+
+def _find(parent, x):
+    while parent[x] != x:
+        parent[x] = parent[parent[x]]
+        x = parent[x]
+    return x
+
+
+def _unite(parent, a, b):
+    ra, rb = _find(parent, a), _find(parent, b)
+    parent[max(ra, rb)] = min(ra, rb)
+
+
+def rank_fifo(graph):
+    return list(range(len(graph.ops)))
+
+
+def rank_prefix_scheme(graph, seed):
+    """The UNSOUND pre-fix rank construction (union-find over resources
+    only; zero-resource ops are free-floating singletons). Kept as the
+    counterexample target."""
+    n = len(graph.ops)
+    nr = graph.n_resources
+    parent = list(range(nr))
+    for op in graph.ops:
+        for a, b in zip(op.resources, op.resources[1:]):
+            _unite(parent, a, b)
+    out = []
+    for op_id, op in enumerate(graph.ops):
+        key = _find(parent, op.resources[0]) if op.resources else nr + op_id
+        out.append(tie_rank(seed, key))
+    return out
+
+
+def component_keys(graph):
+    """The FIXED conflict components: union-find over resource nodes
+    plus a virtual node per op; ops join their resources, and every
+    zero-duration op is coupled into each successor's component.
+    Mirrors OpExecutor::new in rust/src/simulator/component.rs."""
+    n = len(graph.ops)
+    nr = graph.n_resources
+    rdeps = [[] for _ in range(n)]
+    for op_id, op in enumerate(graph.ops):
+        for d in op.deps:
+            rdeps[d].append(op_id)
+    parent = list(range(nr + n))
+    for op_id, op in enumerate(graph.ops):
+        for r in op.resources:
+            _unite(parent, nr + op_id, r)
+        if op.duration == 0.0:
+            for succ in rdeps[op_id]:
+                _unite(parent, nr + op_id, nr + succ)
+    return [_find(parent, nr + op_id) for op_id in range(n)]
+
+
+def rank_fixed_scheme(graph, seed):
+    return [tie_rank(seed, key) for key in component_keys(graph)]
+
+
+def simulate(graph):
+    return _run(graph, rank_fifo(graph))
+
+
+def simulate_with(graph, seed):
+    return _run(graph, rank_fixed_scheme(graph, seed))
+
+
+# ----------------------------------------------------------------------
+# testing::fixtures::random_sim_graph, bit-exact port
+# ----------------------------------------------------------------------
+
+def random_sim_graph(seed, n_ops, n_resources):
+    assert n_resources > 0
+    rng = Rng(seed ^ 0x51D5_EED5_0DA6_0000)
+    g = SimGraph(n_resources)
+    links = [g.add_resource() for _ in range(min(n_resources, 2))]
+
+    def pick_deps(upto, max_n):
+        n = rng.below(max_n + 1)
+        deps = [rng.below(upto) for _ in range(n)]
+        return sorted(set(deps))
+
+    for i in range(n_ops):
+        if i > 0 and rng.chance(0.125):
+            g.barrier(pick_deps(i, 3))
+            continue
+        resources = [rng.below(n_resources)]
+        if rng.chance(0.25):
+            r2 = rng.below(n_resources)
+            if r2 != resources[0]:
+                resources.append(r2)
+        if rng.chance(0.2):
+            resources.append(links[rng.below(len(links))])
+        duration = rng.below(5) * 0.25
+        deps = [] if i == 0 else pick_deps(i, 2)
+        g.add(resources, duration, deps, i % 4)
+    return g
+
+
+def zero_heavy_graph(seed, n_ops, n_resources):
+    """Adversarial fixture: ~half the ops are zero-duration (barriers
+    and dur-0 resource ops), all durations quantized to {0, 1} so
+    nearly every ready event is a same-instant tie."""
+    rng = Rng(seed ^ 0x0DDB_A11_F00D)
+    g = SimGraph(n_resources)
+    for i in range(n_ops):
+        deps = sorted({rng.below(i) for _ in range(rng.below(3))}) if i else []
+        if rng.chance(0.25):
+            g.barrier(deps)
+            continue
+        resources = sorted({rng.below(n_resources) for _ in range(1 + rng.below(2))})
+        duration = 0.0 if rng.chance(0.35) else 1.0
+        g.add(resources, duration, deps, 0)
+    return g
+
+
+# The exact constants from rust/tests/prop_interleave.rs.
+SHUFFLE_SEEDS = [0, 2, 3, 5, 7, 11, 41, 0xDEAD_BEEF]
+
+
+def _counterexample_graph():
+    # REVIEW counterexample: A=barrier(id 0, dur 0), C=op(id 1, res 0,
+    # dep A), B=op(id 2, res 0), all ready at t=0.
+    g = SimGraph(1)
+    a = g.barrier([])
+    g.add([0], 1.0, [a], 0)
+    g.add([0], 1.0, [], 0)
+    return g
+
+
+def test_rng_port_sanity():
+    # xoshiro256** self-consistency of the port: deterministic per
+    # seed, seed-sensitive, f64 in [0, 1).
+    a, b = Rng(42), Rng(42)
+    assert [a.next_u64() for _ in range(64)] == [b.next_u64() for _ in range(64)]
+    assert Rng(1).next_u64() != Rng(2).next_u64()
+    r = Rng(7)
+    assert all(0.0 <= r.f64() < 1.0 for _ in range(10_000))
+    assert tie_rank(7, 3) == tie_rank(7, 3)
+    ranks7 = [tie_rank(7, i) for i in range(64)]
+    assert ranks7 != [tie_rank(8, i) for i in range(64)]
+    assert any(ranks7[i] < ranks7[i - 1] for i in range(1, 64))
+
+
+def test_prefix_scheme_reproduces_the_review_counterexample():
+    # Canary: the unsound scheme MUST diverge (if it ever stops
+    # diverging, the model no longer reproduces the bug and every
+    # other pass here proves nothing).
+    g = _counterexample_graph()
+    base = simulate(g)
+    assert base[1] == [0.0, 0.0, 1.0]  # start = [A, C, B]
+    diverged = [
+        s for s in range(256)
+        if _run(g, rank_prefix_scheme(g, s))[1] != base[1]
+    ]
+    assert diverged, "unsound rank scheme failed to reproduce the bug"
+    # And the divergence is exactly the predicted one: B before C.
+    s = diverged[0]
+    assert _run(g, rank_prefix_scheme(g, s))[1] == [0.0, 1.0, 0.0]
+
+
+def test_fixed_scheme_passes_the_counterexample():
+    g = _counterexample_graph()
+    base = simulate(g)
+    for s in range(256):
+        assert _run(g, rank_fixed_scheme(g, s)) == base, f"seed {s}"
+
+
+def test_zero_duration_chain_couples_transitively():
+    # q=op(res 1, dur 0) -> z=barrier -> c=op(res 0), racing
+    # b=op(res 0): the dur-0 chain must ride into res 0's component.
+    g = SimGraph(2)
+    q = g.add([1], 0.0, [], 0)
+    z = g.barrier([q])
+    g.add([0], 1.0, [z], 0)
+    g.add([0], 1.0, [], 0)
+    base = simulate(g)
+    assert base[1] == [0.0, 0.0, 0.0, 1.0]
+    assert any(_run(g, rank_prefix_scheme(g, s)) != base for s in range(256))
+    for s in range(256):
+        assert _run(g, rank_fixed_scheme(g, s)) == base, f"seed {s}"
+    # All four ops (and both resources) collapse into one component.
+    assert len(set(component_keys(g))) == 1
+
+
+def test_prop_interleave_des_fuzz_mirror():
+    # The exact DES-level matrix from rust/tests/prop_interleave.rs:
+    # graph seeds 0..6 x 150 ops x 4 devices, 8 shuffle seeds —
+    # identical graphs (bit-exact RNG + fixture port), identical
+    # seeds. This is the suite the review predicted would fail
+    # pre-fix; the canary below confirms it did.
+    prefix_diverged = 0
+    for graph_seed in range(6):
+        g = random_sim_graph(graph_seed, 150, 4)
+        base = simulate(g)
+        ref = _run(g, rank_fifo(g))
+        assert ref == base  # shuffle-off == reference executor
+        for s in SHUFFLE_SEEDS:
+            assert simulate_with(g, s) == base, f"graph {graph_seed}, shuffle {s}"
+            if _run(g, rank_prefix_scheme(g, s)) != base:
+                prefix_diverged += 1
+    assert prefix_diverged > 0, "canary: old scheme passed the prop_interleave fuzz"
+
+
+def test_wide_fuzz_random_graphs():
+    # Far beyond the Rust matrix: 3 sizes x 40 graph seeds x 8 shuffle
+    # seeds on the shared fixture.
+    for n_ops, n_res in [(30, 2), (80, 3), (150, 4)]:
+        for graph_seed in range(40):
+            g = random_sim_graph(1000 + graph_seed, n_ops, n_res)
+            base = simulate(g)
+            for s in SHUFFLE_SEEDS:
+                assert simulate_with(g, s) == base, \
+                    f"{n_ops} ops, graph {graph_seed}, shuffle {s}"
+
+
+def test_wide_fuzz_zero_duration_heavy():
+    # The adversarial regime the bug lived in: ~half zero durations,
+    # every ready event a tie.
+    for graph_seed in range(60):
+        g = zero_heavy_graph(graph_seed, 60, 3)
+        base = simulate(g)
+        for s in SHUFFLE_SEEDS:
+            assert simulate_with(g, s) == base, f"graph {graph_seed}, shuffle {s}"
+
+
+def test_arbitrary_component_rank_assignments_are_invariant():
+    # Stronger than seeded ranks: the proof claims invariance under
+    # ANY rank that is constant per (fixed-scheme) component. Sweep
+    # every permutation of component order on small graphs, plus
+    # random assignments on bigger ones.
+    for graph_seed in range(30):
+        g = zero_heavy_graph(5000 + graph_seed, 9, 2)
+        base = simulate(g)
+        keys = component_keys(g)
+        comps = sorted(set(keys))
+        if len(comps) > 5:
+            continue
+        for perm in itertools.permutations(range(len(comps))):
+            order = dict(zip(comps, perm))
+            rank = [order[k] for k in keys]
+            assert _run(g, rank) == base, f"graph {graph_seed}, perm {perm}"
+    rng = Rng(99)
+    for graph_seed in range(20):
+        g = random_sim_graph(7000 + graph_seed, 100, 3)
+        base = simulate(g)
+        keys = component_keys(g)
+        for _ in range(10):
+            assign = {k: rng.next_u64() for k in set(keys)}
+            rank = [assign[k] for k in keys]
+            assert _run(g, rank) == base, f"graph {graph_seed}"
+
+
+def main():
+    tests = [(name, fn) for name, fn in sorted(globals().items())
+             if name.startswith("test_") and callable(fn)]
+    for name, fn in tests:
+        fn()
+        print(f"ok   {name}")
+    print(f"{len(tests)} passed")
+
+
+if __name__ == "__main__":
+    main()

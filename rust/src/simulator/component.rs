@@ -31,22 +31,44 @@
 //!
 //! With a shuffle seed set, same-timestamp ready ties are permuted by
 //! a deterministic seeded `tie_rank`; ops with distinct ready times
-//! are never reordered. The rank is assigned per *conflict component*
-//! (ops transitively sharing a resource), not per op: ops that contend
-//! for a resource keep their FIFO (op id = program issue) order, which
-//! is load-bearing — e.g. microbatch issue order through a pipeline
-//! stage is a permutation-flow-shop sequence whose reordering would
-//! legitimately change the makespan. Ops in *different* components
-//! touch disjoint resource state, their ready times are fixed by
-//! dependency finishes alone, and within each component the relative
-//! order is unchanged — so the entire [`SimOutcome`] (start, finish,
-//! busy, makespan, bit for bit) is invariant under every shuffle seed.
-//! The shuffle therefore perturbs the engine's *internal* event
-//! interleaving (the thing a latent order-sensitivity bug would
-//! depend on) while pinning the *observable* schedule; with it off
-//! (`None`, the default) the rank is the op id itself and the order is
-//! byte-identical to FIFO. `tests/prop_interleave.rs` fuzzes this
-//! invariance across random DAGs and both replay workflows.
+//! are never reordered. The rank is assigned per *conflict component*,
+//! not per op: ops that contend for a resource keep their FIFO (op id
+//! = program issue) order, which is load-bearing — e.g. microbatch
+//! issue order through a pipeline stage is a permutation-flow-shop
+//! sequence whose reordering would legitimately change the makespan.
+//!
+//! A conflict component is the union-find closure of two couplings:
+//! ops transitively sharing a resource, **and every zero-duration op
+//! joined into its successors' components**. The second rule is what
+//! makes the invariance sound. An op with positive duration that
+//! commits at instant `t` releases its successors strictly after `t`,
+//! so every op that becomes ready at an instant is already in the
+//! ready heap when the engine starts draining that instant — except
+//! when the releasing dependency is a zero-duration op committing at
+//! the same instant (a barrier, or a dur-0 resource op whose resources
+//! are idle). Such a *mid-instant release* makes the releaser's pop
+//! position observable: A=barrier(dur 0), C=op(res 0, dep A),
+//! B=op(res 0), all ready at t=0 — FIFO pops A, C, B (start `[0,0,1]`)
+//! but any rank placing A after res 0's component pops B first (start
+//! `[0,1,0]`). Coupling A into C's component pins A's pop to FIFO
+//! order relative to B and C.
+//!
+//! With that rule, every mid-instant release is an intra-component
+//! event, so each component's commit sequence is a self-contained
+//! "least op id currently ready" process — identical under FIFO and
+//! under every rank assignment, whatever the cross-component
+//! interleaving. Components touch disjoint resource state and ready
+//! times are dependency finishes, so by induction over instants the
+//! entire [`SimOutcome`] (start, finish, busy, makespan, bit for bit)
+//! is invariant under every shuffle seed. The shuffle therefore
+//! perturbs the engine's *internal* event interleaving (the thing a
+//! latent order-sensitivity bug would depend on) while pinning the
+//! *observable* schedule; with it off (`None`, the default) the rank
+//! is the op id itself and the order is byte-identical to FIFO.
+//! `tests/prop_interleave.rs` fuzzes this invariance across random
+//! DAGs (tie-rich, ~1 in 8 barriers, ~1 in 5 zero durations) and both
+//! replay workflows; `python/tests/test_des_shuffle.py` runs the same
+//! fuzz against an executable Python port of this engine.
 
 use std::any::Any;
 use std::cmp::Reverse;
@@ -66,8 +88,10 @@ pub type ComponentId = usize;
 /// `(ready_time, op id)` order, byte-identical to the legacy executor.
 /// On, ops that become ready at the *same* instant are reordered by a
 /// deterministic seeded rank of their conflict component (ops
-/// transitively sharing a resource — see the module docs for why
-/// within-component FIFO order must be preserved and why the resulting
+/// transitively sharing a resource, plus every zero-duration op
+/// coupled into its successors' components — see the module docs for
+/// why within-component FIFO order must be preserved, why mid-instant
+/// releases force the zero-duration coupling, and why the resulting
 /// schedule is bit-invariant). Distinct ready times are never
 /// reordered, and any two runs with the same seed still produce the
 /// identical event order — this fuzzes the tie-break, not determinism.
@@ -230,18 +254,20 @@ impl Engine {
 pub struct ResourceOwner {
     cid: ComponentId,
     kind: ResourceKind,
-    /// Time each resource becomes available, indexed by *global*
-    /// resource id (entries of other kinds stay untouched at 0).
+    /// Time each resource becomes available, indexed by the
+    /// *kind-local* resource index (`run_sim`'s `local_of` map turns a
+    /// global resource id into its owner's local index), so each owner
+    /// allocates exactly as many slots as it owns resources.
     free: Vec<f64>,
     /// Cumulative busy time per resource (same indexing).
     busy: Vec<f64>,
 }
 
 impl ResourceOwner {
-    /// Owner of every resource of `kind` in a universe of
-    /// `n_resources`.
-    pub fn new(cid: ComponentId, kind: ResourceKind, n_resources: usize) -> Self {
-        ResourceOwner { cid, kind, free: vec![0.0; n_resources], busy: vec![0.0; n_resources] }
+    /// Owner of `n_kind` resources of `kind`, addressed by kind-local
+    /// index `0..n_kind`.
+    pub fn new(cid: ComponentId, kind: ResourceKind, n_kind: usize) -> Self {
+        ResourceOwner { cid, kind, free: vec![0.0; n_kind], busy: vec![0.0; n_kind] }
     }
 
     /// The kind of resource this component owns.
@@ -249,15 +275,16 @@ impl ResourceOwner {
         self.kind
     }
 
-    /// Time resource `r` becomes available.
-    pub fn free_at(&self, r: usize) -> f64 {
-        self.free[r]
+    /// Time the resource with kind-local index `l` becomes available.
+    pub fn free_at(&self, l: usize) -> f64 {
+        self.free[l]
     }
 
-    /// Occupy resource `r` until `until`, accruing `dur` busy time.
-    pub fn occupy(&mut self, r: usize, until: f64, dur: f64) {
-        self.free[r] = until;
-        self.busy[r] += dur;
+    /// Occupy kind-local resource `l` until `until`, accruing `dur`
+    /// busy time.
+    pub fn occupy(&mut self, l: usize, until: f64, dur: f64) {
+        self.free[l] = until;
+        self.busy[l] += dur;
     }
 }
 
@@ -308,6 +335,8 @@ pub struct OpExecutor {
     cid: ComponentId,
     /// Owning component per global resource id.
     owner_of: Vec<ComponentId>,
+    /// Kind-local index per global resource id (the owner's slot).
+    local_of: Vec<usize>,
     /// Ready-heap tie rank per op: the op id itself with the shuffle
     /// off, else the seeded rank of the op's conflict component.
     rank: Vec<u64>,
@@ -327,6 +356,7 @@ impl OpExecutor {
         cid: ComponentId,
         graph: &SimGraph,
         owner_of: Vec<ComponentId>,
+        local_of: Vec<usize>,
         shuffle: Option<ShuffleConfig>,
     ) -> Self {
         let n = graph.ops.len();
@@ -341,13 +371,27 @@ impl OpExecutor {
         let rank = match shuffle {
             None => (0..n as u64).collect(),
             Some(s) => {
-                // Conflict components: union-find over resources, ops
-                // joined through the resources they co-use. Ops in the
-                // same component share a seeded rank (so their FIFO
-                // order survives); zero-resource ops (barriers) are
-                // singleton components and shuffle freely.
+                // Conflict components: union-find over one node per
+                // resource plus one virtual node per op (node `nr + id`
+                // for op `id`, so resource-less barriers have an
+                // identity too). An op joins every resource it uses,
+                // which also merges co-used resources, so ops that
+                // transitively share a resource land in one component
+                // and keep their FIFO order under a shared rank.
+                //
+                // Zero-duration ops are additionally coupled into each
+                // *successor*'s component: a zero-duration commit can
+                // release its successors at the very instant being
+                // drained, so its position among same-instant pops
+                // gates when those successors enter the ready heap
+                // relative to their component peers. Shuffling it
+                // independently would reorder arrivals at a contended
+                // resource (see the module docs' counterexample); with
+                // the coupling, every mid-instant release is an
+                // intra-component event and FIFO order within the
+                // component is preserved.
                 let nr = graph.n_resources();
-                let mut parent: Vec<usize> = (0..nr).collect();
+                let mut parent: Vec<usize> = (0..nr + n).collect();
                 fn find(parent: &mut [usize], mut x: usize) -> usize {
                     while parent[x] != x {
                         parent[x] = parent[parent[x]];
@@ -355,26 +399,27 @@ impl OpExecutor {
                     }
                     x
                 }
-                for op in &graph.ops {
-                    for w in op.resources.windows(2) {
-                        let (a, b) = (find(&mut parent, w[0]), find(&mut parent, w[1]));
-                        parent[a.max(b)] = a.min(b);
+                fn unite(parent: &mut [usize], a: usize, b: usize) {
+                    let (ra, rb) = (find(parent, a), find(parent, b));
+                    parent[ra.max(rb)] = ra.min(rb);
+                }
+                for (id, op) in graph.ops.iter().enumerate() {
+                    for &r in &op.resources {
+                        unite(&mut parent, nr + id, r);
+                    }
+                    if op.duration == 0.0 {
+                        for &succ in &rdeps[id] {
+                            unite(&mut parent, nr + id, nr + succ);
+                        }
                     }
                 }
-                (0..n)
-                    .map(|id| {
-                        let key = match graph.ops[id].resources.first() {
-                            Some(&r) => find(&mut parent, r) as u64,
-                            None => (nr + id) as u64,
-                        };
-                        s.tie_rank(key)
-                    })
-                    .collect()
+                (0..n).map(|id| s.tie_rank(find(&mut parent, nr + id) as u64)).collect()
             }
         };
         let mut ex = OpExecutor {
             cid,
             owner_of,
+            local_of,
             rank,
             indeg,
             rdeps,
@@ -431,11 +476,16 @@ impl Component for OpExecutor {
         let op = &ctx.graph.ops[id];
         let mut t0 = rt;
         for &r in &op.resources {
-            t0 = t0.max(ctx.peer_mut::<ResourceOwner>(self.owner_of[r]).free_at(r));
+            t0 = t0
+                .max(ctx.peer_mut::<ResourceOwner>(self.owner_of[r]).free_at(self.local_of[r]));
         }
         let t1 = t0 + op.duration;
         for &r in &op.resources {
-            ctx.peer_mut::<ResourceOwner>(self.owner_of[r]).occupy(r, t1, op.duration);
+            ctx.peer_mut::<ResourceOwner>(self.owner_of[r]).occupy(
+                self.local_of[r],
+                t1,
+                op.duration,
+            );
         }
         self.start[id] = t0;
         self.finish[id] = t1;
@@ -465,35 +515,48 @@ impl Component for OpExecutor {
 pub(super) fn run_sim(graph: &SimGraph, shuffle: Option<ShuffleConfig>) -> SimOutcome {
     let nr = graph.n_resources();
     let mut engine = Engine::new();
-    // Owner components in fixed kind order; resources map to their
-    // kind's owner.
+    // Owner components in fixed kind order; each global resource maps
+    // to its kind's owner and a kind-local slot within it (owners
+    // allocate only as many slots as they own resources).
+    let kind_ix: Vec<usize> = (0..nr)
+        .map(|r| {
+            ResourceKind::ALL
+                .iter()
+                .position(|&k| k == graph.resource_kind(r))
+                .expect("resource kind not in ResourceKind::ALL")
+        })
+        .collect();
+    let mut kind_counts = [0usize; ResourceKind::ALL.len()];
+    let mut local_of = vec![0usize; nr];
+    for r in 0..nr {
+        local_of[r] = kind_counts[kind_ix[r]];
+        kind_counts[kind_ix[r]] += 1;
+    }
     let mut owner_cid: [Option<ComponentId>; ResourceKind::ALL.len()] =
         [None; ResourceKind::ALL.len()];
     for (ki, &kind) in ResourceKind::ALL.iter().enumerate() {
-        if (0..nr).any(|r| graph.resource_kind(r) == kind) {
+        if kind_counts[ki] > 0 {
             let cid = engine.next_id();
-            owner_cid[ki] = Some(engine.add(Box::new(ResourceOwner::new(cid, kind, nr))));
+            owner_cid[ki] =
+                Some(engine.add(Box::new(ResourceOwner::new(cid, kind, kind_counts[ki]))));
         }
     }
     let owner_of: Vec<ComponentId> = (0..nr)
-        .map(|r| {
-            let ki = ResourceKind::ALL
-                .iter()
-                .position(|&k| k == graph.resource_kind(r))
-                .expect("resource kind not in ResourceKind::ALL");
-            owner_cid[ki].expect("resource kind without owner component")
-        })
+        .map(|r| owner_cid[kind_ix[r]].expect("resource kind without owner component"))
         .collect();
     let exec_cid = engine.next_id();
-    engine.add(Box::new(OpExecutor::new(exec_cid, graph, owner_of, shuffle)));
+    engine.add(Box::new(OpExecutor::new(
+        exec_cid,
+        graph,
+        owner_of.clone(),
+        local_of.clone(),
+        shuffle,
+    )));
     engine.run(graph);
 
     let mut busy = vec![0.0f64; nr];
-    for cid in owner_cid.into_iter().flatten() {
-        let owner = engine.component_mut::<ResourceOwner>(cid);
-        for r in 0..nr {
-            busy[r] += owner.busy[r];
-        }
+    for r in 0..nr {
+        busy[r] = engine.component_mut::<ResourceOwner>(owner_of[r]).busy[local_of[r]];
     }
     let ex = engine.component_mut::<OpExecutor>(exec_cid);
     assert_eq!(ex.committed(), graph.ops.len(), "cycle in sim graph");
@@ -594,6 +657,51 @@ mod tests {
             assert_eq!(o.start, base.start);
             assert_eq!(o.finish, base.finish);
             assert_eq!(o.busy, base.busy);
+        }
+    }
+
+    #[test]
+    fn zero_duration_release_not_shuffled_across_a_contended_resource() {
+        // The mid-instant-release counterexample from the module docs:
+        // A=barrier(dur 0), C=op(res 0, dep A), B=op(res 0), all ready
+        // at t=0. FIFO commits A, C, B (start [0,0,1]); any rank
+        // placing the barrier after res 0's component would commit B
+        // first (start [0,1,0]). The zero-duration coupling in the
+        // rank union-find must pin FIFO order for every seed.
+        let mut g = SimGraph::new(1);
+        let a = g.barrier(vec![]);
+        let c = g.add(vec![0], 1.0, vec![a], 0);
+        let b = g.add(vec![0], 1.0, vec![], 0);
+        let base = g.simulate();
+        assert_eq!((base.start[c], base.start[b]), (0.0, 1.0));
+        for seed in 0..64u64 {
+            let o = g.simulate_with(Some(ShuffleConfig { seed }));
+            assert_eq!(o.start, base.start, "seed {seed}: start");
+            assert_eq!(o.finish, base.finish, "seed {seed}: finish");
+            assert_eq!(o.busy, base.busy, "seed {seed}: busy");
+        }
+    }
+
+    #[test]
+    fn zero_duration_chains_stay_coupled_transitively() {
+        // A dur-0 resource op (async-pipeline queue enq/deq shape)
+        // releasing through a dur-0 chain into a *different* resource's
+        // component: q=op(res 1, dur 0) → z=barrier → c=op(res 0),
+        // racing b=op(res 0) at t=0. FIFO pops q, z, c, b (start
+        // [0,0,0,1]); only the transitive coupling q ∪ z ∪ c keeps the
+        // chain's pop positions FIFO relative to b under every seed.
+        let mut g = SimGraph::new(2);
+        let q = g.add(vec![1], 0.0, vec![], 0);
+        let z = g.barrier(vec![q]);
+        let c = g.add(vec![0], 1.0, vec![z], 0);
+        let b = g.add(vec![0], 1.0, vec![], 0);
+        let base = g.simulate();
+        assert_eq!((base.start[c], base.start[b]), (0.0, 1.0));
+        for seed in 0..64u64 {
+            let o = g.simulate_with(Some(ShuffleConfig { seed }));
+            assert_eq!(o.start, base.start, "seed {seed}: start");
+            assert_eq!(o.finish, base.finish, "seed {seed}: finish");
+            assert_eq!(o.busy, base.busy, "seed {seed}: busy");
         }
     }
 

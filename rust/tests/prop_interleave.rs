@@ -3,12 +3,17 @@
 //!
 //! The component DES engine (`hetrl::simulator::component`) accepts a
 //! [`ShuffleConfig`] that permutes the commit order of same-timestamp
-//! ready ties *across* resource-conflict components while preserving
-//! FIFO (program) order *within* each component. By the argument in
-//! that module's docs, the entire observable schedule — start, finish,
-//! busy and makespan — is bit-invariant under every shuffle seed; the
-//! seed only perturbs the engine's internal event interleaving. This
-//! suite makes that argument an executable property:
+//! ready ties *across* conflict components (ops transitively sharing a
+//! resource, plus every zero-duration op coupled into its successors'
+//! components — barriers and dur-0 queue ops release successors
+//! *mid-instant*, so shuffling them independently would be unsound)
+//! while preserving FIFO (program) order *within* each component. By
+//! the argument in that module's docs, the entire observable schedule
+//! — start, finish, busy and makespan — is bit-invariant under every
+//! shuffle seed; the seed only perturbs the engine's internal event
+//! interleaving. This suite makes that argument an executable
+//! property (`python/tests/test_des_shuffle.py` runs the same fuzz
+//! through a bit-exact Python port of the engine):
 //!
 //! * **DES level** — on seeded random op-DAGs (quantized durations, so
 //!   ready-time ties genuinely occur), `simulate_with(Some(seed))` is
